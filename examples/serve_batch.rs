@@ -1,0 +1,104 @@
+//! End-to-end serving driver (the EXPERIMENTS.md §End-to-end run):
+//! boots the full stack — engine thread, dynamic batcher, TCP server —
+//! fires concurrent client load from the real eval suites, then reports
+//! accuracy, throughput (non-EOS tok/s), latency percentiles and server
+//! metrics. Proves all layers compose: rust coordinator → PJRT runtime →
+//! AOT-compiled JAX/Pallas executables.
+//!
+//! ```sh
+//! cargo run --release --example serve_batch -- --n 32 --concurrency 8
+//! ```
+
+use std::time::Duration;
+
+use anyhow::Result;
+use streaming_dllm::coordinator::{run_load, Request, RouterHandle, Server};
+use streaming_dllm::engine::Method;
+use streaming_dllm::eval::{extract_final, load_suite, EvalItem};
+use streaming_dllm::runtime::ArtifactsIndex;
+use streaming_dllm::util::cli::Args;
+use streaming_dllm::util::stats::Samples;
+
+fn main() -> Result<()> {
+    let args = Args::parse_env();
+    let model = args.get_or("model", "llada15-mini").to_string();
+    let n = args.get_usize("n", 32);
+    let concurrency = args.get_usize("concurrency", 8);
+    let max_batch = args.get_usize("max-batch", 4);
+    let method = Method::parse(args.get_or("method", "streaming")).expect("method");
+
+    let root = streaming_dllm::artifacts_root();
+    let index = ArtifactsIndex::load(&root)?;
+
+    // mixed workload: round-robin over all four suites
+    let suites = ["gsm-mini", "humaneval-mini", "mbpp-mini", "math-mini"];
+    let mut pool: Vec<(String, EvalItem)> = vec![];
+    for s in suites {
+        for item in load_suite(&index.eval_dir.join(format!("{s}.jsonl")))? {
+            pool.push((s.to_string(), item));
+        }
+    }
+    let picked: Vec<(String, EvalItem)> = (0..n)
+        .map(|i| pool[(i * 37) % pool.len()].clone())
+        .collect();
+
+    // boot the stack on an ephemeral port
+    let router = RouterHandle::spawn(root.clone(), model.clone(), max_batch, Duration::from_millis(30));
+    let metrics = router.metrics.clone();
+    let server = Server::bind("127.0.0.1:0", router)?;
+    let addr = server.local_addr()?.to_string();
+    println!("serving {model} on {addr}; {} requests, {concurrency} client conns, max_batch {max_batch}", picked.len());
+    std::thread::scope(|scope| -> Result<()> {
+        let srv = &server;
+        let n_conns = concurrency;
+        scope.spawn(move || {
+            let _ = srv.serve_n(n_conns);
+        });
+
+        let requests: Vec<Request> = picked
+            .iter()
+            .enumerate()
+            .map(|(i, (_, item))| Request {
+                id: i as u64,
+                prompt: item.prompt.clone(),
+                method,
+                gen_len: 64,
+            })
+            .collect();
+
+        let t0 = std::time::Instant::now();
+        let report = run_load(&addr, requests, concurrency)?;
+        let wall = t0.elapsed().as_secs_f64();
+
+        // score answers
+        let mut correct = 0;
+        let mut per_suite: std::collections::BTreeMap<&str, (usize, usize)> = Default::default();
+        let mut total_tokens = 0usize;
+        for resp in &report.responses {
+            let (suite, item) = &picked[resp.id as usize];
+            let ok = extract_final(&resp.text) == item.answer;
+            correct += ok as usize;
+            let e = per_suite.entry(suite.as_str()).or_default();
+            e.0 += ok as usize;
+            e.1 += 1;
+            total_tokens += resp.non_eos_tokens;
+        }
+        let mut lat = Samples::new();
+        for &l in &report.client_latencies {
+            lat.push(l);
+        }
+        println!("\n=== end-to-end serving report ({}) ===", method.name());
+        println!("requests ok/err: {}/{}", report.ok, report.errors);
+        println!("accuracy: {}/{} ({:.1}%)", correct, picked.len(), 100.0 * correct as f64 / picked.len() as f64);
+        for (s, (c, t)) in &per_suite {
+            println!("  {s:<16} {c}/{t}");
+        }
+        println!("wall: {wall:.2}s | throughput {:.1} non-EOS tok/s | {:.2} req/s",
+                 total_tokens as f64 / wall, report.ok as f64 / wall);
+        println!("client latency p50 {:.2}s p95 {:.2}s p99 {:.2}s",
+                 lat.percentile(50.0), lat.percentile(95.0), lat.percentile(99.0));
+        println!("server metrics: {}", metrics.snapshot().to_string());
+        Ok(())
+    })?;
+    Ok(())
+}

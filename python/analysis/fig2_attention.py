@@ -1,0 +1,135 @@
+"""Regenerates paper Figure 2: attention distribution at the final layer
+between the currently generated block and the full input sequence.
+
+The paper collects statistics over GSM8K samples (LLaDA-1.5, gen length
+512, final layer 31): mean attention score per region (prefix / current
+block / suffix) with the IQR band, showing that attention over the suffix
+decays with distance — most intermediate suffix positions get near-zero
+mass while the few blocks adjacent to the current block and the final
+token dominate. That observation licenses attenuation-guided suffix
+pruning.
+
+Here: the trained llada15-mini backbone, gsm-mini prompts, gen length 64
+(÷4 scale), final layer. Emits a CSV (distance-from-block → mean/q25/q75
+attention) plus the per-region aggregate, and an ASCII sparkline of the
+decay curve.
+
+Usage:  cd python && python -m analysis.fig2_attention [--n 50]
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import random
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from compile import model as M
+from compile import tasks, tokenizer as tok
+from compile.train import load_model
+
+
+def attention_probe(cfg, params, tokens, pos, valid, layer):
+    """Forward pass that captures the given layer's attention probs
+    (pre-output-projection), averaged over heads: [B, T, T]."""
+    h = params["emb"][tokens]
+    mask = M.self_mask(cfg, pos, valid)
+    probs_out = None
+    for l in range(cfg.n_layers):
+        x = M.rmsnorm(h, params[f"l{l}.ln1"], cfg.norm_eps)
+        q = M.rope(M._split_heads(x @ params[f"l{l}.wq"], cfg.n_heads, cfg.d_head), pos, cfg.rope_base)
+        k = M.rope(M._split_heads(x @ params[f"l{l}.wk"], cfg.n_heads, cfg.d_head), pos, cfg.rope_base)
+        v = M._split_heads(x @ params[f"l{l}.wv"], cfg.n_heads, cfg.d_head)
+        scale = 1.0 / jnp.sqrt(jnp.asarray(cfg.d_head, jnp.float32))
+        scores = jnp.einsum("bhqd,bhsd->bhqs", q, k) * scale
+        scores = jnp.where(mask[:, None, :, :], scores, -1e30)
+        probs = jax.nn.softmax(scores, axis=-1)
+        if l == layer:
+            probs_out = probs.mean(axis=1)  # head-mean [B, T, T]
+        o = jnp.einsum("bhqs,bhsd->bhqd", probs, v)
+        h = h + M._merge_heads(o) @ params[f"l{l}.wo"]
+        x2 = M.rmsnorm(h, params[f"l{l}.ln2"], cfg.norm_eps)
+        h = h + M.swiglu(x2, params[f"l{l}.wg"], params[f"l{l}.wu"], params[f"l{l}.wd"])
+    return probs_out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=50)
+    ap.add_argument("--model", default="llada15-mini")
+    ap.add_argument("--gen-len", type=int, default=64)
+    ap.add_argument("--block", type=int, default=1, help="current block index")
+    ap.add_argument("--out", default="../artifacts/analysis")
+    args = ap.parse_args()
+
+    cfg, params = load_model("../artifacts", args.model)
+    layer = cfg.n_layers - 1  # final layer (paper: layer 31)
+    K = cfg.block_size
+    L = args.gen_len
+    rng = random.Random(7_200_000)
+
+    # distance (in tokens) from the current block's end → attention mass
+    by_distance: dict[int, list[float]] = {}
+    region_mass = {"prefix": [], "current": [], "suffix": [], "final_tok": []}
+
+    probe = jax.jit(lambda t, p, v: attention_probe(cfg, params, t, p, v, layer))
+
+    for _ in range(args.n):
+        prompt, _cot, _final = tasks.make_example("gsm-mini", rng)
+        p0 = len(prompt)
+        T = p0 + L
+        toks = np.array(prompt + [tok.MASK] * L, np.int32)
+        # paper setting: mid-generation, current block = args.block,
+        # earlier blocks left masked-but-being-decoded is fine for the
+        # aggregate statistic (the paper averages across diffusion steps)
+        pos = np.arange(T, dtype=np.int32)
+        probs = np.asarray(probe(jnp.asarray(toks[None]), jnp.asarray(pos[None]),
+                                 jnp.asarray([T], np.int32)))[0]
+        bs = p0 + args.block * K
+        be = bs + K
+        # rows = current block queries
+        rows = probs[bs:be]  # [K, T]
+        region_mass["prefix"].append(float(rows[:, :bs].sum(axis=1).mean()))
+        region_mass["current"].append(float(rows[:, bs:be].sum(axis=1).mean()))
+        region_mass["suffix"].append(float(rows[:, be:].sum(axis=1).mean()))
+        region_mass["final_tok"].append(float(rows[:, T - 1].mean()))
+        for col in range(be, T):
+            by_distance.setdefault(col - be, []).append(float(rows[:, col].mean()))
+
+    os.makedirs(args.out, exist_ok=True)
+    csv_path = os.path.join(args.out, "fig2_attention.csv")
+    with open(csv_path, "w") as f:
+        f.write("distance,mean,q25,q75\n")
+        for d in sorted(by_distance):
+            xs = np.array(by_distance[d])
+            f.write(f"{d},{xs.mean():.6f},{np.quantile(xs, 0.25):.6f},{np.quantile(xs, 0.75):.6f}\n")
+
+    print(f"=== Figure 2 — suffix attention decay ({args.model}, layer {layer}, "
+          f"block {args.block}, n={args.n}) ===")
+    for name, xs in region_mass.items():
+        print(f"  mean attention mass on {name:<10}: {np.mean(xs):.4f}")
+    print("\ndistance-from-block decay (mean attention, suffix region):")
+    ds = sorted(by_distance)
+    vals = np.array([np.mean(by_distance[d]) for d in ds])
+    peak = vals.max() if len(vals) else 1.0
+    bars = "▁▂▃▄▅▆▇█"
+    line = "".join(bars[min(int(v / peak * 7.999), 7)] for v in vals)
+    print(f"  d=0..{ds[-1]}: {line}")
+    head = vals[: min(8, len(vals))].mean()
+    tail = vals[len(vals) // 2: -1].mean() if len(vals) > 4 else 0.0
+    final_v = vals[-1]
+    print(f"  near-window mean {head:.5f} vs distant-suffix mean {tail:.5f} "
+          f"(ratio {head / max(tail, 1e-9):.1f}x); final token {final_v:.5f}")
+    print(f"[saved {csv_path}]")
+    print("(expected: attention concentrated on blocks adjacent to the current "
+          "block and elevated again at the final token — the paper's Figure 2 shape)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,195 @@
+"""AOT lowering: JAX graphs → HLO text artifacts + manifest.
+
+For every trained backbone this emits the executable grid the rust runtime
+serves from (DESIGN.md "Executable grid"):
+
+    prefill_b{B}_p{P}.hlo.txt   (params…, tokens, pos, valid[, p0]) → kv
+    decode_b{B}_p{P}_q{Q}.hlo.txt (params…, kv, q_tok, q_pos,
+                                   kv_valid, q_valid) → [B,Q,2]
+    logits_b{B}_s{S}.hlo.txt    (params…, tokens, pos, valid[, p0]) → [B,S,2]
+
+Interchange format is **HLO text**, not serialized HloModuleProto: jax
+≥ 0.5 emits protos with 64-bit instruction ids which xla_extension 0.5.1
+rejects; the text parser reassigns ids (see /opt/xla-example/README.md).
+
+``manifest.json`` records, per artifact: kind, bucket sizes, input
+signature, and the parameter name/shape order — the contract the rust
+``runtime/artifact.rs`` loads against. Buckets are chosen so suffix
+pruning genuinely buys compute: the rust scheduler picks the smallest
+bucket ≥ the live length and masks the padding.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from . import tasks, tokenizer as tok
+from .train import load_model
+
+# Bucket grids (paper lengths ÷ 4 — see DESIGN.md scale substitution).
+BATCH_GRID = [1, 4]
+# prefix buckets: prompt (≤ ~210) + decoded blocks (≤ 512)
+PREFIX_GRID = [96, 160, 224, 352, 800]
+# query-bundle buckets: K + w + 1 for w ∈ {4..128}, plus full-suffix sizes
+QUERY_GRID = [13, 17, 25, 41, 73, 137, 264, 520]
+# full-sequence buckets (vanilla path): prompt + L
+SEQ_GRID = [96, 160, 224, 352, 800]
+
+MODELS = ["dream-mini", "llada-mini", "llada15-mini", "pangu-mini"]
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=False
+    )
+    return comp.as_hlo_text()
+
+
+def _i32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+def _f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def param_specs(cfg: M.ModelConfig, params: dict):
+    names = M.param_names(cfg)
+    return [jax.ShapeDtypeStruct(params[n].shape, jnp.float32) for n in names]
+
+
+def lower_one(cfg, params, kind, b, p=None, q=None, s=None):
+    """Build + lower one executable; returns (fn_name, hlo_text, signature)."""
+    pspecs = param_specs(cfg, params)
+    n_params = len(pspecs)
+    bc = cfg.attn_mode == "block_causal"
+    nl, h, dh = cfg.n_layers, cfg.n_heads, cfg.d_head
+
+    if kind == "prefill":
+        def fn(*args):
+            pr = M.unflatten_params(cfg, args[:n_params])
+            tokens, pos, valid = args[n_params:n_params + 3]
+            p0 = args[n_params + 3] if bc else None
+            return M.prefill(cfg, pr, tokens, pos, valid, p0)
+        specs = [_i32(b, p), _i32(b, p), _i32(b)] + ([_i32(b)] if bc else [])
+        name = f"prefill_b{b}_p{p}"
+    elif kind == "decode":
+        def fn(*args):
+            pr = M.unflatten_params(cfg, args[:n_params])
+            kv, q_tok, q_pos, kv_valid, q_valid = args[n_params:]
+            return M.decode(cfg, pr, kv, q_tok, q_pos, kv_valid, q_valid)
+        specs = [_f32(nl, 2, b, h, p, dh), _i32(b, q), _i32(b, q),
+                 _i32(b), _i32(b)]
+        name = f"decode_b{b}_p{p}_q{q}"
+    elif kind == "logits":
+        def fn(*args):
+            pr = M.unflatten_params(cfg, args[:n_params])
+            tokens, pos, valid = args[n_params:n_params + 3]
+            p0 = args[n_params + 3] if bc else None
+            return M.logits_full(cfg, pr, tokens, pos, valid, p0)
+        specs = [_i32(b, s), _i32(b, s), _i32(b)] + ([_i32(b)] if bc else [])
+        name = f"logits_b{b}_s{s}"
+    else:
+        raise ValueError(kind)
+
+    lowered = jax.jit(fn, keep_unused=True).lower(*(pspecs + specs))
+    sig = [{"shape": list(sp.shape), "dtype": str(sp.dtype)} for sp in specs]
+    return name, to_hlo_text(lowered), sig
+
+
+def export_model(out_dir: str, name: str, decode_only_small: bool = False):
+    cfg, params = load_model(out_dir, name)
+    mdir = os.path.join(out_dir, "models", name)
+    bc = cfg.attn_mode == "block_causal"
+
+    artifacts = []
+
+    def emit(kind, b, p=None, q=None, s=None):
+        art_name, text, sig = lower_one(cfg, params, kind, b, p=p, q=q, s=s)
+        path = os.path.join(mdir, art_name + ".hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        artifacts.append({
+            "name": art_name, "kind": kind, "batch": b,
+            "prefix": p, "query": q, "seq": s,
+            "file": art_name + ".hlo.txt", "inputs": sig,
+        })
+        print(f"  {name}/{art_name} ({len(text)//1024} KiB)", flush=True)
+
+    # block-causal serving only needs the small buckets (Table 7 runs at
+    # gen length 64); trims ~40% of compile time.
+    prefix_grid = PREFIX_GRID[:4] if decode_only_small else PREFIX_GRID
+    query_grid = QUERY_GRID[:4] if decode_only_small else QUERY_GRID
+    seq_grid = SEQ_GRID[:4] if decode_only_small else SEQ_GRID
+    batch_grid = [1] if decode_only_small else BATCH_GRID
+
+    for b in batch_grid:
+        for p in prefix_grid:
+            emit("prefill", b, p=p)
+        for p in prefix_grid:
+            for q in query_grid:
+                emit("decode", b, p=p, q=q)
+        for s in seq_grid:
+            emit("logits", b, s=s)
+
+    pnames = M.param_names(cfg)
+    manifest = {
+        "model": name,
+        "attn_mode": cfg.attn_mode,
+        "wants_p0": bc,
+        "config": json.loads(cfg.to_json()),
+        "special_tokens": {"pad": tok.PAD, "mask": tok.MASK, "bos": tok.BOS,
+                           "eos": tok.EOS, "sep": tok.SEP},
+        "vocab": tok.VOCAB,
+        "params_file": "params.npz",
+        "param_order": [
+            {"name": n, "shape": list(np.asarray(params[n]).shape)}
+            for n in pnames
+        ],
+        "kv_dims": {"layers": cfg.n_layers, "heads": cfg.n_heads,
+                    "d_head": cfg.d_head},
+        "buckets": {"batch": batch_grid, "prefix": prefix_grid,
+                    "query": query_grid, "seq": seq_grid},
+        "artifacts": artifacts,
+    }
+    with open(os.path.join(mdir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"{name}: {len(artifacts)} artifacts")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--models", nargs="*", default=MODELS)
+    ap.add_argument("--skip-eval-data", action="store_true")
+    args = ap.parse_args()
+
+    if not args.skip_eval_data:
+        written = tasks.export_all_eval(os.path.join(args.out, "eval"))
+        print(f"eval data: {len(written)} files")
+
+    for name in args.models:
+        if load_model(args.out, name) is None:
+            raise SystemExit(
+                f"model {name} not trained; run `python -m compile.train` first")
+        export_model(args.out, name,
+                     decode_only_small=(name == "pangu-mini"))
+
+    # top-level index the rust side discovers models through
+    with open(os.path.join(args.out, "index.json"), "w") as f:
+        json.dump({"models": args.models,
+                   "eval_dir": "eval", "models_dir": "models"}, f, indent=1)
+    print("wrote index.json")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,125 @@
+"""L1 Pallas kernel: blocked masked bidirectional attention.
+
+This is the paper's compute hot-spot re-thought for the TPU memory model
+(DESIGN.md §Hardware-Adaptation): instead of the CUDA threadblock tiling a
+GPU implementation would use, the KV stream is tiled into VMEM-sized
+blocks and reduced with an online-softmax accumulator held in registers /
+scratch. The grid is one program per (batch·head); each program loops over
+KV tiles with `lax.fori_loop`, so the lowered HLO stays compact for AOT.
+
+Suffix pruning (attenuation-guided suffix modeling) enters through the
+*shape*: the query bundle is `[current block | suffix window | trailing
+token]`, so a pruned bundle selects a smaller Q/S bucket and genuinely
+fewer tiles.
+
+The kernel is lowered with ``interpret=True`` (CPU PJRT cannot execute
+Mosaic custom-calls); correctness is pinned to ``ref.attention_ref`` by
+hypothesis sweeps in ``python/tests/test_kernels.py``. TPU roofline
+estimates for the real-hardware BlockSpec live in DESIGN.md §Perf.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import NEG_INF
+
+# KV tile size: 128 keys per tile = an (8,128)-lane-aligned VMEM block on
+# TPU; callers pad S to a multiple of KV_BLOCK (mask covers the padding).
+KV_BLOCK = 128
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, mask_ref, o_ref, *, kv_block: int):
+    """One (batch, head) program: online-softmax over KV tiles.
+
+    q_ref: [Qr, D]; k_ref, v_ref: [S, D]; mask_ref: [Qr, S] (i32 0/1);
+    o_ref: [Qr, D]. S is a multiple of kv_block.
+    """
+    q = q_ref[...].astype(jnp.float32)
+    qr, d = q.shape
+    s_total = k_ref.shape[0]
+    n_tiles = s_total // kv_block
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d, jnp.float32))
+
+    def body(i, carry):
+        m_prev, l_prev, acc = carry
+        start = i * kv_block
+        k_tile = pl.load(k_ref, (pl.dslice(start, kv_block), slice(None)))
+        v_tile = pl.load(v_ref, (pl.dslice(start, kv_block), slice(None)))
+        mask_tile = pl.load(mask_ref, (slice(None), pl.dslice(start, kv_block)))
+        # [Qr, kv_block] scores on the MXU (f32 accumulation).
+        s = jax.lax.dot_general(
+            q, k_tile.astype(jnp.float32),
+            (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        ) * scale
+        s = jnp.where(mask_tile != 0, s, NEG_INF)
+        # Online softmax update.
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        p = jnp.where(mask_tile != 0, p, 0.0)
+        l_new = l_prev * alpha + jnp.sum(p, axis=-1)
+        acc = acc * alpha[:, None] + jax.lax.dot_general(
+            p, v_tile.astype(jnp.float32),
+            (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        return m_new, l_new, acc
+
+    init = (
+        jnp.full((qr,), NEG_INF, jnp.float32),
+        jnp.zeros((qr,), jnp.float32),
+        jnp.zeros((qr, d), jnp.float32),
+    )
+    _, l_fin, acc = jax.lax.fori_loop(0, n_tiles, body, init)
+    # NaN guard: fully-masked rows (padded queries) produce zeros.
+    denom = jnp.maximum(l_fin, 1e-30)[:, None]
+    out = jnp.where((l_fin > 0.0)[:, None], acc / denom, 0.0)
+    o_ref[...] = out.astype(o_ref.dtype)
+
+
+def attention(q, k, v, mask, *, kv_block: int = KV_BLOCK, interpret: bool = True):
+    """Blocked masked attention via Pallas.
+
+    q: [B, H, Qr, D]; k, v: [B, H, S, D]; mask: [B, Qr, S] bool
+    (True = attendable). Returns [B, H, Qr, D] f32.
+
+    S is padded internally to a multiple of ``kv_block`` (padding is
+    masked out), so any bucket shape from the AOT grid is accepted.
+    """
+    b, h, qr, d = q.shape
+    s = k.shape[2]
+    pad = (-s) % kv_block
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        mask = jnp.pad(mask, ((0, 0), (0, 0), (0, pad)))
+    s_pad = s + pad
+
+    q2 = q.reshape(b * h, qr, d)
+    k2 = k.reshape(b * h, s_pad, d)
+    v2 = v.reshape(b * h, s_pad, d)
+    # i32 mask: pallas interpret handles integers more uniformly than bool.
+    mask_i = mask.astype(jnp.int32)
+
+    kernel = functools.partial(_attn_kernel, kv_block=kv_block)
+    out = pl.pallas_call(
+        kernel,
+        grid=(b * h,),
+        in_specs=[
+            pl.BlockSpec((None, qr, d), lambda i: (i, 0, 0)),
+            pl.BlockSpec((None, s_pad, d), lambda i: (i, 0, 0)),
+            pl.BlockSpec((None, s_pad, d), lambda i: (i, 0, 0)),
+            # mask is per-batch: program i uses batch i // h.
+            pl.BlockSpec((None, qr, s_pad), lambda i, h=h: (i // h, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, qr, d), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, qr, d), jnp.float32),
+        interpret=interpret,
+    )(q2, k2, v2, mask_i)
+    return out.reshape(b, h, qr, d)

@@ -1,0 +1,89 @@
+"""L1 Pallas kernel: fused greedy head (argmax + softmax-max confidence).
+
+The serving hot path never ships full logits to the coordinator: this
+kernel reduces `[B, Q, V]` logits to a packed `[B, Q, 2]` tensor of
+(token id, confidence) — paper Eq. 4 — tiled over the vocab dimension so
+logits are read from HBM exactly once. On the rust side this is the entire
+decode-step payload, which is the serving-path bandwidth saving described
+in DESIGN.md §Hardware-Adaptation.
+
+Lowered with ``interpret=True``; pinned to ``ref.confidence_ref`` by
+hypothesis sweeps.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import NEG_INF
+
+# Vocab tile: one lane-width on TPU; the shared tokenizer vocab (54) fits
+# in a single tile, but the kernel handles arbitrary V by streaming tiles.
+V_BLOCK = 128
+
+
+def _conf_kernel(x_ref, o_ref, *, v_block: int, v_real: int):
+    """One batch-row program: streamed max/argmax/logsumexp over V tiles.
+
+    x_ref: [Q, V_pad]; o_ref: [Q, 2]. Columns >= v_real are padding.
+    """
+    q = x_ref.shape[0]
+    v_pad = x_ref.shape[1]
+    n_tiles = v_pad // v_block
+
+    def body(i, carry):
+        m_prev, l_prev, best_val, best_idx = carry
+        start = i * v_block
+        tile = pl.load(x_ref, (slice(None), pl.dslice(start, v_block)))
+        tile = tile.astype(jnp.float32)
+        cols = start + jax.lax.broadcasted_iota(jnp.int32, (q, v_block), 1)
+        tile = jnp.where(cols < v_real, tile, NEG_INF)
+        # Streaming logsumexp.
+        t_max = jnp.max(tile, axis=-1)
+        m_new = jnp.maximum(m_prev, t_max)
+        l_new = l_prev * jnp.exp(m_prev - m_new) + jnp.sum(
+            jnp.exp(tile - m_new[:, None]), axis=-1
+        )
+        # Streaming argmax (first max wins, matching jnp.argmax).
+        t_arg = jnp.argmax(tile, axis=-1).astype(jnp.int32) + start
+        take_new = t_max > best_val
+        best_val = jnp.where(take_new, t_max, best_val)
+        best_idx = jnp.where(take_new, t_arg, best_idx)
+        return m_new, l_new, best_val, best_idx
+
+    init = (
+        jnp.full((q,), NEG_INF, jnp.float32),
+        jnp.zeros((q,), jnp.float32),
+        jnp.full((q,), NEG_INF, jnp.float32),
+        jnp.zeros((q,), jnp.int32),
+    )
+    m_fin, l_fin, best_val, best_idx = jax.lax.fori_loop(0, n_tiles, body, init)
+    conf = jnp.exp(best_val - m_fin) / jnp.maximum(l_fin, 1e-30)
+    o_ref[...] = jnp.stack([best_idx.astype(jnp.float32), conf], axis=-1)
+
+
+def confidence(logits, *, v_block: int = V_BLOCK, interpret: bool = True):
+    """Packed (argmax id, softmax max) per position.
+
+    logits: [B, Q, V] → f32 [B, Q, 2].
+    """
+    b, q, v = logits.shape
+    pad = (-v) % v_block
+    if pad:
+        logits = jnp.pad(logits, ((0, 0), (0, 0), (0, pad)),
+                         constant_values=NEG_INF)
+    v_pad = v + pad
+
+    kernel = functools.partial(_conf_kernel, v_block=v_block, v_real=v)
+    return pl.pallas_call(
+        kernel,
+        grid=(b,),
+        in_specs=[pl.BlockSpec((None, q, v_pad), lambda i: (i, 0, 0))],
+        out_specs=pl.BlockSpec((None, q, 2), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, q, 2), jnp.float32),
+        interpret=interpret,
+    )(logits)

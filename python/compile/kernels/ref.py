@@ -1,0 +1,53 @@
+"""Pure-jnp oracles for the L1 Pallas kernels.
+
+These are the correctness ground truth: `python/tests/test_kernels.py`
+sweeps shapes/dtypes with hypothesis and asserts the Pallas kernels
+(interpret=True) match these to tight tolerances. They are also what the
+training loop uses (the Pallas interpret path is only wired into the
+AOT-lowered inference graphs).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention_ref(q, k, v, mask):
+    """Masked bidirectional attention.
+
+    q: [B, H, Qr, D]; k, v: [B, H, S, D]; mask: [B, Qr, S] bool
+    (True = attendable). Rows whose mask is all-False produce zeros
+    (the NaN-guard the serving path relies on for padded rows).
+    Returns o: [B, H, Qr, D] in f32.
+    """
+    q = q.astype(jnp.float32)
+    k = k.astype(jnp.float32)
+    v = v.astype(jnp.float32)
+    scale = 1.0 / jnp.sqrt(jnp.asarray(q.shape[-1], jnp.float32))
+    scores = jnp.einsum("bhqd,bhsd->bhqs", q, k) * scale
+    scores = jnp.where(mask[:, None, :, :], scores, NEG_INF)
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    e = jnp.exp(scores - m)
+    e = jnp.where(mask[:, None, :, :], e, 0.0)
+    denom = jnp.sum(e, axis=-1, keepdims=True)
+    p = e / jnp.maximum(denom, 1e-30)
+    o = jnp.einsum("bhqs,bhsd->bhqd", p, v)
+    any_valid = jnp.any(mask, axis=-1)[:, None, :, None]
+    return jnp.where(any_valid, o, 0.0)
+
+
+def confidence_ref(logits):
+    """Fused greedy head: per position, (argmax id, softmax max prob).
+
+    logits: [B, Q, V] -> packed f32 [B, Q, 2] with out[..., 0] = argmax id
+    (exact in f32 for any realistic vocab) and out[..., 1] = max softmax
+    probability — the confidence c_i^(t) of paper Eq. 4.
+    """
+    logits = logits.astype(jnp.float32)
+    idx = jnp.argmax(logits, axis=-1)
+    m = jnp.max(logits, axis=-1)
+    lse = m + jnp.log(jnp.sum(jnp.exp(logits - m[..., None]), axis=-1))
+    conf = jnp.exp(m - lse)
+    return jnp.stack([idx.astype(jnp.float32), conf], axis=-1)

@@ -1,0 +1,253 @@
+"""L2: the dLLM backbone — a LLaDA-style masked-diffusion transformer.
+
+Bidirectional attention, RoPE, RMSNorm, SwiGLU, tied embedding head. Three
+inference entrypoints are AOT-lowered per (batch, prefix, query) bucket by
+``aot.py``; all take the flattened parameter list as leading arguments so
+the rust runtime keeps them device-resident and passes buffers:
+
+- ``prefill``:  prefix tokens → stacked post-RoPE KV  [NL, 2, B, H, P, Dh]
+  (computed once per generation block and reused across the block's
+  diffusion steps — the Fast-dLLM prefix-cache mechanism, paper §3.3).
+- ``decode``:   cached prefix KV + the query bundle
+  ``[current block | suffix window | trailing token]`` → packed
+  ``[B, Q, 2]`` of (argmax id, confidence). The bundle shape *is* the
+  attenuation-guided suffix approximation (paper Eq. 7–8): a pruned
+  bundle selects a smaller executable bucket, i.e. genuinely less compute.
+- ``logits_full``: full-sequence forward, the vanilla / no-cache baseline.
+
+``attn_mode``:
+- ``"full"``: fully bidirectional (Dream / LLaDA / LLaDA-1.5 topology).
+- ``"block_causal"``: causal across generation blocks, bidirectional
+  within a block, prompt bidirectional (Open-Pangu-like topology for the
+  paper's §4.4 extension). Needs the per-sample prompt length ``p0``.
+
+The decode graph is topology-agnostic (the bundle never attends forward of
+itself beyond what the caller includes), so one decode executable serves
+both topologies; only prefill/logits differ.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+
+import jax
+import jax.numpy as jnp
+
+from . import tokenizer as tok
+from .kernels import ref as kref
+from .kernels.attention import attention as pallas_attention
+from .kernels.confidence import confidence as pallas_confidence
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    vocab: int = tok.VOCAB_SIZE
+    d_model: int = 128
+    n_layers: int = 4
+    n_heads: int = 4
+    d_head: int = 32
+    d_ff: int = 256
+    rope_base: float = 10000.0
+    attn_mode: str = "full"      # "full" | "block_causal"
+    block_size: int = 32         # K; used by block_causal masking
+    norm_eps: float = 1e-5
+
+    def to_json(self) -> str:
+        return json.dumps(dataclasses.asdict(self))
+
+
+# Stable parameter ordering — the manifest records this and the rust
+# runtime feeds buffers in exactly this order.
+def param_names(cfg: ModelConfig) -> list[str]:
+    names = ["emb"]
+    for l in range(cfg.n_layers):
+        names += [
+            f"l{l}.ln1", f"l{l}.wq", f"l{l}.wk", f"l{l}.wv", f"l{l}.wo",
+            f"l{l}.ln2", f"l{l}.wg", f"l{l}.wu", f"l{l}.wd",
+        ]
+    names.append("ln_f")
+    return names
+
+
+def init_params(cfg: ModelConfig, key) -> dict:
+    """Scaled-normal init; returned as a flat name→array dict."""
+    ks = iter(jax.random.split(key, 1 + 9 * cfg.n_layers))
+    d, hd, f = cfg.d_model, cfg.n_heads * cfg.d_head, cfg.d_ff
+    p = {"emb": jax.random.normal(next(ks), (cfg.vocab, d)) * 0.02}
+    for l in range(cfg.n_layers):
+        p[f"l{l}.ln1"] = jnp.ones((d,))
+        p[f"l{l}.wq"] = jax.random.normal(next(ks), (d, hd)) * (d ** -0.5)
+        p[f"l{l}.wk"] = jax.random.normal(next(ks), (d, hd)) * (d ** -0.5)
+        p[f"l{l}.wv"] = jax.random.normal(next(ks), (d, hd)) * (d ** -0.5)
+        p[f"l{l}.wo"] = jax.random.normal(next(ks), (hd, d)) * (hd ** -0.5)
+        p[f"l{l}.ln2"] = jnp.ones((d,))
+        p[f"l{l}.wg"] = jax.random.normal(next(ks), (d, f)) * (d ** -0.5)
+        p[f"l{l}.wu"] = jax.random.normal(next(ks), (d, f)) * (d ** -0.5)
+        p[f"l{l}.wd"] = jax.random.normal(next(ks), (f, d)) * (f ** -0.5)
+    p["ln_f"] = jnp.ones((d,))
+    return p
+
+
+def flatten_params(cfg: ModelConfig, p: dict) -> list:
+    return [p[n] for n in param_names(cfg)]
+
+
+def unflatten_params(cfg: ModelConfig, flat) -> dict:
+    return dict(zip(param_names(cfg), flat))
+
+
+# ---------------------------------------------------------------------------
+# Building blocks
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x, w, eps):
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + eps) * w
+
+
+def rope(x, pos, base):
+    """x: [B, H, T, D], pos: [B, T] (absolute ids). Rotates pairs."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = base ** (-jnp.arange(half, dtype=jnp.float32) / half)
+    ang = pos[:, None, :, None].astype(jnp.float32) * freqs  # [B,1,T,half]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def swiglu(x, wg, wu, wd):
+    return (jax.nn.silu(x @ wg) * (x @ wu)) @ wd
+
+
+def _split_heads(x, h, dh):
+    b, t, _ = x.shape
+    return x.reshape(b, t, h, dh).transpose(0, 2, 1, 3)  # [B,H,T,Dh]
+
+
+def _merge_heads(x):
+    b, h, t, dh = x.shape
+    return x.transpose(0, 2, 1, 3).reshape(b, t, h * dh)
+
+
+def _attend(q, k, v, mask, use_pallas):
+    if use_pallas:
+        return pallas_attention(q, k, v, mask)
+    return kref.attention_ref(q, k, v, mask)
+
+
+# ---------------------------------------------------------------------------
+# Attention masks
+# ---------------------------------------------------------------------------
+
+def block_id(pos, p0, block_size):
+    """Generation-block index of absolute position `pos` (prompt → -1)."""
+    rel = pos - p0[:, None]
+    return jnp.where(rel < 0, -1, rel // block_size)
+
+
+def self_mask(cfg: ModelConfig, pos, valid, p0=None):
+    """[B, T, T] self-attention mask for prefill / full forward.
+
+    full: every valid position attends every valid position.
+    block_causal: row attends col iff block(col) <= block(row)
+    (prompt = block -1, so prompt attends only prompt, generation block i
+    attends prompt + blocks ≤ i; bidirectional inside a block).
+    """
+    b, t = pos.shape
+    col_ok = jnp.arange(t)[None, :] < valid[:, None]          # [B, T]
+    m = jnp.broadcast_to(col_ok[:, None, :], (b, t, t))
+    if cfg.attn_mode == "block_causal":
+        blk = block_id(pos, p0, cfg.block_size)               # [B, T]
+        m = m & (blk[:, :, None] >= blk[:, None, :])
+    return m
+
+
+def cross_mask(p_bucket, q_pos, kv_valid, q_valid):
+    """[B, Q, P+Q] mask for decode: bundle rows attend valid prefix cols
+    and valid bundle cols (fully bidirectional within the bundle)."""
+    b, qn = q_pos.shape
+    prefix_ok = jnp.arange(p_bucket)[None, :] < kv_valid[:, None]   # [B, P]
+    bundle_ok = jnp.arange(qn)[None, :] < q_valid[:, None]          # [B, Q]
+    cols = jnp.concatenate([prefix_ok, bundle_ok], axis=1)          # [B, P+Q]
+    return jnp.broadcast_to(cols[:, None, :], (b, qn, p_bucket + qn))
+
+
+# ---------------------------------------------------------------------------
+# Forward passes
+# ---------------------------------------------------------------------------
+
+def _block(cfg, params, l, h, q_pos, kv_pos, mask, use_pallas, kv_prefix=None):
+    """One transformer layer. If kv_prefix is given (decode path), the
+    bundle's K/V are appended to the cached prefix K/V."""
+    x = rmsnorm(h, params[f"l{l}.ln1"], cfg.norm_eps)
+    q = rope(_split_heads(x @ params[f"l{l}.wq"], cfg.n_heads, cfg.d_head), q_pos, cfg.rope_base)
+    k = rope(_split_heads(x @ params[f"l{l}.wk"], cfg.n_heads, cfg.d_head), kv_pos, cfg.rope_base)
+    v = _split_heads(x @ params[f"l{l}.wv"], cfg.n_heads, cfg.d_head)
+    if kv_prefix is not None:
+        k_all = jnp.concatenate([kv_prefix[0], k], axis=2)
+        v_all = jnp.concatenate([kv_prefix[1], v], axis=2)
+    else:
+        k_all, v_all = k, v
+    o = _attend(q, k_all, v_all, mask, use_pallas)
+    h = h + _merge_heads(o) @ params[f"l{l}.wo"]
+    x2 = rmsnorm(h, params[f"l{l}.ln2"], cfg.norm_eps)
+    h = h + swiglu(x2, params[f"l{l}.wg"], params[f"l{l}.wu"], params[f"l{l}.wd"])
+    return h, (k, v)
+
+
+def _head(cfg: ModelConfig, params: dict, h, use_pallas):
+    h = rmsnorm(h, params["ln_f"], cfg.norm_eps)
+    logits = h @ params["emb"].T
+    if use_pallas:
+        return pallas_confidence(logits)
+    return kref.confidence_ref(logits)
+
+
+def prefill(cfg: ModelConfig, params: dict, tokens, pos, valid, p0=None,
+            use_pallas: bool = True):
+    """Prefix forward → stacked post-RoPE KV [NL, 2, B, H, P, Dh]."""
+    h = params["emb"][tokens]
+    mask = self_mask(cfg, pos, valid, p0)
+    kvs = []
+    for l in range(cfg.n_layers):
+        h, (k, v) = _block(cfg, params, l, h, pos, pos, mask, use_pallas)
+        kvs.append(jnp.stack([k, v]))
+    return jnp.stack(kvs)  # [NL, 2, B, H, P, Dh]
+
+
+def decode(cfg: ModelConfig, params: dict, kv, q_tok, q_pos, kv_valid,
+           q_valid, use_pallas: bool = True):
+    """Cached-prefix decode step → packed [B, Q, 2] (id, confidence).
+
+    kv: [NL, 2, B, H, P, Dh] from `prefill`; q_tok/q_pos: [B, Q] the query
+    bundle; kv_valid/q_valid: [B] live lengths (padding is masked out).
+    """
+    h = params["emb"][q_tok]
+    p_bucket = kv.shape[4]
+    mask = cross_mask(p_bucket, q_pos, kv_valid, q_valid)
+    for l in range(cfg.n_layers):
+        h, _ = _block(cfg, params, l, h, q_pos, q_pos, mask, use_pallas,
+                      kv_prefix=(kv[l, 0], kv[l, 1]))
+    return _head(cfg, params, h, use_pallas)
+
+
+def logits_full(cfg: ModelConfig, params: dict, tokens, pos, valid, p0=None,
+                use_pallas: bool = True):
+    """Full-sequence forward → packed [B, S, 2] — the vanilla path."""
+    h = params["emb"][tokens]
+    mask = self_mask(cfg, pos, valid, p0)
+    for l in range(cfg.n_layers):
+        h, _ = _block(cfg, params, l, h, pos, pos, mask, use_pallas)
+    return _head(cfg, params, h, use_pallas)
+
+
+def train_logits(cfg: ModelConfig, params: dict, tokens, pos, valid, p0=None):
+    """Training forward: raw logits [B, S, V] (ref attention — fast jit)."""
+    h = params["emb"][tokens]
+    mask = self_mask(cfg, pos, valid, p0)
+    for l in range(cfg.n_layers):
+        h, _ = _block(cfg, params, l, h, pos, pos, mask, use_pallas=False)
+    h = rmsnorm(h, params["ln_f"], cfg.norm_eps)
+    return h @ params["emb"].T

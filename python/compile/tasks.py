@@ -1,0 +1,238 @@
+"""Synthetic task suites — the GSM8K / HumanEval / MBPP / MATH stand-ins.
+
+Each suite is a deterministic generator over the shared tokenizer alphabet
+with the same *shape* as the paper's benchmark: few-shot count, multi-step
+structure, and an exact-match answer. The backbones are trained on the
+generators' train split (seed-disjoint from eval), so accuracy has real
+headroom: over-aggressive decoding measurably degrades it, reproducing the
+paper's accuracy/throughput trade-off axis.
+
+Suites
+------
+- ``gsm-mini``   (5-shot default): variable-assignment arithmetic chains
+  with chain-of-thought answers, e.g. ``a=4;b=a+3;b?`` → ``a4;b7;7``
+  (final answer = segment after the last ';'; values mod 100).
+- ``humaneval-mini`` (0-shot): string-transform synthesis with op words the
+  model must have *learned* (no in-context examples), e.g.
+  ``rev:abcde>`` → ``edcba``.
+- ``mbpp-mini``  (3-shot): list-manipulation programs,
+  e.g. ``sort 3 1 2>`` → ``1 2 3``.
+- ``math-mini``  (4-shot): modular arithmetic expressions with CoT,
+  e.g. ``(3*4+2)%7?`` → ``12;14;0``.
+
+CoT answers make every generated token *locally* predictable (from the
+question plus earlier answer tokens), which a sub-million-parameter
+backbone can learn, while still requiring multi-iteration resolution
+under diffusion decoding — dependent tokens only become confident after
+their antecedents commit, which is precisely the confidence-evolution
+dynamic the paper's Figure 3 shows.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import random
+
+from . import tokenizer as tok
+
+SUITES = ["gsm-mini", "humaneval-mini", "mbpp-mini", "math-mini"]
+
+# Default few-shot counts (mirrors the paper's setups).
+DEFAULT_SHOTS = {
+    "gsm-mini": 5,
+    "humaneval-mini": 0,
+    "mbpp-mini": 3,
+    "math-mini": 4,
+}
+
+VARS = "abcdefghij"
+
+
+# ---------------------------------------------------------------------------
+# Single-problem generators: return (question_text, answer_text).
+# The question text always ends in the query glyph ('?' or '>').
+# ---------------------------------------------------------------------------
+
+def gen_gsm(rng: random.Random) -> tuple[str, str, str]:
+    """Assignment chain with chain-of-thought answer.
+
+    Question ``a=9;b=a*9;b?`` → CoT ``a9;b81;81`` (each variable's value,
+    then the final answer). Every CoT token is locally predictable from
+    the question plus *earlier CoT tokens*, which is exactly the
+    structure block-wise diffusion decoding exploits (easy tokens commit
+    first, dependent tokens resolve in later iterations)."""
+    depth = rng.randint(2, 3)
+    # Random starting letter: few-shot prompts would otherwise contain an
+    # "a=..." in *every* shot, making the value-copy ambiguous (a small
+    # backbone averages over all matches instead of binding to the
+    # query's). Distinct variables make the copy target unique with high
+    # probability — the same reason real GSM8K few-shot prompts don't
+    # confuse large models: entity names differ across examples.
+    start = rng.randint(0, len(VARS) - depth)
+    parts = []
+    vals: list[int] = []
+    for i in range(depth):
+        var = VARS[start + i]
+        if i == 0:
+            d = rng.randint(2, 9)
+            parts.append(f"{var}={d}")
+            vals.append(d)
+        else:
+            op = rng.choice("+-*")
+            d = rng.randint(2, 9)
+            prev = VARS[start + i - 1]
+            if op == "+":
+                v = (vals[-1] + d) % 100
+            elif op == "-":
+                v = (vals[-1] - d) % 100
+            else:
+                v = (vals[-1] * d) % 100
+            parts.append(f"{var}={prev}{op}{d}")
+            vals.append(v)
+    q = ";".join(parts) + f";{VARS[start + depth - 1]}?"
+    cot = ";".join(f"{VARS[start + i]}{vals[i]}" for i in range(depth))
+    final = str(vals[-1])
+    return q, cot + ";" + final, final
+
+
+_HE_OPS = {
+    "rev": lambda s: s[::-1],
+    "dup": lambda s: "".join(ch * 2 for ch in s),
+    "rot": lambda s: s[1:] + s[0],
+    "swp": lambda s: "".join(
+        s[i + 1] + s[i] if i + 1 < len(s) else s[i] for i in range(0, len(s), 2)
+    ),
+}
+
+
+def gen_humaneval(rng: random.Random) -> tuple[str, str, str]:
+    """String transform with a learned op word (0-shot). Every output
+    character is a local function of the input — learnable without CoT."""
+    op = rng.choice(sorted(_HE_OPS))
+    n = rng.randint(3, 8)
+    s = "".join(rng.choice(VARS) for _ in range(n))
+    out = _HE_OPS[op](s)
+    return f"{op}:{s}>", out, out
+
+
+_MBPP_OPS = {
+    "sort": lambda xs: sorted(xs),
+    "desc": lambda xs: sorted(xs, reverse=True),
+    "max": lambda xs: [max(xs)],
+    "min": lambda xs: [min(xs)],
+    "rev": lambda xs: xs[::-1],
+}
+
+
+def gen_mbpp(rng: random.Random) -> tuple[str, str, str]:
+    """List-manipulation program over single-digit lists (all ops are
+    positional/comparison — locally predictable)."""
+    op = rng.choice(sorted(_MBPP_OPS))
+    n = rng.randint(3, 6)
+    xs = [rng.randint(0, 9) for _ in range(n)]
+    q = f"{op} " + " ".join(str(x) for x in xs) + ">"
+    out = " ".join(str(v) for v in _MBPP_OPS[op](xs))
+    return q, out, out
+
+
+def gen_math(rng: random.Random) -> tuple[str, str, str]:
+    """Modular arithmetic with chain-of-thought:
+    ``(3*4+2)%7?`` → ``12;14;0`` (inner value, outer value, residue)."""
+    d1, d2, d3 = (rng.randint(2, 9) for _ in range(3))
+    m = rng.randint(2, 9)
+    op1, op2 = rng.choice("+*"), rng.choice("+-")
+    inner = d1 * d2 if op1 == "*" else d1 + d2
+    outer = inner + d3 if op2 == "+" else inner - d3
+    final = str(outer % m)
+    q = f"({d1}{op1}{d2}{op2}{d3}){'%'}{m}?"
+    return q, f"{inner};{outer};{final}", final
+
+
+GENERATORS = {
+    "gsm-mini": gen_gsm,
+    "humaneval-mini": gen_humaneval,
+    "mbpp-mini": gen_mbpp,
+    "math-mini": gen_math,
+}
+
+
+# ---------------------------------------------------------------------------
+# Prompt assembly
+# ---------------------------------------------------------------------------
+
+def build_prompt_ids(shots: list[tuple[str, str, str]], query: str) -> list[int]:
+    """[BOS] shot1 SEP shot2 SEP ... query — a shot is 'question cot'."""
+    ids = [tok.BOS]
+    for q, cot, _final in shots:
+        ids.extend(tok.encode(q + cot))
+        ids.append(tok.SEP)
+    ids.extend(tok.encode(query))
+    return ids
+
+
+def extract_final(text: str) -> str:
+    """Answer-extraction rule shared with the rust eval harness: the
+    segment after the last ';' (GSM/MATH CoT answers), or the whole
+    string when there is no ';' (HumanEval/MBPP direct answers)."""
+    return text.rsplit(";", 1)[-1]
+
+
+def make_example(suite: str, rng: random.Random, shots: int | None = None):
+    """One eval/train example: (prompt_ids, cot_text, final_answer)."""
+    gen = GENERATORS[suite]
+    k = DEFAULT_SHOTS[suite] if shots is None else shots
+    shot_triples = [gen(rng) for _ in range(k)]
+    q, cot, final = gen(rng)
+    return build_prompt_ids(shot_triples, q), cot, final
+
+
+def training_sequence(suite: str, rng: random.Random, seq_len: int,
+                      shots: int | None = None):
+    """A full training sequence: prompt + CoT answer + EOS-fill.
+
+    LLaDA-style: the generation region after the prompt is the answer
+    followed by EOS padding, so the model learns that everything past the
+    answer is EOS — the property the early-exit mechanism relies on.
+    Returns (sequence, prompt_len) or None if it doesn't fit.
+    """
+    # Vary shot count during training so prefill-length generalizes
+    # (Table 4 sweeps 3/5/8-shot at eval time).
+    k = DEFAULT_SHOTS[suite] if shots is None else shots
+    if k > 0:
+        k = rng.randint(max(1, k - 2), k + 3)
+    prompt, cot, _final = make_example(suite, rng, shots=k)
+    ans_ids = tok.encode(cot) + [tok.EOS]
+    seq = prompt + ans_ids
+    if len(seq) > seq_len:
+        return None  # caller retries; keeps lengths bounded
+    seq = seq + [tok.EOS] * (seq_len - len(seq))
+    return seq, len(prompt)
+
+
+def write_eval_jsonl(path: str, suite: str, n: int, seed: int,
+                     shots: int | None = None) -> None:
+    """Emit the eval split the rust harness serves and scores."""
+    rng = random.Random(seed)
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "w") as f:
+        for _ in range(n):
+            prompt, cot, final = make_example(suite, rng, shots=shots)
+            f.write(json.dumps({"prompt": prompt, "answer": final,
+                                "cot": cot}) + "\n")
+
+
+def export_all_eval(out_dir: str, n: int = 200, seed: int = 7_000_000) -> list[str]:
+    """All suites at default shots, plus the gsm-mini 3/8-shot variants
+    Table 4 needs. Eval seeds are disjoint from training seeds (training
+    uses seeds < 7_000_000)."""
+    written = []
+    for i, suite in enumerate(SUITES):
+        p = os.path.join(out_dir, f"{suite}.jsonl")
+        write_eval_jsonl(p, suite, n, seed + i)
+        written.append(p)
+    for j, k in enumerate([3, 8]):
+        p = os.path.join(out_dir, f"gsm-mini-{k}shot.jsonl")
+        write_eval_jsonl(p, "gsm-mini", n, seed + 100 + j, shots=k)
+        written.append(p)
+    return written

@@ -1,0 +1,60 @@
+"""Character-level tokenizer shared by training, AOT lowering and the rust
+serving stack.
+
+The vocabulary is a small, fixed alphabet: every synthetic suite
+(`tasks.py`) is expressed over it. Keeping the vocab tiny keeps the
+embedding and the L1 confidence kernel cheap, which is what lets the
+backbones train from scratch at `make artifacts` time.
+
+Special tokens occupy the first ids so the rust side can hard-code them
+(mirrored in `rust/src/engine/config.rs` and asserted by the manifest):
+
+    0 PAD   padding (never predicted, never attended as query)
+    1 MASK  the diffusion mask token
+    2 BOS   sequence start
+    3 EOS   end-of-answer / suffix filler (LLaDA-style EOS padding)
+    4 SEP   few-shot example separator
+"""
+
+from __future__ import annotations
+
+PAD, MASK, BOS, EOS, SEP = 0, 1, 2, 3, 4
+SPECIALS = ["<pad>", "<mask>", "<bos>", "<eos>", "<sep>"]
+
+# Fixed alphabet: digits, lowercase letters (variable names + op words),
+# and the task glyphs used by the synthetic suites.
+ALPHABET = list("0123456789") + list("abcdefghijklmnopqrstuvwxyz") + list("+-*%=;?:>(), ")
+
+VOCAB: list[str] = SPECIALS + ALPHABET
+STOI: dict[str, int] = {s: i for i, s in enumerate(VOCAB)}
+VOCAB_SIZE = len(VOCAB)
+
+
+def encode(text: str) -> list[int]:
+    """Encode a string; raises KeyError on out-of-alphabet characters."""
+    return [STOI[ch] for ch in text]
+
+
+def decode(ids) -> str:
+    """Decode ids, skipping special tokens."""
+    out = []
+    for i in ids:
+        i = int(i)
+        if i < len(SPECIALS):
+            continue
+        out.append(VOCAB[i])
+    return "".join(out)
+
+
+def decode_until_eos(ids) -> str:
+    """Decode ids, stopping at the first EOS (the answer-extraction rule
+    used by the rust eval harness — kept in sync via tests)."""
+    out = []
+    for i in ids:
+        i = int(i)
+        if i == EOS:
+            break
+        if i < len(SPECIALS):
+            continue
+        out.append(VOCAB[i])
+    return "".join(out)

@@ -1,0 +1,275 @@
+"""Build-time pretraining of the dLLM backbones (LLaDA objective).
+
+This is the "substrate the paper depends on": Streaming-dLLM is
+training-free, but it needs backbones that have genuinely learned their
+task distribution so that (a) confidence dynamics look like Figure 3 and
+(b) over-aggressive decoding measurably degrades exact-match accuracy.
+
+Objective (LLaDA, Nie et al. 2025): per sequence sample a masking ratio
+t ~ U(t_min, 1), independently replace generation-region tokens with
+[MASK] with probability t, and minimize 1/t-weighted cross-entropy on the
+masked positions. The prompt is never masked. The generation region is
+the answer followed by EOS padding, so the model learns the
+"everything after the answer is EOS" property that early exit exploits.
+
+Backbones (paper → here):
+- ``dream-mini``   : base run (stands in for Dream-v0-7B-Base)
+- ``llada-mini``   : base + continued training, different mixture/seed
+- ``llada15-mini`` : llada-mini + a further polish phase (LLaDA-1.5 is an
+  RL-polished LLaDA; here "polish" = more steps on the eval mixture)
+- ``pangu-mini``   : block-causal topology (Open Pangu 7B stand-in,
+  §4.4): previous blocks clean, current block masked, block-causal mask.
+
+Augmentations:
+- random RoPE offset per example (positions are shifted by U(0, 560)) so
+  decoding at long generation lengths sees familiar absolute positions;
+- variable few-shot counts so Table 4's 3/5/8-shot prefills are in
+  distribution.
+
+Runs once at ``make artifacts``; params land in
+``artifacts/models/<name>/params.npz`` (+ ``config.json``) and are
+reloaded on later runs instead of retrained.
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import os
+import random
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import tasks, tokenizer as tok
+from . import model as M
+
+TRAIN_SEQ_LEN = 192
+MAX_POS_OFFSET = 400
+T_MIN = 0.05
+
+# mixture weights per phase: suite -> prob
+BASE_MIX = {"gsm-mini": 0.35, "humaneval-mini": 0.2, "mbpp-mini": 0.25, "math-mini": 0.2}
+POLISH_MIX = {"gsm-mini": 0.4, "humaneval-mini": 0.15, "mbpp-mini": 0.25, "math-mini": 0.2}
+
+
+def sample_batch(rng: random.Random, batch: int, seq_len: int, mix: dict):
+    """→ tokens [B,T] i32, prompt_len [B] i32 (numpy)."""
+    suites = list(mix)
+    weights = [mix[s] for s in suites]
+    toks = np.full((batch, seq_len), tok.EOS, np.int32)
+    p0 = np.zeros((batch,), np.int32)
+    for b in range(batch):
+        while True:
+            suite = rng.choices(suites, weights)[0]
+            # cap shots so prompts fit comfortably in the train window
+            shots = rng.randint(0, 6) if tasks.DEFAULT_SHOTS[suite] > 0 else 0
+            out = tasks.training_sequence(suite, rng, seq_len, shots=shots)
+            if out is not None:
+                break
+        seq, plen = out
+        toks[b] = np.asarray(seq, np.int32)
+        p0[b] = plen
+    return toks, p0
+
+
+def mask_batch(rng: np.random.Generator, toks: np.ndarray, p0: np.ndarray):
+    """LLaDA masking: ratio t per example over the generation region."""
+    b, t_len = toks.shape
+    t = rng.uniform(T_MIN, 1.0, size=(b, 1)).astype(np.float32)
+    is_gen = np.arange(t_len)[None, :] >= p0[:, None]
+    mask = (rng.random((b, t_len)) < t) & is_gen
+    # guarantee at least one masked position per example
+    none = ~mask.any(axis=1)
+    if none.any():
+        mask[none, p0[none]] = True
+    x = np.where(mask, tok.MASK, toks)
+    return x.astype(np.int32), mask, t.squeeze(1)
+
+
+# EOS-fill dominates the generation region (most masked targets are the
+# EOS padding after the answer); downweight it so model capacity goes to
+# content tokens while the "everything after the answer is EOS" property
+# (needed by early exit) is still learned.
+EOS_WEIGHT = 0.15
+
+
+def masked_ce_loss(cfg, params, x, targets, mask, weight, pos, valid, p0):
+    logits = M.train_logits(cfg, params, x, pos, valid,
+                            p0 if cfg.attn_mode == "block_causal" else None)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    w = mask.astype(jnp.float32) * weight[:, None]
+    w = w * jnp.where(targets == tok.EOS, EOS_WEIGHT, 1.0)
+    return jnp.sum(nll * w) / jnp.maximum(jnp.sum(w), 1.0)
+
+
+@functools.partial(jax.jit, static_argnums=(0,))
+def train_step(cfg, params, opt_m, opt_v, step, x, targets, mask, weight,
+               pos, valid, p0, lr):
+    loss, grads = jax.value_and_grad(masked_ce_loss, argnums=1)(
+        cfg, params, x, targets, mask, weight, pos, valid, p0)
+    b1, b2, eps = 0.9, 0.95, 1e-8
+    t = step + 1
+    new_p, new_m, new_v = {}, {}, {}
+    for k in params:
+        g = grads[k]
+        m = b1 * opt_m[k] + (1 - b1) * g
+        v = b2 * opt_v[k] + (1 - b2) * g * g
+        mhat = m / (1 - b1 ** t)
+        vhat = v / (1 - b2 ** t)
+        new_p[k] = params[k] - lr * mhat / (jnp.sqrt(vhat) + eps)
+        new_m[k], new_v[k] = m, v
+    return new_p, new_m, new_v, loss
+
+
+def lr_at(step, total, peak=3e-3, floor=3e-4, warmup=20):
+    if step < warmup:
+        return peak * (step + 1) / warmup
+    frac = (step - warmup) / max(1, total - warmup)
+    return floor + 0.5 * (peak - floor) * (1 + np.cos(np.pi * frac))
+
+
+def mask_block_causal(rng: np.random.Generator, toks: np.ndarray,
+                      p0: np.ndarray, block_size: int):
+    """Pangu-style next-block objective: previous blocks clean, one
+    target block masked at ratio t, everything after it dropped to EOS
+    visibility (masked out of the loss; attention is block-causal so the
+    model never sees forward of the target block anyway)."""
+    b, t_len = toks.shape
+    t = rng.uniform(T_MIN, 1.0, size=(b, 1)).astype(np.float32)
+    x = toks.copy()
+    mask = np.zeros_like(toks, bool)
+    for i in range(b):
+        n_blocks = max(1, (t_len - p0[i]) // block_size)
+        # bias block choice toward the answer-bearing early blocks
+        blk = min(int(abs(rng.normal(0, 1.2))), n_blocks - 1)
+        lo = p0[i] + blk * block_size
+        hi = min(lo + block_size, t_len)
+        sel = rng.random(hi - lo) < t[i, 0]
+        if not sel.any():
+            sel[0] = True
+        mask[i, lo:hi] = sel
+        x[i, lo:hi][sel] = tok.MASK
+    return x, mask, t.squeeze(1)
+
+
+def probe_accuracy(cfg, params, rng_py: random.Random, n: int = 24) -> float:
+    """Teacher-forced probe: fully mask the generation region and measure
+    argmax accuracy on the *content* (non-EOS) answer tokens. Cheap (one
+    forward) and tracks downstream exact-match well enough to steer
+    training length."""
+    toks, p0 = sample_batch(rng_py, n, TRAIN_SEQ_LEN, BASE_MIX)
+    x = toks.copy()
+    is_gen = np.arange(TRAIN_SEQ_LEN)[None, :] >= p0[:, None]
+    x[is_gen] = tok.MASK
+    pos = np.tile(np.arange(TRAIN_SEQ_LEN, dtype=np.int32), (n, 1))
+    valid = np.full((n,), TRAIN_SEQ_LEN, np.int32)
+    logits = M.train_logits(cfg, params, jnp.asarray(x), jnp.asarray(pos),
+                            jnp.asarray(valid),
+                            jnp.asarray(p0) if cfg.attn_mode == "block_causal" else None)
+    pred = np.asarray(jnp.argmax(logits, axis=-1))
+    sel = is_gen & (toks != tok.EOS)
+    if sel.sum() == 0:
+        return 0.0
+    return float((pred[sel] == toks[sel]).mean())
+
+
+def train_phase(cfg, params, steps, seed, mix, batch, log_every=50,
+                label=""):
+    rng_py = random.Random(seed)
+    rng_np = np.random.default_rng(seed)
+    probe_rng = random.Random(seed + 999)
+    opt_m = {k: jnp.zeros_like(v) for k, v in params.items()}
+    opt_v = {k: jnp.zeros_like(v) for k, v in params.items()}
+    t0 = time.time()
+    for step in range(steps):
+        toks, p0 = sample_batch(rng_py, batch, TRAIN_SEQ_LEN, mix)
+        if cfg.attn_mode == "block_causal":
+            x, mask, t = mask_block_causal(rng_np, toks, p0, cfg.block_size)
+        else:
+            x, mask, t = mask_batch(rng_np, toks, p0)
+        off = rng_np.integers(0, MAX_POS_OFFSET, size=(batch, 1))
+        pos = (np.arange(TRAIN_SEQ_LEN)[None, :] + off).astype(np.int32)
+        valid = np.full((batch,), TRAIN_SEQ_LEN, np.int32)
+        lr = lr_at(step, steps)
+        params, opt_m, opt_v, loss = train_step(
+            cfg, params, opt_m, opt_v, step,
+            jnp.asarray(x), jnp.asarray(toks), jnp.asarray(mask),
+            jnp.asarray(1.0 / t), jnp.asarray(pos), jnp.asarray(valid),
+            jnp.asarray(p0 + off.squeeze(1).astype(np.int32)), lr)
+        if step % log_every == 0 or step == steps - 1:
+            acc = probe_accuracy(cfg, params, probe_rng) if step % (log_every * 2) == 0 or step == steps - 1 else float("nan")
+            print(f"[{label}] step {step:4d}/{steps} loss {float(loss):.4f} "
+                  f"probe_acc {acc:.3f} ({time.time()-t0:.0f}s)", flush=True)
+    return params
+
+
+def save_model(out_dir: str, name: str, cfg: M.ModelConfig, params: dict):
+    d = os.path.join(out_dir, "models", name)
+    os.makedirs(d, exist_ok=True)
+    np.savez(os.path.join(d, "params.npz"),
+             **{k: np.asarray(v, np.float32) for k, v in params.items()})
+    with open(os.path.join(d, "config.json"), "w") as f:
+        f.write(cfg.to_json())
+    print(f"saved {name} -> {d}")
+
+
+def load_model(out_dir: str, name: str):
+    d = os.path.join(out_dir, "models", name)
+    cfg_path, npz_path = os.path.join(d, "config.json"), os.path.join(d, "params.npz")
+    if not (os.path.exists(cfg_path) and os.path.exists(npz_path)):
+        return None
+    with open(cfg_path) as f:
+        cfg = M.ModelConfig(**json.load(f))
+    data = np.load(npz_path)
+    params = {k: jnp.asarray(data[k]) for k in data.files}
+    return cfg, params
+
+
+def train_all(out_dir: str, base_steps: int, variant_steps: int,
+              pangu_steps: int, batch: int):
+    cfg = M.ModelConfig(d_model=128, n_layers=3, n_heads=4, d_head=32,
+                        d_ff=256, block_size=8)
+    if load_model(out_dir, "dream-mini") is None:
+        p = M.init_params(cfg, jax.random.PRNGKey(0))
+        p = train_phase(cfg, p, base_steps, seed=100, mix=BASE_MIX,
+                        batch=batch, label="dream-mini")
+        save_model(out_dir, "dream-mini", cfg, p)
+    if load_model(out_dir, "llada-mini") is None:
+        _, p = load_model(out_dir, "dream-mini")
+        p = train_phase(cfg, p, variant_steps, seed=200, mix=BASE_MIX,
+                        batch=batch, label="llada-mini")
+        save_model(out_dir, "llada-mini", cfg, p)
+    if load_model(out_dir, "llada15-mini") is None:
+        _, p = load_model(out_dir, "llada-mini")
+        p = train_phase(cfg, p, variant_steps, seed=300, mix=POLISH_MIX,
+                        batch=batch, label="llada15-mini")
+        save_model(out_dir, "llada15-mini", cfg, p)
+    if load_model(out_dir, "pangu-mini") is None:
+        bc_cfg = M.ModelConfig(d_model=128, n_layers=3, n_heads=4, d_head=32,
+                               d_ff=256, block_size=8,
+                               attn_mode="block_causal")
+        p = M.init_params(bc_cfg, jax.random.PRNGKey(4))
+        p = train_phase(bc_cfg, p, pangu_steps, seed=400, mix=BASE_MIX,
+                        batch=batch, label="pangu-mini")
+        save_model(out_dir, "pangu-mini", bc_cfg, p)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--base-steps", type=int, default=700)
+    ap.add_argument("--variant-steps", type=int, default=120)
+    ap.add_argument("--pangu-steps", type=int, default=400)
+    ap.add_argument("--batch", type=int, default=24)
+    args = ap.parse_args()
+    train_all(args.out, args.base_steps, args.variant_steps,
+              args.pangu_steps, args.batch)
+
+
+if __name__ == "__main__":
+    main()

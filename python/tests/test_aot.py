@@ -1,0 +1,110 @@
+"""AOT lowering contract: HLO text is parseable/self-contained (no
+custom calls, full parameter signature via keep_unused), bucket grids
+cover the workloads, and the manifest schema matches what
+rust/src/runtime/artifact.rs expects."""
+
+import json
+import random
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import aot, model as M, tasks, tokenizer as tok
+
+CFG = M.ModelConfig(d_model=32, n_layers=2, n_heads=2, d_head=8, d_ff=48,
+                    block_size=8)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return M.init_params(CFG, jax.random.PRNGKey(0))
+
+
+def test_decode_lowering_keeps_full_signature(params):
+    name, text, sig = aot.lower_one(CFG, params, "decode", 1, p=96, q=13)
+    assert name == "decode_b1_p96_q13"
+    # entry computation must take every param + 5 inputs
+    n_expected = len(M.param_names(CFG)) + 5
+    assert f"parameter({n_expected - 1})" in text
+    assert f"parameter({n_expected})" not in text
+    assert "custom-call" not in text.lower()
+    assert len(sig) == 5
+    assert sig[0]["shape"] == [CFG.n_layers, 2, 1, CFG.n_heads, 96, CFG.d_head]
+
+
+def test_prefill_lowering_single_output(params):
+    _, text, sig = aot.lower_one(CFG, params, "prefill", 1, p=96)
+    assert "custom-call" not in text.lower()
+    # root is the stacked KV tensor, not a tuple
+    assert "ROOT" in text
+    assert len(sig) == 3
+
+
+def test_block_causal_signature_has_p0(params):
+    bc = M.ModelConfig(d_model=32, n_layers=2, n_heads=2, d_head=8, d_ff=48,
+                       block_size=8, attn_mode="block_causal")
+    bc_params = M.init_params(bc, jax.random.PRNGKey(1))
+    _, _, sig = aot.lower_one(bc, bc_params, "logits", 1, s=96)
+    assert len(sig) == 4  # tokens, pos, valid, p0
+
+
+def test_bucket_grids_cover_eval_workloads():
+    """Every eval prompt + every bench gen length must fit the grid."""
+    rng = random.Random(0)
+    max_prompt = 0
+    for suite in tasks.SUITES:
+        for _ in range(50):
+            ids, _, _ = tasks.make_example(suite, rng)
+            max_prompt = max(max_prompt, len(ids))
+    for shots in [3, 8]:
+        for _ in range(50):
+            ids, _, _ = tasks.make_example("gsm-mini", rng, shots=shots)
+            max_prompt = max(max_prompt, len(ids))
+    for gen_len in [64, 128, 256, 512]:
+        # prefix = prompt + decoded blocks (≤ L - K)
+        need_prefix = max_prompt + gen_len - 8
+        assert any(b >= need_prefix for b in aot.PREFIX_GRID), (need_prefix, gen_len)
+        # vanilla full sequence
+        assert any(b >= max_prompt + gen_len for b in aot.SEQ_GRID)
+        # full-suffix query bundle (prefix-cache / fast-dllm)
+        assert any(b >= gen_len for b in aot.QUERY_GRID)
+    # pruned bundles: K + w + 1 for the table-12 windows
+    for w in [4, 8, 16, 24, 32, 48, 64, 128]:
+        assert any(b >= 8 + w + 1 for b in aot.QUERY_GRID), w
+
+
+def test_query_grid_sorted_unique():
+    assert aot.QUERY_GRID == sorted(set(aot.QUERY_GRID))
+    assert aot.PREFIX_GRID == sorted(set(aot.PREFIX_GRID))
+    assert aot.SEQ_GRID == sorted(set(aot.SEQ_GRID))
+
+
+def test_vocab_specials_match_rust_constants():
+    # rust hard-codes these in SpecialTokens assertions
+    assert (tok.PAD, tok.MASK, tok.BOS, tok.EOS, tok.SEP) == (0, 1, 2, 3, 4)
+    assert len(tok.VOCAB) == tok.VOCAB_SIZE
+    assert tok.VOCAB_SIZE < 128  # confidence kernel single-tile fast path
+
+
+def test_manifest_roundtrips_as_json(params, tmp_path):
+    """Schema smoke: build a manifest dict like export_model does and
+    ensure required keys survive a json round-trip."""
+    manifest = {
+        "model": "test",
+        "attn_mode": CFG.attn_mode,
+        "wants_p0": False,
+        "config": json.loads(CFG.to_json()),
+        "special_tokens": {"pad": 0, "mask": 1, "bos": 2, "eos": 3, "sep": 4},
+        "vocab": tok.VOCAB,
+        "params_file": "params.npz",
+        "param_order": [{"name": n, "shape": [1]} for n in M.param_names(CFG)],
+        "kv_dims": {"layers": 2, "heads": 2, "d_head": 8},
+        "buckets": {"batch": [1], "prefix": [96], "query": [13], "seq": [96]},
+        "artifacts": [],
+    }
+    s = json.dumps(manifest)
+    back = json.loads(s)
+    for key in ["model", "attn_mode", "wants_p0", "special_tokens", "vocab",
+                "params_file", "param_order", "kv_dims", "buckets", "artifacts"]:
+        assert key in back

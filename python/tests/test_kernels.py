@@ -1,0 +1,124 @@
+"""L1 kernel correctness: Pallas (interpret=True) vs pure-jnp oracle.
+
+This is THE correctness signal for the compute layer — hypothesis sweeps
+shapes, masking patterns and value ranges, asserting tight agreement.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.attention import attention, KV_BLOCK
+from compile.kernels.confidence import confidence
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rand_attn(rng, b, h, q, s, d, mask_p):
+    q_ = jnp.asarray(rng.normal(size=(b, h, q, d)), jnp.float32)
+    k_ = jnp.asarray(rng.normal(size=(b, h, s, d)), jnp.float32)
+    v_ = jnp.asarray(rng.normal(size=(b, h, s, d)), jnp.float32)
+    m_ = jnp.asarray(rng.random((b, q, s)) > mask_p)
+    return q_, k_, v_, m_
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    b=st.integers(1, 3),
+    h=st.integers(1, 3),
+    q=st.integers(1, 24),
+    s=st.integers(1, 300),
+    d=st.sampled_from([4, 16, 32]),
+    mask_p=st.floats(0.0, 0.9),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_attention_matches_ref(b, h, q, s, d, mask_p, seed):
+    rng = np.random.default_rng(seed)
+    q_, k_, v_, m_ = rand_attn(rng, b, h, q, s, d, mask_p)
+    out = attention(q_, k_, v_, m_)
+    want = ref.attention_ref(q_, k_, v_, m_)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=2e-5, rtol=2e-5)
+
+
+def test_attention_fully_masked_rows_zero():
+    rng = np.random.default_rng(0)
+    q_, k_, v_, m_ = rand_attn(rng, 2, 2, 5, 40, 8, 0.5)
+    m_ = m_.at[1, 3, :].set(False)
+    out = np.asarray(attention(q_, k_, v_, m_))
+    assert np.all(out[1, :, 3, :] == 0.0)
+    assert not np.any(np.isnan(out))
+
+
+def test_attention_tile_boundaries():
+    """S exactly at / around the KV tile size."""
+    rng = np.random.default_rng(1)
+    for s in [KV_BLOCK - 1, KV_BLOCK, KV_BLOCK + 1, 2 * KV_BLOCK]:
+        q_, k_, v_, m_ = rand_attn(rng, 1, 1, 3, s, 8, 0.2)
+        out = attention(q_, k_, v_, m_)
+        want = ref.attention_ref(q_, k_, v_, m_)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=2e-5, rtol=2e-5)
+
+
+def test_attention_single_valid_column():
+    """Attention over one valid key = that key's value."""
+    rng = np.random.default_rng(2)
+    q_, k_, v_, m_ = rand_attn(rng, 1, 1, 2, 10, 4, 0.0)
+    m_ = jnp.zeros_like(m_).at[:, :, 7].set(True)
+    out = np.asarray(attention(q_, k_, v_, m_))
+    want = np.broadcast_to(np.asarray(v_)[:, :, 7:8, :], out.shape)
+    np.testing.assert_allclose(out, want, atol=1e-5)
+
+
+def test_attention_extreme_values_no_overflow():
+    rng = np.random.default_rng(3)
+    q_ = jnp.asarray(rng.normal(size=(1, 1, 4, 8)) * 30, jnp.float32)
+    k_ = jnp.asarray(rng.normal(size=(1, 1, 50, 8)) * 30, jnp.float32)
+    v_ = jnp.asarray(rng.normal(size=(1, 1, 50, 8)), jnp.float32)
+    m_ = jnp.ones((1, 4, 50), bool)
+    out = np.asarray(attention(q_, k_, v_, m_))
+    want = np.asarray(ref.attention_ref(q_, k_, v_, m_))
+    assert not np.any(np.isnan(out))
+    np.testing.assert_allclose(out, want, atol=1e-4, rtol=1e-4)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    b=st.integers(1, 4),
+    q=st.integers(1, 40),
+    v=st.sampled_from([7, 54, 128, 129, 300]),
+    scale=st.floats(0.1, 20.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_confidence_matches_ref(b, q, v, scale, seed):
+    rng = np.random.default_rng(seed)
+    logits = jnp.asarray(rng.normal(size=(b, q, v)) * scale, jnp.float32)
+    out = np.asarray(confidence(logits))
+    want = np.asarray(ref.confidence_ref(logits))
+    np.testing.assert_allclose(out[..., 0], want[..., 0])  # argmax ids exact
+    np.testing.assert_allclose(out[..., 1], want[..., 1], atol=1e-5, rtol=1e-5)
+
+
+def test_confidence_onehot_certainty():
+    v = 54
+    logits = jnp.full((1, 3, v), -30.0).at[0, :, 7].set(30.0)
+    out = np.asarray(confidence(logits))
+    assert np.all(out[..., 0] == 7)
+    np.testing.assert_allclose(out[..., 1], 1.0, atol=1e-6)
+
+
+def test_confidence_uniform_low_confidence():
+    v = 54
+    logits = jnp.zeros((1, 2, v))
+    out = np.asarray(confidence(logits))
+    np.testing.assert_allclose(out[..., 1], 1.0 / v, atol=1e-6)
+    assert np.all(out[..., 0] == 0)  # first max wins, matches jnp.argmax
+
+
+def test_confidence_tie_breaks_like_argmax():
+    logits = jnp.zeros((1, 1, 10)).at[0, 0, 3].set(5.0).at[0, 0, 8].set(5.0)
+    out = np.asarray(confidence(logits))
+    want = np.asarray(ref.confidence_ref(logits))
+    assert out[0, 0, 0] == want[0, 0, 0] == 3

@@ -1,0 +1,178 @@
+"""L2 model invariants: shapes, cache consistency (decode-with-cache ==
+full forward at the same positions), masking semantics, topology modes.
+These pin the contract the rust engine relies on."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+from compile import tokenizer as tok
+
+jax.config.update("jax_platform_name", "cpu")
+
+CFG = M.ModelConfig(d_model=32, n_layers=2, n_heads=2, d_head=8, d_ff=48,
+                    block_size=4)
+BC_CFG = M.ModelConfig(d_model=32, n_layers=2, n_heads=2, d_head=8, d_ff=48,
+                       block_size=4, attn_mode="block_causal")
+
+
+@pytest.fixture(scope="module")
+def params():
+    return M.init_params(CFG, jax.random.PRNGKey(0))
+
+
+@pytest.fixture(scope="module")
+def bc_params():
+    return M.init_params(BC_CFG, jax.random.PRNGKey(1))
+
+
+def seq_inputs(b, t, valid=None, seed=0):
+    rng = np.random.default_rng(seed)
+    tokens = jnp.asarray(rng.integers(5, tok.VOCAB_SIZE, size=(b, t)), jnp.int32)
+    pos = jnp.tile(jnp.arange(t, dtype=jnp.int32)[None], (b, 1))
+    v = jnp.asarray(valid if valid is not None else [t] * b, jnp.int32)
+    return tokens, pos, v
+
+
+def test_prefill_shape(params):
+    tokens, pos, valid = seq_inputs(2, 16)
+    kv = M.prefill(CFG, params, tokens, pos, valid, use_pallas=False)
+    assert kv.shape == (2, 2, 2, 2, 16, 8)  # [NL,2,B,H,P,Dh]
+
+
+def test_logits_full_shape_and_range(params):
+    tokens, pos, valid = seq_inputs(2, 12)
+    out = M.logits_full(CFG, params, tokens, pos, valid, use_pallas=False)
+    assert out.shape == (2, 12, 2)
+    ids = np.asarray(out[..., 0])
+    conf = np.asarray(out[..., 1])
+    assert ids.min() >= 0 and ids.max() < tok.VOCAB_SIZE
+    assert conf.min() >= 0.0 and conf.max() <= 1.0 + 1e-6
+
+
+def test_decode_equals_full_forward_one_layer():
+    """With a single layer the prefix KV depends only on embeddings, so
+    cached decode must *exactly* match the full bidirectional forward at
+    the bundle positions. (With ≥2 layers the prefix KV is the
+    Fast-dLLM approximation — prefix hidden states are computed without
+    seeing the suffix — so equality intentionally does NOT hold; that
+    semantic gap is the cache trade-off the paper builds on.)"""
+    cfg1 = M.ModelConfig(d_model=32, n_layers=1, n_heads=2, d_head=8,
+                         d_ff=48, block_size=4)
+    params1 = M.init_params(cfg1, jax.random.PRNGKey(9))
+    b, p, q = 1, 10, 6
+    tokens, pos, valid = seq_inputs(b, p + q, seed=3)
+    full = M.logits_full(cfg1, params1, tokens, pos, valid, use_pallas=False)
+
+    kv = M.prefill(cfg1, params1, tokens[:, :p], pos[:, :p],
+                   jnp.asarray([p], jnp.int32), use_pallas=False)
+    out = M.decode(cfg1, params1, kv, tokens[:, p:], pos[:, p:],
+                   jnp.asarray([p], jnp.int32), jnp.asarray([q], jnp.int32),
+                   use_pallas=False)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(full[:, p:, :]),
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_decode_padding_invariance(params):
+    """Growing the prefix bucket (with masked padding) must not change
+    decode outputs — the bucketing contract of the rust runtime."""
+    b, p, q, pad_to = 1, 7, 4, 16
+    tokens, pos, valid = seq_inputs(b, p + q, seed=4)
+    kv_tight = M.prefill(CFG, params, tokens[:, :p], pos[:, :p],
+                         jnp.asarray([p], jnp.int32), use_pallas=False)
+    out_tight = M.decode(CFG, params, kv_tight, tokens[:, p:], pos[:, p:],
+                         jnp.asarray([p], jnp.int32), jnp.asarray([q], jnp.int32),
+                         use_pallas=False)
+
+    pad_tokens = jnp.zeros((b, pad_to), jnp.int32).at[:, :p].set(tokens[:, :p])
+    pad_pos = jnp.tile(jnp.arange(pad_to, dtype=jnp.int32)[None], (b, 1))
+    kv_pad = M.prefill(CFG, params, pad_tokens, pad_pos,
+                       jnp.asarray([p], jnp.int32), use_pallas=False)
+    out_pad = M.decode(CFG, params, kv_pad, tokens[:, p:], pos[:, p:],
+                       jnp.asarray([p], jnp.int32), jnp.asarray([q], jnp.int32),
+                       use_pallas=False)
+    np.testing.assert_allclose(np.asarray(out_tight), np.asarray(out_pad),
+                               atol=1e-5, rtol=1e-5)
+
+
+def test_query_padding_invariance(params):
+    """Padding the query bundle (q_valid < Q) must not change the valid
+    slots' outputs."""
+    b, p, q = 1, 8, 5
+    tokens, pos, valid = seq_inputs(b, p + q, seed=5)
+    kv = M.prefill(CFG, params, tokens[:, :p], pos[:, :p],
+                   jnp.asarray([p], jnp.int32), use_pallas=False)
+    out = M.decode(CFG, params, kv, tokens[:, p:], pos[:, p:],
+                   jnp.asarray([p], jnp.int32), jnp.asarray([q], jnp.int32),
+                   use_pallas=False)
+    q_pad = q + 3
+    qt = jnp.full((b, q_pad), tok.MASK, jnp.int32).at[:, :q].set(tokens[:, p:])
+    qp = jnp.zeros((b, q_pad), jnp.int32).at[:, :q].set(pos[:, p:])
+    out_pad = M.decode(CFG, params, kv, qt, qp,
+                       jnp.asarray([p], jnp.int32), jnp.asarray([q], jnp.int32),
+                       use_pallas=False)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(out_pad[:, :q]),
+                               atol=1e-5, rtol=1e-5)
+
+
+def test_pallas_and_ref_paths_agree(params):
+    tokens, pos, valid = seq_inputs(1, 12, seed=6)
+    a = M.logits_full(CFG, params, tokens, pos, valid, use_pallas=True)
+    b_ = M.logits_full(CFG, params, tokens, pos, valid, use_pallas=False)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b_), atol=2e-5, rtol=2e-5)
+
+
+def test_block_causal_hides_future_blocks(bc_params):
+    """In block-causal mode, changing tokens in a *later* block must not
+    affect earlier blocks' outputs (it does in full mode)."""
+    b, t = 1, 12
+    p0 = jnp.asarray([4], jnp.int32)  # prompt 4, then blocks of 4
+    tokens, pos, valid = seq_inputs(b, t, seed=7)
+    out1 = M.logits_full(BC_CFG, bc_params, tokens, pos, valid, p0, use_pallas=False)
+    tokens2 = tokens.at[0, 9].set((tokens[0, 9] + 1) % tok.VOCAB_SIZE)
+    out2 = M.logits_full(BC_CFG, bc_params, tokens2, pos, valid, p0, use_pallas=False)
+    # positions < 8 (prompt + block 0) unchanged
+    np.testing.assert_allclose(np.asarray(out1[:, :8]), np.asarray(out2[:, :8]),
+                               atol=1e-6)
+    # full mode: the same perturbation propagates backwards
+    f1 = M.logits_full(CFG, bc_params, tokens, pos, valid, use_pallas=False)
+    f2 = M.logits_full(CFG, bc_params, tokens2, pos, valid, use_pallas=False)
+    assert np.abs(np.asarray(f1[:, :8, 1]) - np.asarray(f2[:, :8, 1])).max() > 0
+
+
+def test_valid_masking_hides_padding(params):
+    """Tokens beyond `valid` must not influence outputs."""
+    b, t = 1, 10
+    tokens, pos, _ = seq_inputs(b, t, seed=8)
+    v = jnp.asarray([6], jnp.int32)
+    out1 = M.logits_full(CFG, params, tokens, pos, v, use_pallas=False)
+    tokens2 = tokens.at[0, 8].set((tokens[0, 8] + 3) % tok.VOCAB_SIZE)
+    out2 = M.logits_full(CFG, params, tokens2, pos, v, use_pallas=False)
+    np.testing.assert_allclose(np.asarray(out1[:, :6]), np.asarray(out2[:, :6]),
+                               atol=1e-6)
+
+
+def test_param_flatten_roundtrip(params):
+    flat = M.flatten_params(CFG, params)
+    rebuilt = M.unflatten_params(CFG, flat)
+    assert set(rebuilt) == set(params)
+    for k in params:
+        np.testing.assert_array_equal(np.asarray(params[k]), np.asarray(rebuilt[k]))
+
+
+def test_rope_relative_position_semantics(params):
+    """RoPE encodes *relative* offsets: a global shift of all position
+    ids is a no-op (this is what makes the offset augmentation in
+    training and the bucketed absolute ids at serving time mutually
+    consistent), while changing the *gaps* between positions must change
+    the outputs."""
+    tokens, pos, valid = seq_inputs(1, 8, seed=9)
+    l1 = np.asarray(M.train_logits(CFG, params, tokens, pos, valid))
+    # global shift → identical logits (up to fp noise)
+    l_shift = np.asarray(M.train_logits(CFG, params, tokens, pos + 57, valid))
+    np.testing.assert_allclose(l1, l_shift, atol=1e-4, rtol=1e-4)
+    # stretching the gaps → different logits
+    l_stretch = np.asarray(M.train_logits(CFG, params, tokens, pos * 3, valid))
+    assert np.abs(l1 - l_stretch).max() > 1e-4

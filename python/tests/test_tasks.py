@@ -1,0 +1,150 @@
+"""Task-suite generators: correctness of the synthetic semantics, prompt
+assembly, determinism, and the answer-extraction contract shared with the
+rust eval harness."""
+
+import json
+import random
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import tasks, tokenizer as tok
+
+
+@pytest.mark.parametrize("suite", tasks.SUITES)
+def test_generators_encodable(suite):
+    rng = random.Random(0)
+    for _ in range(50):
+        q, cot, final = tasks.GENERATORS[suite](rng)
+        tok.encode(q)      # raises on out-of-alphabet
+        tok.encode(cot)
+        assert final == tasks.extract_final(cot)
+
+
+def test_gsm_semantics():
+    rng = random.Random(1)
+    for _ in range(100):
+        q, cot, final = tasks.gen_gsm(rng)
+        # replay the chain: parse assignments from the question
+        env = {}
+        parts = q[:-1].split(";")  # strip trailing '?'
+        query_var = parts[-1]
+        for p in parts[:-1]:
+            var, expr = p.split("=")
+            if expr.isdigit():
+                env[var] = int(expr)
+            else:
+                prev, op, d = expr[0], expr[1], int(expr[2:])
+                if op == "+":
+                    env[var] = (env[prev] + d) % 100
+                elif op == "-":
+                    env[var] = (env[prev] - d) % 100
+                else:
+                    env[var] = (env[prev] * d) % 100
+        assert str(env[query_var]) == final
+        # CoT lists every variable in order with its value
+        steps = cot.split(";")
+        assert steps[-1] == final
+        assert len(steps) == len(env) + 1
+
+
+def test_humaneval_semantics():
+    rng = random.Random(2)
+    for _ in range(100):
+        q, out, final = tasks.gen_humaneval(rng)
+        op, rest = q.split(":")
+        s = rest[:-1]  # strip '>'
+        assert out == tasks._HE_OPS[op](s)
+        assert final == out
+
+
+def test_mbpp_semantics():
+    rng = random.Random(3)
+    for _ in range(100):
+        q, out, final = tasks.gen_mbpp(rng)
+        op, rest = q[:-1].split(" ", 1)
+        xs = [int(x) for x in rest.split()]
+        want = tasks._MBPP_OPS[op](xs)
+        assert out == " ".join(str(v) for v in want)
+
+
+def test_math_semantics():
+    rng = random.Random(4)
+    for _ in range(100):
+        q, cot, final = tasks.gen_math(rng)
+        inner, outer, res = cot.split(";")
+        m = int(q[q.index("%") + 1:q.index("?")])
+        assert int(res) == int(outer) % m
+        assert final == res
+
+
+def test_prompt_layout():
+    rng = random.Random(5)
+    ids, cot, final = tasks.make_example("gsm-mini", rng, shots=3)
+    assert ids[0] == tok.BOS
+    assert ids.count(tok.SEP) == 3
+    text = tok.decode(ids)
+    assert text.endswith("?")
+
+
+def test_zero_shot_prompt_has_no_sep():
+    rng = random.Random(6)
+    ids, _, _ = tasks.make_example("humaneval-mini", rng)
+    assert tok.SEP not in ids
+    assert ids[0] == tok.BOS
+
+
+def test_training_sequence_layout():
+    rng = random.Random(7)
+    out = None
+    while out is None:
+        out = tasks.training_sequence("gsm-mini", rng, 192)
+    seq, p0 = out
+    assert len(seq) == 192
+    assert seq[-1] == tok.EOS
+    # generation region = cot + EOS fill; prompt region has no EOS
+    assert tok.EOS not in seq[:p0]
+    gen = seq[p0:]
+    first_eos = gen.index(tok.EOS)
+    assert all(t == tok.EOS for t in gen[first_eos:])
+
+
+def test_eval_export_deterministic(tmp_path):
+    p1 = tmp_path / "a.jsonl"
+    p2 = tmp_path / "b.jsonl"
+    tasks.write_eval_jsonl(str(p1), "math-mini", 20, seed=42)
+    tasks.write_eval_jsonl(str(p2), "math-mini", 20, seed=42)
+    assert p1.read_text() == p2.read_text()
+    lines = p1.read_text().strip().split("\n")
+    assert len(lines) == 20
+    row = json.loads(lines[0])
+    assert {"prompt", "answer", "cot"} <= set(row)
+    assert tasks.extract_final(row["cot"]) == row["answer"]
+
+
+@settings(max_examples=50, deadline=None)
+@given(seed=st.integers(0, 10_000), suite=st.sampled_from(tasks.SUITES))
+def test_examples_fit_prefix_buckets(seed, suite):
+    """Eval prompts must fit the smallest AOT prefix bucket headroom."""
+    rng = random.Random(seed)
+    ids, _, final = tasks.make_example(suite, rng)
+    assert len(ids) <= 176  # default-shot prompts must leave room in the 224 bucket
+    assert 1 <= len(final) <= 24
+
+
+def test_extract_final_matches_rust_rule():
+    # mirrored in rust/src/eval/mod.rs::extract_final tests
+    assert tasks.extract_final("a9;b81;81") == "81"
+    assert tasks.extract_final("edcba") == "edcba"
+    assert tasks.extract_final("1 2 3") == "1 2 3"
+    assert tasks.extract_final("x;") == ""
+
+
+def test_tokenizer_roundtrip():
+    s = "a=4;b=a+3;b?a4;b7;7 (2*3+1)%5? rev:abc>cba sort 1 2>"
+    assert tok.decode(tok.encode(s)) == s
+
+
+def test_decode_until_eos_stops():
+    ids = tok.encode("a9;81") + [tok.EOS] + tok.encode("junk")
+    assert tok.decode_until_eos(ids) == "a9;81"

@@ -1,0 +1,105 @@
+//! Shared bench plumbing for all tableN/figN targets: artifact setup,
+//! the main accuracy+throughput grid (Tables 1/2/8 and the latency
+//! Tables 9/10/11), and sweep helpers.
+//!
+//! Knobs (env): SDLLM_BENCH_N (items per cell, default 12),
+//! SDLLM_ARTIFACTS (artifacts dir).
+
+#![allow(dead_code)]
+
+
+use streaming_dllm::engine::{table12_config, GenConfig, Method};
+use streaming_dllm::eval::{load_suite, run_suite, EvalItem, SuiteResult};
+use streaming_dllm::runtime::{ArtifactsIndex, ModelRuntime, Runtime};
+use streaming_dllm::util::bench::{print_latency_table, print_table, save_rows, Cell, Row};
+
+pub const SUITES: [(&str, &str); 4] = [
+    ("humaneval-mini", "HumanEval-mini (0-shot)"),
+    ("gsm-mini", "GSM8K-mini (5-shot)"),
+    ("mbpp-mini", "MBPP-mini (3-shot)"),
+    ("math-mini", "MATH-mini (4-shot)"),
+];
+
+/// Paper gen lengths {256, 512} scaled ÷4 (DESIGN.md).
+pub const GEN_LENS: [usize; 2] = [64, 128];
+
+pub fn bench_n() -> usize {
+    std::env::var("SDLLM_BENCH_N").ok().and_then(|s| s.parse().ok()).unwrap_or(12)
+}
+
+pub struct Setup {
+    pub index: ArtifactsIndex,
+    pub rt: Runtime,
+}
+
+impl Setup {
+    pub fn new() -> Option<Setup> {
+        let root = streaming_dllm::artifacts_root();
+        if !root.join("index.json").exists() {
+            println!("SKIP: no artifacts at {} (run `make artifacts`)", root.display());
+            return None;
+        }
+        let index = ArtifactsIndex::load(&root).expect("artifacts index");
+        let rt = Runtime::cpu().expect("PJRT cpu client");
+        Some(Setup { index, rt })
+    }
+
+    pub fn model(&self, name: &str) -> ModelRuntime {
+        ModelRuntime::load(&self.rt, &self.index.model_dir(name)).expect("model runtime")
+    }
+
+    pub fn suite(&self, name: &str) -> Vec<EvalItem> {
+        load_suite(&self.index.eval_dir.join(format!("{name}.jsonl"))).expect("suite")
+    }
+
+    pub fn suite_file(&self, file: &str) -> Vec<EvalItem> {
+        load_suite(&self.index.eval_dir.join(file)).expect("suite")
+    }
+}
+
+/// Method config for a (model, suite, len) cell: Streaming uses the
+/// Table-12 per-benchmark hyperparameters; baselines use presets.
+pub fn cell_config(method: Method, model: &str, suite: &str, gen_len: usize) -> GenConfig {
+    match method {
+        Method::Streaming => table12_config(model, suite, gen_len),
+        _ => GenConfig::preset(method, gen_len),
+    }
+}
+
+pub fn run_cell(
+    mrt: &ModelRuntime,
+    method: Method,
+    model: &str,
+    suite: &str,
+    gen_len: usize,
+    items: &[EvalItem],
+) -> SuiteResult {
+    let cfg = cell_config(method, model, suite, gen_len);
+    run_suite(mrt, &cfg, items, None).expect("run_suite")
+}
+
+/// The paper's main-table grid: 4 suites × 2 gen lengths × 5 methods.
+/// Prints both the throughput table (Tables 1/2/8) and the latency table
+/// (Tables 9/10/11) and saves JSON for fig1.
+pub fn main_table(model: &str, title: &str) {
+    let Some(setup) = Setup::new() else { return };
+    let mrt = setup.model(model);
+    let n = bench_n();
+    let mut rows = vec![];
+    for (suite, label) in SUITES {
+        let items = setup.suite(suite);
+        for gen_len in GEN_LENS {
+            let items = &items[..n.min(items.len())];
+            let mut cells: Vec<(String, Cell)> = vec![];
+            for method in Method::all() {
+                let res = run_cell(&mrt, method, model, suite, gen_len, items);
+                cells.push((method.name().to_string(), res.to_cell()));
+            }
+            rows.push(Row { label: format!("{label} L={gen_len}"), cells });
+        }
+    }
+    print_table(title, &rows);
+    print_latency_table(title, &rows);
+    save_rows(&format!("main_{model}"), &rows);
+    println!("\n(n={n}/cell; paper scale: L=64↔256, L=128↔512; speedups are vs vanilla)");
+}

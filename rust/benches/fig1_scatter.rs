@@ -1,0 +1,62 @@
+//! Paper Figure 1: accuracy-vs-throughput scatter across acceleration
+//! strategies. Aggregates the saved main-table JSON (run table2 first)
+//! or recomputes a small grid, then prints the scatter series.
+#[path = "common.rs"]
+mod common;
+
+use streaming_dllm::engine::Method;
+use streaming_dllm::util::json::Json;
+
+fn main() {
+    let saved = std::path::Path::new("target/bench-results/main_llada15-mini.json");
+    let rows: Vec<(String, Vec<(String, f64, f64)>)> = if saved.exists() {
+        let j = Json::parse(&std::fs::read_to_string(saved).unwrap()).unwrap();
+        j.as_arr()
+            .unwrap()
+            .iter()
+            .map(|r| {
+                let label = r.get("label").unwrap().as_str().unwrap().to_string();
+                let cells = r
+                    .get("cells")
+                    .unwrap()
+                    .as_arr()
+                    .unwrap()
+                    .iter()
+                    .map(|c| {
+                        (
+                            c.get("method").unwrap().as_str().unwrap().to_string(),
+                            c.get("accuracy").unwrap().as_f64().unwrap(),
+                            c.get("tokens_per_s").unwrap().as_f64().unwrap(),
+                        )
+                    })
+                    .collect();
+                (label, cells)
+            })
+            .collect()
+    } else {
+        println!("(no saved main-table results; computing a reduced grid — run table2_llada15 for the full figure)");
+        let Some(setup) = common::Setup::new() else { return };
+        let model = "llada15-mini";
+        let mrt = setup.model(model);
+        let n = common::bench_n().min(8);
+        let items = setup.suite("gsm-mini");
+        let items = &items[..n.min(items.len())];
+        let cells = Method::all()
+            .into_iter()
+            .map(|m| {
+                let res = common::run_cell(&mrt, m, model, "gsm-mini", 64, items);
+                (m.name().to_string(), res.accuracy(), res.tokens_per_sec())
+            })
+            .collect();
+        vec![("gsm-mini L=64".to_string(), cells)]
+    };
+
+    println!("=== Figure 1 — accuracy vs throughput scatter ===");
+    println!("{:<28}{:<16}{:>10}{:>14}", "setting", "method", "acc(%)", "tok/s");
+    for (label, cells) in &rows {
+        for (method, acc, tps) in cells {
+            println!("{:<28}{:<16}{:>10.1}{:>14.1}", label, method, acc, tps);
+        }
+    }
+    println!("(expected: ours occupies the top-right frontier — highest throughput at competitive accuracy)");
+}

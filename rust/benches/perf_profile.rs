@@ -1,0 +1,75 @@
+//! §Perf profiling harness: per-layer wall-clock breakdown of the
+//! serving hot path — executable dispatch, host→device upload, model
+//! execute, output sync, and the pure-rust scheduling layer — plus
+//! per-bucket decode-step microbenchmarks. This is what the
+//! EXPERIMENTS.md §Perf before/after numbers come from.
+#[path = "common.rs"]
+mod common;
+
+use std::time::Instant;
+
+use streaming_dllm::engine::{GenConfig, Generator, Method, SeqState};
+use streaming_dllm::util::bench::time_fn;
+
+fn main() {
+    let Some(setup) = common::Setup::new() else { return };
+    let model = "llada15-mini";
+    let mrt = setup.model(model);
+    let items = setup.suite("gsm-mini");
+
+    // -------- decode-step microbench per query bucket ----------------
+    println!("=== decode-step cost per (P, Q) bucket (b=1) ===");
+    println!("{:<10}{:<10}{:>14}", "P", "Q", "ms/step");
+    let p0 = items[0].prompt.len();
+    for &p in &[160usize, 224] {
+        let tokens: Vec<i32> = (0..p).map(|i| if i < p0 { items[0].prompt[i] } else { 1 }).collect();
+        let pos: Vec<i32> = (0..p as i32).collect();
+        let kv = mrt.prefill(1, p, &tokens, &pos, &[p0 as i32], None).expect("prefill");
+        for &q in &[13usize, 25, 41, 73, 137] {
+            let q_tok = vec![1i32; q];
+            let q_pos: Vec<i32> = (p0 as i32..(p0 + q) as i32).collect();
+            let w = time_fn(2, 8, || {
+                mrt.decode(&kv, q, &q_tok, &q_pos, &[q as i32]).expect("decode");
+            });
+            println!("{:<10}{:<10}{:>14.2}", p, q, w.mean() * 1e3);
+        }
+    }
+
+    // -------- prefill + logits cost per bucket ------------------------
+    println!("\n=== prefill / logits cost per bucket (b=1) ===");
+    println!("{:<10}{:<12}{:>14}", "bucket", "kind", "ms/call");
+    for &p in &[96usize, 160, 224, 352] {
+        let tokens = vec![2i32; p];
+        let pos: Vec<i32> = (0..p as i32).collect();
+        let w = time_fn(1, 5, || {
+            mrt.prefill(1, p, &tokens, &pos, &[16], None).expect("prefill");
+        });
+        println!("{:<10}{:<12}{:>14.2}", p, "prefill", w.mean() * 1e3);
+        let w = time_fn(1, 5, || {
+            mrt.logits(1, p, &tokens, &pos, &[16], None).expect("logits");
+        });
+        println!("{:<10}{:<12}{:>14.2}", p, "logits", w.mean() * 1e3);
+    }
+
+    // -------- end-to-end breakdown -------------------------------------
+    println!("\n=== end-to-end breakdown (streaming, gsm-mini L=64, 8 samples) ===");
+    let cfg = GenConfig::preset(Method::Streaming, 64);
+    let generator = Generator::new(&mrt, cfg.clone()).expect("gen");
+    mrt.reset_stats();
+    let t0 = Instant::now();
+    for item in items.iter().take(8) {
+        let mut seqs = vec![SeqState::new(&item.prompt, 64, &mrt.manifest.special)];
+        generator.generate(&mut seqs, None).expect("generate");
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let st = mrt.stats();
+    let model_secs = st.total_model_secs();
+    println!("wall                : {:>8.3}s", wall);
+    println!("model execute       : {:>8.3}s ({:.1}%)", model_secs, 100.0 * model_secs / wall);
+    println!("  prefill           : {:>8.3}s ({} calls)", st.prefill_secs, st.prefill_calls);
+    println!("  decode            : {:>8.3}s ({} calls)", st.decode_secs, st.decode_calls);
+    println!("  logits            : {:>8.3}s ({} calls)", st.logits_secs, st.logits_calls);
+    println!("rust scheduling     : {:>8.3}s ({:.1}%)", wall - model_secs, 100.0 * (wall - model_secs) / wall);
+    println!("compile (first-use) : {:>8.3}s ({} executables)", st.compile_secs, st.compile_count);
+    println!("\nL3 target: rust scheduling share < 10% of wall (the coordinator must not be the bottleneck)");
+}

@@ -1,0 +1,8 @@
+//! Paper Table 1 (+ latency Table 9): Dream-Base suite — accuracy and
+//! throughput/latency for 5 methods × 4 benchmarks × 2 gen lengths.
+#[path = "common.rs"]
+mod common;
+
+fn main() {
+    common::main_table("dream-mini", "Table 1 — Dream-mini (paper: Dream-v0-7B-Base)");
+}

@@ -1,0 +1,7 @@
+//! Paper Table 2 (+ latency Table 10): LLaDA-1.5 suite.
+#[path = "common.rs"]
+mod common;
+
+fn main() {
+    common::main_table("llada15-mini", "Table 2 — LLaDA-1.5-mini (paper: LLaDA-1.5)");
+}

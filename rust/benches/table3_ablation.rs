@@ -1,0 +1,52 @@
+//! Paper Table 3: module ablation (Suf. / Dyn. / Exit.) on GSM8K-mini at
+//! L=128 (paper: GSM8K @ 512) across the three bidirectional backbones.
+#[path = "common.rs"]
+mod common;
+
+use streaming_dllm::engine::{GenConfig, Method};
+use streaming_dllm::eval::run_suite;
+
+fn main() {
+    let Some(setup) = common::Setup::new() else { return };
+    let n = common::bench_n();
+    let gen_len = 128;
+    println!("=== Table 3 — ablation on gsm-mini, L={gen_len} (paper: GSM8K L=512) ===");
+    println!("{:<14}{:<6}{:<6}{:<7}{:>9}{:>13}{:>8}", "model", "Suf.", "Dyn.", "Exit.", "Acc.(%)", "Th.(tok/s)", "NFE");
+    let rows = [
+        (false, false, false), // ≙ Fast-dLLM baseline row
+        (true, false, false),
+        (true, true, false),
+        (true, true, true),
+    ];
+    for model in ["dream-mini", "llada-mini", "llada15-mini"] {
+        let mrt = setup.model(model);
+        let items = setup.suite("gsm-mini");
+        let items = &items[..n.min(items.len())];
+        for (suf, dynamic, exit) in rows {
+            let mut cfg = GenConfig::preset(Method::Streaming, gen_len);
+            cfg.suffix_pruning = suf;
+            cfg.dynamic_threshold = dynamic;
+            cfg.early_exit = exit;
+            let res = run_suite(&mrt, &cfg, items, None).expect("suite");
+            println!(
+                "{:<14}{:<6}{:<6}{:<7}{:>9.1}{:>13.1}{:>8.1}",
+                model,
+                tick(suf),
+                tick(dynamic),
+                tick(exit),
+                res.accuracy(),
+                res.tokens_per_sec(),
+                res.steps as f64 / items.len() as f64
+            );
+        }
+    }
+    println!("(n={n}; row 1 per model = no-module baseline ≙ Fast-dLLM)");
+}
+
+fn tick(b: bool) -> &'static str {
+    if b {
+        "Y"
+    } else {
+        "x"
+    }
+}

@@ -1,0 +1,34 @@
+//! Paper Table 6: impact of the trailing positional token. Dropping it
+//! removes the coarse "where does the sequence end" cue (Eq. 7's
+//! ∪ {p_L + L} term) and costs accuracy on all three backbones.
+#[path = "common.rs"]
+mod common;
+
+use streaming_dllm::engine::{GenConfig, Method};
+use streaming_dllm::eval::run_suite;
+
+fn main() {
+    let Some(setup) = common::Setup::new() else { return };
+    let n = common::bench_n();
+    let gen_len = 128;
+    println!("=== Table 6 — trailing positional information (gsm-mini, L={gen_len}) ===");
+    println!("{:<16}{:<20}{:>12}{:>14}", "model", "trailing position", "Acc.(%)", "Th.(tok/s)");
+    for model in ["dream-mini", "llada-mini", "llada15-mini"] {
+        let mrt = setup.model(model);
+        let items = setup.suite("gsm-mini");
+        let items = &items[..n.min(items.len())];
+        for trailing in [false, true] {
+            let mut cfg = GenConfig::preset(Method::Streaming, gen_len);
+            cfg.trailing_position = trailing;
+            let res = run_suite(&mrt, &cfg, items, None).expect("suite");
+            println!(
+                "{:<16}{:<20}{:>12.1}{:>14.1}",
+                model,
+                if trailing { "yes" } else { "no" },
+                res.accuracy(),
+                res.tokens_per_sec()
+            );
+        }
+    }
+    println!("(n={n}; paper: omitting the trailing position drops accuracy 1.2–1.9 points)");
+}

@@ -1,0 +1,55 @@
+//! Paper Table 7 (§4.4): the block-causal extension. On Open-Pangu-like
+//! topologies the distant suffix is already absent (spatial pruning
+//! degenerates to a topology-aware no-op), but the *temporal* module —
+//! dynamic confidence-aware decoding + early exit — still applies.
+//! Baseline = fixed-threshold commits, ours = dynamic + exit.
+#[path = "common.rs"]
+mod common;
+
+use streaming_dllm::engine::{GenConfig, Method};
+use streaming_dllm::eval::run_suite;
+use streaming_dllm::util::bench::{print_table, save_rows, Row};
+
+fn main() {
+    let Some(setup) = common::Setup::new() else { return };
+    let model = "pangu-mini";
+    let mrt = setup.model(model);
+    let n = common::bench_n();
+    let gen_len = 64;
+
+    let mut rows = vec![];
+    for (suite, label) in common::SUITES {
+        let items = setup.suite(suite);
+        let items = &items[..n.min(items.len())];
+
+        // Block-causal topology: the suffix is *absent by construction*,
+        // so both arms run block-only query bundles (window = 0, no
+        // trailing token — spatial pruning degenerates, paper §4.4).
+        // baseline: static threshold, no early exit (Fast-dLLM-style
+        // commits adapted to the topology)
+        let mut base = GenConfig::preset(Method::Streaming, gen_len);
+        base.suffix_pruning = true;
+        base.window = 0;
+        base.trailing_position = false;
+        base.dynamic_threshold = false;
+        base.early_exit = false;
+
+        // ours: the temporal modules (dynamic threshold + early exit)
+        let mut ours = GenConfig::preset(Method::Streaming, gen_len);
+        ours.window = 0;
+        ours.trailing_position = false;
+
+        let res_b = run_suite(&mrt, &base, items, None).expect("base");
+        let res_o = run_suite(&mrt, &ours, items, None).expect("ours");
+        rows.push(Row {
+            label: label.to_string(),
+            cells: vec![
+                ("open-pangu-mini".to_string(), res_b.to_cell()),
+                ("ours (temporal)".to_string(), res_o.to_cell()),
+            ],
+        });
+    }
+    print_table("Table 7 — block-causal extension (pangu-mini)", &rows);
+    save_rows("table7_blockcausal", &rows);
+    println!("(n={n}; paper: 1.4–1.6x throughput, accuracy maintained or improved on 5/6 tasks)");
+}

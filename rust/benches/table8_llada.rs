@@ -1,0 +1,7 @@
+//! Paper Table 8 (+ latency Table 11): LLaDA-Instruct suite.
+#[path = "common.rs"]
+mod common;
+
+fn main() {
+    common::main_table("llada-mini", "Table 8 — LLaDA-mini (paper: LLaDA-8B-Instruct)");
+}

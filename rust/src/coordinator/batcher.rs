@@ -1,0 +1,233 @@
+//! Dynamic batcher: groups admitted requests into executable-compatible
+//! batches. Compatibility = same (method, gen_len) — those determine the
+//! decode schedule; prompt lengths may differ (bucketed + masked).
+//!
+//! Policy: flush a group when it reaches `max_batch`, or when its oldest
+//! member has waited `max_wait` (classic vLLM-style continuous admission,
+//! simplified to block granularity since dLLM decode is block-wise).
+//!
+//! Pure logic — no runtime handles — so the property tests can hammer it.
+
+use std::collections::VecDeque;
+use std::time::{Duration, Instant};
+
+use crate::engine::Method;
+
+use super::request::Request;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct GroupKey {
+    pub method: Method,
+    pub gen_len: usize,
+}
+
+#[derive(Debug)]
+struct Pending {
+    req: Request,
+    arrived: Instant,
+}
+
+#[derive(Debug)]
+pub struct Batcher {
+    queues: Vec<(GroupKey, VecDeque<Pending>)>,
+    pub max_batch: usize,
+    pub max_wait: Duration,
+}
+
+impl Batcher {
+    pub fn new(max_batch: usize, max_wait: Duration) -> Batcher {
+        assert!(max_batch >= 1);
+        Batcher { queues: vec![], max_batch, max_wait }
+    }
+
+    pub fn push(&mut self, req: Request) {
+        self.push_at(req, Instant::now())
+    }
+
+    pub fn push_at(&mut self, req: Request, now: Instant) {
+        let key = GroupKey { method: req.method, gen_len: req.gen_len };
+        let q = match self.queues.iter_mut().find(|(k, _)| *k == key) {
+            Some((_, q)) => q,
+            None => {
+                self.queues.push((key, VecDeque::new()));
+                &mut self.queues.last_mut().unwrap().1
+            }
+        };
+        q.push_back(Pending { req, arrived: now });
+    }
+
+    pub fn pending(&self) -> usize {
+        self.queues.iter().map(|(_, q)| q.len()).sum()
+    }
+
+    /// Pop the next batch to run, if any group is ready. Ready = full
+    /// batch available, or oldest member exceeded max_wait (then take
+    /// whatever the group has, up to max_batch).
+    pub fn pop_ready(&mut self, now: Instant) -> Option<(GroupKey, Vec<Request>)> {
+        // full groups first (throughput), then timed-out groups (latency)
+        let mut chosen: Option<usize> = None;
+        for (i, (_, q)) in self.queues.iter().enumerate() {
+            if q.len() >= self.max_batch {
+                chosen = Some(i);
+                break;
+            }
+        }
+        if chosen.is_none() {
+            let mut oldest: Option<(usize, Instant)> = None;
+            for (i, (_, q)) in self.queues.iter().enumerate() {
+                if let Some(front) = q.front() {
+                    if now.duration_since(front.arrived) >= self.max_wait
+                        && oldest.map(|(_, t)| front.arrived < t).unwrap_or(true)
+                    {
+                        oldest = Some((i, front.arrived));
+                    }
+                }
+            }
+            chosen = oldest.map(|(i, _)| i);
+        }
+        let i = chosen?;
+        let (key, q) = &mut self.queues[i];
+        let key = *key;
+        let n = q.len().min(self.max_batch);
+        let batch: Vec<Request> = q.drain(..n).map(|p| p.req).collect();
+        if q.is_empty() {
+            self.queues.remove(i);
+        }
+        Some((key, batch))
+    }
+
+    /// Time until the next queue would time out (router uses this as its
+    /// poll timeout). None when idle.
+    pub fn next_deadline(&self, now: Instant) -> Option<Duration> {
+        self.queues
+            .iter()
+            .filter_map(|(_, q)| q.front())
+            .map(|p| {
+                let waited = now.duration_since(p.arrived);
+                self.max_wait.saturating_sub(waited)
+            })
+            .min()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    fn req(id: u64, method: Method, gen_len: usize) -> Request {
+        Request { id, prompt: vec![2], method, gen_len }
+    }
+
+    #[test]
+    fn full_batch_flushes_immediately() {
+        let mut b = Batcher::new(2, Duration::from_secs(60));
+        let t = Instant::now();
+        b.push_at(req(1, Method::Streaming, 64), t);
+        assert!(b.pop_ready(t).is_none());
+        b.push_at(req(2, Method::Streaming, 64), t);
+        let (key, batch) = b.pop_ready(t).unwrap();
+        assert_eq!(batch.len(), 2);
+        assert_eq!(key.gen_len, 64);
+        assert_eq!(b.pending(), 0);
+    }
+
+    #[test]
+    fn incompatible_requests_never_mix() {
+        let mut b = Batcher::new(2, Duration::from_secs(60));
+        let t = Instant::now();
+        b.push_at(req(1, Method::Streaming, 64), t);
+        b.push_at(req(2, Method::Vanilla, 64), t);
+        b.push_at(req(3, Method::Streaming, 128), t);
+        assert!(b.pop_ready(t).is_none()); // three singleton groups
+        assert_eq!(b.pending(), 3);
+    }
+
+    #[test]
+    fn timeout_flushes_partial_batch() {
+        let mut b = Batcher::new(8, Duration::from_millis(10));
+        let t = Instant::now();
+        b.push_at(req(1, Method::Streaming, 64), t);
+        assert!(b.pop_ready(t).is_none());
+        let later = t + Duration::from_millis(11);
+        let (_, batch) = b.pop_ready(later).unwrap();
+        assert_eq!(batch.len(), 1);
+    }
+
+    #[test]
+    fn oldest_group_flushes_first() {
+        let mut b = Batcher::new(8, Duration::from_millis(10));
+        let t = Instant::now();
+        b.push_at(req(1, Method::Vanilla, 64), t);
+        b.push_at(req(2, Method::Streaming, 64), t + Duration::from_millis(2));
+        let later = t + Duration::from_millis(20);
+        let (key, _) = b.pop_ready(later).unwrap();
+        assert_eq!(key.method, Method::Vanilla);
+    }
+
+    #[test]
+    fn deadline_reflects_oldest() {
+        let mut b = Batcher::new(8, Duration::from_millis(100));
+        let t = Instant::now();
+        assert!(b.next_deadline(t).is_none());
+        b.push_at(req(1, Method::Streaming, 64), t);
+        let d = b.next_deadline(t + Duration::from_millis(30)).unwrap();
+        assert!(d <= Duration::from_millis(70));
+    }
+
+    #[test]
+    fn prop_batches_homogeneous_and_complete() {
+        prop::check(200, |g| {
+            let max_batch = g.usize(1, 8);
+            let n = g.usize(0, 40);
+            let mut b = Batcher::new(max_batch, Duration::from_millis(0));
+            let t = Instant::now();
+            let methods = Method::all();
+            let mut pushed = 0usize;
+            for i in 0..n {
+                let m = methods[g.usize(0, 4)];
+                let len = [64, 128][g.usize(0, 1)];
+                b.push_at(req(i as u64, m, len), t);
+                pushed += 1;
+            }
+            let mut popped = 0usize;
+            while let Some((key, batch)) = b.pop_ready(t + Duration::from_millis(1)) {
+                if batch.is_empty() || batch.len() > max_batch {
+                    return Err(format!("bad batch size {}", batch.len()));
+                }
+                if !batch.iter().all(|r| r.method == key.method && r.gen_len == key.gen_len) {
+                    return Err("mixed batch".into());
+                }
+                popped += batch.len();
+            }
+            if popped != pushed {
+                return Err(format!("lost requests: {popped} != {pushed}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_fifo_within_group() {
+        prop::check(100, |g| {
+            let n = g.usize(1, 20);
+            let mut b = Batcher::new(4, Duration::from_millis(0));
+            let t = Instant::now();
+            for i in 0..n {
+                b.push_at(req(i as u64, Method::Streaming, 64), t);
+            }
+            let mut last = None;
+            while let Some((_, batch)) = b.pop_ready(t) {
+                for r in batch {
+                    if let Some(prev) = last {
+                        if r.id <= prev {
+                            return Err("out of order".into());
+                        }
+                    }
+                    last = Some(r.id);
+                }
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,109 @@
+//! Load-generator client for the line-protocol server: N worker threads
+//! fire requests from a shared queue and collect responses — the client
+//! half of the end-to-end serving example.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::json::Json;
+
+use super::request::{Request, Response};
+
+pub struct Client {
+    stream: TcpStream,
+}
+
+impl Client {
+    pub fn connect(addr: &str) -> Result<Client> {
+        let stream = TcpStream::connect(addr).with_context(|| format!("connecting {addr}"))?;
+        Ok(Client { stream })
+    }
+
+    pub fn call(&mut self, req: &Request) -> Result<Response> {
+        let mut line = req.to_json().to_string();
+        line.push('\n');
+        self.stream.write_all(line.as_bytes())?;
+        self.stream.flush()?;
+        let mut reader = BufReader::new(self.stream.try_clone()?);
+        let mut resp_line = String::new();
+        reader.read_line(&mut resp_line)?;
+        let j = Json::parse(resp_line.trim()).map_err(|e| anyhow!("bad response: {e}"))?;
+        if let Some(err) = j.get("error").and_then(|e| e.as_str()) {
+            if j.get("id").is_none() {
+                anyhow::bail!("server error: {err}");
+            }
+        }
+        Response::from_json(&j).map_err(|e| anyhow!("bad response: {e}"))
+    }
+
+    pub fn stats(&mut self) -> Result<Json> {
+        self.stream.write_all(b"{\"cmd\":\"stats\"}\n")?;
+        self.stream.flush()?;
+        let mut reader = BufReader::new(self.stream.try_clone()?);
+        let mut line = String::new();
+        reader.read_line(&mut line)?;
+        Json::parse(line.trim()).map_err(|e| anyhow!("bad stats: {e}"))
+    }
+}
+
+/// Result of a load run.
+#[derive(Debug, Clone)]
+pub struct LoadReport {
+    pub ok: usize,
+    pub errors: usize,
+    pub wall_secs: f64,
+    pub client_latencies: Vec<f64>,
+    pub responses: Vec<Response>,
+}
+
+/// Fire `requests` at `addr` from `concurrency` connections; each worker
+/// pulls the next request off the shared queue (closed-loop load).
+pub fn run_load(addr: &str, requests: Vec<Request>, concurrency: usize) -> Result<LoadReport> {
+    let queue = Arc::new(Mutex::new(requests.into_iter().collect::<Vec<_>>()));
+    let results = Arc::new(Mutex::new((0usize, 0usize, Vec::new(), Vec::new())));
+    let t0 = Instant::now();
+    let mut handles = vec![];
+    for _ in 0..concurrency.max(1) {
+        let queue = queue.clone();
+        let results = results.clone();
+        let addr = addr.to_string();
+        handles.push(std::thread::spawn(move || -> Result<()> {
+            let mut client = Client::connect(&addr)?;
+            loop {
+                let req = {
+                    let mut q = queue.lock().unwrap();
+                    match q.pop() {
+                        Some(r) => r,
+                        None => return Ok(()),
+                    }
+                };
+                let t = Instant::now();
+                match client.call(&req) {
+                    Ok(resp) => {
+                        let mut r = results.lock().unwrap();
+                        if resp.error.is_none() {
+                            r.0 += 1;
+                        } else {
+                            r.1 += 1;
+                        }
+                        r.2.push(t.elapsed().as_secs_f64());
+                        r.3.push(resp);
+                    }
+                    Err(_) => {
+                        results.lock().unwrap().1 += 1;
+                    }
+                }
+            }
+        }));
+    }
+    for h in handles {
+        h.join().map_err(|_| anyhow!("client worker panicked"))??;
+    }
+    let (ok, errors, lats, responses) =
+        Arc::try_unwrap(results).map_err(|_| anyhow!("results still shared"))?.into_inner().unwrap();
+    Ok(LoadReport { ok, errors, wall_secs: t0.elapsed().as_secs_f64(), client_latencies: lats, responses })
+}

@@ -1,0 +1,108 @@
+//! Serving metrics: request counts, token throughput (the paper's
+//! non-EOS tokens/s), latency percentiles and queueing delay. Shared
+//! behind a mutex; snapshots serialize to JSON for the server's `stats`
+//! command and the serve_batch example report.
+
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::util::json::Json;
+use crate::util::stats::Samples;
+
+#[derive(Debug, Default)]
+struct Inner {
+    requests_ok: u64,
+    requests_err: u64,
+    non_eos_tokens: u64,
+    batches: u64,
+    batch_sizes: Vec<usize>,
+    latency: Samples,
+    queue_delay: Samples,
+    started: Option<Instant>,
+}
+
+#[derive(Debug, Default)]
+pub struct Metrics {
+    inner: Mutex<Inner>,
+}
+
+impl Metrics {
+    pub fn new() -> Metrics {
+        Metrics::default()
+    }
+
+    pub fn start_clock(&self) {
+        let mut m = self.inner.lock().unwrap();
+        if m.started.is_none() {
+            m.started = Some(Instant::now());
+        }
+    }
+
+    pub fn record_batch(&self, size: usize) {
+        let mut m = self.inner.lock().unwrap();
+        m.batches += 1;
+        m.batch_sizes.push(size);
+    }
+
+    pub fn record_response(&self, ok: bool, tokens: usize, latency_s: f64, queue_s: f64) {
+        let mut m = self.inner.lock().unwrap();
+        if ok {
+            m.requests_ok += 1;
+            m.non_eos_tokens += tokens as u64;
+        } else {
+            m.requests_err += 1;
+        }
+        m.latency.push(latency_s);
+        m.queue_delay.push(queue_s);
+    }
+
+    pub fn snapshot(&self) -> Json {
+        let mut m = self.inner.lock().unwrap();
+        let elapsed = m.started.map(|t| t.elapsed().as_secs_f64()).unwrap_or(0.0);
+        let tps = if elapsed > 0.0 { m.non_eos_tokens as f64 / elapsed } else { 0.0 };
+        let mean_batch = if m.batch_sizes.is_empty() {
+            0.0
+        } else {
+            m.batch_sizes.iter().sum::<usize>() as f64 / m.batch_sizes.len() as f64
+        };
+        let p50 = m.latency.percentile(50.0);
+        let p95 = m.latency.percentile(95.0);
+        let p99 = m.latency.percentile(99.0);
+        let qmean = m.queue_delay.mean();
+        Json::obj(vec![
+            ("requests_ok", Json::Num(m.requests_ok as f64)),
+            ("requests_err", Json::Num(m.requests_err as f64)),
+            ("non_eos_tokens", Json::Num(m.non_eos_tokens as f64)),
+            ("elapsed_s", Json::Num(elapsed)),
+            ("tokens_per_s", Json::Num(tps)),
+            ("batches", Json::Num(m.batches as f64)),
+            ("mean_batch_size", Json::Num(mean_batch)),
+            ("latency_p50_s", Json::Num(p50)),
+            ("latency_p95_s", Json::Num(p95)),
+            ("latency_p99_s", Json::Num(p99)),
+            ("queue_delay_mean_s", Json::Num(qmean)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counts_and_percentiles() {
+        let m = Metrics::new();
+        m.start_clock();
+        m.record_batch(4);
+        for i in 0..10 {
+            m.record_response(true, 10, 0.1 * (i + 1) as f64, 0.01);
+        }
+        m.record_response(false, 0, 1.0, 0.0);
+        let s = m.snapshot();
+        assert_eq!(s.get("requests_ok").unwrap().as_usize(), Some(10));
+        assert_eq!(s.get("requests_err").unwrap().as_usize(), Some(1));
+        assert_eq!(s.get("non_eos_tokens").unwrap().as_usize(), Some(100));
+        assert!(s.get("latency_p95_s").unwrap().as_f64().unwrap() >= 0.9);
+        assert_eq!(s.get("mean_batch_size").unwrap().as_f64(), Some(4.0));
+    }
+}

@@ -1,0 +1,16 @@
+//! L3 coordinator: admission, dynamic batching, the engine thread that
+//! owns the PJRT runtime, the TCP server and a load-generating client.
+
+pub mod batcher;
+pub mod client;
+pub mod metrics;
+pub mod request;
+pub mod router;
+pub mod server;
+
+pub use batcher::{Batcher, GroupKey};
+pub use client::{run_load, Client, LoadReport};
+pub use metrics::Metrics;
+pub use request::{Request, Response};
+pub use router::{Job, Msg, RouterHandle};
+pub use server::Server;

@@ -1,0 +1,122 @@
+//! Request/response types and their wire encoding (line-delimited JSON
+//! over TCP — the offline toolchain has no HTTP stack, and a line
+//! protocol keeps the client trivially scriptable).
+
+use crate::engine::Method;
+use crate::util::json::Json;
+
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: u64,
+    pub prompt: Vec<i32>,
+    pub method: Method,
+    pub gen_len: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub id: u64,
+    pub text: String,
+    pub non_eos_tokens: usize,
+    pub latency_s: f64,
+    pub queue_s: f64,
+    pub error: Option<String>,
+}
+
+impl Request {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("id", Json::Num(self.id as f64)),
+            ("prompt", Json::Arr(self.prompt.iter().map(|&t| Json::Num(t as f64)).collect())),
+            ("method", Json::Str(self.method.name().to_string())),
+            ("gen_len", Json::Num(self.gen_len as f64)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<Request, String> {
+        let id = j.get("id").and_then(|v| v.as_i64()).ok_or("missing id")? as u64;
+        let prompt: Vec<i32> = j
+            .get("prompt")
+            .and_then(|v| v.as_arr())
+            .ok_or("missing prompt")?
+            .iter()
+            .map(|x| x.as_i64().unwrap_or(0) as i32)
+            .collect();
+        if prompt.is_empty() {
+            return Err("empty prompt".into());
+        }
+        let method = Method::parse(j.get("method").and_then(|v| v.as_str()).unwrap_or("streaming"))
+            .ok_or("unknown method")?;
+        let gen_len = j.get("gen_len").and_then(|v| v.as_usize()).unwrap_or(64);
+        Ok(Request { id, prompt, method, gen_len })
+    }
+}
+
+impl Response {
+    pub fn to_json(&self) -> Json {
+        let mut fields = vec![
+            ("id", Json::Num(self.id as f64)),
+            ("text", Json::Str(self.text.clone())),
+            ("non_eos_tokens", Json::Num(self.non_eos_tokens as f64)),
+            ("latency_s", Json::Num(self.latency_s)),
+            ("queue_s", Json::Num(self.queue_s)),
+        ];
+        if let Some(e) = &self.error {
+            fields.push(("error", Json::Str(e.clone())));
+        }
+        Json::obj(fields)
+    }
+
+    pub fn from_json(j: &Json) -> Result<Response, String> {
+        Ok(Response {
+            id: j.get("id").and_then(|v| v.as_i64()).ok_or("missing id")? as u64,
+            text: j.get("text").and_then(|v| v.as_str()).unwrap_or("").to_string(),
+            non_eos_tokens: j.get("non_eos_tokens").and_then(|v| v.as_usize()).unwrap_or(0),
+            latency_s: j.get("latency_s").and_then(|v| v.as_f64()).unwrap_or(0.0),
+            queue_s: j.get("queue_s").and_then(|v| v.as_f64()).unwrap_or(0.0),
+            error: j.get("error").and_then(|v| v.as_str()).map(|s| s.to_string()),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn request_roundtrip() {
+        let r = Request { id: 7, prompt: vec![2, 10, 11], method: Method::Streaming, gen_len: 64 };
+        let j = Json::parse(&r.to_json().to_string()).unwrap();
+        let r2 = Request::from_json(&j).unwrap();
+        assert_eq!(r2.id, 7);
+        assert_eq!(r2.prompt, vec![2, 10, 11]);
+        assert_eq!(r2.method, Method::Streaming);
+        assert_eq!(r2.gen_len, 64);
+    }
+
+    #[test]
+    fn response_roundtrip_with_error() {
+        let r = Response {
+            id: 1,
+            text: "a9;81".into(),
+            non_eos_tokens: 5,
+            latency_s: 0.25,
+            queue_s: 0.01,
+            error: Some("boom".into()),
+        };
+        let j = Json::parse(&r.to_json().to_string()).unwrap();
+        let r2 = Response::from_json(&j).unwrap();
+        assert_eq!(r2.error.as_deref(), Some("boom"));
+        assert_eq!(r2.text, "a9;81");
+    }
+
+    #[test]
+    fn rejects_bad_requests() {
+        assert!(Request::from_json(&Json::parse("{\"id\":1}").unwrap()).is_err());
+        assert!(Request::from_json(&Json::parse("{\"id\":1,\"prompt\":[]}").unwrap()).is_err());
+        assert!(Request::from_json(
+            &Json::parse("{\"id\":1,\"prompt\":[2],\"method\":\"bogus\"}").unwrap()
+        )
+        .is_err());
+    }
+}

@@ -1,0 +1,219 @@
+//! Router: the engine thread. PJRT handles are not `Send`, so one
+//! dedicated thread owns the `ModelRuntime`; everything else talks to it
+//! through a channel of jobs. The router runs the admission loop:
+//! drain the inbox into the `Batcher`, pop ready batches, decode them
+//! with the `Generator`, and reply per request.
+
+use std::path::PathBuf;
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::engine::{GenConfig, Generator, SeqState};
+use crate::runtime::{ArtifactsIndex, ModelRuntime, Runtime};
+
+use super::batcher::Batcher;
+use super::metrics::Metrics;
+use super::request::{Request, Response};
+
+/// A submitted request plus its reply channel and arrival time.
+pub struct Job {
+    pub request: Request,
+    pub reply: Sender<Response>,
+    pub arrived: Instant,
+}
+
+/// Control messages for the engine thread.
+pub enum Msg {
+    Submit(Job),
+    Shutdown,
+}
+
+pub struct RouterHandle {
+    tx: Sender<Msg>,
+    join: Option<JoinHandle<Result<()>>>,
+    pub metrics: Arc<Metrics>,
+}
+
+impl RouterHandle {
+    /// Spawn the engine thread serving `model` from `artifacts_root`.
+    pub fn spawn(
+        artifacts_root: PathBuf,
+        model: String,
+        max_batch: usize,
+        max_wait: Duration,
+    ) -> RouterHandle {
+        let (tx, rx) = channel::<Msg>();
+        let metrics = Arc::new(Metrics::new());
+        let m2 = metrics.clone();
+        let join = std::thread::Builder::new()
+            .name("sdllm-router".into())
+            .spawn(move || engine_loop(artifacts_root, model, max_batch, max_wait, rx, m2))
+            .expect("spawn router thread");
+        RouterHandle { tx, join: Some(join), metrics }
+    }
+
+    /// Submit a request; returns the channel the response arrives on.
+    pub fn submit(&self, request: Request) -> Receiver<Response> {
+        let (reply_tx, reply_rx) = channel();
+        let job = Job { request, reply: reply_tx, arrived: Instant::now() };
+        // If the engine thread died the reply channel is dropped and the
+        // caller sees a disconnect — no panic here.
+        let _ = self.tx.send(Msg::Submit(job));
+        reply_rx
+    }
+
+    /// Blocking convenience: submit and wait.
+    pub fn call(&self, request: Request) -> Result<Response> {
+        let rx = self.submit(request);
+        Ok(rx.recv()?)
+    }
+
+    pub fn shutdown(mut self) -> Result<()> {
+        let _ = self.tx.send(Msg::Shutdown);
+        if let Some(j) = self.join.take() {
+            match j.join() {
+                Ok(r) => r,
+                Err(_) => anyhow::bail!("router thread panicked"),
+            }
+        } else {
+            Ok(())
+        }
+    }
+}
+
+impl Drop for RouterHandle {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Msg::Shutdown);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+fn engine_loop(
+    artifacts_root: PathBuf,
+    model: String,
+    max_batch: usize,
+    max_wait: Duration,
+    rx: Receiver<Msg>,
+    metrics: Arc<Metrics>,
+) -> Result<()> {
+    let rt = Runtime::cpu()?;
+    let index = ArtifactsIndex::load(&artifacts_root)?;
+    let model_rt = ModelRuntime::load(&rt, &index.model_dir(&model))?;
+    // Pre-warm the default serving path so first requests don't pay
+    // lazy executable compilation (best effort: unknown methods/lengths
+    // still compile on demand).
+    let warm_cfg = GenConfig::preset(crate::engine::Method::Streaming, 64);
+    if let Ok(n) = crate::runtime::warmup::warm_for(&model_rt, &warm_cfg, 224, max_batch) {
+        if n > 0 {
+            eprintln!("[router] pre-warmed {n} executables");
+        }
+    }
+    metrics.start_clock();
+
+    let mut batcher = Batcher::new(max_batch, max_wait);
+    let mut replies: std::collections::HashMap<u64, (Sender<Response>, Instant)> =
+        std::collections::HashMap::new();
+    let mut shutdown = false;
+
+    loop {
+        // Drain inbox (bounded wait so timed-out groups flush).
+        let timeout = batcher
+            .next_deadline(Instant::now())
+            .unwrap_or(Duration::from_millis(50));
+        match rx.recv_timeout(timeout) {
+            Ok(Msg::Submit(job)) => {
+                replies.insert(job.request.id, (job.reply, job.arrived));
+                batcher.push_at(job.request, job.arrived);
+                // opportunistically drain whatever else is queued
+                while let Ok(msg) = rx.try_recv() {
+                    match msg {
+                        Msg::Submit(j) => {
+                            replies.insert(j.request.id, (j.reply, j.arrived));
+                            batcher.push_at(j.request, j.arrived);
+                        }
+                        Msg::Shutdown => shutdown = true,
+                    }
+                }
+            }
+            Ok(Msg::Shutdown) => shutdown = true,
+            Err(RecvTimeoutError::Timeout) => {}
+            Err(RecvTimeoutError::Disconnected) => shutdown = true,
+        }
+
+        while let Some((key, batch)) = batcher.pop_ready(Instant::now()) {
+            metrics.record_batch(batch.len());
+            let t0 = Instant::now();
+            let cfg = GenConfig::preset(key.method, key.gen_len);
+            let result = run_batch(&model_rt, &cfg, &batch, t0);
+            match result {
+                Ok(responses) => {
+                    for resp in responses {
+                        if let Some((tx, arrived)) = replies.remove(&resp.id) {
+                            let queue_s = t0.duration_since(arrived).as_secs_f64();
+                            let resp = Response { queue_s, ..resp };
+                            metrics.record_response(
+                                resp.error.is_none(),
+                                resp.non_eos_tokens,
+                                resp.latency_s,
+                                queue_s,
+                            );
+                            let _ = tx.send(resp);
+                        }
+                    }
+                }
+                Err(e) => {
+                    for req in &batch {
+                        if let Some((tx, _)) = replies.remove(&req.id) {
+                            metrics.record_response(false, 0, 0.0, 0.0);
+                            let _ = tx.send(Response {
+                                id: req.id,
+                                text: String::new(),
+                                non_eos_tokens: 0,
+                                latency_s: 0.0,
+                                queue_s: 0.0,
+                                error: Some(format!("{e:#}")),
+                            });
+                        }
+                    }
+                }
+            }
+        }
+
+        if shutdown && batcher.pending() == 0 {
+            return Ok(());
+        }
+    }
+}
+
+fn run_batch(
+    model_rt: &ModelRuntime,
+    cfg: &GenConfig,
+    batch: &[Request],
+    t0: Instant,
+) -> Result<Vec<Response>> {
+    let generator = Generator::new(model_rt, cfg.clone())?;
+    let mut seqs: Vec<SeqState> = batch
+        .iter()
+        .map(|r| SeqState::new(&r.prompt, cfg.gen_len, &model_rt.manifest.special))
+        .collect();
+    generator.generate(&mut seqs, None)?;
+    let latency = t0.elapsed().as_secs_f64();
+    Ok(batch
+        .iter()
+        .zip(seqs.iter())
+        .map(|(req, seq)| Response {
+            id: req.id,
+            text: model_rt.manifest.detokenize_until_eos(seq.generated()),
+            non_eos_tokens: seq.non_eos_tokens(),
+            latency_s: latency,
+            queue_s: 0.0,
+            error: None,
+        })
+        .collect())
+}

@@ -1,0 +1,102 @@
+//! TCP server: line-delimited JSON requests in, responses out.
+//! One thread per connection (request parsing is trivial; the heavy
+//! lifting serializes on the router's engine thread anyway). The special
+//! line `{"cmd":"stats"}` returns the metrics snapshot; `{"cmd":"ping"}`
+//! health-checks.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+use super::request::Request;
+use super::router::RouterHandle;
+
+pub struct Server {
+    listener: TcpListener,
+    router: Arc<RouterHandle>,
+}
+
+impl Server {
+    pub fn bind(addr: &str, router: RouterHandle) -> Result<Server> {
+        let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
+        Ok(Server { listener, router: Arc::new(router) })
+    }
+
+    pub fn local_addr(&self) -> Result<std::net::SocketAddr> {
+        Ok(self.listener.local_addr()?)
+    }
+
+    /// Serve until the process exits (each connection on its own thread).
+    pub fn serve_forever(&self) -> Result<()> {
+        for stream in self.listener.incoming() {
+            let stream = stream?;
+            let router = self.router.clone();
+            std::thread::spawn(move || {
+                let peer = stream.peer_addr().ok();
+                if let Err(e) = handle_conn(stream, &router) {
+                    eprintln!("[server] connection {peer:?} error: {e:#}");
+                }
+            });
+        }
+        Ok(())
+    }
+
+    /// Serve exactly `n` connections then return (used by tests and the
+    /// serve_batch example to terminate cleanly).
+    pub fn serve_n(&self, n: usize) -> Result<()> {
+        let mut handles = vec![];
+        for stream in self.listener.incoming().take(n) {
+            let stream = stream?;
+            let router = self.router.clone();
+            handles.push(std::thread::spawn(move || {
+                let _ = handle_conn(stream, &router);
+            }));
+        }
+        for h in handles {
+            let _ = h.join();
+        }
+        Ok(())
+    }
+}
+
+fn handle_conn(stream: TcpStream, router: &RouterHandle) -> Result<()> {
+    let mut writer = stream.try_clone()?;
+    let reader = BufReader::new(stream);
+    for line in reader.lines() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let reply = match Json::parse(&line) {
+            Ok(j) => {
+                if let Some(cmd) = j.get("cmd").and_then(|c| c.as_str()) {
+                    match cmd {
+                        "stats" => router.metrics.snapshot(),
+                        "ping" => Json::obj(vec![("pong", Json::Bool(true))]),
+                        other => Json::obj(vec![(
+                            "error",
+                            Json::Str(format!("unknown cmd '{other}'")),
+                        )]),
+                    }
+                } else {
+                    match Request::from_json(&j) {
+                        Ok(req) => match router.call(req) {
+                            Ok(resp) => resp.to_json(),
+                            Err(e) => Json::obj(vec![("error", Json::Str(format!("{e:#}")))]),
+                        },
+                        Err(e) => Json::obj(vec![("error", Json::Str(e))]),
+                    }
+                }
+            }
+            Err(e) => Json::obj(vec![("error", Json::Str(format!("{e}")))]),
+        };
+        writer.write_all(reply.to_string().as_bytes())?;
+        writer.write_all(b"\n")?;
+        writer.flush()?;
+    }
+    Ok(())
+}

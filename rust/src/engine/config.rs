@@ -1,0 +1,267 @@
+//! Generation configuration: method presets (the paper's baselines and
+//! Streaming-dLLM itself) plus every ablation toggle Tables 3–6 and
+//! Figures 5/6 sweep.
+
+/// The five methods every main table compares (paper Tables 1/2/8).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Method {
+    /// Full forward over the whole sequence every step, no cache,
+    /// one token committed per step (LLaDA default schedule).
+    Vanilla,
+    /// dKV-Cache emulation: prefix cache with *delayed* refresh — the
+    /// prefix KV is recomputed every `dkv_refresh` steps inside a block,
+    /// so it keeps part of the recompute cost (paper reports 1.0–1.9×).
+    DkvCache,
+    /// Fast-dLLM-style prefix cache: prefix KV computed once per block,
+    /// queries = current block + full suffix; one token per step.
+    PrefixCache,
+    /// Fast-dLLM: prefix cache + static-threshold parallel decoding.
+    FastDllm,
+    /// Streaming-dLLM (ours): prefix cache + attenuation-guided suffix
+    /// pruning + dynamic confidence-aware decoding + early exit.
+    Streaming,
+}
+
+impl Method {
+    pub fn name(self) -> &'static str {
+        match self {
+            Method::Vanilla => "vanilla",
+            Method::DkvCache => "dkv-cache",
+            Method::PrefixCache => "prefix-cache",
+            Method::FastDllm => "fast-dllm",
+            Method::Streaming => "streaming",
+        }
+    }
+
+    pub fn all() -> [Method; 5] {
+        [Method::Vanilla, Method::DkvCache, Method::PrefixCache, Method::FastDllm, Method::Streaming]
+    }
+
+    pub fn parse(s: &str) -> Option<Method> {
+        Method::all().into_iter().find(|m| m.name() == s)
+    }
+}
+
+/// Full generation configuration (paper Table 12 row, scaled ÷4 per
+/// DESIGN.md).
+#[derive(Debug, Clone)]
+pub struct GenConfig {
+    pub method: Method,
+    /// target generation length L
+    pub gen_len: usize,
+    /// block size K (paper: 32; scaled: 8)
+    pub block_size: usize,
+    /// sliding-window size w in tokens (suffix pruning)
+    pub window: usize,
+    /// base confidence threshold τ0 (Eq. 10)
+    pub tau0: f32,
+    /// adaptation strength α (Eq. 10)
+    pub alpha: f32,
+    /// keep the trailing position id in the pruned suffix (Table 6)
+    pub trailing_position: bool,
+    /// EOS early exit (Table 3 "Exit.")
+    pub early_exit: bool,
+    /// Table 3 "Suf.": suffix pruning on/off within Streaming
+    pub suffix_pruning: bool,
+    /// Table 3 "Dyn.": dynamic threshold on/off within Streaming
+    pub dynamic_threshold: bool,
+    /// dKV-Cache refresh interval (steps between prefix recomputes)
+    pub dkv_refresh: usize,
+    /// ReMDM-style inference-time remasking (extension; Wang et al.
+    /// 2025, cited in paper §2.2): a committed token whose confidence
+    /// was below `remask_tau` may be re-masked once for revision in a
+    /// later step — trades extra steps for output quality.
+    pub remask: bool,
+    pub remask_tau: f32,
+}
+
+impl GenConfig {
+    /// Paper-faithful preset per method. `gen_len` in *scaled* tokens
+    /// (64 ↔ paper 256, 128 ↔ paper 512).
+    pub fn preset(method: Method, gen_len: usize) -> GenConfig {
+        let base = GenConfig {
+            method,
+            gen_len,
+            block_size: 8,
+            window: 24, // paper w=96 scaled ÷4
+            tau0: 0.9,
+            alpha: 0.3,
+            trailing_position: true,
+            early_exit: false,
+            suffix_pruning: false,
+            dynamic_threshold: false,
+            dkv_refresh: 2,
+            remask: false,
+            remask_tau: 0.5,
+        };
+        match method {
+            Method::Vanilla | Method::DkvCache | Method::PrefixCache => base,
+            Method::FastDllm => GenConfig { ..base },
+            Method::Streaming => GenConfig {
+                early_exit: true,
+                suffix_pruning: true,
+                dynamic_threshold: true,
+                ..base
+            },
+        }
+    }
+
+    pub fn n_blocks(&self) -> usize {
+        self.gen_len.div_ceil(self.block_size)
+    }
+
+    /// Whether this method reuses a prefix KV cache (everything but
+    /// vanilla does).
+    pub fn uses_cache(&self) -> bool {
+        !matches!(self.method, Method::Vanilla)
+    }
+
+    /// Whether decoding commits multiple tokens per step by confidence
+    /// threshold (Fast-dLLM and Streaming).
+    pub fn parallel_decoding(&self) -> bool {
+        matches!(self.method, Method::FastDllm | Method::Streaming)
+    }
+
+    /// Effective threshold at a step (Eq. 10):
+    /// τ(t) = τ0 · (1 − α · (1 − r_mask)).
+    pub fn threshold(&self, r_mask: f32) -> f32 {
+        if self.method == Method::Streaming && self.dynamic_threshold {
+            self.tau0 * (1.0 - self.alpha * (1.0 - r_mask))
+        } else {
+            self.tau0
+        }
+    }
+
+    /// Sanity checks; returns an error message on invalid combos.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.block_size == 0 {
+            return Err("block_size must be > 0".into());
+        }
+        if self.gen_len == 0 {
+            return Err("gen_len must be > 0".into());
+        }
+        if self.gen_len % self.block_size != 0 {
+            return Err(format!(
+                "gen_len {} not a multiple of block_size {}",
+                self.gen_len, self.block_size
+            ));
+        }
+        if !(0.0..=1.0).contains(&self.tau0) {
+            return Err(format!("tau0 {} outside [0,1]", self.tau0));
+        }
+        if !(0.0..=1.0).contains(&self.alpha) {
+            return Err(format!("alpha {} outside [0,1]", self.alpha));
+        }
+        if self.dkv_refresh == 0 && self.method == Method::DkvCache {
+            return Err("dkv_refresh must be > 0".into());
+        }
+        if self.remask && !(0.0..=1.0).contains(&self.remask_tau) {
+            return Err(format!("remask_tau {} outside [0,1]", self.remask_tau));
+        }
+        Ok(())
+    }
+}
+
+/// The per-(model, suite, gen-length) hyperparameters of paper Table 12,
+/// scaled ÷4. Window values follow the paper's per-benchmark tuning.
+pub fn table12_config(model: &str, suite: &str, gen_len: usize) -> GenConfig {
+    let mut c = GenConfig::preset(Method::Streaming, gen_len);
+    // paper windows (tokens, original scale) — divide by 4.
+    let w_paper: usize = match (model, suite, gen_len) {
+        ("dream-mini", "humaneval-mini", 64) => 192,
+        ("dream-mini", "humaneval-mini", _) => 128,
+        ("dream-mini", "mbpp-mini", _) => 192,
+        ("dream-mini", _, _) => 32,
+        ("llada-mini", "humaneval-mini", 64) => 192,
+        ("llada-mini", "humaneval-mini", _) => 256,
+        ("llada-mini", "gsm-mini", _) => 96,
+        ("llada-mini", "mbpp-mini", _) => 32,
+        ("llada-mini", "math-mini", 64) => 128,
+        ("llada-mini", "math-mini", _) => 256,
+        ("llada15-mini", "gsm-mini", 128) => 128,
+        ("llada15-mini", "math-mini", 128) => 192,
+        _ => 96,
+    };
+    let a_paper = match (model, suite, gen_len) {
+        ("dream-mini", "humaneval-mini", 64) => 0.7,
+        ("dream-mini", "humaneval-mini", _) => 0.4,
+        ("dream-mini", "mbpp-mini", 128) => 0.6,
+        ("dream-mini", "math-mini", 64) => 0.1,
+        ("llada-mini", "humaneval-mini", 128) => 0.4,
+        ("llada-mini", "math-mini", 128) => 0.2,
+        ("llada15-mini", "humaneval-mini", 128) => 0.4,
+        ("llada15-mini", "gsm-mini", 64) => 0.4,
+        ("llada15-mini", "gsm-mini", 128) => 0.6,
+        ("llada15-mini", "math-mini", 64) => 0.4,
+        _ => 0.3,
+    };
+    c.window = (w_paper / 4).max(c.block_size);
+    // windows can't exceed the suffix itself
+    c.window = c.window.min(gen_len.saturating_sub(c.block_size));
+    c.alpha = a_paper;
+    c
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_validate() {
+        for m in Method::all() {
+            for len in [64, 128, 256, 512] {
+                GenConfig::preset(m, len).validate().unwrap();
+            }
+        }
+    }
+
+    #[test]
+    fn streaming_enables_all_modules() {
+        let c = GenConfig::preset(Method::Streaming, 64);
+        assert!(c.suffix_pruning && c.dynamic_threshold && c.early_exit);
+        let f = GenConfig::preset(Method::FastDllm, 64);
+        assert!(!f.suffix_pruning && !f.dynamic_threshold && !f.early_exit);
+    }
+
+    #[test]
+    fn dynamic_threshold_decays_with_commits() {
+        let c = GenConfig::preset(Method::Streaming, 64);
+        // fully masked block → τ = τ0
+        assert!((c.threshold(1.0) - c.tau0).abs() < 1e-6);
+        // mostly committed block → lower threshold
+        assert!(c.threshold(0.25) < c.tau0);
+        // monotone in r_mask
+        assert!(c.threshold(0.5) <= c.threshold(0.9));
+    }
+
+    #[test]
+    fn fixed_threshold_for_fast_dllm() {
+        let c = GenConfig::preset(Method::FastDllm, 64);
+        assert_eq!(c.threshold(1.0), c.threshold(0.1));
+    }
+
+    #[test]
+    fn invalid_configs_rejected() {
+        let mut c = GenConfig::preset(Method::Streaming, 64);
+        c.gen_len = 63;
+        assert!(c.validate().is_err());
+        let mut c2 = GenConfig::preset(Method::Streaming, 64);
+        c2.tau0 = 1.5;
+        assert!(c2.validate().is_err());
+    }
+
+    #[test]
+    fn table12_window_bounded_by_suffix() {
+        let c = table12_config("llada15-mini", "gsm-mini", 64);
+        assert!(c.window <= 64 - c.block_size);
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn method_parse_roundtrip() {
+        for m in Method::all() {
+            assert_eq!(Method::parse(m.name()), Some(m));
+        }
+        assert_eq!(Method::parse("nope"), None);
+    }
+}

@@ -1,0 +1,18 @@
+//! The decoding engine: Streaming-dLLM's three mechanisms (suffix
+//! pruning, dynamic confidence-aware parallel decoding, early exit) and
+//! every baseline, implemented as scheduling policies over the AOT
+//! executables.
+
+pub mod backend;
+pub mod config;
+pub mod generator;
+pub mod policy;
+pub mod sequence;
+pub mod suffix;
+
+pub use backend::{Backend, MockBackend};
+pub use config::{table12_config, GenConfig, Method};
+pub use generator::{GenReport, Generator, StepEvent};
+pub use policy::{select, Candidate, Selection};
+pub use sequence::SeqState;
+pub use suffix::{build_bundle, bundle_tokens, Bundle};

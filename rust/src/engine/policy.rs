@@ -1,0 +1,147 @@
+//! Token-selection policies — the S(·) of paper Eq. 5/9.
+//!
+//! Given the (token, confidence) predictions at the masked positions of
+//! the current block, decide which to commit this step:
+//!
+//! - `OnePerStep`: vanilla LLaDA remasking schedule — commit exactly the
+//!   highest-confidence prediction (K steps per block).
+//! - `Threshold`: Fast-dLLM — commit everything ≥ τ; if nothing clears
+//!   the bar, fall back to the single best (Eq. 9 second case), which
+//!   guarantees progress/termination.
+//!
+//! The *dynamic* part of "dynamic confidence-aware parallel decoding"
+//! lives in `GenConfig::threshold(r_mask)` (Eq. 10); this module is pure
+//! selection and is what the property tests hammer.
+
+/// One masked position's prediction.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Candidate {
+    /// absolute position in the sequence canvas
+    pub pos: usize,
+    pub token: i32,
+    pub conf: f32,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Selection {
+    OnePerStep,
+    Threshold(f32),
+}
+
+/// Returns the indices (into `cands`) to commit. Invariants (pinned by
+/// property tests):
+/// - never empty when `cands` is non-empty (progress guarantee)
+/// - threshold mode: every candidate with conf ≥ τ is selected
+/// - one-per-step: exactly one, the argmax by confidence
+pub fn select(policy: Selection, cands: &[Candidate]) -> Vec<usize> {
+    if cands.is_empty() {
+        return vec![];
+    }
+    match policy {
+        Selection::OnePerStep => vec![argmax(cands)],
+        Selection::Threshold(tau) => {
+            let picked: Vec<usize> = cands
+                .iter()
+                .enumerate()
+                .filter(|(_, c)| c.conf >= tau)
+                .map(|(i, _)| i)
+                .collect();
+            if picked.is_empty() {
+                vec![argmax(cands)]
+            } else {
+                picked
+            }
+        }
+    }
+}
+
+fn argmax(cands: &[Candidate]) -> usize {
+    let mut best = 0;
+    for (i, c) in cands.iter().enumerate().skip(1) {
+        if c.conf > cands[best].conf {
+            best = i;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    fn cand(pos: usize, conf: f32) -> Candidate {
+        Candidate { pos, token: 7, conf }
+    }
+
+    #[test]
+    fn one_per_step_picks_argmax() {
+        let cands = [cand(0, 0.2), cand(1, 0.9), cand(2, 0.5)];
+        assert_eq!(select(Selection::OnePerStep, &cands), vec![1]);
+    }
+
+    #[test]
+    fn threshold_takes_all_above() {
+        let cands = [cand(0, 0.95), cand(1, 0.5), cand(2, 0.92)];
+        assert_eq!(select(Selection::Threshold(0.9), &cands), vec![0, 2]);
+    }
+
+    #[test]
+    fn threshold_fallback_to_best() {
+        let cands = [cand(0, 0.1), cand(1, 0.4), cand(2, 0.3)];
+        assert_eq!(select(Selection::Threshold(0.9), &cands), vec![1]);
+    }
+
+    #[test]
+    fn empty_input_empty_output() {
+        assert!(select(Selection::Threshold(0.5), &[]).is_empty());
+        assert!(select(Selection::OnePerStep, &[]).is_empty());
+    }
+
+    #[test]
+    fn prop_progress_guarantee() {
+        prop::check(300, |g| {
+            let n = g.usize(1, 20);
+            let confs: Vec<f32> = (0..n).map(|_| g.f32(0.0, 1.0)).collect();
+            let cands: Vec<Candidate> =
+                confs.iter().enumerate().map(|(i, &c)| cand(i, c)).collect();
+            let tau = g.f32(0.0, 1.0);
+            let sel = select(Selection::Threshold(tau), &cands);
+            if sel.is_empty() {
+                return Err("no progress".into());
+            }
+            // all above-threshold candidates must be selected
+            for (i, c) in cands.iter().enumerate() {
+                if c.conf >= tau && !sel.contains(&i) {
+                    return Err(format!("candidate {i} above tau but unselected"));
+                }
+            }
+            // selection indices must be unique and in-range
+            let mut s = sel.clone();
+            s.sort_unstable();
+            s.dedup();
+            if s.len() != sel.len() || sel.iter().any(|&i| i >= n) {
+                return Err("bad indices".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_one_per_step_always_single_max() {
+        prop::check(300, |g| {
+            let n = g.usize(1, 32);
+            let cands: Vec<Candidate> =
+                (0..n).map(|i| cand(i, g.f32(0.0, 1.0))).collect();
+            let sel = select(Selection::OnePerStep, &cands);
+            if sel.len() != 1 {
+                return Err(format!("expected 1, got {}", sel.len()));
+            }
+            let max = cands.iter().map(|c| c.conf).fold(f32::MIN, f32::max);
+            if (cands[sel[0]].conf - max).abs() > 1e-9 {
+                return Err("not the argmax".into());
+            }
+            Ok(())
+        });
+    }
+}

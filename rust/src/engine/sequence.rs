@@ -1,0 +1,263 @@
+//! Per-request decode state: the token canvas (prompt + masked
+//! generation region), block cursor and commit bookkeeping — the x^(t)
+//! of paper Eq. 1, partitioned into blocks per Eq. 2.
+
+use crate::runtime::artifact::SpecialTokens;
+
+#[derive(Debug, Clone)]
+pub struct SeqState {
+    /// prompt + generation region; generation region starts as MASK
+    pub tokens: Vec<i32>,
+    /// prompt length (p_L in the paper)
+    pub p0: usize,
+    /// generation length L
+    pub gen_len: usize,
+    /// current block index (c in Eq. 6)
+    pub block: usize,
+    /// early-exited or ran out of blocks
+    pub finished: bool,
+    /// diffusion steps this sequence participated in (NFE proxy)
+    pub steps: u64,
+    /// commit-time confidence per generation position (for remasking)
+    pub commit_conf: Vec<f32>,
+    /// generation positions already remasked once (budget: 1 per pos)
+    pub remasked: Vec<bool>,
+    mask_id: i32,
+    eos_id: i32,
+}
+
+impl SeqState {
+    pub fn new(prompt: &[i32], gen_len: usize, special: &SpecialTokens) -> SeqState {
+        let mut tokens = Vec::with_capacity(prompt.len() + gen_len);
+        tokens.extend_from_slice(prompt);
+        tokens.extend(std::iter::repeat(special.mask).take(gen_len));
+        SeqState {
+            tokens,
+            p0: prompt.len(),
+            gen_len,
+            block: 0,
+            finished: false,
+            steps: 0,
+            commit_conf: vec![1.0; gen_len],
+            remasked: vec![false; gen_len],
+            mask_id: special.mask,
+            eos_id: special.eos,
+        }
+    }
+
+    pub fn total_len(&self) -> usize {
+        self.p0 + self.gen_len
+    }
+
+    /// Absolute start/end of block `b`.
+    pub fn block_span(&self, b: usize, block_size: usize) -> (usize, usize) {
+        let start = self.p0 + b * block_size;
+        let end = (start + block_size).min(self.total_len());
+        (start, end)
+    }
+
+    /// Prefix length visible to the current block: prompt + decoded blocks.
+    pub fn prefix_len(&self, block_size: usize) -> usize {
+        self.p0 + self.block * block_size
+    }
+
+    pub fn is_masked(&self, abs: usize) -> bool {
+        self.tokens[abs] == self.mask_id
+    }
+
+    /// Masked absolute positions within the current block.
+    pub fn masked_in_block(&self, block_size: usize) -> Vec<usize> {
+        let (s, e) = self.block_span(self.block, block_size);
+        (s..e).filter(|&i| self.is_masked(i)).collect()
+    }
+
+    /// Fraction of the current block still masked (r_mask of Eq. 10).
+    pub fn mask_ratio(&self, block_size: usize) -> f32 {
+        let (s, e) = self.block_span(self.block, block_size);
+        if e == s {
+            return 0.0;
+        }
+        let masked = (s..e).filter(|&i| self.is_masked(i)).count();
+        masked as f32 / (e - s) as f32
+    }
+
+    pub fn block_done(&self, block_size: usize) -> bool {
+        self.masked_in_block(block_size).is_empty()
+    }
+
+    pub fn commit(&mut self, abs: usize, token: i32) {
+        self.commit_with_conf(abs, token, 1.0)
+    }
+
+    pub fn commit_with_conf(&mut self, abs: usize, token: i32, conf: f32) {
+        debug_assert!(self.is_masked(abs), "double commit at {abs}");
+        debug_assert!(abs >= self.p0, "commit into prompt at {abs}");
+        self.tokens[abs] = token;
+        self.commit_conf[abs - self.p0] = conf;
+    }
+
+    /// ReMDM-style revision: re-mask committed low-confidence tokens in
+    /// the current block (at most once per position — the budget that
+    /// guarantees termination). Returns how many were re-masked.
+    pub fn remask_low_confidence(&mut self, block_size: usize, tau: f32) -> usize {
+        let (s, e) = self.block_span(self.block, block_size);
+        let mut n = 0;
+        for i in s..e {
+            let g = i - self.p0;
+            if !self.is_masked(i)
+                && self.tokens[i] != self.eos_id
+                && self.commit_conf[g] < tau
+                && !self.remasked[g]
+            {
+                self.tokens[i] = self.mask_id;
+                self.remasked[g] = true;
+                n += 1;
+            }
+        }
+        n
+    }
+
+    /// Early-exit scan (paper §3.3 "Early Exit For Block Diffusion"):
+    /// if the current block contains a committed EOS whose preceding
+    /// block positions are all committed, everything after it is
+    /// semantically EOS — commit the rest of the block and report true.
+    /// The caller then marks the sequence finished (skipping all
+    /// subsequent blocks).
+    pub fn early_exit_scan(&mut self, block_size: usize) -> bool {
+        let (s, e) = self.block_span(self.block, block_size);
+        for i in s..e {
+            if self.is_masked(i) {
+                return false; // hit an uncommitted position before any EOS
+            }
+            if self.tokens[i] == self.eos_id {
+                for j in i + 1..e {
+                    if self.is_masked(j) {
+                        self.tokens[j] = self.eos_id;
+                    }
+                }
+                return true;
+            }
+        }
+        false
+    }
+
+    /// Whether the (completed) current block is pure EOS — the
+    /// block-level early-exit trigger.
+    pub fn block_all_eos(&self, block_size: usize) -> bool {
+        let (s, e) = self.block_span(self.block, block_size);
+        (s..e).all(|i| self.tokens[i] == self.eos_id)
+    }
+
+    /// Fill every remaining masked generation position with EOS
+    /// (used when a sequence early-exits).
+    pub fn finish_with_eos(&mut self) {
+        for i in self.p0..self.total_len() {
+            if self.is_masked(i) {
+                self.tokens[i] = self.eos_id;
+            }
+        }
+        self.finished = true;
+    }
+
+    /// Generated region (after the prompt).
+    pub fn generated(&self) -> &[i32] {
+        &self.tokens[self.p0..]
+    }
+
+    /// Paper throughput metric: committed non-EOS tokens in the
+    /// generation region ("we count only non EOS tokens").
+    pub fn non_eos_tokens(&self) -> usize {
+        self.generated()
+            .iter()
+            .filter(|&&t| t != self.eos_id && t != self.mask_id)
+            .count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn special() -> SpecialTokens {
+        SpecialTokens { pad: 0, mask: 1, bos: 2, eos: 3, sep: 4 }
+    }
+
+    fn seq(prompt_len: usize, gen_len: usize) -> SeqState {
+        let prompt: Vec<i32> = (10..10 + prompt_len as i32).collect();
+        SeqState::new(&prompt, gen_len, &special())
+    }
+
+    #[test]
+    fn initial_state_all_masked() {
+        let s = seq(5, 16);
+        assert_eq!(s.total_len(), 21);
+        assert_eq!(s.masked_in_block(8), (5..13).collect::<Vec<_>>());
+        assert!((s.mask_ratio(8) - 1.0).abs() < 1e-6);
+        assert!(!s.block_done(8));
+    }
+
+    #[test]
+    fn commit_reduces_mask_ratio() {
+        let mut s = seq(5, 16);
+        s.commit(5, 42);
+        s.commit(6, 42);
+        assert!((s.mask_ratio(8) - 0.75).abs() < 1e-6);
+        assert_eq!(s.masked_in_block(8).len(), 6);
+    }
+
+    #[test]
+    #[should_panic]
+    #[cfg(debug_assertions)]
+    fn double_commit_panics_in_debug() {
+        let mut s = seq(2, 8);
+        s.commit(2, 9);
+        s.commit(2, 9);
+    }
+
+    #[test]
+    fn early_exit_fills_block_after_committed_eos() {
+        let mut s = seq(0, 8);
+        for i in 0..3 {
+            s.commit(i, 42);
+        }
+        s.commit(3, 3); // EOS
+        assert!(s.early_exit_scan(8));
+        assert!(s.block_done(8));
+        assert_eq!(&s.tokens[4..8], &[3, 3, 3, 3]);
+    }
+
+    #[test]
+    fn early_exit_blocked_by_preceding_mask() {
+        let mut s = seq(0, 8);
+        s.commit(1, 3); // EOS at index 1, but index 0 still masked
+        assert!(!s.early_exit_scan(8));
+        assert!(s.is_masked(0));
+    }
+
+    #[test]
+    fn finish_with_eos_completes_everything() {
+        let mut s = seq(4, 16);
+        s.commit(4, 42);
+        s.finish_with_eos();
+        assert!(s.finished);
+        assert_eq!(s.non_eos_tokens(), 1);
+        assert!(s.generated().iter().all(|&t| t != 1));
+    }
+
+    #[test]
+    fn non_eos_counts_exclude_eos_and_mask() {
+        let mut s = seq(0, 8);
+        s.commit(0, 42);
+        s.commit(1, 3);
+        assert_eq!(s.non_eos_tokens(), 1);
+    }
+
+    #[test]
+    fn block_spans_clip_at_end() {
+        let s = seq(3, 16);
+        assert_eq!(s.block_span(0, 8), (3, 11));
+        assert_eq!(s.block_span(1, 8), (11, 19));
+        // block beyond the generation region clips
+        assert_eq!(s.block_span(2, 8), (19, 19));
+    }
+}

@@ -1,0 +1,140 @@
+//! Attenuation-guided suffix modeling (paper §3.3, Eq. 7–8).
+//!
+//! When decoding block c, the full masked suffix is replaced by the query
+//! bundle: the current block, a sliding window of `w` suffix tokens
+//! immediately after it, and the trailing position id (the final token of
+//! the generation region) as a coarse representation of overall length.
+//! Everything between window and trailing token is simply *absent* from
+//! the forward — that's the spatial saving: the bundle picks a smaller
+//! executable bucket.
+
+use super::config::GenConfig;
+use super::sequence::SeqState;
+
+/// The query bundle for one sequence at its current block: absolute
+/// positions, in the order they are fed to the decode executable
+/// (current block first — the policy layer indexes commits by bundle
+/// slot j < K).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Bundle {
+    pub positions: Vec<usize>,
+    /// how many leading slots belong to the current block
+    pub block_len: usize,
+}
+
+/// Build the bundle per the active method:
+/// - suffix pruning on  → current block + w-token window + trailing pos
+/// - suffix pruning off → current block + the entire remaining suffix
+pub fn build_bundle(seq: &SeqState, cfg: &GenConfig) -> Bundle {
+    let (bs, be) = seq.block_span(seq.block, cfg.block_size);
+    let end = seq.total_len();
+    let mut positions: Vec<usize> = (bs..be).collect();
+    let block_len = positions.len();
+
+    if cfg.suffix_pruning {
+        let win_end = (be + cfg.window).min(end);
+        positions.extend(be..win_end);
+        if cfg.trailing_position && win_end < end {
+            // Ĩ ∪ {p_L + L}: keep the final position id (Eq. 7)
+            positions.push(end - 1);
+        }
+    } else {
+        positions.extend(be..end);
+    }
+    Bundle { positions, block_len }
+}
+
+/// Gather bundle tokens from the sequence canvas (suffix positions are
+/// still MASK by construction; current block may be partially committed).
+pub fn bundle_tokens(seq: &SeqState, bundle: &Bundle) -> Vec<i32> {
+    bundle.positions.iter().map(|&p| seq.tokens[p]).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::config::{GenConfig, Method};
+    use crate::runtime::artifact::SpecialTokens;
+
+    fn special() -> SpecialTokens {
+        SpecialTokens { pad: 0, mask: 1, bos: 2, eos: 3, sep: 4 }
+    }
+
+    fn seq(p0: usize, gen: usize) -> SeqState {
+        let prompt: Vec<i32> = (10..10 + p0 as i32).collect();
+        SeqState::new(&prompt, gen, &special())
+    }
+
+    fn streaming(gen: usize, window: usize) -> GenConfig {
+        let mut c = GenConfig::preset(Method::Streaming, gen);
+        c.window = window;
+        c
+    }
+
+    #[test]
+    fn pruned_bundle_is_block_window_trailing() {
+        let s = seq(10, 64);
+        let c = streaming(64, 16);
+        let b = build_bundle(&s, &c);
+        // block 0: [10,18) + window [18,34) + trailing 73
+        assert_eq!(b.block_len, 8);
+        assert_eq!(b.positions.len(), 8 + 16 + 1);
+        assert_eq!(*b.positions.last().unwrap(), 73);
+        assert_eq!(b.positions[8], 18);
+        assert_eq!(b.positions[23], 33);
+    }
+
+    #[test]
+    fn window_clips_at_end_drops_trailing() {
+        let mut s = seq(10, 64);
+        s.block = 7; // last block: [66, 74)
+        let c = streaming(64, 16);
+        let b = build_bundle(&s, &c);
+        // no suffix remains: bundle = block only
+        assert_eq!(b.positions.len(), 8);
+        assert_eq!(b.positions, (66..74).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn window_reaching_end_has_no_duplicate_trailing() {
+        let mut s = seq(10, 64);
+        s.block = 6; // block [58, 66), suffix [66, 74) = 8 tokens
+        let c = streaming(64, 16);
+        let b = build_bundle(&s, &c);
+        // window covers the whole suffix; trailing must not duplicate
+        assert_eq!(b.positions.len(), 16);
+        let mut sorted = b.positions.clone();
+        sorted.dedup();
+        assert_eq!(sorted.len(), b.positions.len());
+    }
+
+    #[test]
+    fn no_trailing_when_disabled() {
+        let s = seq(10, 64);
+        let mut c = streaming(64, 16);
+        c.trailing_position = false;
+        let b = build_bundle(&s, &c);
+        assert_eq!(b.positions.len(), 8 + 16);
+        assert_eq!(*b.positions.last().unwrap(), 33);
+    }
+
+    #[test]
+    fn full_suffix_without_pruning() {
+        let s = seq(10, 64);
+        let c = GenConfig::preset(Method::FastDllm, 64);
+        let b = build_bundle(&s, &c);
+        assert_eq!(b.positions.len(), 64); // whole generation region
+        assert_eq!(b.positions, (10..74).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn bundle_tokens_track_commits() {
+        let mut s = seq(2, 16);
+        s.commit(2, 42);
+        let c = streaming(16, 8);
+        let b = build_bundle(&s, &c);
+        let toks = bundle_tokens(&s, &b);
+        assert_eq!(toks[0], 42);
+        assert!(toks[1..].iter().all(|&t| t == 1)); // rest masked
+    }
+}

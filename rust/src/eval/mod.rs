@@ -1,0 +1,249 @@
+//! Eval harness (the lm-eval stand-in): loads the suite JSONL files that
+//! `python/compile/tasks.py` exports, runs them through a `Generator`,
+//! and scores exact-match accuracy with the shared answer-extraction
+//! rule. Every tableN bench and the examples go through `run_suite`.
+
+pub mod similarity;
+
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::engine::{GenConfig, Generator, SeqState, StepEvent};
+use crate::runtime::ModelRuntime;
+use crate::util::bench::Cell;
+use crate::util::json::Json;
+use crate::util::stats::Samples;
+
+/// One eval item: the pre-tokenized prompt and the expected final answer.
+#[derive(Debug, Clone)]
+pub struct EvalItem {
+    pub prompt: Vec<i32>,
+    pub answer: String,
+    /// full chain-of-thought target (present for gsm/math suites)
+    pub cot: String,
+}
+
+/// Load a `.jsonl` eval file.
+pub fn load_suite(path: &Path) -> Result<Vec<EvalItem>> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading {}", path.display()))?;
+    let mut items = vec![];
+    for (lineno, line) in text.lines().enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let j = Json::parse(line)
+            .with_context(|| format!("{}:{}", path.display(), lineno + 1))?;
+        let prompt = j
+            .req("prompt")
+            .map_err(|e| anyhow!("{e}"))?
+            .as_arr()
+            .ok_or_else(|| anyhow!("prompt not an array"))?
+            .iter()
+            .map(|x| x.as_i64().unwrap_or(0) as i32)
+            .collect();
+        items.push(EvalItem {
+            prompt,
+            answer: j.req("answer").map_err(|e| anyhow!("{e}"))?.as_str().unwrap_or("").to_string(),
+            cot: j.get("cot").and_then(|c| c.as_str()).unwrap_or("").to_string(),
+        });
+    }
+    Ok(items)
+}
+
+/// Answer-extraction rule — must match `tasks.extract_final` on the
+/// python side (pinned by integration tests): segment after the last
+/// ';', or the whole string when there is none.
+pub fn extract_final(text: &str) -> &str {
+    match text.rfind(';') {
+        Some(i) => &text[i + 1..],
+        None => text,
+    }
+}
+
+/// Result of running a suite.
+#[derive(Debug, Clone, Default)]
+pub struct SuiteResult {
+    pub n: usize,
+    pub correct: usize,
+    /// Σ normalized CoT similarity (partial credit; see `similarity`)
+    pub cot_sim_sum: f64,
+    pub wall_secs: f64,
+    pub non_eos_tokens: u64,
+    pub steps: u64,
+    pub prefills: u64,
+    pub latencies: Vec<f64>,
+}
+
+impl SuiteResult {
+    pub fn accuracy(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            100.0 * self.correct as f64 / self.n as f64
+        }
+    }
+
+    /// Mean chain-of-thought similarity in percent — the partial-credit
+    /// quality signal (meaningful below the exact-match floor).
+    pub fn cot_similarity(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            100.0 * self.cot_sim_sum / self.n as f64
+        }
+    }
+
+    pub fn tokens_per_sec(&self) -> f64 {
+        if self.wall_secs > 0.0 {
+            self.non_eos_tokens as f64 / self.wall_secs
+        } else {
+            0.0
+        }
+    }
+
+    pub fn mean_latency(&self) -> f64 {
+        if self.latencies.is_empty() {
+            0.0
+        } else {
+            self.latencies.iter().sum::<f64>() / self.latencies.len() as f64
+        }
+    }
+
+    pub fn to_cell(&self) -> Cell {
+        Cell {
+            accuracy: self.accuracy(),
+            cot_sim: self.cot_similarity(),
+            tokens_per_s: self.tokens_per_sec(),
+            latency_s: self.mean_latency(),
+            nfe: if self.n > 0 { self.steps as f64 / self.n as f64 } else { 0.0 },
+        }
+    }
+
+    pub fn latency_percentile(&self, p: f64) -> f64 {
+        let mut s = Samples::new();
+        for &l in &self.latencies {
+            s.push(l);
+        }
+        s.percentile(p)
+    }
+}
+
+/// Run `items` through the generator one request at a time (the paper's
+/// lm-eval setting: batch = 1). `on_step` taps row-0 step events.
+pub fn run_suite(
+    rt: &ModelRuntime,
+    cfg: &GenConfig,
+    items: &[EvalItem],
+    mut on_step: Option<&mut dyn FnMut(StepEvent)>,
+) -> Result<SuiteResult> {
+    let generator = Generator::new(rt, cfg.clone())?;
+    let mut res = SuiteResult { n: items.len(), ..Default::default() };
+    for item in items {
+        let mut seqs = vec![SeqState::new(&item.prompt, cfg.gen_len, &rt.manifest.special)];
+        let hook: Option<&mut dyn FnMut(StepEvent)> = match on_step {
+            Some(ref mut f) => Some(&mut **f),
+            None => None,
+        };
+        // Lazy AOT-executable compilation is a one-time startup cost (a
+        // real deployment pre-warms, cf. ModelRuntime::warm); exclude it
+        // per item so throughput AND latency ratios are undistorted.
+        let compile_before = rt.stats().compile_secs;
+        let report = generator.generate(&mut seqs, hook)?;
+        let compile_delta = rt.stats().compile_secs - compile_before;
+        let wall = (report.wall_secs - compile_delta).max(1e-9);
+        let text = rt.manifest.detokenize_until_eos(seqs[0].generated());
+        if extract_final(&text) == item.answer {
+            res.correct += 1;
+        }
+        if !item.cot.is_empty() {
+            res.cot_sim_sum += similarity::similarity(&text, &item.cot);
+        } else if extract_final(&text) == item.answer {
+            res.cot_sim_sum += 1.0;
+        }
+        res.wall_secs += wall;
+        res.non_eos_tokens += report.non_eos_tokens;
+        res.steps += report.steps;
+        res.prefills += report.prefills;
+        res.latencies.push(wall);
+    }
+    Ok(res)
+}
+
+/// Batched variant used by the serving example: slices items into
+/// `batch`-sized groups.
+pub fn run_suite_batched(
+    rt: &ModelRuntime,
+    cfg: &GenConfig,
+    items: &[EvalItem],
+    batch: usize,
+) -> Result<SuiteResult> {
+    let generator = Generator::new(rt, cfg.clone())?;
+    let mut res = SuiteResult { n: items.len(), ..Default::default() };
+    for chunk in items.chunks(batch) {
+        let mut seqs: Vec<SeqState> = chunk
+            .iter()
+            .map(|it| SeqState::new(&it.prompt, cfg.gen_len, &rt.manifest.special))
+            .collect();
+        let compile_before = rt.stats().compile_secs;
+        let report = generator.generate(&mut seqs, None)?;
+        let compile_delta = rt.stats().compile_secs - compile_before;
+        let wall = (report.wall_secs - compile_delta).max(1e-9);
+        for (s, it) in seqs.iter().zip(chunk.iter()) {
+            let text = rt.manifest.detokenize_until_eos(s.generated());
+            if extract_final(&text) == it.answer {
+                res.correct += 1;
+            }
+            if !it.cot.is_empty() {
+                res.cot_sim_sum += similarity::similarity(&text, &it.cot);
+            } else if extract_final(&text) == it.answer {
+                res.cot_sim_sum += 1.0;
+            }
+            res.latencies.push(wall);
+        }
+        res.wall_secs += wall;
+        res.non_eos_tokens += report.non_eos_tokens;
+        res.steps += report.steps;
+        res.prefills += report.prefills;
+    }
+    Ok(res)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn extract_final_rules() {
+        assert_eq!(extract_final("a9;b81;81"), "81");
+        assert_eq!(extract_final("12;14;0"), "0");
+        assert_eq!(extract_final("edcba"), "edcba");
+        assert_eq!(extract_final("1 2 3"), "1 2 3");
+        assert_eq!(extract_final(""), "");
+        assert_eq!(extract_final("x;"), "");
+    }
+
+    #[test]
+    fn suite_result_math() {
+        let mut r = SuiteResult { n: 4, correct: 3, wall_secs: 2.0, non_eos_tokens: 40, ..Default::default() };
+        r.latencies = vec![0.5, 0.5, 0.5, 0.5];
+        assert!((r.accuracy() - 75.0).abs() < 1e-9);
+        assert!((r.tokens_per_sec() - 20.0).abs() < 1e-9);
+        assert!((r.mean_latency() - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn load_suite_parses_jsonl() {
+        let dir = std::env::temp_dir().join("sdllm_eval_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("t.jsonl");
+        std::fs::write(&p, "{\"prompt\": [2, 10, 11], \"answer\": \"7\", \"cot\": \"a7;7\"}\n\n{\"prompt\": [2], \"answer\": \"x\"}\n").unwrap();
+        let items = load_suite(&p).unwrap();
+        assert_eq!(items.len(), 2);
+        assert_eq!(items[0].prompt, vec![2, 10, 11]);
+        assert_eq!(items[0].answer, "7");
+        assert_eq!(items[0].cot, "a7;7");
+        assert_eq!(items[1].cot, "");
+    }
+}

@@ -1,0 +1,27 @@
+//! Streaming-dLLM: a serving framework for diffusion LLMs, reproducing
+//! *"Streaming-dLLM: Accelerating Diffusion LLMs via Suffix Pruning and
+//! Dynamic Decoding"*.
+//!
+//! Three-layer architecture (see DESIGN.md):
+//! - L1/L2 (build-time python): Pallas kernels + JAX masked-diffusion
+//!   transformer, AOT-lowered to HLO-text executables per bucket.
+//! - L3 (this crate): the coordinator — request router, dynamic batcher,
+//!   block-diffusion scheduler implementing the paper's three
+//!   mechanisms (attenuation-guided suffix pruning, dynamic
+//!   confidence-aware parallel decoding, EOS early exit) and all
+//!   baselines (vanilla, dKV-Cache, Prefix-Cache, Fast-dLLM).
+//! - runtime: the PJRT bridge (xla crate) executing the AOT artifacts
+//!   with device-resident parameters; python never runs at request time.
+
+pub mod coordinator;
+pub mod engine;
+pub mod eval;
+pub mod runtime;
+pub mod util;
+
+/// Default artifacts location, overridable via `SDLLM_ARTIFACTS`.
+pub fn artifacts_root() -> std::path::PathBuf {
+    std::env::var("SDLLM_ARTIFACTS")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|_| std::path::PathBuf::from("artifacts"))
+}

@@ -1,0 +1,146 @@
+//! `streaming-dllm` CLI: serve the TCP endpoint, run a one-shot
+//! generation, or evaluate a suite — the leader entrypoint.
+
+use std::time::Duration;
+
+use anyhow::{bail, Result};
+
+use streaming_dllm::coordinator::{Request, RouterHandle, Server};
+use streaming_dllm::engine::{GenConfig, Method};
+use streaming_dllm::eval::{load_suite, run_suite};
+use streaming_dllm::runtime::{ArtifactsIndex, ModelRuntime, Runtime};
+use streaming_dllm::util::cli::Args;
+
+const ABOUT: &str = "Streaming-dLLM serving framework (suffix pruning + dynamic decoding)";
+
+fn main() -> Result<()> {
+    let args = Args::parse_env()
+        .describe("artifacts", "artifacts directory", Some("artifacts"))
+        .describe("model", "backbone to serve", Some("llada15-mini"))
+        .describe("method", "vanilla|dkv-cache|prefix-cache|fast-dllm|streaming", Some("streaming"))
+        .describe("gen-len", "generation length L", Some("64"))
+        .describe("addr", "serve: listen address", Some("127.0.0.1:7333"))
+        .describe("max-batch", "serve: dynamic batcher max batch", Some("4"))
+        .describe("max-wait-ms", "serve: batcher flush deadline", Some("20"))
+        .describe("suite", "eval: suite jsonl name", Some("gsm-mini"))
+        .describe("n", "eval: item count", Some("50"))
+        .describe("remask", "flag: enable ReMDM-style remasking (extension)", None)
+        .describe("remask-tau", "remasking confidence threshold", Some("0.5"));
+    args.handle_help("streaming-dllm", ABOUT);
+
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    match cmd {
+        "serve" => serve(&args),
+        "eval" => eval(&args),
+        "generate" => generate(&args),
+        "models" => list_models(&args),
+        _ => {
+            println!("{}", args.help("streaming-dllm", ABOUT));
+            println!("commands: serve | eval | generate | models");
+            Ok(())
+        }
+    }
+}
+
+fn artifacts(args: &Args) -> std::path::PathBuf {
+    args.get("artifacts")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(streaming_dllm::artifacts_root)
+}
+
+fn serve(args: &Args) -> Result<()> {
+    let root = artifacts(args);
+    let model = args.get_or("model", "llada15-mini").to_string();
+    let addr = args.get_or("addr", "127.0.0.1:7333");
+    let router = RouterHandle::spawn(
+        root,
+        model.clone(),
+        args.get_usize("max-batch", 4),
+        Duration::from_millis(args.get_usize("max-wait-ms", 20) as u64),
+    );
+    let server = Server::bind(addr, router)?;
+    println!("serving {model} on {addr} (line-delimited JSON; {{\"cmd\":\"stats\"}} for metrics)");
+    server.serve_forever()
+}
+
+fn eval(args: &Args) -> Result<()> {
+    let root = artifacts(args);
+    let index = ArtifactsIndex::load(&root)?;
+    let model = args.get_or("model", "llada15-mini");
+    let rt = Runtime::cpu()?;
+    let model_rt = ModelRuntime::load(&rt, &index.model_dir(model))?;
+    let method = Method::parse(args.get_or("method", "streaming"))
+        .ok_or_else(|| anyhow::anyhow!("unknown method"))?;
+    let mut cfg = GenConfig::preset(method, args.get_usize("gen-len", 64));
+    if args.has_flag("remask") {
+        cfg.remask = true;
+        cfg.remask_tau = args.get_f32("remask-tau", 0.5);
+    }
+    let suite = args.get_or("suite", "gsm-mini");
+    let items = load_suite(&index.eval_dir.join(format!("{suite}.jsonl")))?;
+    let n = args.get_usize("n", 50).min(items.len());
+    let res = run_suite(&model_rt, &cfg, &items[..n], None)?;
+    println!(
+        "{model} {suite} method={} L={}: acc {:.1}% (cot-sim {:.1}%) | {:.1} tok/s | {:.2}s/sample | NFE {:.1}",
+        method.name(),
+        cfg.gen_len,
+        res.accuracy(),
+        res.cot_similarity(),
+        res.tokens_per_sec(),
+        res.mean_latency(),
+        res.steps as f64 / n.max(1) as f64,
+    );
+    Ok(())
+}
+
+fn generate(args: &Args) -> Result<()> {
+    let root = artifacts(args);
+    let index = ArtifactsIndex::load(&root)?;
+    let model = args.get_or("model", "llada15-mini");
+    let rt = Runtime::cpu()?;
+    let model_rt = ModelRuntime::load(&rt, &index.model_dir(model))?;
+    let method = Method::parse(args.get_or("method", "streaming"))
+        .ok_or_else(|| anyhow::anyhow!("unknown method"))?;
+    let cfg = GenConfig::preset(method, args.get_usize("gen-len", 64));
+
+    // prompt: token ids as a comma list, or a sample from a suite
+    let prompt: Vec<i32> = match args.get("prompt-ids") {
+        Some(s) => s.split(',').filter_map(|x| x.trim().parse().ok()).collect(),
+        None => {
+            let suite = args.get_or("suite", "gsm-mini");
+            let items = load_suite(&index.eval_dir.join(format!("{suite}.jsonl")))?;
+            if items.is_empty() {
+                bail!("empty suite");
+            }
+            println!("[no --prompt-ids; using first {suite} eval item]");
+            items[0].prompt.clone()
+        }
+    };
+    let router_cfg = cfg.clone();
+    let generator = streaming_dllm::engine::Generator::new(&model_rt, router_cfg)?;
+    let mut seqs = vec![streaming_dllm::engine::SeqState::new(
+        &prompt,
+        cfg.gen_len,
+        &model_rt.manifest.special,
+    )];
+    let report = generator.generate(&mut seqs, None)?;
+    println!("generated: {:?}", model_rt.manifest.detokenize_until_eos(seqs[0].generated()));
+    println!(
+        "steps {} | prefills {} | {:.1} tok/s | {:.3}s",
+        report.steps,
+        report.prefills,
+        report.tokens_per_sec(),
+        report.wall_secs
+    );
+    let _ = Request { id: 0, prompt, method, gen_len: cfg.gen_len }; // wire type sanity
+    Ok(())
+}
+
+fn list_models(args: &Args) -> Result<()> {
+    let root = artifacts(args);
+    let index = ArtifactsIndex::load(&root)?;
+    for m in &index.models {
+        println!("{m}");
+    }
+    Ok(())
+}

@@ -1,0 +1,311 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and
+//! the serving runtime.
+//!
+//! Each trained backbone ships a `manifest.json` describing its HLO-text
+//! executables (kind + bucket sizes + input signature), the parameter
+//! order for `params.npz`, the tokenizer special ids and the bucket
+//! grids. The runtime loads this once and uses it for bucket selection:
+//! pick the smallest compiled bucket ≥ the live length — padding is
+//! masked out inside the model graph, so smaller live lengths simply ride
+//! a slightly larger executable, while suffix pruning drops the request
+//! into a genuinely smaller bucket.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::Json;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum ExeKind {
+    Prefill,
+    Decode,
+    Logits,
+}
+
+impl ExeKind {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            ExeKind::Prefill => "prefill",
+            ExeKind::Decode => "decode",
+            ExeKind::Logits => "logits",
+        }
+    }
+
+    fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "prefill" => ExeKind::Prefill,
+            "decode" => ExeKind::Decode,
+            "logits" => ExeKind::Logits,
+            other => bail!("unknown executable kind '{other}'"),
+        })
+    }
+}
+
+/// Registry key: (kind, batch bucket, prefix/seq bucket, query bucket).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct ExeKey {
+    pub kind: ExeKind,
+    pub batch: usize,
+    /// prefix bucket for prefill/decode, sequence bucket for logits
+    pub len: usize,
+    /// query bucket (decode only; 0 otherwise)
+    pub query: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct ArtifactEntry {
+    pub key: ExeKey,
+    pub file: PathBuf,
+}
+
+#[derive(Debug, Clone)]
+pub struct SpecialTokens {
+    pub pad: i32,
+    pub mask: i32,
+    pub bos: i32,
+    pub eos: i32,
+    pub sep: i32,
+}
+
+#[derive(Debug, Clone)]
+pub struct KvDims {
+    pub layers: usize,
+    pub heads: usize,
+    pub d_head: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub model: String,
+    pub dir: PathBuf,
+    pub attn_mode: String,
+    pub wants_p0: bool,
+    pub special: SpecialTokens,
+    pub vocab: Vec<String>,
+    pub kv_dims: KvDims,
+    pub params_file: PathBuf,
+    pub param_order: Vec<ParamSpec>,
+    pub batch_buckets: Vec<usize>,
+    pub prefix_buckets: Vec<usize>,
+    pub query_buckets: Vec<usize>,
+    pub seq_buckets: Vec<usize>,
+    pub artifacts: BTreeMap<ExeKey, ArtifactEntry>,
+}
+
+fn usizes(j: &Json, key: &str) -> Result<Vec<usize>> {
+    j.req(key)?
+        .as_arr()
+        .ok_or_else(|| anyhow!("'{key}' not an array"))?
+        .iter()
+        .map(|x| x.as_usize().ok_or_else(|| anyhow!("'{key}' has non-numeric entry")))
+        .collect()
+}
+
+impl Manifest {
+    pub fn load(model_dir: &Path) -> Result<Manifest> {
+        let path = model_dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let j = Json::parse(&text).with_context(|| format!("parsing {}", path.display()))?;
+
+        let special = {
+            let s = j.req("special_tokens").map_err(|e| anyhow!("{e}"))?;
+            let g = |k: &str| -> Result<i32> {
+                Ok(s.req(k).map_err(|e| anyhow!("{e}"))?.as_i64().unwrap_or(-1) as i32)
+            };
+            SpecialTokens { pad: g("pad")?, mask: g("mask")?, bos: g("bos")?, eos: g("eos")?, sep: g("sep")? }
+        };
+
+        let kv = j.req("kv_dims").map_err(|e| anyhow!("{e}"))?;
+        let kv_dims = KvDims {
+            layers: kv.req("layers").map_err(|e| anyhow!("{e}"))?.as_usize().unwrap_or(0),
+            heads: kv.req("heads").map_err(|e| anyhow!("{e}"))?.as_usize().unwrap_or(0),
+            d_head: kv.req("d_head").map_err(|e| anyhow!("{e}"))?.as_usize().unwrap_or(0),
+        };
+
+        let param_order = j
+            .req("param_order")
+            .map_err(|e| anyhow!("{e}"))?
+            .as_arr()
+            .ok_or_else(|| anyhow!("param_order not an array"))?
+            .iter()
+            .map(|p| -> Result<ParamSpec> {
+                Ok(ParamSpec {
+                    name: p.req("name").map_err(|e| anyhow!("{e}"))?.as_str().unwrap_or("").to_string(),
+                    shape: p
+                        .req("shape")
+                        .map_err(|e| anyhow!("{e}"))?
+                        .as_arr()
+                        .unwrap_or(&[])
+                        .iter()
+                        .map(|x| x.as_usize().unwrap_or(0))
+                        .collect(),
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+
+        let buckets = j.req("buckets").map_err(|e| anyhow!("{e}"))?;
+
+        let mut artifacts = BTreeMap::new();
+        for a in j
+            .req("artifacts")
+            .map_err(|e| anyhow!("{e}"))?
+            .as_arr()
+            .ok_or_else(|| anyhow!("artifacts not an array"))?
+        {
+            let kind = ExeKind::parse(a.req("kind").map_err(|e| anyhow!("{e}"))?.as_str().unwrap_or(""))?;
+            let batch = a.req("batch").map_err(|e| anyhow!("{e}"))?.as_usize().unwrap_or(0);
+            let len = match kind {
+                ExeKind::Logits => a.req("seq").map_err(|e| anyhow!("{e}"))?.as_usize().unwrap_or(0),
+                _ => a.req("prefix").map_err(|e| anyhow!("{e}"))?.as_usize().unwrap_or(0),
+            };
+            let query = match kind {
+                ExeKind::Decode => a.req("query").map_err(|e| anyhow!("{e}"))?.as_usize().unwrap_or(0),
+                _ => 0,
+            };
+            let key = ExeKey { kind, batch, len, query };
+            let file = model_dir.join(a.req("file").map_err(|e| anyhow!("{e}"))?.as_str().unwrap_or(""));
+            if !file.exists() {
+                bail!("artifact file missing: {}", file.display());
+            }
+            artifacts.insert(key, ArtifactEntry { key, file });
+        }
+
+        Ok(Manifest {
+            model: j.req("model").map_err(|e| anyhow!("{e}"))?.as_str().unwrap_or("").to_string(),
+            dir: model_dir.to_path_buf(),
+            attn_mode: j.req("attn_mode").map_err(|e| anyhow!("{e}"))?.as_str().unwrap_or("full").to_string(),
+            wants_p0: j.req("wants_p0").map_err(|e| anyhow!("{e}"))?.as_bool().unwrap_or(false),
+            special,
+            vocab: j
+                .req("vocab")
+                .map_err(|e| anyhow!("{e}"))?
+                .as_arr()
+                .unwrap_or(&[])
+                .iter()
+                .map(|v| v.as_str().unwrap_or("").to_string())
+                .collect(),
+            kv_dims,
+            params_file: model_dir.join(
+                j.req("params_file").map_err(|e| anyhow!("{e}"))?.as_str().unwrap_or("params.npz"),
+            ),
+            param_order,
+            batch_buckets: usizes(j.req("buckets").map_err(|e| anyhow!("{e}"))?, "batch")?,
+            prefix_buckets: usizes(buckets, "prefix")?,
+            query_buckets: usizes(buckets, "query")?,
+            seq_buckets: usizes(buckets, "seq")?,
+            artifacts,
+        })
+    }
+
+    /// Smallest bucket ≥ `need` from a sorted grid.
+    pub fn pick_bucket(grid: &[usize], need: usize) -> Option<usize> {
+        grid.iter().copied().filter(|&b| b >= need).min()
+    }
+
+    pub fn pick_batch(&self, need: usize) -> Option<usize> {
+        Self::pick_bucket(&self.batch_buckets, need)
+    }
+
+    pub fn pick_prefix(&self, need: usize) -> Option<usize> {
+        Self::pick_bucket(&self.prefix_buckets, need)
+    }
+
+    pub fn pick_query(&self, need: usize) -> Option<usize> {
+        Self::pick_bucket(&self.query_buckets, need)
+    }
+
+    pub fn pick_seq(&self, need: usize) -> Option<usize> {
+        Self::pick_bucket(&self.seq_buckets, need)
+    }
+
+    pub fn entry(&self, key: ExeKey) -> Result<&ArtifactEntry> {
+        self.artifacts
+            .get(&key)
+            .ok_or_else(|| anyhow!("no artifact for {key:?} in model '{}'", self.model))
+    }
+
+    /// Decode a token-id sequence to text, stopping at EOS and skipping
+    /// special tokens — must match `tokenizer.decode_until_eos` on the
+    /// python side (pinned by an integration test).
+    pub fn detokenize_until_eos(&self, ids: &[i32]) -> String {
+        let mut s = String::new();
+        let n_special = 5;
+        for &id in ids {
+            if id == self.special.eos {
+                break;
+            }
+            if id < n_special || (id as usize) >= self.vocab.len() {
+                continue;
+            }
+            s.push_str(&self.vocab[id as usize]);
+        }
+        s
+    }
+}
+
+/// Top-level artifacts index (artifacts/index.json).
+#[derive(Debug, Clone)]
+pub struct ArtifactsIndex {
+    pub root: PathBuf,
+    pub models: Vec<String>,
+    pub eval_dir: PathBuf,
+    pub models_dir: PathBuf,
+}
+
+impl ArtifactsIndex {
+    pub fn load(root: &Path) -> Result<ArtifactsIndex> {
+        let path = root.join("index.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} (run `make artifacts` first)", path.display()))?;
+        let j = Json::parse(&text)?;
+        Ok(ArtifactsIndex {
+            root: root.to_path_buf(),
+            models: j
+                .req("models")
+                .map_err(|e| anyhow!("{e}"))?
+                .as_arr()
+                .unwrap_or(&[])
+                .iter()
+                .map(|m| m.as_str().unwrap_or("").to_string())
+                .collect(),
+            eval_dir: root.join(j.req("eval_dir").map_err(|e| anyhow!("{e}"))?.as_str().unwrap_or("eval")),
+            models_dir: root.join(j.req("models_dir").map_err(|e| anyhow!("{e}"))?.as_str().unwrap_or("models")),
+        })
+    }
+
+    pub fn model_dir(&self, model: &str) -> PathBuf {
+        self.models_dir.join(model)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pick_bucket_smallest_geq() {
+        let grid = [96, 160, 224, 352, 736];
+        assert_eq!(Manifest::pick_bucket(&grid, 1), Some(96));
+        assert_eq!(Manifest::pick_bucket(&grid, 96), Some(96));
+        assert_eq!(Manifest::pick_bucket(&grid, 97), Some(160));
+        assert_eq!(Manifest::pick_bucket(&grid, 736), Some(736));
+        assert_eq!(Manifest::pick_bucket(&grid, 737), None);
+    }
+
+    #[test]
+    fn exe_kind_parse_roundtrip() {
+        for k in [ExeKind::Prefill, ExeKind::Decode, ExeKind::Logits] {
+            assert_eq!(ExeKind::parse(k.as_str()).unwrap(), k);
+        }
+        assert!(ExeKind::parse("bogus").is_err());
+    }
+}

@@ -1,0 +1,41 @@
+//! Runtime: the PJRT bridge. Loads AOT HLO-text artifacts produced by
+//! `python/compile/aot.py`, compiles them once (lazily, memoized), keeps
+//! model parameters device-resident, and executes decode/prefill/logits
+//! steps from the serving hot path — python is never involved at runtime.
+//!
+//! Pattern follows /opt/xla-example/load_hlo: `HloModuleProto::
+//! from_text_file` → `XlaComputation::from_proto` → `client.compile` →
+//! `execute_b` (device buffers in, device buffers out).
+
+pub mod artifact;
+pub mod model;
+pub mod warmup;
+
+pub use artifact::{ArtifactsIndex, ExeKey, ExeKind, Manifest};
+pub use model::{DecodeOut, KvCache, ModelRuntime, RuntimeStats};
+pub use warmup::{plan_keys, warm_for};
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+/// Shared PJRT client. One per process.
+#[derive(Clone)]
+pub struct Runtime {
+    client: Arc<xla::PjRtClient>,
+}
+
+impl Runtime {
+    pub fn cpu() -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Runtime { client: Arc::new(client) })
+    }
+
+    pub fn client(&self) -> &xla::PjRtClient {
+        &self.client
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+}

@@ -1,0 +1,269 @@
+//! Per-model runtime: device-resident parameters + lazily compiled
+//! executable registry + typed prefill/decode/logits entrypoints.
+//!
+//! Threading model: the xla crate's handles wrap raw PJRT pointers, so a
+//! `ModelRuntime` lives on one engine thread; the coordinator funnels
+//! requests to it over channels (see `coordinator::router`).
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::rc::Rc;
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Context, Result};
+use xla::{FromRawBytes, Literal, PjRtBuffer, PjRtLoadedExecutable};
+
+use super::artifact::{ExeKey, ExeKind, Manifest};
+use super::Runtime;
+
+/// Execution counters — the NFE/compute accounting the benches report.
+#[derive(Debug, Clone, Default)]
+pub struct RuntimeStats {
+    pub prefill_calls: u64,
+    pub decode_calls: u64,
+    pub logits_calls: u64,
+    pub prefill_secs: f64,
+    pub decode_secs: f64,
+    pub logits_secs: f64,
+    pub compile_count: u64,
+    pub compile_secs: f64,
+    /// Σ (batch · bucket) per kind — a FLOP-proportional cost proxy.
+    pub prefill_cells: u64,
+    pub decode_cells: u64,
+    pub logits_cells: u64,
+}
+
+impl RuntimeStats {
+    pub fn total_calls(&self) -> u64 {
+        self.prefill_calls + self.decode_calls + self.logits_calls
+    }
+
+    pub fn total_model_secs(&self) -> f64 {
+        self.prefill_secs + self.decode_secs + self.logits_secs
+    }
+}
+
+/// A device-resident KV cache: [NL, 2, B, H, P, Dh] f32 produced by
+/// `prefill` and consumed by `decode` without a host round-trip.
+pub struct KvCache {
+    pub buffer: PjRtBuffer,
+    pub batch: usize,
+    pub p_bucket: usize,
+    /// live prefix length per row (≤ p_bucket)
+    pub valid: Vec<i32>,
+    /// device copy of `valid`, uploaded once at prefill time — decode
+    /// steps reuse it instead of re-uploading every step (§Perf: saves
+    /// one host→device transfer per diffusion step).
+    pub valid_buf: PjRtBuffer,
+}
+
+/// Packed decode output: [B, Q, 2] of (token id, confidence).
+pub struct DecodeOut {
+    pub data: Vec<f32>,
+    pub batch: usize,
+    pub q: usize,
+}
+
+impl DecodeOut {
+    pub fn token(&self, b: usize, i: usize) -> i32 {
+        self.data[(b * self.q + i) * 2] as i32
+    }
+
+    pub fn conf(&self, b: usize, i: usize) -> f32 {
+        self.data[(b * self.q + i) * 2 + 1]
+    }
+}
+
+pub struct ModelRuntime {
+    rt: Runtime,
+    pub manifest: Manifest,
+    params: Vec<PjRtBuffer>,
+    exes: RefCell<HashMap<ExeKey, Rc<PjRtLoadedExecutable>>>,
+    stats: RefCell<RuntimeStats>,
+}
+
+impl ModelRuntime {
+    /// Load a model: parse manifest, upload params.npz to the device.
+    pub fn load(rt: &Runtime, model_dir: &std::path::Path) -> Result<ModelRuntime> {
+        let manifest = Manifest::load(model_dir)?;
+        let named = Literal::read_npz(&manifest.params_file, &())
+            .with_context(|| format!("reading {}", manifest.params_file.display()))?;
+        let by_name: HashMap<String, Literal> = named.into_iter().collect();
+        let mut params = Vec::with_capacity(manifest.param_order.len());
+        for spec in &manifest.param_order {
+            let lit = by_name
+                .get(&spec.name)
+                .ok_or_else(|| anyhow!("params.npz missing '{}'", spec.name))?;
+            let elems: usize = spec.shape.iter().product();
+            if lit.element_count() != elems {
+                bail!(
+                    "param '{}' has {} elements, manifest says {:?}",
+                    spec.name,
+                    lit.element_count(),
+                    spec.shape
+                );
+            }
+            // NOTE: upload via buffer_from_host_buffer, which uses
+            // kImmutableOnlyDuringCall semantics (copy completes before
+            // returning). buffer_from_host_literal is ASYNC in the
+            // underlying PJRT CPU client and would read the Literal's
+            // memory after we drop it — a use-after-free segfault.
+            let host: Vec<f32> = lit.to_vec::<f32>()?;
+            params.push(rt.client().buffer_from_host_buffer(&host, &spec.shape, None)?);
+        }
+        Ok(ModelRuntime {
+            rt: rt.clone(),
+            manifest,
+            params,
+            exes: RefCell::new(HashMap::new()),
+            stats: RefCell::new(RuntimeStats::default()),
+        })
+    }
+
+    pub fn stats(&self) -> RuntimeStats {
+        self.stats.borrow().clone()
+    }
+
+    pub fn reset_stats(&self) {
+        *self.stats.borrow_mut() = RuntimeStats::default();
+    }
+
+    /// Pre-compile a set of keys (startup warmup; otherwise lazy).
+    pub fn warm(&self, keys: &[ExeKey]) -> Result<()> {
+        for &k in keys {
+            self.executable(k)?;
+        }
+        Ok(())
+    }
+
+    fn executable(&self, key: ExeKey) -> Result<Rc<PjRtLoadedExecutable>> {
+        if let Some(e) = self.exes.borrow().get(&key) {
+            return Ok(e.clone());
+        }
+        let entry = self.manifest.entry(key)?;
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            entry.file.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = Rc::new(self.rt.client().compile(&comp)?);
+        let mut st = self.stats.borrow_mut();
+        st.compile_count += 1;
+        st.compile_secs += t0.elapsed().as_secs_f64();
+        drop(st);
+        self.exes.borrow_mut().insert(key, exe.clone());
+        Ok(exe)
+    }
+
+    fn buf_i32(&self, data: &[i32], dims: &[usize]) -> Result<PjRtBuffer> {
+        Ok(self.rt.client().buffer_from_host_buffer(data, dims, None)?)
+    }
+
+    fn run(&self, exe: &PjRtLoadedExecutable, inputs: &[&PjRtBuffer]) -> Result<PjRtBuffer> {
+        let mut args: Vec<&PjRtBuffer> = Vec::with_capacity(self.params.len() + inputs.len());
+        args.extend(self.params.iter());
+        args.extend(inputs.iter().copied());
+        let mut out = exe.execute_b(&args)?;
+        let mut first = out
+            .pop()
+            .ok_or_else(|| anyhow!("no output device list"))?;
+        if !out.is_empty() {
+            bail!("unexpected multi-device output");
+        }
+        first.pop().ok_or_else(|| anyhow!("empty output buffer list"))
+    }
+
+    /// Prefix forward. `tokens`/`pos` are row-major [B, p_bucket]
+    /// (pre-padded by the caller), `valid` the live length per row,
+    /// `p0` the per-row prompt length (block-causal models only).
+    pub fn prefill(
+        &self,
+        batch: usize,
+        p_bucket: usize,
+        tokens: &[i32],
+        pos: &[i32],
+        valid: &[i32],
+        p0: Option<&[i32]>,
+    ) -> Result<KvCache> {
+        debug_assert_eq!(tokens.len(), batch * p_bucket);
+        let key = ExeKey { kind: ExeKind::Prefill, batch, len: p_bucket, query: 0 };
+        let exe = self.executable(key)?;
+        let t_buf = self.buf_i32(tokens, &[batch, p_bucket])?;
+        let p_buf = self.buf_i32(pos, &[batch, p_bucket])?;
+        let v_buf = self.buf_i32(valid, &[batch])?;
+        let t0 = Instant::now();
+        let out = if self.manifest.wants_p0 {
+            let p0 = p0.ok_or_else(|| anyhow!("model '{}' needs p0", self.manifest.model))?;
+            let p0_buf = self.buf_i32(p0, &[batch])?;
+            self.run(&exe, &[&t_buf, &p_buf, &v_buf, &p0_buf])?
+        } else {
+            self.run(&exe, &[&t_buf, &p_buf, &v_buf])?
+        };
+        let mut st = self.stats.borrow_mut();
+        st.prefill_calls += 1;
+        st.prefill_secs += t0.elapsed().as_secs_f64();
+        st.prefill_cells += (batch * p_bucket) as u64;
+        Ok(KvCache { buffer: out, batch, p_bucket, valid: valid.to_vec(), valid_buf: v_buf })
+    }
+
+    /// One diffusion decode step over the query bundle.
+    pub fn decode(
+        &self,
+        kv: &KvCache,
+        q_bucket: usize,
+        q_tok: &[i32],
+        q_pos: &[i32],
+        q_valid: &[i32],
+    ) -> Result<DecodeOut> {
+        let batch = kv.batch;
+        debug_assert_eq!(q_tok.len(), batch * q_bucket);
+        let key = ExeKey { kind: ExeKind::Decode, batch, len: kv.p_bucket, query: q_bucket };
+        let exe = self.executable(key)?;
+        let qt = self.buf_i32(q_tok, &[batch, q_bucket])?;
+        let qp = self.buf_i32(q_pos, &[batch, q_bucket])?;
+        let qv = self.buf_i32(q_valid, &[batch])?;
+        let t0 = Instant::now();
+        let out = self.run(&exe, &[&kv.buffer, &qt, &qp, &kv.valid_buf, &qv])?;
+        let lit = out.to_literal_sync()?;
+        let data = lit.to_vec::<f32>()?;
+        let mut st = self.stats.borrow_mut();
+        st.decode_calls += 1;
+        st.decode_secs += t0.elapsed().as_secs_f64();
+        st.decode_cells += (batch * (kv.p_bucket + q_bucket)) as u64;
+        debug_assert_eq!(data.len(), batch * q_bucket * 2);
+        Ok(DecodeOut { data, batch, q: q_bucket })
+    }
+
+    /// Full-sequence forward (vanilla baseline): packed [B, S, 2].
+    pub fn logits(
+        &self,
+        batch: usize,
+        s_bucket: usize,
+        tokens: &[i32],
+        pos: &[i32],
+        valid: &[i32],
+        p0: Option<&[i32]>,
+    ) -> Result<DecodeOut> {
+        debug_assert_eq!(tokens.len(), batch * s_bucket);
+        let key = ExeKey { kind: ExeKind::Logits, batch, len: s_bucket, query: 0 };
+        let exe = self.executable(key)?;
+        let t_buf = self.buf_i32(tokens, &[batch, s_bucket])?;
+        let p_buf = self.buf_i32(pos, &[batch, s_bucket])?;
+        let v_buf = self.buf_i32(valid, &[batch])?;
+        let t0 = Instant::now();
+        let out = if self.manifest.wants_p0 {
+            let p0 = p0.ok_or_else(|| anyhow!("model '{}' needs p0", self.manifest.model))?;
+            let p0_buf = self.buf_i32(p0, &[batch])?;
+            self.run(&exe, &[&t_buf, &p_buf, &v_buf, &p0_buf])?
+        } else {
+            self.run(&exe, &[&t_buf, &p_buf, &v_buf])?
+        };
+        let lit = out.to_literal_sync()?;
+        let data = lit.to_vec::<f32>()?;
+        let mut st = self.stats.borrow_mut();
+        st.logits_calls += 1;
+        st.logits_secs += t0.elapsed().as_secs_f64();
+        st.logits_cells += (batch * s_bucket) as u64;
+        Ok(DecodeOut { data, batch, q: s_bucket })
+    }
+}

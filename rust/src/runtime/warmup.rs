@@ -1,0 +1,72 @@
+//! Warmup planner: pre-compile the executables a (config, workload)
+//! combination will touch, so the first request doesn't pay lazy
+//! compilation (the same cost EXPERIMENTS.md excludes from serving
+//! metrics — this is the mechanism that makes the exclusion honest in
+//! deployment).
+
+use anyhow::Result;
+
+use crate::engine::GenConfig;
+
+use super::artifact::{ExeKey, ExeKind};
+use super::model::ModelRuntime;
+
+/// Compute the executable keys a generation with `cfg` can touch for
+/// prompts up to `max_prompt_len`, at batch bucket `batch`.
+pub fn plan_keys(
+    rt: &ModelRuntime,
+    cfg: &GenConfig,
+    max_prompt_len: usize,
+    batch: usize,
+) -> Result<Vec<ExeKey>> {
+    let man = &rt.manifest;
+    let batch = man
+        .pick_batch(batch)
+        .ok_or_else(|| anyhow::anyhow!("batch {batch} exceeds buckets"))?;
+    let k = cfg.block_size;
+    let n_blocks = cfg.n_blocks();
+    let mut keys = std::collections::BTreeSet::new();
+
+    if !cfg.uses_cache() {
+        let s = man
+            .pick_seq(max_prompt_len + cfg.gen_len)
+            .ok_or_else(|| anyhow::anyhow!("seq exceeds buckets"))?;
+        keys.insert(ExeKey { kind: ExeKind::Logits, batch, len: s, query: 0 });
+    } else {
+        for blk in 0..n_blocks {
+            let p_need = (max_prompt_len + blk * k).max(1);
+            let p = man
+                .pick_prefix(p_need)
+                .ok_or_else(|| anyhow::anyhow!("prefix {p_need} exceeds buckets"))?;
+            keys.insert(ExeKey { kind: ExeKind::Prefill, batch, len: p, query: 0 });
+            // query-bundle sizes this block can produce
+            let suffix_len = cfg.gen_len - (blk + 1) * k;
+            let q_need = if cfg.suffix_pruning {
+                let win = suffix_len.min(cfg.window);
+                let trailing = usize::from(cfg.trailing_position && win < suffix_len);
+                k + win + trailing
+            } else {
+                k + suffix_len
+            }
+            .max(1);
+            let q = man
+                .pick_query(q_need)
+                .ok_or_else(|| anyhow::anyhow!("query {q_need} exceeds buckets"))?;
+            keys.insert(ExeKey { kind: ExeKind::Decode, batch, len: p, query: q });
+        }
+    }
+    Ok(keys.into_iter().collect())
+}
+
+/// Plan + compile. Returns how many executables were compiled.
+pub fn warm_for(
+    rt: &ModelRuntime,
+    cfg: &GenConfig,
+    max_prompt_len: usize,
+    batch: usize,
+) -> Result<usize> {
+    let keys = plan_keys(rt, cfg, max_prompt_len, batch)?;
+    let before = rt.stats().compile_count;
+    rt.warm(&keys)?;
+    Ok((rt.stats().compile_count - before) as usize)
+}

@@ -1,0 +1,162 @@
+//! Bench harness (no `criterion` in the offline toolchain).
+//!
+//! Each `rust/benches/*.rs` target sets `harness = false` and drives this:
+//! warmup, timed repetitions, mean ± std reporting, and the paper-style
+//! table printer (accuracy on top, tokens/s + speedup below) that every
+//! tableN bench uses so EXPERIMENTS.md rows can be pasted verbatim.
+
+use std::time::Instant;
+
+use super::stats::Welford;
+
+/// Time `f` over `reps` repetitions after `warmup` unmeasured runs.
+pub fn time_fn<F: FnMut()>(warmup: usize, reps: usize, mut f: F) -> Welford {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut w = Welford::new();
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        f();
+        w.push(t0.elapsed().as_secs_f64());
+    }
+    w
+}
+
+/// One cell of a paper-style table: accuracy + throughput + latency.
+#[derive(Debug, Clone, Default)]
+pub struct Cell {
+    pub accuracy: f64,     // percent, exact match (paper metric)
+    pub cot_sim: f64,      // percent, partial-credit CoT similarity
+    pub tokens_per_s: f64, // non-EOS tokens / wall second (paper metric)
+    pub latency_s: f64,    // mean per-sample latency
+    pub nfe: f64,          // mean model evaluations per sample
+}
+
+/// A table row: one (benchmark, gen-length) setting across methods.
+pub struct Row {
+    pub label: String,
+    pub cells: Vec<(String, Cell)>, // (method name, cell)
+}
+
+/// Print rows the way the paper formats Tables 1/2/8: accuracy on the
+/// first line, `tokens/s (speedup×)` on the second, with the first method
+/// as the 1× baseline.
+pub fn print_table(title: &str, rows: &[Row]) {
+    println!("\n=== {title} ===");
+    if rows.is_empty() {
+        return;
+    }
+    let methods: Vec<&str> = rows[0].cells.iter().map(|(m, _)| m.as_str()).collect();
+    let width = 22usize;
+    print!("{:<28}", "benchmark");
+    for m in &methods {
+        print!("{m:<width$}");
+    }
+    println!();
+    for row in rows {
+        let base_tps = row.cells.first().map(|(_, c)| c.tokens_per_s).unwrap_or(1.0);
+        print!("{:<28}", row.label);
+        for (_, c) in &row.cells {
+            // exact-match (partial-credit CoT similarity)
+            print!("{:<width$}", format!("{:.1} ({:.0})", c.accuracy, c.cot_sim));
+        }
+        println!();
+        print!("{:<28}", "");
+        for (_, c) in &row.cells {
+            let speedup = if base_tps > 0.0 { c.tokens_per_s / base_tps } else { 0.0 };
+            print!("{:<width$}", format!("{:.1} ({:.1}x)", c.tokens_per_s, speedup));
+        }
+        println!();
+    }
+}
+
+/// Latency variant (paper Tables 9/10/11): seconds + speedup (inverse).
+pub fn print_latency_table(title: &str, rows: &[Row]) {
+    println!("\n=== {title} (latency s/sample) ===");
+    if rows.is_empty() {
+        return;
+    }
+    let methods: Vec<&str> = rows[0].cells.iter().map(|(m, _)| m.as_str()).collect();
+    let width = 22usize;
+    print!("{:<28}", "benchmark");
+    for m in &methods {
+        print!("{m:<width$}");
+    }
+    println!();
+    for row in rows {
+        let base = row.cells.first().map(|(_, c)| c.latency_s).unwrap_or(1.0);
+        print!("{:<28}", row.label);
+        for (_, c) in &row.cells {
+            let speedup = if c.latency_s > 0.0 { base / c.latency_s } else { 0.0 };
+            print!("{:<width$}", format!("{:.2}s ({:.1}x)", c.latency_s, speedup));
+        }
+        println!();
+    }
+}
+
+/// Machine-readable dump next to the human table (picked up by
+/// EXPERIMENTS.md tooling and the fig1 scatter bench).
+pub fn rows_to_json(rows: &[Row]) -> super::json::Json {
+    use super::json::Json;
+    Json::Arr(
+        rows.iter()
+            .map(|r| {
+                Json::obj(vec![
+                    ("label", Json::Str(r.label.clone())),
+                    (
+                        "cells",
+                        Json::Arr(
+                            r.cells
+                                .iter()
+                                .map(|(m, c)| {
+                                    Json::obj(vec![
+                                        ("method", Json::Str(m.clone())),
+                                        ("accuracy", Json::Num(c.accuracy)),
+                                        ("cot_sim", Json::Num(c.cot_sim)),
+                                        ("tokens_per_s", Json::Num(c.tokens_per_s)),
+                                        ("latency_s", Json::Num(c.latency_s)),
+                                        ("nfe", Json::Num(c.nfe)),
+                                    ])
+                                })
+                                .collect(),
+                        ),
+                    ),
+                ])
+            })
+            .collect(),
+    )
+}
+
+/// Write the JSON dump under target/bench-results/ (best effort).
+pub fn save_rows(name: &str, rows: &[Row]) {
+    let dir = std::path::Path::new("target/bench-results");
+    let _ = std::fs::create_dir_all(dir);
+    let path = dir.join(format!("{name}.json"));
+    let _ = std::fs::write(&path, rows_to_json(rows).to_string());
+    println!("[saved {}]", path.display());
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_fn_counts_reps() {
+        let mut n = 0;
+        let w = time_fn(2, 5, || n += 1);
+        assert_eq!(n, 7);
+        assert_eq!(w.count(), 5);
+    }
+
+    #[test]
+    fn rows_json_shape() {
+        let rows = vec![Row {
+            label: "gsm 64".into(),
+            cells: vec![("vanilla".into(), Cell { accuracy: 50.0, cot_sim: 70.0, tokens_per_s: 2.0, latency_s: 1.0, nfe: 64.0 })],
+        }];
+        let j = rows_to_json(&rows);
+        let s = j.to_string();
+        assert!(s.contains("vanilla") && s.contains("gsm 64"));
+    }
+}

