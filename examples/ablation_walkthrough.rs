@@ -1,15 +1,15 @@
 //! Live walkthrough of paper Table 3: toggle the three Streaming-dLLM
 //! modules (Suf. / Dyn. / Exit.) one at a time on GSM-mini and watch
-//! accuracy + throughput respond.
+//! accuracy + throughput respond. Runs on any backend (PJRT artifacts
+//! or the pure-Rust reference model).
 //!
 //! ```sh
 //! cargo run --release --example ablation_walkthrough -- --n 16
 //! ```
 
 use anyhow::Result;
-use streaming_dllm::engine::{GenConfig, Method};
-use streaming_dllm::eval::{load_suite, run_suite};
-use streaming_dllm::runtime::{ArtifactsIndex, ModelRuntime, Runtime};
+use streaming_dllm::engine::{AnyBackend, GenConfig, Method};
+use streaming_dllm::eval::{run_suite, suite_for};
 use streaming_dllm::util::cli::Args;
 
 fn main() -> Result<()> {
@@ -19,23 +19,28 @@ fn main() -> Result<()> {
     let gen_len = args.get_usize("gen-len", 128);
 
     let root = streaming_dllm::artifacts_root();
-    let index = ArtifactsIndex::load(&root)?;
-    let rt = Runtime::cpu()?;
-    let mrt = ModelRuntime::load(&rt, &index.model_dir(model))?;
-    let items = load_suite(&index.eval_dir.join("gsm-mini.jsonl"))?;
+    let backend = AnyBackend::auto(&root, model)?;
+    let items = suite_for(&backend, &root, "gsm-mini")?;
     let items = &items[..n.min(items.len())];
 
-    println!("Table 3 ablation — {model}, gsm-mini, L={gen_len} (paper: L=512)");
-    println!("{:<8}{:<8}{:<8}{:>10}{:>14}{:>10}", "Suf.", "Dyn.", "Exit.", "Acc.(%)", "Th.(tok/s)", "NFE");
+    println!(
+        "Table 3 ablation — {model} [{}], gsm-mini, L={gen_len} (paper: L=512)",
+        backend.describe()
+    );
+    println!(
+        "{:<8}{:<8}{:<8}{:>10}{:>14}{:>10}",
+        "Suf.", "Dyn.", "Exit.", "Acc.(%)", "Th.(tok/s)", "NFE"
+    );
 
     // (suf, dyn, exit) in the paper's row order
-    let rows = [(false, false, false), (true, false, false), (true, true, false), (true, true, true)];
+    let rows =
+        [(false, false, false), (true, false, false), (true, true, false), (true, true, true)];
     for (suf, dynamic, exit) in rows {
         let mut cfg = GenConfig::preset(Method::Streaming, gen_len);
         cfg.suffix_pruning = suf;
         cfg.dynamic_threshold = dynamic;
         cfg.early_exit = exit;
-        let res = run_suite(&mrt, &cfg, items, None)?;
+        let res = run_suite(&backend, &cfg, items, None)?;
         println!(
             "{:<8}{:<8}{:<8}{:>10.1}{:>14.1}{:>10.1}",
             mark(suf),

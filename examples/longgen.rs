@@ -1,16 +1,16 @@
 //! Long-generation scaling demo (paper Table 5 shape): as the target
 //! generation length grows, vanilla throughput collapses while
 //! Streaming-dLLM stays nearly flat — early exit stops at the answer,
-//! suffix pruning caps per-step cost.
+//! suffix pruning caps per-step cost. Runs on any backend (PJRT
+//! artifacts or the pure-Rust reference model).
 //!
 //! ```sh
 //! cargo run --release --example longgen -- --n 4
 //! ```
 
 use anyhow::Result;
-use streaming_dllm::engine::{GenConfig, Method};
-use streaming_dllm::eval::{load_suite, run_suite};
-use streaming_dllm::runtime::{ArtifactsIndex, ModelRuntime, Runtime};
+use streaming_dllm::engine::{AnyBackend, GenConfig, Method};
+use streaming_dllm::eval::{run_suite, suite_for};
 use streaming_dllm::util::cli::Args;
 
 fn main() -> Result<()> {
@@ -19,25 +19,26 @@ fn main() -> Result<()> {
     let n = args.get_usize("n", 4);
 
     let root = streaming_dllm::artifacts_root();
-    let index = ArtifactsIndex::load(&root)?;
-    let rt = Runtime::cpu()?;
-    let mrt = ModelRuntime::load(&rt, &index.model_dir(model))?;
-    let items = load_suite(&index.eval_dir.join("gsm-mini.jsonl"))?;
+    let backend = AnyBackend::auto(&root, model)?;
+    let items = suite_for(&backend, &root, "gsm-mini")?;
     let items = &items[..n.min(items.len())];
 
-    println!("generation-length scaling — {model}, gsm-mini (paper Table 5, lengths ÷4)");
+    println!(
+        "generation-length scaling — {model} [{}], gsm-mini (paper Table 5, lengths ÷4)",
+        backend.describe()
+    );
     println!("{:<10}{:>14}{:>16}{:>14}{:>12}", "L", "method", "tok/s", "s/sample", "speedup");
     for gen_len in [128usize, 256, 512] {
         let mut base_tps = 0.0;
         for method in [Method::Vanilla, Method::FastDllm, Method::Streaming] {
             let cfg = GenConfig::preset(method, gen_len);
-            let res = run_suite(&mrt, &cfg, items, None)?;
+            let res = run_suite(&backend, &cfg, items, None)?;
             let tps = res.tokens_per_sec();
             if method == Method::Vanilla {
                 base_tps = tps;
             }
             println!(
-                "{:<10}{:>14}{:>16.2}{:>14.2}{:>11.1}x",
+                "{:<10}{:>14}{:>16.2}{:>14.3}{:>11.1}x",
                 gen_len,
                 method.name(),
                 tps,

@@ -1,15 +1,16 @@
-//! Quickstart: load a backbone, decode a few GSM-mini prompts with the
-//! vanilla schedule and with Streaming-dLLM, and print the texts plus
-//! the speedup. Run after `make artifacts`:
+//! Quickstart: pick the best available backend (PJRT artifacts when
+//! built with `--features pjrt` and `make artifacts` has run, the
+//! deterministic reference model otherwise), decode a few GSM-mini
+//! prompts with the vanilla schedule and with Streaming-dLLM, and print
+//! the texts plus the speedup.
 //!
 //! ```sh
 //! cargo run --release --example quickstart
 //! ```
 
 use anyhow::Result;
-use streaming_dllm::engine::{GenConfig, Generator, Method, SeqState};
-use streaming_dllm::eval::{extract_final, load_suite};
-use streaming_dllm::runtime::{ArtifactsIndex, ModelRuntime, Runtime};
+use streaming_dllm::engine::{AnyBackend, Backend, GenConfig, Generator, Method, SeqState};
+use streaming_dllm::eval::{extract_final, suite_for};
 use streaming_dllm::util::cli::Args;
 
 fn main() -> Result<()> {
@@ -18,33 +19,30 @@ fn main() -> Result<()> {
     let n = args.get_usize("n", 5);
 
     let root = streaming_dllm::artifacts_root();
-    let index = ArtifactsIndex::load(&root)?;
-    let rt = Runtime::cpu()?;
-    println!("PJRT platform: {}", rt.platform());
-    let mrt = ModelRuntime::load(&rt, &index.model_dir(model))?;
-    println!("model: {} ({} params arrays)", model, mrt.manifest.param_order.len());
+    let backend = AnyBackend::auto(&root, model)?;
+    println!("backend: {}", backend.describe());
 
-    let items = load_suite(&index.eval_dir.join("gsm-mini.jsonl"))?;
+    let items = suite_for(&backend, &root, "gsm-mini")?;
     let items = &items[..n.min(items.len())];
 
     for method in [Method::Vanilla, Method::Streaming] {
         let cfg = GenConfig::preset(method, 64);
-        let generator = Generator::new(&mrt, cfg.clone())?;
+        let generator = Generator::new(&backend, cfg.clone())?;
         println!("\n== {} (L={}, K={}) ==", method.name(), cfg.gen_len, cfg.block_size);
         let mut correct = 0;
         let mut wall = 0.0;
         let mut tokens = 0u64;
         for item in items {
-            let mut seqs = vec![SeqState::new(&item.prompt, cfg.gen_len, &mrt.manifest.special)];
+            let mut seqs = vec![SeqState::new(&item.prompt, cfg.gen_len, &backend.special())];
             let report = generator.generate(&mut seqs, None)?;
-            let text = mrt.manifest.detokenize_until_eos(seqs[0].generated());
+            let text = backend.detokenize(seqs[0].generated());
             let ok = extract_final(&text) == item.answer;
             correct += ok as usize;
             wall += report.wall_secs;
             tokens += report.non_eos_tokens;
             println!(
-                "  {:<28} -> {:<24} [{}] {} steps, {:.2}s",
-                format!("…{}", truncate(&mrt.manifest.detokenize_until_eos(&item.prompt), 26)),
+                "  {:<28} -> {:<24} [{}] {} steps, {:.3}s",
+                format!("…{}", truncate(&backend.detokenize(&item.prompt), 26)),
                 text,
                 if ok { "ok" } else { "WRONG" },
                 report.steps,
@@ -52,11 +50,11 @@ fn main() -> Result<()> {
             );
         }
         println!(
-            "  accuracy {}/{} | {:.1} tok/s | {:.2}s/sample",
+            "  accuracy {}/{} | {:.1} tok/s | {:.3}s/sample",
             correct,
             items.len(),
-            tokens as f64 / wall,
-            wall / items.len() as f64
+            tokens as f64 / wall.max(1e-9),
+            wall / items.len().max(1) as f64
         );
     }
     Ok(())

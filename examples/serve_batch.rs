@@ -1,9 +1,10 @@
 //! End-to-end serving driver (the EXPERIMENTS.md §End-to-end run):
 //! boots the full stack — engine thread, dynamic batcher, TCP server —
-//! fires concurrent client load from the real eval suites, then reports
+//! fires concurrent client load from the eval suites, then reports
 //! accuracy, throughput (non-EOS tok/s), latency percentiles and server
-//! metrics. Proves all layers compose: rust coordinator → PJRT runtime →
-//! AOT-compiled JAX/Pallas executables.
+//! metrics. Proves all layers compose: rust coordinator → model backend
+//! (PJRT AOT executables, or the pure-Rust reference model on a bare
+//! checkout).
 //!
 //! ```sh
 //! cargo run --release --example serve_batch -- --n 32 --concurrency 8
@@ -13,11 +14,29 @@ use std::time::Duration;
 
 use anyhow::Result;
 use streaming_dllm::coordinator::{run_load, Request, RouterHandle, Server};
-use streaming_dllm::engine::Method;
-use streaming_dllm::eval::{extract_final, load_suite, EvalItem};
-use streaming_dllm::runtime::ArtifactsIndex;
+use streaming_dllm::engine::{AnyBackend, Method};
+use streaming_dllm::eval::{extract_final, suite_for, EvalItem};
 use streaming_dllm::util::cli::Args;
 use streaming_dllm::util::stats::Samples;
+
+#[cfg(feature = "pjrt")]
+fn spawn_router(root: &std::path::Path, model: &str, max_batch: usize) -> RouterHandle {
+    if AnyBackend::pjrt_available(root) {
+        RouterHandle::spawn(
+            root.to_path_buf(),
+            model.to_string(),
+            max_batch,
+            Duration::from_millis(30),
+        )
+    } else {
+        RouterHandle::spawn_reference(max_batch, Duration::from_millis(30))
+    }
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn spawn_router(_root: &std::path::Path, _model: &str, max_batch: usize) -> RouterHandle {
+    RouterHandle::spawn_reference(max_batch, Duration::from_millis(30))
+}
 
 fn main() -> Result<()> {
     let args = Args::parse_env();
@@ -28,13 +47,15 @@ fn main() -> Result<()> {
     let method = Method::parse(args.get_or("method", "streaming")).expect("method");
 
     let root = streaming_dllm::artifacts_root();
-    let index = ArtifactsIndex::load(&root)?;
+    // The oracle backend only sources/scores the workload; the server's
+    // engine thread builds its own identical backend.
+    let oracle = AnyBackend::auto(&root, &model)?;
 
     // mixed workload: round-robin over all four suites
     let suites = ["gsm-mini", "humaneval-mini", "mbpp-mini", "math-mini"];
     let mut pool: Vec<(String, EvalItem)> = vec![];
     for s in suites {
-        for item in load_suite(&index.eval_dir.join(format!("{s}.jsonl")))? {
+        for item in suite_for(&oracle, &root, s)? {
             pool.push((s.to_string(), item));
         }
     }
@@ -43,11 +64,15 @@ fn main() -> Result<()> {
         .collect();
 
     // boot the stack on an ephemeral port
-    let router = RouterHandle::spawn(root.clone(), model.clone(), max_batch, Duration::from_millis(30));
+    let router = spawn_router(&root, &model, max_batch);
     let metrics = router.metrics.clone();
     let server = Server::bind("127.0.0.1:0", router)?;
     let addr = server.local_addr()?.to_string();
-    println!("serving {model} on {addr}; {} requests, {concurrency} client conns, max_batch {max_batch}", picked.len());
+    println!(
+        "serving {model} [{}] on {addr}; {} reqs, {concurrency} conns, max_batch {max_batch}",
+        oracle.describe(),
+        picked.len()
+    );
     std::thread::scope(|scope| -> Result<()> {
         let srv = &server;
         let n_conns = concurrency;
@@ -89,14 +114,26 @@ fn main() -> Result<()> {
         }
         println!("\n=== end-to-end serving report ({}) ===", method.name());
         println!("requests ok/err: {}/{}", report.ok, report.errors);
-        println!("accuracy: {}/{} ({:.1}%)", correct, picked.len(), 100.0 * correct as f64 / picked.len() as f64);
+        println!(
+            "accuracy: {}/{} ({:.1}%)",
+            correct,
+            picked.len(),
+            100.0 * correct as f64 / picked.len().max(1) as f64
+        );
         for (s, (c, t)) in &per_suite {
             println!("  {s:<16} {c}/{t}");
         }
-        println!("wall: {wall:.2}s | throughput {:.1} non-EOS tok/s | {:.2} req/s",
-                 total_tokens as f64 / wall, report.ok as f64 / wall);
-        println!("client latency p50 {:.2}s p95 {:.2}s p99 {:.2}s",
-                 lat.percentile(50.0), lat.percentile(95.0), lat.percentile(99.0));
+        println!(
+            "wall: {wall:.2}s | throughput {:.1} non-EOS tok/s | {:.2} req/s",
+            total_tokens as f64 / wall,
+            report.ok as f64 / wall
+        );
+        println!(
+            "client latency p50 {:.3}s p95 {:.3}s p99 {:.3}s",
+            lat.percentile(50.0),
+            lat.percentile(95.0),
+            lat.percentile(99.0)
+        );
         println!("server metrics: {}", metrics.snapshot().to_string());
         Ok(())
     })?;

@@ -1,16 +1,21 @@
-//! Shared bench plumbing for all tableN/figN targets: artifact setup,
-//! the main accuracy+throughput grid (Tables 1/2/8 and the latency
-//! Tables 9/10/11), and sweep helpers.
+//! Shared bench plumbing for all tableN/figN targets: backend/suite
+//! setup, the main accuracy+throughput grid (Tables 1/2/8 and the
+//! latency Tables 9/10/11), and sweep helpers.
+//!
+//! Backend selection mirrors the CLI: PJRT when the build carries it
+//! *and* `artifacts/index.json` exists; the deterministic pure-Rust
+//! reference model otherwise — so every bench runs (and CI's bench
+//! smoke accumulates `BENCH_*.json` trajectories) on a bare checkout.
 //!
 //! Knobs (env): SDLLM_BENCH_N (items per cell, default 12),
-//! SDLLM_ARTIFACTS (artifacts dir).
+//! SDLLM_ARTIFACTS (artifacts dir), SDLLM_SYNTH_N (synthetic suite
+//! size, default 64).
 
 #![allow(dead_code)]
 
-
-use streaming_dllm::engine::{table12_config, GenConfig, Method};
-use streaming_dllm::eval::{load_suite, run_suite, EvalItem, SuiteResult};
-use streaming_dllm::runtime::{ArtifactsIndex, ModelRuntime, Runtime};
+use streaming_dllm::engine::{table12_config, AnyBackend, GenConfig, Method};
+use streaming_dllm::eval::{load_suite, run_suite, suite_for, EvalItem, SuiteResult};
+use streaming_dllm::runtime::ArtifactsIndex;
 use streaming_dllm::util::bench::{print_latency_table, print_table, save_rows, Cell, Row};
 
 pub const SUITES: [(&str, &str); 4] = [
@@ -28,32 +33,44 @@ pub fn bench_n() -> usize {
 }
 
 pub struct Setup {
-    pub index: ArtifactsIndex,
-    pub rt: Runtime,
+    pub root: std::path::PathBuf,
+    /// loaded once when serving over PJRT; None on reference runs
+    index: Option<ArtifactsIndex>,
 }
 
 impl Setup {
+    /// Always succeeds: the reference backend needs nothing. `Option`
+    /// is kept so bench mains read as before (`let Some(setup) = …`).
     pub fn new() -> Option<Setup> {
         let root = streaming_dllm::artifacts_root();
-        if !root.join("index.json").exists() {
-            println!("SKIP: no artifacts at {} (run `make artifacts`)", root.display());
-            return None;
-        }
-        let index = ArtifactsIndex::load(&root).expect("artifacts index");
-        let rt = Runtime::cpu().expect("PJRT cpu client");
-        Some(Setup { index, rt })
+        let index = if AnyBackend::pjrt_available(&root) {
+            Some(ArtifactsIndex::load(&root).expect("artifacts index"))
+        } else {
+            println!(
+                "[no PJRT artifacts at {}; running the deterministic reference backend]",
+                root.display()
+            );
+            None
+        };
+        Some(Setup { root, index })
     }
 
-    pub fn model(&self, name: &str) -> ModelRuntime {
-        ModelRuntime::load(&self.rt, &self.index.model_dir(name)).expect("model runtime")
+    pub fn model(&self, name: &str) -> AnyBackend {
+        AnyBackend::auto(&self.root, name).expect("backend")
     }
 
     pub fn suite(&self, name: &str) -> Vec<EvalItem> {
-        load_suite(&self.index.eval_dir.join(format!("{name}.jsonl"))).expect("suite")
+        self.suite_file(&format!("{name}.jsonl"))
     }
 
     pub fn suite_file(&self, file: &str) -> Vec<EvalItem> {
-        load_suite(&self.index.eval_dir.join(file)).expect("suite")
+        match &self.index {
+            Some(index) => load_suite(&index.eval_dir.join(file)).expect("suite"),
+            None => {
+                let name = file.trim_end_matches(".jsonl");
+                suite_for(&AnyBackend::reference(), &self.root, name).expect("suite")
+            }
+        }
     }
 }
 
@@ -67,7 +84,7 @@ pub fn cell_config(method: Method, model: &str, suite: &str, gen_len: usize) -> 
 }
 
 pub fn run_cell(
-    mrt: &ModelRuntime,
+    be: &AnyBackend,
     method: Method,
     model: &str,
     suite: &str,
@@ -75,7 +92,7 @@ pub fn run_cell(
     items: &[EvalItem],
 ) -> SuiteResult {
     let cfg = cell_config(method, model, suite, gen_len);
-    run_suite(mrt, &cfg, items, None).expect("run_suite")
+    run_suite(be, &cfg, items, None).expect("run_suite")
 }
 
 /// The paper's main-table grid: 4 suites × 2 gen lengths × 5 methods.
@@ -83,7 +100,7 @@ pub fn run_cell(
 /// (Tables 9/10/11) and saves JSON for fig1.
 pub fn main_table(model: &str, title: &str) {
     let Some(setup) = Setup::new() else { return };
-    let mrt = setup.model(model);
+    let be = setup.model(model);
     let n = bench_n();
     let mut rows = vec![];
     for (suite, label) in SUITES {
@@ -92,7 +109,7 @@ pub fn main_table(model: &str, title: &str) {
             let items = &items[..n.min(items.len())];
             let mut cells: Vec<(String, Cell)> = vec![];
             for method in Method::all() {
-                let res = run_cell(&mrt, method, model, suite, gen_len, items);
+                let res = run_cell(&be, method, model, suite, gen_len, items);
                 cells.push((method.name().to_string(), res.to_cell()));
             }
             rows.push(Row { label: format!("{label} L={gen_len}"), cells });

@@ -8,7 +8,7 @@ use streaming_dllm::engine::Method;
 use streaming_dllm::util::json::Json;
 
 fn main() {
-    let saved = std::path::Path::new("target/bench-results/main_llada15-mini.json");
+    let saved = std::path::Path::new("target/bench-results/BENCH_main_llada15-mini.json");
     let rows: Vec<(String, Vec<(String, f64, f64)>)> = if saved.exists() {
         let j = Json::parse(&std::fs::read_to_string(saved).unwrap()).unwrap();
         j.as_arr()
@@ -34,7 +34,7 @@ fn main() {
             })
             .collect()
     } else {
-        println!("(no saved main-table results; computing a reduced grid — run table2_llada15 for the full figure)");
+        println!("(no saved main-table results; computing a reduced grid — run table2 first)");
         let Some(setup) = common::Setup::new() else { return };
         let model = "llada15-mini";
         let mrt = setup.model(model);
@@ -58,5 +58,5 @@ fn main() {
             println!("{:<28}{:<16}{:>10.1}{:>14.1}", label, method, acc, tps);
         }
     }
-    println!("(expected: ours occupies the top-right frontier — highest throughput at competitive accuracy)");
+    println!("(expected: ours sits on the top-right frontier of accuracy vs throughput)");
 }

@@ -34,5 +34,5 @@ fn main() {
             res.steps as f64 / items.len() as f64
         );
     }
-    println!("(n={n}; expected: throughput decays with w, accuracy flat/saturating after the knee)");
+    println!("(n={n}; expected: throughput decays with w, accuracy saturates at the knee)");
 }

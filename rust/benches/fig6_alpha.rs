@@ -32,5 +32,5 @@ fn main() {
             res.steps as f64 / items.len() as f64
         );
     }
-    println!("(n={n}; alpha=0 ≙ static threshold; expected: NFE falls with alpha, accuracy knees past ~0.6)");
+    println!("(n={n}; alpha=0 = static threshold; NFE falls with alpha, knee past ~0.6)");
 }

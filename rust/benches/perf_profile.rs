@@ -1,20 +1,21 @@
-//! §Perf profiling harness: per-layer wall-clock breakdown of the
-//! serving hot path — executable dispatch, host→device upload, model
-//! execute, output sync, and the pure-rust scheduling layer — plus
-//! per-bucket decode-step microbenchmarks. This is what the
-//! EXPERIMENTS.md §Perf before/after numbers come from.
+//! §Perf profiling harness: per-call wall-clock microbenchmarks of the
+//! serving hot path (prefill / decode / logits per bucket) plus an
+//! end-to-end breakdown of a streaming run — model-call time vs the
+//! pure-rust scheduling layer. Runs against whichever backend the
+//! checkout provides (PJRT artifacts or the reference model), so the
+//! EXPERIMENTS.md §Perf before/after numbers accumulate either way.
 #[path = "common.rs"]
 mod common;
 
 use std::time::Instant;
 
-use streaming_dllm::engine::{GenConfig, Generator, Method, SeqState};
+use streaming_dllm::engine::{Backend, GenConfig, Generator, Method, SeqState};
 use streaming_dllm::util::bench::time_fn;
 
 fn main() {
     let Some(setup) = common::Setup::new() else { return };
     let model = "llada15-mini";
-    let mrt = setup.model(model);
+    let be = setup.model(model);
     let items = setup.suite("gsm-mini");
 
     // -------- decode-step microbench per query bucket ----------------
@@ -22,16 +23,21 @@ fn main() {
     println!("{:<10}{:<10}{:>14}", "P", "Q", "ms/step");
     let p0 = items[0].prompt.len();
     for &p in &[160usize, 224] {
-        let tokens: Vec<i32> = (0..p).map(|i| if i < p0 { items[0].prompt[i] } else { 1 }).collect();
+        let tokens: Vec<i32> =
+            (0..p).map(|i| if i < p0 { items[0].prompt[i] } else { 1 }).collect();
         let pos: Vec<i32> = (0..p as i32).collect();
-        let kv = mrt.prefill(1, p, &tokens, &pos, &[p0 as i32], None).expect("prefill");
+        let valid = [p0 as i32];
+        let p0s = [p0 as i32];
+        let p0_arg = if be.wants_p0() { Some(&p0s[..]) } else { None };
+        let kv = be.prefill(1, p, &tokens, &pos, &valid, p0_arg).expect("prefill");
         for &q in &[13usize, 25, 41, 73, 137] {
             let q_tok = vec![1i32; q];
             let q_pos: Vec<i32> = (p0 as i32..(p0 + q) as i32).collect();
+            let q_valid = [q as i32];
             let w = time_fn(2, 8, || {
-                mrt.decode(&kv, q, &q_tok, &q_pos, &[q as i32]).expect("decode");
+                be.decode(&kv, q, &q_tok, &q_pos, &q_valid).expect("decode");
             });
-            println!("{:<10}{:<10}{:>14.2}", p, q, w.mean() * 1e3);
+            println!("{:<10}{:<10}{:>14.3}", p, q, w.mean() * 1e3);
         }
     }
 
@@ -41,35 +47,44 @@ fn main() {
     for &p in &[96usize, 160, 224, 352] {
         let tokens = vec![2i32; p];
         let pos: Vec<i32> = (0..p as i32).collect();
+        let valid = [16i32];
+        let p0s = [16i32];
+        let p0_arg = if be.wants_p0() { Some(&p0s[..]) } else { None };
         let w = time_fn(1, 5, || {
-            mrt.prefill(1, p, &tokens, &pos, &[16], None).expect("prefill");
+            be.prefill(1, p, &tokens, &pos, &valid, p0_arg).expect("prefill");
         });
-        println!("{:<10}{:<12}{:>14.2}", p, "prefill", w.mean() * 1e3);
+        println!("{:<10}{:<12}{:>14.3}", p, "prefill", w.mean() * 1e3);
         let w = time_fn(1, 5, || {
-            mrt.logits(1, p, &tokens, &pos, &[16], None).expect("logits");
+            be.logits(1, p, &tokens, &pos, &valid, p0_arg).expect("logits");
         });
-        println!("{:<10}{:<12}{:>14.2}", p, "logits", w.mean() * 1e3);
+        println!("{:<10}{:<12}{:>14.3}", p, "logits", w.mean() * 1e3);
     }
 
     // -------- end-to-end breakdown -------------------------------------
     println!("\n=== end-to-end breakdown (streaming, gsm-mini L=64, 8 samples) ===");
     let cfg = GenConfig::preset(Method::Streaming, 64);
-    let generator = Generator::new(&mrt, cfg.clone()).expect("gen");
-    mrt.reset_stats();
+    let generator = Generator::new(&be, cfg.clone()).expect("gen");
+    let special = be.special();
+    let compile_before = be.compile_secs();
     let t0 = Instant::now();
+    let mut steps = 0u64;
+    let mut prefills = 0u64;
+    let mut tokens = 0u64;
     for item in items.iter().take(8) {
-        let mut seqs = vec![SeqState::new(&item.prompt, 64, &mrt.manifest.special)];
-        generator.generate(&mut seqs, None).expect("generate");
+        let mut seqs = vec![SeqState::new(&item.prompt, 64, &special)];
+        let report = generator.generate(&mut seqs, None).expect("generate");
+        steps += report.steps;
+        prefills += report.prefills;
+        tokens += report.non_eos_tokens;
     }
     let wall = t0.elapsed().as_secs_f64();
-    let st = mrt.stats();
-    let model_secs = st.total_model_secs();
+    let compile = be.compile_secs() - compile_before;
     println!("wall                : {:>8.3}s", wall);
-    println!("model execute       : {:>8.3}s ({:.1}%)", model_secs, 100.0 * model_secs / wall);
-    println!("  prefill           : {:>8.3}s ({} calls)", st.prefill_secs, st.prefill_calls);
-    println!("  decode            : {:>8.3}s ({} calls)", st.decode_secs, st.decode_calls);
-    println!("  logits            : {:>8.3}s ({} calls)", st.logits_secs, st.logits_calls);
-    println!("rust scheduling     : {:>8.3}s ({:.1}%)", wall - model_secs, 100.0 * (wall - model_secs) / wall);
-    println!("compile (first-use) : {:>8.3}s ({} executables)", st.compile_secs, st.compile_count);
-    println!("\nL3 target: rust scheduling share < 10% of wall (the coordinator must not be the bottleneck)");
+    println!("compile (first-use) : {:>8.3}s", compile);
+    println!("decode steps        : {steps:>8}");
+    println!("prefills            : {prefills:>8}");
+    println!("non-EOS tokens      : {tokens:>8}");
+    println!("throughput          : {:>8.1} tok/s", tokens as f64 / (wall - compile).max(1e-9));
+    println!("\n(per-call model costs above vs this wall give the scheduling share;");
+    println!(" L3 target: rust scheduling < 10% of wall on the PJRT backend)");
 }

@@ -1,33 +1,40 @@
 //! Paper Table 3: module ablation (Suf. / Dyn. / Exit.) on GSM8K-mini at
 //! L=128 (paper: GSM8K @ 512) across the three bidirectional backbones.
+//! Saves `BENCH_table3_ablation.json` — the CI bench-smoke artifact.
 #[path = "common.rs"]
 mod common;
 
 use streaming_dllm::engine::{GenConfig, Method};
 use streaming_dllm::eval::run_suite;
+use streaming_dllm::util::bench::{save_rows, Cell, Row};
 
 fn main() {
     let Some(setup) = common::Setup::new() else { return };
     let n = common::bench_n();
     let gen_len = 128;
     println!("=== Table 3 — ablation on gsm-mini, L={gen_len} (paper: GSM8K L=512) ===");
-    println!("{:<14}{:<6}{:<6}{:<7}{:>9}{:>13}{:>8}", "model", "Suf.", "Dyn.", "Exit.", "Acc.(%)", "Th.(tok/s)", "NFE");
-    let rows = [
+    println!(
+        "{:<14}{:<6}{:<6}{:<7}{:>9}{:>13}{:>8}",
+        "model", "Suf.", "Dyn.", "Exit.", "Acc.(%)", "Th.(tok/s)", "NFE"
+    );
+    let toggles = [
         (false, false, false), // ≙ Fast-dLLM baseline row
         (true, false, false),
         (true, true, false),
         (true, true, true),
     ];
+    let mut rows: Vec<Row> = vec![];
     for model in ["dream-mini", "llada-mini", "llada15-mini"] {
-        let mrt = setup.model(model);
+        let be = setup.model(model);
         let items = setup.suite("gsm-mini");
         let items = &items[..n.min(items.len())];
-        for (suf, dynamic, exit) in rows {
+        let mut cells: Vec<(String, Cell)> = vec![];
+        for (suf, dynamic, exit) in toggles {
             let mut cfg = GenConfig::preset(Method::Streaming, gen_len);
             cfg.suffix_pruning = suf;
             cfg.dynamic_threshold = dynamic;
             cfg.early_exit = exit;
-            let res = run_suite(&mrt, &cfg, items, None).expect("suite");
+            let res = run_suite(&be, &cfg, items, None).expect("suite");
             println!(
                 "{:<14}{:<6}{:<6}{:<7}{:>9.1}{:>13.1}{:>8.1}",
                 model,
@@ -38,8 +45,12 @@ fn main() {
                 res.tokens_per_sec(),
                 res.steps as f64 / items.len() as f64
             );
+            let label = format!("suf={}/dyn={}/exit={}", tick(suf), tick(dynamic), tick(exit));
+            cells.push((label, res.to_cell()));
         }
+        rows.push(Row { label: format!("{model} gsm-mini L={gen_len}"), cells });
     }
+    save_rows("table3_ablation", &rows);
     println!("(n={n}; row 1 per model = no-module baseline ≙ Fast-dLLM)");
 }
 

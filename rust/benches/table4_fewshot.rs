@@ -14,7 +14,9 @@ fn main() {
     let gen_len = 128; // paper: 512
 
     let mut rows = vec![];
-    for (shots, file) in [(3, "gsm-mini-3shot.jsonl"), (5, "gsm-mini.jsonl"), (8, "gsm-mini-8shot.jsonl")] {
+    let shot_files =
+        [(3, "gsm-mini-3shot.jsonl"), (5, "gsm-mini.jsonl"), (8, "gsm-mini-8shot.jsonl")];
+    for (shots, file) in shot_files {
         let items = setup.suite_file(file);
         let items = &items[..n.min(items.len())];
         let mut cells: Vec<(String, Cell)> = vec![];
@@ -26,5 +28,5 @@ fn main() {
     }
     print_table("Table 4 — few-shot prefill sweep (LLaDA-1.5-mini)", &rows);
     save_rows("table4_fewshot", &rows);
-    println!("(expected shape: all methods slow down with longer prefill; streaming's margin over fast-dllm grows)");
+    println!("(expected: all methods slow with longer prefill; streaming's margin grows)");
 }

@@ -29,8 +29,9 @@ fn main() {
         }
         rows.push(Row { label: format!("gsm-mini L={gen_len}"), cells });
     }
-    let title = format!("Table 5/13 — generation-length sweep ({model}); paper lengths = 4x these");
+    let title =
+        format!("Table 5/13 — generation-length sweep ({model}); paper lengths = 4x these");
     print_table(&title, &rows);
     save_rows(&format!("table5_genlen_{model}"), &rows);
-    println!("(n={n}; expected: streaming speedup grows with L — paper reports 28x → 225x from 512 → 2048)");
+    println!("(n={n}; expected: streaming speedup grows with L — paper: 28x → 225x)");
 }

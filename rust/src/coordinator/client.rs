@@ -103,7 +103,15 @@ pub fn run_load(addr: &str, requests: Vec<Request>, concurrency: usize) -> Resul
     for h in handles {
         h.join().map_err(|_| anyhow!("client worker panicked"))??;
     }
-    let (ok, errors, lats, responses) =
-        Arc::try_unwrap(results).map_err(|_| anyhow!("results still shared"))?.into_inner().unwrap();
-    Ok(LoadReport { ok, errors, wall_secs: t0.elapsed().as_secs_f64(), client_latencies: lats, responses })
+    let (ok, errors, lats, responses) = Arc::try_unwrap(results)
+        .map_err(|_| anyhow!("results still shared"))?
+        .into_inner()
+        .unwrap();
+    Ok(LoadReport {
+        ok,
+        errors,
+        wall_secs: t0.elapsed().as_secs_f64(),
+        client_latencies: lats,
+        responses,
+    })
 }

@@ -1,10 +1,15 @@
-//! Router: the engine thread. PJRT handles are not `Send`, so one
-//! dedicated thread owns the `ModelRuntime`; everything else talks to it
-//! through a channel of jobs. The router runs the admission loop:
-//! drain the inbox into the `Batcher`, pop ready batches, decode them
-//! with the `Generator`, and reply per request.
+//! Router: the engine thread. Model backends are generally not `Send`
+//! (PJRT handles wrap raw pointers), so one dedicated thread *builds*
+//! and owns the backend; everything else talks to it through a channel
+//! of jobs. The router runs the admission loop: drain the inbox into
+//! the `Batcher`, pop ready batches, decode them with the `Generator`,
+//! and reply per request.
+//!
+//! Construction is a factory closure executed on the engine thread
+//! (`spawn_with`), with two conveniences: `spawn_reference` (pure-Rust
+//! backend, always available) and `spawn` (PJRT artifacts, behind the
+//! `pjrt` feature).
 
-use std::path::PathBuf;
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::sync::Arc;
 use std::thread::JoinHandle;
@@ -12,8 +17,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
-use crate::engine::{GenConfig, Generator, SeqState};
-use crate::runtime::{ArtifactsIndex, ModelRuntime, Runtime};
+use crate::engine::{Backend, GenConfig, Generator, ReferenceBackend, SeqState, REFERENCE_SEED};
 
 use super::batcher::Batcher;
 use super::metrics::Metrics;
@@ -39,21 +43,64 @@ pub struct RouterHandle {
 }
 
 impl RouterHandle {
-    /// Spawn the engine thread serving `model` from `artifacts_root`.
-    pub fn spawn(
-        artifacts_root: PathBuf,
-        model: String,
-        max_batch: usize,
-        max_wait: Duration,
-    ) -> RouterHandle {
+    /// Spawn the engine thread around a backend built *on that thread*
+    /// by `factory` (backends need not be `Send`).
+    pub fn spawn_with<B, F>(factory: F, max_batch: usize, max_wait: Duration) -> RouterHandle
+    where
+        B: Backend,
+        F: FnOnce() -> Result<B> + Send + 'static,
+    {
         let (tx, rx) = channel::<Msg>();
         let metrics = Arc::new(Metrics::new());
         let m2 = metrics.clone();
         let join = std::thread::Builder::new()
             .name("sdllm-router".into())
-            .spawn(move || engine_loop(artifacts_root, model, max_batch, max_wait, rx, m2))
+            .spawn(move || {
+                let backend = factory()?;
+                engine_loop(&backend, max_batch, max_wait, rx, m2)
+            })
             .expect("spawn router thread");
         RouterHandle { tx, join: Some(join), metrics }
+    }
+
+    /// Engine thread over the deterministic reference backend — serves
+    /// on a bare checkout, no artifacts or accelerator required.
+    pub fn spawn_reference(max_batch: usize, max_wait: Duration) -> RouterHandle {
+        RouterHandle::spawn_with(
+            || Ok(ReferenceBackend::toy(REFERENCE_SEED)),
+            max_batch,
+            max_wait,
+        )
+    }
+
+    /// Engine thread serving `model` from `artifacts_root` on PJRT.
+    #[cfg(feature = "pjrt")]
+    pub fn spawn(
+        artifacts_root: std::path::PathBuf,
+        model: String,
+        max_batch: usize,
+        max_wait: Duration,
+    ) -> RouterHandle {
+        use crate::runtime::{warmup, ArtifactsIndex, ModelRuntime, Runtime};
+        RouterHandle::spawn_with(
+            move || {
+                let rt = Runtime::cpu()?;
+                let index = ArtifactsIndex::load(&artifacts_root)?;
+                let model_rt = ModelRuntime::load(&rt, &index.model_dir(&model))?;
+                // Pre-warm the default serving path so first requests
+                // don't pay lazy executable compilation (best effort:
+                // unknown methods/lengths still compile on demand).
+                let warm_cfg = GenConfig::preset(crate::engine::Method::Streaming, 64);
+                if let Ok(n) = warmup::warm_for(&model_rt, &warm_cfg, 224, max_batch) {
+                    if n > 0 {
+                        eprintln!("[router] pre-warmed {n} executables");
+                    }
+                }
+                Ok(model_rt)
+            },
+            max_batch,
+            max_wait,
+        )
     }
 
     /// Submit a request; returns the channel the response arrives on.
@@ -94,26 +141,13 @@ impl Drop for RouterHandle {
     }
 }
 
-fn engine_loop(
-    artifacts_root: PathBuf,
-    model: String,
+fn engine_loop<B: Backend>(
+    backend: &B,
     max_batch: usize,
     max_wait: Duration,
     rx: Receiver<Msg>,
     metrics: Arc<Metrics>,
 ) -> Result<()> {
-    let rt = Runtime::cpu()?;
-    let index = ArtifactsIndex::load(&artifacts_root)?;
-    let model_rt = ModelRuntime::load(&rt, &index.model_dir(&model))?;
-    // Pre-warm the default serving path so first requests don't pay
-    // lazy executable compilation (best effort: unknown methods/lengths
-    // still compile on demand).
-    let warm_cfg = GenConfig::preset(crate::engine::Method::Streaming, 64);
-    if let Ok(n) = crate::runtime::warmup::warm_for(&model_rt, &warm_cfg, 224, max_batch) {
-        if n > 0 {
-            eprintln!("[router] pre-warmed {n} executables");
-        }
-    }
     metrics.start_clock();
 
     let mut batcher = Batcher::new(max_batch, max_wait);
@@ -150,7 +184,7 @@ fn engine_loop(
             metrics.record_batch(batch.len());
             let t0 = Instant::now();
             let cfg = GenConfig::preset(key.method, key.gen_len);
-            let result = run_batch(&model_rt, &cfg, &batch, t0);
+            let result = run_batch(backend, &cfg, &batch, t0);
             match result {
                 Ok(responses) => {
                     for resp in responses {
@@ -191,17 +225,16 @@ fn engine_loop(
     }
 }
 
-fn run_batch(
-    model_rt: &ModelRuntime,
+fn run_batch<B: Backend>(
+    backend: &B,
     cfg: &GenConfig,
     batch: &[Request],
     t0: Instant,
 ) -> Result<Vec<Response>> {
-    let generator = Generator::new(model_rt, cfg.clone())?;
-    let mut seqs: Vec<SeqState> = batch
-        .iter()
-        .map(|r| SeqState::new(&r.prompt, cfg.gen_len, &model_rt.manifest.special))
-        .collect();
+    let generator = Generator::new(backend, cfg.clone())?;
+    let special = backend.special();
+    let mut seqs: Vec<SeqState> =
+        batch.iter().map(|r| SeqState::new(&r.prompt, cfg.gen_len, &special)).collect();
     generator.generate(&mut seqs, None)?;
     let latency = t0.elapsed().as_secs_f64();
     Ok(batch
@@ -209,7 +242,7 @@ fn run_batch(
         .zip(seqs.iter())
         .map(|(req, seq)| Response {
             id: req.id,
-            text: model_rt.manifest.detokenize_until_eos(seq.generated()),
+            text: backend.detokenize(seq.generated()),
             non_eos_tokens: seq.non_eos_tokens(),
             latency_s: latency,
             queue_s: 0.0,

@@ -1,0 +1,210 @@
+//! `AnyBackend`: runtime selection between the pure-Rust reference
+//! model and the PJRT runtime (when compiled with `--features pjrt`).
+//!
+//! The generator/eval/coordinator layers are generic over
+//! `engine::Backend`; binaries and benches that pick a backend from CLI
+//! flags or the environment need a single concrete type — this enum is
+//! that type, delegating every trait method to the active variant.
+
+use anyhow::Result;
+
+use super::backend::Backend;
+use super::reference::{ReferenceBackend, RefKv, REFERENCE_SEED};
+use super::types::{DecodeOut, SpecialTokens};
+
+#[cfg(feature = "pjrt")]
+use crate::runtime::{ArtifactsIndex, KvCache, ModelRuntime, Runtime};
+
+pub enum AnyBackend {
+    Reference(ReferenceBackend),
+    #[cfg(feature = "pjrt")]
+    Pjrt(ModelRuntime),
+}
+
+pub enum AnyKv {
+    Reference(RefKv),
+    #[cfg(feature = "pjrt")]
+    Pjrt(KvCache),
+}
+
+impl AnyBackend {
+    /// The deterministic reference model with the shared default seed.
+    pub fn reference() -> AnyBackend {
+        AnyBackend::Reference(ReferenceBackend::toy(REFERENCE_SEED))
+    }
+
+    /// The one shared selection predicate: can this build serve `root`
+    /// over PJRT? True iff the `pjrt` feature is compiled in *and* AOT
+    /// artifacts exist. Every auto-selecting entry point (CLI, server
+    /// router, benches, examples) must route through this.
+    pub fn pjrt_available(root: &std::path::Path) -> bool {
+        cfg!(feature = "pjrt") && root.join("index.json").exists()
+    }
+
+    /// Load the PJRT backend for `model` from `root`.
+    #[cfg(feature = "pjrt")]
+    pub fn pjrt(root: &std::path::Path, model: &str) -> Result<AnyBackend> {
+        let index = ArtifactsIndex::load(root)?;
+        let rt = Runtime::cpu()?;
+        let mrt = ModelRuntime::load(&rt, &index.model_dir(model))?;
+        Ok(AnyBackend::Pjrt(mrt))
+    }
+
+    /// Pick the best available backend for `model`: the PJRT runtime
+    /// when [`AnyBackend::pjrt_available`] says so; the reference model
+    /// otherwise.
+    pub fn auto(root: &std::path::Path, model: &str) -> Result<AnyBackend> {
+        #[cfg(feature = "pjrt")]
+        {
+            if AnyBackend::pjrt_available(root) {
+                return AnyBackend::pjrt(root, model);
+            }
+        }
+        let _ = (root, model);
+        Ok(AnyBackend::reference())
+    }
+
+    /// Human-readable description for banners/logs.
+    pub fn describe(&self) -> &'static str {
+        match self {
+            AnyBackend::Reference(_) => "reference (deterministic pure-Rust toy model)",
+            #[cfg(feature = "pjrt")]
+            AnyBackend::Pjrt(_) => "pjrt (AOT executables)",
+        }
+    }
+
+    /// The reference variant, if active (benches use it to reach the
+    /// oracle for synthetic suites).
+    pub fn as_reference(&self) -> Option<&ReferenceBackend> {
+        match self {
+            AnyBackend::Reference(b) => Some(b),
+            #[cfg(feature = "pjrt")]
+            AnyBackend::Pjrt(_) => None,
+        }
+    }
+}
+
+impl Backend for AnyBackend {
+    type Kv = AnyKv;
+
+    fn special(&self) -> SpecialTokens {
+        match self {
+            AnyBackend::Reference(b) => b.special(),
+            #[cfg(feature = "pjrt")]
+            AnyBackend::Pjrt(m) => m.special(),
+        }
+    }
+
+    fn wants_p0(&self) -> bool {
+        match self {
+            AnyBackend::Reference(b) => b.wants_p0(),
+            #[cfg(feature = "pjrt")]
+            AnyBackend::Pjrt(m) => Backend::wants_p0(m),
+        }
+    }
+
+    fn pick_batch(&self, need: usize) -> Option<usize> {
+        match self {
+            AnyBackend::Reference(b) => b.pick_batch(need),
+            #[cfg(feature = "pjrt")]
+            AnyBackend::Pjrt(m) => Backend::pick_batch(m, need),
+        }
+    }
+
+    fn pick_prefix(&self, need: usize) -> Option<usize> {
+        match self {
+            AnyBackend::Reference(b) => b.pick_prefix(need),
+            #[cfg(feature = "pjrt")]
+            AnyBackend::Pjrt(m) => Backend::pick_prefix(m, need),
+        }
+    }
+
+    fn pick_query(&self, need: usize) -> Option<usize> {
+        match self {
+            AnyBackend::Reference(b) => b.pick_query(need),
+            #[cfg(feature = "pjrt")]
+            AnyBackend::Pjrt(m) => Backend::pick_query(m, need),
+        }
+    }
+
+    fn pick_seq(&self, need: usize) -> Option<usize> {
+        match self {
+            AnyBackend::Reference(b) => b.pick_seq(need),
+            #[cfg(feature = "pjrt")]
+            AnyBackend::Pjrt(m) => Backend::pick_seq(m, need),
+        }
+    }
+
+    fn prefill(
+        &self,
+        batch: usize,
+        p_bucket: usize,
+        tokens: &[i32],
+        pos: &[i32],
+        valid: &[i32],
+        p0: Option<&[i32]>,
+    ) -> Result<AnyKv> {
+        match self {
+            AnyBackend::Reference(b) => {
+                Ok(AnyKv::Reference(b.prefill(batch, p_bucket, tokens, pos, valid, p0)?))
+            }
+            #[cfg(feature = "pjrt")]
+            AnyBackend::Pjrt(m) => {
+                Ok(AnyKv::Pjrt(Backend::prefill(m, batch, p_bucket, tokens, pos, valid, p0)?))
+            }
+        }
+    }
+
+    fn decode(
+        &self,
+        kv: &AnyKv,
+        q_bucket: usize,
+        q_tok: &[i32],
+        q_pos: &[i32],
+        q_valid: &[i32],
+    ) -> Result<DecodeOut> {
+        match (self, kv) {
+            (AnyBackend::Reference(b), AnyKv::Reference(kv)) => {
+                b.decode(kv, q_bucket, q_tok, q_pos, q_valid)
+            }
+            #[cfg(feature = "pjrt")]
+            (AnyBackend::Pjrt(m), AnyKv::Pjrt(kv)) => {
+                Backend::decode(m, kv, q_bucket, q_tok, q_pos, q_valid)
+            }
+            #[cfg(feature = "pjrt")]
+            _ => anyhow::bail!("KV cache comes from a different backend"),
+        }
+    }
+
+    fn logits(
+        &self,
+        batch: usize,
+        s_bucket: usize,
+        tokens: &[i32],
+        pos: &[i32],
+        valid: &[i32],
+        p0: Option<&[i32]>,
+    ) -> Result<DecodeOut> {
+        match self {
+            AnyBackend::Reference(b) => b.logits(batch, s_bucket, tokens, pos, valid, p0),
+            #[cfg(feature = "pjrt")]
+            AnyBackend::Pjrt(m) => Backend::logits(m, batch, s_bucket, tokens, pos, valid, p0),
+        }
+    }
+
+    fn detokenize(&self, ids: &[i32]) -> String {
+        match self {
+            AnyBackend::Reference(b) => b.detokenize(ids),
+            #[cfg(feature = "pjrt")]
+            AnyBackend::Pjrt(m) => Backend::detokenize(m, ids),
+        }
+    }
+
+    fn compile_secs(&self) -> f64 {
+        match self {
+            AnyBackend::Reference(b) => b.compile_secs(),
+            #[cfg(feature = "pjrt")]
+            AnyBackend::Pjrt(m) => Backend::compile_secs(m),
+        }
+    }
+}

@@ -1,26 +1,37 @@
-//! Backend abstraction: what the block-diffusion generator needs from a
-//! model runtime. The production impl is `runtime::ModelRuntime` (PJRT
-//! executables); tests use `MockBackend` to drive the scheduler through
-//! thousands of randomized decode trajectories without artifacts —
-//! termination, commit-ordering and early-exit invariants are checked
-//! there (see `tests` in `generator.rs`).
+//! Backend abstraction: what the block-diffusion generator, eval
+//! harness and coordinator need from a model runtime. Two impls ship:
+//!
+//! - `engine::ReferenceBackend` — deterministic pure-Rust toy model,
+//!   always available; drives tests, CI benches and artifact-free
+//!   serving.
+//! - `runtime::ModelRuntime` — the PJRT path executing AOT-compiled
+//!   executables (behind the `pjrt` cargo feature).
+//!
+//! The trait is deliberately expressed over backend-neutral types
+//! (`engine::types`): nothing here references PJRT, so the default
+//! build carries no xla dependency.
 
 use anyhow::Result;
 
-use crate::runtime::artifact::SpecialTokens;
-use crate::runtime::model::{DecodeOut, KvCache};
-use crate::runtime::ModelRuntime;
+use super::types::{DecodeOut, SpecialTokens};
 
 pub trait Backend {
+    /// Backend-owned KV cache produced by `prefill`, consumed by
+    /// `decode` (device-resident for PJRT, plain struct for reference).
     type Kv;
 
     fn special(&self) -> SpecialTokens;
+
+    /// Whether the model graph takes per-row prompt lengths (block-
+    /// causal topologies).
     fn wants_p0(&self) -> bool;
+
     fn pick_batch(&self, need: usize) -> Option<usize>;
     fn pick_prefix(&self, need: usize) -> Option<usize>;
     fn pick_query(&self, need: usize) -> Option<usize>;
     fn pick_seq(&self, need: usize) -> Option<usize>;
 
+    /// Prefix forward over `[batch, p_bucket]` pre-padded rows.
     fn prefill(
         &self,
         batch: usize,
@@ -31,6 +42,7 @@ pub trait Backend {
         p0: Option<&[i32]>,
     ) -> Result<Self::Kv>;
 
+    /// One diffusion decode step over the query bundle.
     fn decode(
         &self,
         kv: &Self::Kv,
@@ -40,6 +52,7 @@ pub trait Backend {
         q_valid: &[i32],
     ) -> Result<DecodeOut>;
 
+    /// Full-sequence forward (the vanilla baseline).
     fn logits(
         &self,
         batch: usize,
@@ -49,216 +62,16 @@ pub trait Backend {
         valid: &[i32],
         p0: Option<&[i32]>,
     ) -> Result<DecodeOut>;
-}
 
-impl Backend for ModelRuntime {
-    type Kv = KvCache;
+    /// Decode generated ids to text (stop at EOS, skip specials) —
+    /// the python `tokenizer.decode_until_eos` rule.
+    fn detokenize(&self, ids: &[i32]) -> String;
 
-    fn special(&self) -> SpecialTokens {
-        self.manifest.special.clone()
-    }
-
-    fn wants_p0(&self) -> bool {
-        self.manifest.wants_p0
-    }
-
-    fn pick_batch(&self, need: usize) -> Option<usize> {
-        self.manifest.pick_batch(need)
-    }
-
-    fn pick_prefix(&self, need: usize) -> Option<usize> {
-        self.manifest.pick_prefix(need)
-    }
-
-    fn pick_query(&self, need: usize) -> Option<usize> {
-        self.manifest.pick_query(need)
-    }
-
-    fn pick_seq(&self, need: usize) -> Option<usize> {
-        self.manifest.pick_seq(need)
-    }
-
-    fn prefill(
-        &self,
-        batch: usize,
-        p_bucket: usize,
-        tokens: &[i32],
-        pos: &[i32],
-        valid: &[i32],
-        p0: Option<&[i32]>,
-    ) -> Result<KvCache> {
-        ModelRuntime::prefill(self, batch, p_bucket, tokens, pos, valid, p0)
-    }
-
-    fn decode(
-        &self,
-        kv: &KvCache,
-        q_bucket: usize,
-        q_tok: &[i32],
-        q_pos: &[i32],
-        q_valid: &[i32],
-    ) -> Result<DecodeOut> {
-        ModelRuntime::decode(self, kv, q_bucket, q_tok, q_pos, q_valid)
-    }
-
-    fn logits(
-        &self,
-        batch: usize,
-        s_bucket: usize,
-        tokens: &[i32],
-        pos: &[i32],
-        valid: &[i32],
-        p0: Option<&[i32]>,
-    ) -> Result<DecodeOut> {
-        ModelRuntime::logits(self, batch, s_bucket, tokens, pos, valid, p0)
-    }
-}
-
-/// Deterministic fake backend for scheduler tests: produces confidences
-/// from a seeded RNG and tokens from a configurable script ("emit EOS
-/// after `answer_len` content tokens"), so tests can assert early-exit
-/// and termination behavior precisely.
-pub struct MockBackend {
-    pub special: SpecialTokens,
-    pub batch_buckets: Vec<usize>,
-    pub prefix_buckets: Vec<usize>,
-    pub query_buckets: Vec<usize>,
-    pub seq_buckets: Vec<usize>,
-    /// content token emitted before EOS
-    pub content_token: i32,
-    /// per-sequence answer length: positions `< p0 + answer_len` get
-    /// `content_token`, later ones EOS
-    pub answer_len: usize,
-    /// confidence schedule: base + step_bonus·(queries seen)
-    pub base_conf: f32,
-    pub conf_seed: u64,
-    pub calls: std::cell::RefCell<MockStats>,
-}
-
-#[derive(Debug, Default, Clone)]
-pub struct MockStats {
-    pub prefills: u64,
-    pub decodes: u64,
-    pub logits: u64,
-}
-
-/// Mock KV: remembers what prefill saw (enough for assertions).
-pub struct MockKv {
-    pub batch: usize,
-    pub p_bucket: usize,
-    pub valid: Vec<i32>,
-}
-
-impl MockBackend {
-    pub fn new(answer_len: usize) -> MockBackend {
-        MockBackend {
-            special: SpecialTokens { pad: 0, mask: 1, bos: 2, eos: 3, sep: 4 },
-            batch_buckets: vec![1, 4],
-            prefix_buckets: vec![96, 160, 224, 352, 800],
-            query_buckets: vec![13, 17, 25, 41, 73, 137, 264, 520],
-            seq_buckets: vec![96, 160, 224, 352, 800],
-            content_token: 10,
-            answer_len,
-            base_conf: 0.5,
-            conf_seed: 7,
-            calls: Default::default(),
-        }
-    }
-
-    fn out_for(&self, q_pos: &[i32], q_valid: &[i32], batch: usize, bucket: usize) -> DecodeOut {
-        let mut rng = crate::util::rng::Rng::new(
-            self.conf_seed ^ (q_pos.iter().map(|&p| p as u64).sum::<u64>()),
-        );
-        let mut data = vec![0f32; batch * bucket * 2];
-        for b in 0..batch {
-            for i in 0..bucket {
-                let idx = (b * bucket + i) * 2;
-                let pos = q_pos[b * bucket + i] as usize;
-                let valid = q_valid.get(b).copied().unwrap_or(bucket as i32) as usize;
-                let tok = if i < valid {
-                    // p0 is unknown to the mock; tests arrange prompts so
-                    // that "absolute position >= answer boundary" is the
-                    // EOS rule: boundary = prompt_len + answer_len, and
-                    // prompt_len is encoded by tests via answer boundary
-                    // in absolute coordinates (see tests).
-                    if pos >= self.answer_len {
-                        self.special.eos
-                    } else {
-                        self.content_token
-                    }
-                } else {
-                    self.special.pad
-                };
-                data[idx] = tok as f32;
-                data[idx + 1] = (self.base_conf + rng.f32() * 0.5).min(1.0);
-            }
-        }
-        DecodeOut { data, batch, q: bucket }
-    }
-}
-
-impl Backend for MockBackend {
-    type Kv = MockKv;
-
-    fn special(&self) -> SpecialTokens {
-        self.special.clone()
-    }
-
-    fn wants_p0(&self) -> bool {
-        false
-    }
-
-    fn pick_batch(&self, need: usize) -> Option<usize> {
-        crate::runtime::Manifest::pick_bucket(&self.batch_buckets, need)
-    }
-
-    fn pick_prefix(&self, need: usize) -> Option<usize> {
-        crate::runtime::Manifest::pick_bucket(&self.prefix_buckets, need)
-    }
-
-    fn pick_query(&self, need: usize) -> Option<usize> {
-        crate::runtime::Manifest::pick_bucket(&self.query_buckets, need)
-    }
-
-    fn pick_seq(&self, need: usize) -> Option<usize> {
-        crate::runtime::Manifest::pick_bucket(&self.seq_buckets, need)
-    }
-
-    fn prefill(
-        &self,
-        batch: usize,
-        p_bucket: usize,
-        _tokens: &[i32],
-        _pos: &[i32],
-        valid: &[i32],
-        _p0: Option<&[i32]>,
-    ) -> Result<MockKv> {
-        self.calls.borrow_mut().prefills += 1;
-        Ok(MockKv { batch, p_bucket, valid: valid.to_vec() })
-    }
-
-    fn decode(
-        &self,
-        kv: &MockKv,
-        q_bucket: usize,
-        _q_tok: &[i32],
-        q_pos: &[i32],
-        q_valid: &[i32],
-    ) -> Result<DecodeOut> {
-        self.calls.borrow_mut().decodes += 1;
-        Ok(self.out_for(q_pos, q_valid, kv.batch, q_bucket))
-    }
-
-    fn logits(
-        &self,
-        batch: usize,
-        s_bucket: usize,
-        _tokens: &[i32],
-        pos: &[i32],
-        valid: &[i32],
-        _p0: Option<&[i32]>,
-    ) -> Result<DecodeOut> {
-        self.calls.borrow_mut().logits += 1;
-        Ok(self.out_for(pos, valid, batch, s_bucket))
+    /// Cumulative seconds spent lazily compiling executables. The eval
+    /// harness subtracts this one-time cost from timed walls so
+    /// throughput/latency ratios stay undistorted; backends without
+    /// compilation report 0.
+    fn compile_secs(&self) -> f64 {
+        0.0
     }
 }

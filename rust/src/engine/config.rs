@@ -34,7 +34,13 @@ impl Method {
     }
 
     pub fn all() -> [Method; 5] {
-        [Method::Vanilla, Method::DkvCache, Method::PrefixCache, Method::FastDllm, Method::Streaming]
+        [
+            Method::Vanilla,
+            Method::DkvCache,
+            Method::PrefixCache,
+            Method::FastDllm,
+            Method::Streaming,
+        ]
     }
 
     pub fn parse(s: &str) -> Option<Method> {
@@ -95,8 +101,7 @@ impl GenConfig {
             remask_tau: 0.5,
         };
         match method {
-            Method::Vanilla | Method::DkvCache | Method::PrefixCache => base,
-            Method::FastDllm => GenConfig { ..base },
+            Method::Vanilla | Method::DkvCache | Method::PrefixCache | Method::FastDllm => base,
             Method::Streaming => GenConfig {
                 early_exit: true,
                 suffix_pruning: true,

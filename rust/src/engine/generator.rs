@@ -8,8 +8,6 @@
 
 use anyhow::{bail, Result};
 
-use crate::runtime::ModelRuntime;
-
 use super::backend::Backend;
 use super::config::{GenConfig, Method};
 use super::policy::{select, Candidate, Selection};
@@ -49,7 +47,7 @@ impl GenReport {
     }
 }
 
-pub struct Generator<'a, B: Backend = ModelRuntime> {
+pub struct Generator<'a, B: Backend> {
     rt: &'a B,
     cfg: GenConfig,
 }

@@ -1,18 +1,28 @@
 //! The decoding engine: Streaming-dLLM's three mechanisms (suffix
 //! pruning, dynamic confidence-aware parallel decoding, early exit) and
-//! every baseline, implemented as scheduling policies over the AOT
-//! executables.
+//! every baseline, implemented as scheduling policies over an abstract
+//! model [`Backend`].
+//!
+//! Backends: the always-available pure-Rust [`ReferenceBackend`] and —
+//! behind the `pjrt` cargo feature — `runtime::ModelRuntime` (AOT
+//! executables). [`AnyBackend`] selects between them at runtime.
 
+pub mod any;
 pub mod backend;
 pub mod config;
 pub mod generator;
 pub mod policy;
+pub mod reference;
 pub mod sequence;
 pub mod suffix;
+pub mod types;
 
-pub use backend::{Backend, MockBackend};
+pub use any::{AnyBackend, AnyKv};
+pub use backend::Backend;
 pub use config::{table12_config, GenConfig, Method};
 pub use generator::{GenReport, Generator, StepEvent};
 pub use policy::{select, Candidate, Selection};
+pub use reference::{RefKv, RefMode, RefStats, ReferenceBackend, REFERENCE_SEED};
 pub use sequence::SeqState;
 pub use suffix::{build_bundle, bundle_tokens, Bundle};
+pub use types::{detokenize_until_eos, pick_bucket, Buckets, DecodeOut, SpecialTokens};

@@ -1,0 +1,372 @@
+//! `ReferenceBackend`: a deterministic, pure-Rust model backend.
+//!
+//! Promoted from the test-only `MockBackend`: it honors the same
+//! bucket/manifest contract as the PJRT runtime (bucket grids, packed
+//! (token, confidence) outputs, KV handles, p0 plumbing) but computes
+//! everything on the CPU from a seeded RNG — no artifacts, no xla, no
+//! network. Two modes:
+//!
+//! - [`RefMode::Scripted`] — the original test script: content below an
+//!   absolute position boundary, EOS at and after it. Scheduler tests
+//!   use this to pin early-exit/termination behavior precisely.
+//! - [`RefMode::Toy`] — a tiny "language model": each row's prompt
+//!   hashes to a signature that deterministically fixes the answer
+//!   length and every content token, so *all* decode schedules converge
+//!   to the same text. `eval::synthetic_suite` derives matching
+//!   expected answers from the same function, which gives CI benches a
+//!   meaningful accuracy axis on a bare checkout.
+
+use std::cell::RefCell;
+
+use anyhow::{anyhow, Result};
+
+use crate::util::rng::Rng;
+
+use super::backend::Backend;
+use super::types::{detokenize_until_eos, reference_vocab, Buckets, DecodeOut, SpecialTokens};
+
+/// Default seed for the toy model: serving, eval and benches must all
+/// agree on it so synthesized suites score against the right oracle.
+pub const REFERENCE_SEED: u64 = 0x5d11_a5ee_d001;
+
+/// Prompt tokens hashed into the row signature (toy mode).
+const SIG_WINDOW: usize = 16;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RefMode {
+    /// Emit `content_token` below absolute position `boundary`, EOS at
+    /// and after it.
+    Scripted { boundary: usize, content_token: i32 },
+    /// Prompt-signature toy model (block-causal style: wants p0).
+    Toy,
+}
+
+/// Per-kind call counters (the reference analogue of `RuntimeStats`).
+#[derive(Debug, Default, Clone)]
+pub struct RefStats {
+    pub prefills: u64,
+    pub decodes: u64,
+    pub logits: u64,
+}
+
+/// Reference KV: remembers what prefill saw (enough for decode and for
+/// test assertions).
+pub struct RefKv {
+    pub batch: usize,
+    pub p_bucket: usize,
+    pub valid: Vec<i32>,
+    /// per-row (signature, p0) captured at prefill time
+    rows: Vec<(u64, usize)>,
+}
+
+pub struct ReferenceBackend {
+    pub special: SpecialTokens,
+    pub vocab: Vec<String>,
+    pub buckets: Buckets,
+    pub mode: RefMode,
+    /// confidence floor; draws land in [base_conf, base_conf + 0.5]
+    pub base_conf: f32,
+    pub conf_seed: u64,
+    pub calls: RefCell<RefStats>,
+}
+
+fn default_buckets() -> Buckets {
+    Buckets {
+        batch: vec![1, 4],
+        prefix: vec![96, 160, 224, 352, 800, 1056],
+        query: vec![13, 17, 25, 41, 73, 137, 264, 520],
+        seq: vec![96, 160, 224, 352, 800, 1056],
+    }
+}
+
+/// splitmix64 finalizer — the hash primitive behind signatures and
+/// per-position token draws.
+fn mix(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    x = (x ^ (x >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    x ^ (x >> 31)
+}
+
+impl ReferenceBackend {
+    /// The scripted test backend (formerly `MockBackend::new`): content
+    /// token 10 below absolute position `boundary`, EOS after.
+    pub fn scripted(boundary: usize) -> ReferenceBackend {
+        ReferenceBackend::with_mode(RefMode::Scripted { boundary, content_token: 10 }, 7)
+    }
+
+    /// The deterministic toy model (prompt-dependent answers).
+    pub fn toy(seed: u64) -> ReferenceBackend {
+        ReferenceBackend::with_mode(RefMode::Toy, seed)
+    }
+
+    fn with_mode(mode: RefMode, conf_seed: u64) -> ReferenceBackend {
+        ReferenceBackend {
+            special: SpecialTokens::default(),
+            vocab: reference_vocab(),
+            buckets: default_buckets(),
+            mode,
+            base_conf: 0.5,
+            conf_seed,
+            calls: RefCell::default(),
+        }
+    }
+
+    pub fn stats(&self) -> RefStats {
+        self.calls.borrow().clone()
+    }
+
+    /// Row signature: hash of the first `SIG_WINDOW` prompt tokens.
+    /// Depends only on the prompt (never on committed tokens), so every
+    /// decode schedule sees the same toy model.
+    fn row_sig(&self, prompt: &[i32]) -> u64 {
+        let mut h = mix(self.conf_seed ^ 0xA076_1D64_78BD_642F);
+        for &t in prompt.iter().take(SIG_WINDOW) {
+            h = mix(h ^ t as u64);
+        }
+        h
+    }
+
+    /// Content tokens before EOS, fixed by the signature: 4..=16.
+    fn answer_len(sig: u64) -> usize {
+        4 + (sig % 13) as usize
+    }
+
+    /// Deterministic token at generation offset `d` (0-based after the
+    /// prompt): digits/letters with a ';' separator near the end, EOS
+    /// from `answer_len` on.
+    fn toy_token(&self, sig: u64, d: usize, answer_len: usize) -> i32 {
+        if d >= answer_len {
+            return self.special.eos;
+        }
+        if d == answer_len - 3 {
+            return 46; // ';' — gives extract_final a non-trivial split
+        }
+        let mut r = Rng::new(mix(sig ^ (d as u64).wrapping_mul(0xD6E8_FEB8_6659_FD93)));
+        if r.f32() < 0.75 {
+            5 + r.below(10) as i32 // digit
+        } else {
+            15 + r.below(26) as i32 // lowercase letter
+        }
+    }
+
+    /// What the toy model deterministically generates for `prompt` —
+    /// the oracle `eval::synthetic_suite` scores against.
+    pub fn oracle_text(&self, prompt: &[i32]) -> String {
+        let sig = self.row_sig(prompt);
+        let answer_len = Self::answer_len(sig);
+        let ids: Vec<i32> = (0..answer_len).map(|d| self.toy_token(sig, d, answer_len)).collect();
+        detokenize_until_eos(&self.vocab, &self.special, &ids)
+    }
+
+    /// Token emitted at absolute position `pos` for a row with
+    /// signature/p0 `row`.
+    fn token_at(&self, row: (u64, usize), pos: usize) -> i32 {
+        match self.mode {
+            RefMode::Scripted { boundary, content_token } => {
+                if pos >= boundary {
+                    self.special.eos
+                } else {
+                    content_token
+                }
+            }
+            RefMode::Toy => {
+                let (sig, p0) = row;
+                let answer_len = Self::answer_len(sig);
+                self.toy_token(sig, pos.saturating_sub(p0), answer_len)
+            }
+        }
+    }
+
+    fn emit(
+        &self,
+        rows: &[(u64, usize)],
+        q_pos: &[i32],
+        q_valid: &[i32],
+        batch: usize,
+        bucket: usize,
+    ) -> DecodeOut {
+        let mut rng =
+            Rng::new(self.conf_seed ^ q_pos.iter().map(|&p| p as u64).sum::<u64>());
+        let mut data = vec![0f32; batch * bucket * 2];
+        for b in 0..batch {
+            for i in 0..bucket {
+                let idx = (b * bucket + i) * 2;
+                let pos = q_pos[b * bucket + i].max(0) as usize;
+                let live = q_valid.get(b).copied().unwrap_or(bucket as i32) as usize;
+                let tok = if i < live { self.token_at(rows[b], pos) } else { self.special.pad };
+                data[idx] = tok as f32;
+                data[idx + 1] = (self.base_conf + rng.f32() * 0.5).min(1.0);
+            }
+        }
+        DecodeOut { data, batch, q: bucket }
+    }
+
+    /// Per-row (signature, p0) for a `[batch, width]` token block.
+    fn sig_rows(
+        &self,
+        tokens: &[i32],
+        width: usize,
+        batch: usize,
+        p0: Option<&[i32]>,
+    ) -> Result<Vec<(u64, usize)>> {
+        match self.mode {
+            RefMode::Scripted { .. } => Ok(vec![(0, 0); batch]),
+            RefMode::Toy => {
+                let p0 = p0.ok_or_else(|| anyhow!("reference toy backend needs p0"))?;
+                let mut rows = Vec::with_capacity(batch);
+                for b in 0..batch {
+                    let p0b = p0[b].max(0) as usize;
+                    let row = &tokens[b * width..(b + 1) * width];
+                    rows.push((self.row_sig(&row[..p0b.min(width)]), p0b));
+                }
+                Ok(rows)
+            }
+        }
+    }
+}
+
+impl Backend for ReferenceBackend {
+    type Kv = RefKv;
+
+    fn special(&self) -> SpecialTokens {
+        self.special.clone()
+    }
+
+    fn wants_p0(&self) -> bool {
+        matches!(self.mode, RefMode::Toy)
+    }
+
+    fn pick_batch(&self, need: usize) -> Option<usize> {
+        self.buckets.pick_batch(need)
+    }
+
+    fn pick_prefix(&self, need: usize) -> Option<usize> {
+        self.buckets.pick_prefix(need)
+    }
+
+    fn pick_query(&self, need: usize) -> Option<usize> {
+        self.buckets.pick_query(need)
+    }
+
+    fn pick_seq(&self, need: usize) -> Option<usize> {
+        self.buckets.pick_seq(need)
+    }
+
+    fn prefill(
+        &self,
+        batch: usize,
+        p_bucket: usize,
+        tokens: &[i32],
+        _pos: &[i32],
+        valid: &[i32],
+        p0: Option<&[i32]>,
+    ) -> Result<RefKv> {
+        self.calls.borrow_mut().prefills += 1;
+        let rows = self.sig_rows(tokens, p_bucket, batch, p0)?;
+        Ok(RefKv { batch, p_bucket, valid: valid.to_vec(), rows })
+    }
+
+    fn decode(
+        &self,
+        kv: &RefKv,
+        q_bucket: usize,
+        _q_tok: &[i32],
+        q_pos: &[i32],
+        q_valid: &[i32],
+    ) -> Result<DecodeOut> {
+        self.calls.borrow_mut().decodes += 1;
+        Ok(self.emit(&kv.rows, q_pos, q_valid, kv.batch, q_bucket))
+    }
+
+    fn logits(
+        &self,
+        batch: usize,
+        s_bucket: usize,
+        tokens: &[i32],
+        pos: &[i32],
+        valid: &[i32],
+        p0: Option<&[i32]>,
+    ) -> Result<DecodeOut> {
+        self.calls.borrow_mut().logits += 1;
+        let rows = self.sig_rows(tokens, s_bucket, batch, p0)?;
+        Ok(self.emit(&rows, pos, valid, batch, s_bucket))
+    }
+
+    fn detokenize(&self, ids: &[i32]) -> String {
+        detokenize_until_eos(&self.vocab, &self.special, ids)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn oracle_is_deterministic_and_prompt_dependent() {
+        let be = ReferenceBackend::toy(REFERENCE_SEED);
+        let a = be.oracle_text(&[2, 10, 11, 12]);
+        let b = be.oracle_text(&[2, 10, 11, 12]);
+        let c = be.oracle_text(&[2, 10, 11, 13]);
+        assert_eq!(a, b);
+        assert!(!a.is_empty());
+        assert_ne!(a, c, "different prompts should get different answers");
+    }
+
+    #[test]
+    fn oracle_contains_separator() {
+        let be = ReferenceBackend::toy(REFERENCE_SEED);
+        let text = be.oracle_text(&[2, 20, 21, 22, 23]);
+        assert!(text.contains(';'), "toy answers carry a ';' split: {text:?}");
+        let tail = crate::eval::extract_final(&text);
+        assert_eq!(tail.chars().count(), 2);
+    }
+
+    #[test]
+    fn scripted_boundary_emits_eos() {
+        let be = ReferenceBackend::scripted(10);
+        let tokens = vec![2i32; 96];
+        let pos: Vec<i32> = (0..96).collect();
+        let kv = be.prefill(1, 96, &tokens, &pos, &[8], None).unwrap();
+        let q_tok = vec![1i32; 13];
+        let q_pos: Vec<i32> = (8..21).collect();
+        let out = be.decode(&kv, 13, &q_tok, &q_pos, &[13]).unwrap();
+        for (i, &p) in q_pos.iter().enumerate() {
+            let want = if p >= 10 { 3 } else { 10 };
+            assert_eq!(out.token(0, i), want, "pos {p}");
+        }
+    }
+
+    #[test]
+    fn toy_decode_matches_oracle() {
+        let be = ReferenceBackend::toy(REFERENCE_SEED);
+        let prompt = vec![2i32, 15, 16, 17, 18, 19];
+        let p0 = prompt.len();
+        let mut tokens = vec![0i32; 96];
+        tokens[..p0].copy_from_slice(&prompt);
+        let pos: Vec<i32> = (0..96).collect();
+        let kv = be.prefill(1, 96, &tokens, &pos, &[p0 as i32], Some(&[p0 as i32])).unwrap();
+        // query the whole generation region in one bundle
+        let q: usize = 41;
+        let q_tok = vec![1i32; q];
+        let q_pos: Vec<i32> = (p0 as i32..(p0 + q) as i32).collect();
+        let out = be.decode(&kv, q, &q_tok, &q_pos, &[q as i32]).unwrap();
+        let ids: Vec<i32> = (0..q).map(|i| out.token(0, i)).collect();
+        assert_eq!(be.detokenize(&ids), be.oracle_text(&prompt));
+    }
+
+    #[test]
+    fn confidences_in_range() {
+        let be = ReferenceBackend::scripted(24);
+        let tokens = vec![2i32; 96];
+        let pos: Vec<i32> = (0..96).collect();
+        let kv = be.prefill(1, 96, &tokens, &pos, &[8], None).unwrap();
+        let q_tok = vec![1i32; 13];
+        let q_pos: Vec<i32> = (8..21).collect();
+        let out = be.decode(&kv, 13, &q_tok, &q_pos, &[13]).unwrap();
+        for i in 0..13usize {
+            let c = out.conf(0, i);
+            assert!((0.0..=1.0).contains(&c), "conf {c}");
+        }
+    }
+}

@@ -2,7 +2,7 @@
 //! generation region), block cursor and commit bookkeeping — the x^(t)
 //! of paper Eq. 1, partitioned into blocks per Eq. 2.
 
-use crate::runtime::artifact::SpecialTokens;
+use super::types::SpecialTokens;
 
 #[derive(Debug, Clone)]
 pub struct SeqState {
@@ -30,7 +30,7 @@ impl SeqState {
     pub fn new(prompt: &[i32], gen_len: usize, special: &SpecialTokens) -> SeqState {
         let mut tokens = Vec::with_capacity(prompt.len() + gen_len);
         tokens.extend_from_slice(prompt);
-        tokens.extend(std::iter::repeat(special.mask).take(gen_len));
+        tokens.resize(prompt.len() + gen_len, special.mask);
         SeqState {
             tokens,
             p0: prompt.len(),

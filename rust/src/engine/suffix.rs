@@ -54,7 +54,7 @@ pub fn bundle_tokens(seq: &SeqState, bundle: &Bundle) -> Vec<i32> {
 mod tests {
     use super::*;
     use crate::engine::config::{GenConfig, Method};
-    use crate::runtime::artifact::SpecialTokens;
+    use crate::engine::types::SpecialTokens;
 
     fn special() -> SpecialTokens {
         SpecialTokens { pad: 0, mask: 1, bos: 2, eos: 3, sep: 4 }

@@ -1,0 +1,158 @@
+//! Backend-neutral model-contract types.
+//!
+//! Everything the scheduler needs to know about *any* model backend —
+//! special token ids, the packed (token, confidence) decode output, the
+//! bucket grids and their selection rule, and the detokenization rule —
+//! lives here, free of PJRT/xla types. `runtime::ModelRuntime` (the
+//! PJRT path, behind the `pjrt` feature) and `engine::ReferenceBackend`
+//! (the pure-Rust toy model) both implement `engine::Backend` in terms
+//! of these.
+
+/// Tokenizer special ids, mirrored from `python/compile/tokenizer.py`
+/// (`0 PAD, 1 MASK, 2 BOS, 3 EOS, 4 SEP`) — the first `N_SPECIAL` ids.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SpecialTokens {
+    pub pad: i32,
+    pub mask: i32,
+    pub bos: i32,
+    pub eos: i32,
+    pub sep: i32,
+}
+
+/// Number of special ids at the head of every vocabulary.
+pub const N_SPECIAL: usize = 5;
+
+impl Default for SpecialTokens {
+    fn default() -> SpecialTokens {
+        SpecialTokens { pad: 0, mask: 1, bos: 2, eos: 3, sep: 4 }
+    }
+}
+
+/// Packed decode output: `[B, Q, 2]` of (token id, confidence).
+pub struct DecodeOut {
+    pub data: Vec<f32>,
+    pub batch: usize,
+    pub q: usize,
+}
+
+impl DecodeOut {
+    pub fn token(&self, b: usize, i: usize) -> i32 {
+        self.data[(b * self.q + i) * 2] as i32
+    }
+
+    pub fn conf(&self, b: usize, i: usize) -> f32 {
+        self.data[(b * self.q + i) * 2 + 1]
+    }
+}
+
+/// Smallest bucket ≥ `need` from a sorted grid — the shared selection
+/// rule: padding is masked inside the model graph, so a live length
+/// simply rides the next compiled size up.
+pub fn pick_bucket(grid: &[usize], need: usize) -> Option<usize> {
+    grid.iter().copied().filter(|&b| b >= need).min()
+}
+
+/// The four bucket grids a backend exposes (what the AOT manifest
+/// declares on the PJRT side; what the reference backend makes up).
+#[derive(Debug, Clone)]
+pub struct Buckets {
+    pub batch: Vec<usize>,
+    pub prefix: Vec<usize>,
+    pub query: Vec<usize>,
+    pub seq: Vec<usize>,
+}
+
+impl Buckets {
+    pub fn pick_batch(&self, need: usize) -> Option<usize> {
+        pick_bucket(&self.batch, need)
+    }
+
+    pub fn pick_prefix(&self, need: usize) -> Option<usize> {
+        pick_bucket(&self.prefix, need)
+    }
+
+    pub fn pick_query(&self, need: usize) -> Option<usize> {
+        pick_bucket(&self.query, need)
+    }
+
+    pub fn pick_seq(&self, need: usize) -> Option<usize> {
+        pick_bucket(&self.seq, need)
+    }
+}
+
+/// Decode a token-id sequence to text, stopping at EOS and skipping
+/// special ids — must match `tokenizer.decode_until_eos` on the python
+/// side (pinned by tests on both the manifest and reference vocabs).
+pub fn detokenize_until_eos(vocab: &[String], special: &SpecialTokens, ids: &[i32]) -> String {
+    let mut s = String::new();
+    for &id in ids {
+        if id == special.eos {
+            break;
+        }
+        if (id as usize) < N_SPECIAL || (id as usize) >= vocab.len() {
+            continue;
+        }
+        s.push_str(&vocab[id as usize]);
+    }
+    s
+}
+
+/// The fixed character alphabet shared with the python tokenizer:
+/// specials, digits, lowercase letters, task glyphs — 54 entries.
+pub fn reference_vocab() -> Vec<String> {
+    let mut v: Vec<String> =
+        ["<pad>", "<mask>", "<bos>", "<eos>", "<sep>"].iter().map(|s| s.to_string()).collect();
+    for c in "0123456789abcdefghijklmnopqrstuvwxyz+-*%=;?:>(), ".chars() {
+        v.push(c.to_string());
+    }
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pick_bucket_smallest_geq() {
+        let grid = [96, 160, 224, 352, 736];
+        assert_eq!(pick_bucket(&grid, 1), Some(96));
+        assert_eq!(pick_bucket(&grid, 96), Some(96));
+        assert_eq!(pick_bucket(&grid, 97), Some(160));
+        assert_eq!(pick_bucket(&grid, 736), Some(736));
+        assert_eq!(pick_bucket(&grid, 737), None);
+    }
+
+    #[test]
+    fn reference_vocab_matches_python_layout() {
+        let v = reference_vocab();
+        assert_eq!(v.len(), 54);
+        assert_eq!(v[0], "<pad>");
+        assert_eq!(v[5], "0");
+        assert_eq!(v[14], "9");
+        assert_eq!(v[15], "a");
+        assert_eq!(v[40], "z");
+        assert_eq!(v[46], ";");
+        assert_eq!(v[53], " ");
+    }
+
+    #[test]
+    fn detokenize_stops_at_eos_and_skips_specials() {
+        let v = reference_vocab();
+        let sp = SpecialTokens::default();
+        // "a9;81" + EOS + junk — mirrors tokenizer.decode_until_eos
+        let ids = [15i32, 14, 46, 13, 6, 3, 20, 21];
+        assert_eq!(detokenize_until_eos(&v, &sp, &ids), "a9;81");
+        // specials inside the prefix are skipped, out-of-vocab ignored
+        assert_eq!(detokenize_until_eos(&v, &sp, &[2, 15, 4, 14, 99]), "a9");
+    }
+
+    #[test]
+    fn decode_out_indexing() {
+        let data = vec![10.0, 0.5, 11.0, 0.75, 12.0, 0.25, 13.0, 1.0];
+        let out = DecodeOut { data, batch: 2, q: 2 };
+        assert_eq!(out.token(0, 0), 10);
+        assert_eq!(out.token(0, 1), 11);
+        assert_eq!(out.token(1, 0), 12);
+        assert!((out.conf(1, 1) - 1.0).abs() < 1e-6);
+    }
+}

@@ -1,7 +1,9 @@
-//! Eval harness (the lm-eval stand-in): loads the suite JSONL files that
-//! `python/compile/tasks.py` exports, runs them through a `Generator`,
-//! and scores exact-match accuracy with the shared answer-extraction
-//! rule. Every tableN bench and the examples go through `run_suite`.
+//! Eval harness (the lm-eval stand-in): loads the suite JSONL files
+//! that `python/compile/tasks.py` exports — or synthesizes a suite from
+//! the reference backend's oracle when no artifacts exist — runs them
+//! through a `Generator`, and scores exact-match accuracy with the
+//! shared answer-extraction rule. Every tableN bench and the examples
+//! go through `run_suite`, which is generic over `engine::Backend`.
 
 pub mod similarity;
 
@@ -9,10 +11,12 @@ use std::path::Path;
 
 use anyhow::{anyhow, Context, Result};
 
-use crate::engine::{GenConfig, Generator, SeqState, StepEvent};
-use crate::runtime::ModelRuntime;
+use crate::engine::{
+    AnyBackend, Backend, GenConfig, Generator, ReferenceBackend, SeqState, StepEvent,
+};
 use crate::util::bench::Cell;
 use crate::util::json::Json;
+use crate::util::rng::Rng;
 use crate::util::stats::Samples;
 
 /// One eval item: the pre-tokenized prompt and the expected final answer.
@@ -132,16 +136,17 @@ impl SuiteResult {
 
 /// Run `items` through the generator one request at a time (the paper's
 /// lm-eval setting: batch = 1). `on_step` taps row-0 step events.
-pub fn run_suite(
-    rt: &ModelRuntime,
+pub fn run_suite<B: Backend>(
+    rt: &B,
     cfg: &GenConfig,
     items: &[EvalItem],
     mut on_step: Option<&mut dyn FnMut(StepEvent)>,
 ) -> Result<SuiteResult> {
     let generator = Generator::new(rt, cfg.clone())?;
+    let special = rt.special();
     let mut res = SuiteResult { n: items.len(), ..Default::default() };
     for item in items {
-        let mut seqs = vec![SeqState::new(&item.prompt, cfg.gen_len, &rt.manifest.special)];
+        let mut seqs = vec![SeqState::new(&item.prompt, cfg.gen_len, &special)];
         let hook: Option<&mut dyn FnMut(StepEvent)> = match on_step {
             Some(ref mut f) => Some(&mut **f),
             None => None,
@@ -149,11 +154,11 @@ pub fn run_suite(
         // Lazy AOT-executable compilation is a one-time startup cost (a
         // real deployment pre-warms, cf. ModelRuntime::warm); exclude it
         // per item so throughput AND latency ratios are undistorted.
-        let compile_before = rt.stats().compile_secs;
+        let compile_before = rt.compile_secs();
         let report = generator.generate(&mut seqs, hook)?;
-        let compile_delta = rt.stats().compile_secs - compile_before;
+        let compile_delta = rt.compile_secs() - compile_before;
         let wall = (report.wall_secs - compile_delta).max(1e-9);
-        let text = rt.manifest.detokenize_until_eos(seqs[0].generated());
+        let text = rt.detokenize(seqs[0].generated());
         if extract_final(&text) == item.answer {
             res.correct += 1;
         }
@@ -173,25 +178,24 @@ pub fn run_suite(
 
 /// Batched variant used by the serving example: slices items into
 /// `batch`-sized groups.
-pub fn run_suite_batched(
-    rt: &ModelRuntime,
+pub fn run_suite_batched<B: Backend>(
+    rt: &B,
     cfg: &GenConfig,
     items: &[EvalItem],
     batch: usize,
 ) -> Result<SuiteResult> {
     let generator = Generator::new(rt, cfg.clone())?;
+    let special = rt.special();
     let mut res = SuiteResult { n: items.len(), ..Default::default() };
     for chunk in items.chunks(batch) {
-        let mut seqs: Vec<SeqState> = chunk
-            .iter()
-            .map(|it| SeqState::new(&it.prompt, cfg.gen_len, &rt.manifest.special))
-            .collect();
-        let compile_before = rt.stats().compile_secs;
+        let mut seqs: Vec<SeqState> =
+            chunk.iter().map(|it| SeqState::new(&it.prompt, cfg.gen_len, &special)).collect();
+        let compile_before = rt.compile_secs();
         let report = generator.generate(&mut seqs, None)?;
-        let compile_delta = rt.stats().compile_secs - compile_before;
+        let compile_delta = rt.compile_secs() - compile_before;
         let wall = (report.wall_secs - compile_delta).max(1e-9);
         for (s, it) in seqs.iter().zip(chunk.iter()) {
-            let text = rt.manifest.detokenize_until_eos(s.generated());
+            let text = rt.detokenize(s.generated());
             if extract_final(&text) == it.answer {
                 res.correct += 1;
             }
@@ -210,6 +214,57 @@ pub fn run_suite_batched(
     Ok(res)
 }
 
+/// Synthesize an eval suite from the reference backend's oracle: random
+/// prompts over the shared alphabet, expected answers computed by the
+/// exact function the toy model decodes with. Deterministic in `seed`,
+/// so CI bench runs are comparable across commits.
+pub fn synthetic_suite(be: &ReferenceBackend, n: usize, seed: u64) -> Vec<EvalItem> {
+    let mut rng = Rng::new(seed ^ 0x5eed_ba5e);
+    let mut items = Vec::with_capacity(n);
+    for _ in 0..n {
+        let mut prompt = vec![be.special.bos];
+        let len = rng.range(6, 18);
+        for _ in 0..len {
+            // digits + lowercase letters (ids 5..41)
+            prompt.push(5 + rng.below(36) as i32);
+        }
+        prompt.push(47); // '?' — the query glyph the synthetic tasks end with
+        let cot = be.oracle_text(&prompt);
+        let answer = extract_final(&cot).to_string();
+        items.push(EvalItem { prompt, answer, cot });
+    }
+    items
+}
+
+/// FNV-1a of a suite name — the per-suite seed for `synthetic_suite`.
+fn suite_seed(name: &str) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for b in name.bytes() {
+        h = (h ^ b as u64).wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Items per synthesized suite (env-overridable: `SDLLM_SYNTH_N`).
+fn synth_n() -> usize {
+    std::env::var("SDLLM_SYNTH_N").ok().and_then(|s| s.parse().ok()).unwrap_or(64)
+}
+
+/// The suite for a backend: reference backends synthesize from their
+/// oracle; the PJRT path loads the artifact JSONL exported by
+/// `python/compile/tasks.py`.
+#[cfg_attr(not(feature = "pjrt"), allow(unused_variables))]
+pub fn suite_for(backend: &AnyBackend, root: &Path, suite: &str) -> Result<Vec<EvalItem>> {
+    match backend {
+        AnyBackend::Reference(b) => Ok(synthetic_suite(b, synth_n(), suite_seed(suite))),
+        #[cfg(feature = "pjrt")]
+        AnyBackend::Pjrt(_) => {
+            let index = crate::runtime::ArtifactsIndex::load(root)?;
+            load_suite(&index.eval_dir.join(format!("{suite}.jsonl")))
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -226,7 +281,13 @@ mod tests {
 
     #[test]
     fn suite_result_math() {
-        let mut r = SuiteResult { n: 4, correct: 3, wall_secs: 2.0, non_eos_tokens: 40, ..Default::default() };
+        let mut r = SuiteResult {
+            n: 4,
+            correct: 3,
+            wall_secs: 2.0,
+            non_eos_tokens: 40,
+            ..Default::default()
+        };
         r.latencies = vec![0.5, 0.5, 0.5, 0.5];
         assert!((r.accuracy() - 75.0).abs() < 1e-9);
         assert!((r.tokens_per_sec() - 20.0).abs() < 1e-9);
@@ -238,7 +299,12 @@ mod tests {
         let dir = std::env::temp_dir().join("sdllm_eval_test");
         std::fs::create_dir_all(&dir).unwrap();
         let p = dir.join("t.jsonl");
-        std::fs::write(&p, "{\"prompt\": [2, 10, 11], \"answer\": \"7\", \"cot\": \"a7;7\"}\n\n{\"prompt\": [2], \"answer\": \"x\"}\n").unwrap();
+        let lines = concat!(
+            "{\"prompt\": [2, 10, 11], \"answer\": \"7\", \"cot\": \"a7;7\"}\n",
+            "\n",
+            "{\"prompt\": [2], \"answer\": \"x\"}\n"
+        );
+        std::fs::write(&p, lines).unwrap();
         let items = load_suite(&p).unwrap();
         assert_eq!(items.len(), 2);
         assert_eq!(items[0].prompt, vec![2, 10, 11]);

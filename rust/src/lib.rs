@@ -10,8 +10,14 @@
 //!   mechanisms (attenuation-guided suffix pruning, dynamic
 //!   confidence-aware parallel decoding, EOS early exit) and all
 //!   baselines (vanilla, dKV-Cache, Prefix-Cache, Fast-dLLM).
-//! - runtime: the PJRT bridge (xla crate) executing the AOT artifacts
-//!   with device-resident parameters; python never runs at request time.
+//!
+//! Model backends (`engine::Backend`):
+//! - `engine::ReferenceBackend` — deterministic pure-Rust toy model;
+//!   the default build's backend, so the whole engine/coordinator stack
+//!   builds, tests and benches on a bare CPU checkout.
+//! - `runtime::ModelRuntime` — the PJRT bridge (xla crate) executing
+//!   the AOT artifacts with device-resident parameters; compiled only
+//!   with `--features pjrt`.
 
 pub mod coordinator;
 pub mod engine;

@@ -1,20 +1,25 @@
 //! `streaming-dllm` CLI: serve the TCP endpoint, run a one-shot
 //! generation, or evaluate a suite — the leader entrypoint.
+//!
+//! Backend selection (`--backend reference|pjrt|auto`): the default
+//! `auto` uses the PJRT runtime when this build carries it *and* AOT
+//! artifacts exist, and the deterministic pure-Rust reference model
+//! otherwise — so every subcommand works on a bare checkout.
 
 use std::time::Duration;
 
 use anyhow::{bail, Result};
 
-use streaming_dllm::coordinator::{Request, RouterHandle, Server};
-use streaming_dllm::engine::{GenConfig, Method};
-use streaming_dllm::eval::{load_suite, run_suite};
-use streaming_dllm::runtime::{ArtifactsIndex, ModelRuntime, Runtime};
+use streaming_dllm::coordinator::{RouterHandle, Server};
+use streaming_dllm::engine::{AnyBackend, Backend, GenConfig, Generator, Method, SeqState};
+use streaming_dllm::eval::{run_suite, suite_for};
 use streaming_dllm::util::cli::Args;
 
 const ABOUT: &str = "Streaming-dLLM serving framework (suffix pruning + dynamic decoding)";
 
 fn main() -> Result<()> {
     let args = Args::parse_env()
+        .describe("backend", "model backend: reference|pjrt|auto", Some("auto"))
         .describe("artifacts", "artifacts directory", Some("artifacts"))
         .describe("model", "backbone to serve", Some("llada15-mini"))
         .describe("method", "vanilla|dkv-cache|prefix-cache|fast-dllm|streaming", Some("streaming"))
@@ -48,16 +53,78 @@ fn artifacts(args: &Args) -> std::path::PathBuf {
         .unwrap_or_else(streaming_dllm::artifacts_root)
 }
 
-fn serve(args: &Args) -> Result<()> {
+/// Build the in-process backend for one-shot commands.
+fn backend_for(args: &Args) -> Result<AnyBackend> {
+    let root = artifacts(args);
+    let model = args.get_or("model", "llada15-mini");
+    match args.get_or("backend", "auto") {
+        "reference" => Ok(AnyBackend::reference()),
+        "pjrt" => pjrt_backend(&root, model),
+        "auto" => AnyBackend::auto(&root, model),
+        other => bail!("unknown backend '{other}' (reference|pjrt|auto)"),
+    }
+}
+
+#[cfg(feature = "pjrt")]
+fn pjrt_backend(root: &std::path::Path, model: &str) -> Result<AnyBackend> {
+    AnyBackend::pjrt(root, model)
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn pjrt_backend(_root: &std::path::Path, _model: &str) -> Result<AnyBackend> {
+    bail!(
+        "this binary was built without PJRT support; rebuild with `--features pjrt` \
+         or use --backend reference"
+    )
+}
+
+/// Build the serving router (the engine thread owns its backend).
+fn router_for(args: &Args) -> Result<RouterHandle> {
     let root = artifacts(args);
     let model = args.get_or("model", "llada15-mini").to_string();
+    let max_batch = args.get_usize("max-batch", 4);
+    let max_wait = Duration::from_millis(args.get_usize("max-wait-ms", 20) as u64);
+    match args.get_or("backend", "auto") {
+        "reference" => Ok(RouterHandle::spawn_reference(max_batch, max_wait)),
+        "pjrt" => pjrt_router(root, model, max_batch, max_wait),
+        "auto" => {
+            if AnyBackend::pjrt_available(&root) {
+                pjrt_router(root, model, max_batch, max_wait)
+            } else {
+                Ok(RouterHandle::spawn_reference(max_batch, max_wait))
+            }
+        }
+        other => bail!("unknown backend '{other}' (reference|pjrt|auto)"),
+    }
+}
+
+#[cfg(feature = "pjrt")]
+fn pjrt_router(
+    root: std::path::PathBuf,
+    model: String,
+    max_batch: usize,
+    max_wait: Duration,
+) -> Result<RouterHandle> {
+    Ok(RouterHandle::spawn(root, model, max_batch, max_wait))
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn pjrt_router(
+    _root: std::path::PathBuf,
+    _model: String,
+    _max_batch: usize,
+    _max_wait: Duration,
+) -> Result<RouterHandle> {
+    bail!(
+        "this binary was built without PJRT support; rebuild with `--features pjrt` \
+         or use --backend reference"
+    )
+}
+
+fn serve(args: &Args) -> Result<()> {
+    let model = args.get_or("model", "llada15-mini").to_string();
     let addr = args.get_or("addr", "127.0.0.1:7333");
-    let router = RouterHandle::spawn(
-        root,
-        model.clone(),
-        args.get_usize("max-batch", 4),
-        Duration::from_millis(args.get_usize("max-wait-ms", 20) as u64),
-    );
+    let router = router_for(args)?;
     let server = Server::bind(addr, router)?;
     println!("serving {model} on {addr} (line-delimited JSON; {{\"cmd\":\"stats\"}} for metrics)");
     server.serve_forever()
@@ -65,10 +132,7 @@ fn serve(args: &Args) -> Result<()> {
 
 fn eval(args: &Args) -> Result<()> {
     let root = artifacts(args);
-    let index = ArtifactsIndex::load(&root)?;
-    let model = args.get_or("model", "llada15-mini");
-    let rt = Runtime::cpu()?;
-    let model_rt = ModelRuntime::load(&rt, &index.model_dir(model))?;
+    let backend = backend_for(args)?;
     let method = Method::parse(args.get_or("method", "streaming"))
         .ok_or_else(|| anyhow::anyhow!("unknown method"))?;
     let mut cfg = GenConfig::preset(method, args.get_usize("gen-len", 64));
@@ -77,11 +141,12 @@ fn eval(args: &Args) -> Result<()> {
         cfg.remask_tau = args.get_f32("remask-tau", 0.5);
     }
     let suite = args.get_or("suite", "gsm-mini");
-    let items = load_suite(&index.eval_dir.join(format!("{suite}.jsonl")))?;
+    let items = suite_for(&backend, &root, suite)?;
     let n = args.get_usize("n", 50).min(items.len());
-    let res = run_suite(&model_rt, &cfg, &items[..n], None)?;
+    let res = run_suite(&backend, &cfg, &items[..n], None)?;
     println!(
-        "{model} {suite} method={} L={}: acc {:.1}% (cot-sim {:.1}%) | {:.1} tok/s | {:.2}s/sample | NFE {:.1}",
+        "[{}] {suite} method={} L={}: acc {:.1}% (cot {:.1}%) | {:.1} tok/s | {:.2}s | NFE {:.1}",
+        backend.describe(),
         method.name(),
         cfg.gen_len,
         res.accuracy(),
@@ -95,10 +160,7 @@ fn eval(args: &Args) -> Result<()> {
 
 fn generate(args: &Args) -> Result<()> {
     let root = artifacts(args);
-    let index = ArtifactsIndex::load(&root)?;
-    let model = args.get_or("model", "llada15-mini");
-    let rt = Runtime::cpu()?;
-    let model_rt = ModelRuntime::load(&rt, &index.model_dir(model))?;
+    let backend = backend_for(args)?;
     let method = Method::parse(args.get_or("method", "streaming"))
         .ok_or_else(|| anyhow::anyhow!("unknown method"))?;
     let cfg = GenConfig::preset(method, args.get_usize("gen-len", 64));
@@ -108,7 +170,7 @@ fn generate(args: &Args) -> Result<()> {
         Some(s) => s.split(',').filter_map(|x| x.trim().parse().ok()).collect(),
         None => {
             let suite = args.get_or("suite", "gsm-mini");
-            let items = load_suite(&index.eval_dir.join(format!("{suite}.jsonl")))?;
+            let items = suite_for(&backend, &root, suite)?;
             if items.is_empty() {
                 bail!("empty suite");
             }
@@ -116,15 +178,10 @@ fn generate(args: &Args) -> Result<()> {
             items[0].prompt.clone()
         }
     };
-    let router_cfg = cfg.clone();
-    let generator = streaming_dllm::engine::Generator::new(&model_rt, router_cfg)?;
-    let mut seqs = vec![streaming_dllm::engine::SeqState::new(
-        &prompt,
-        cfg.gen_len,
-        &model_rt.manifest.special,
-    )];
+    let generator = Generator::new(&backend, cfg.clone())?;
+    let mut seqs = vec![SeqState::new(&prompt, cfg.gen_len, &backend.special())];
     let report = generator.generate(&mut seqs, None)?;
-    println!("generated: {:?}", model_rt.manifest.detokenize_until_eos(seqs[0].generated()));
+    println!("generated: {:?}", backend.detokenize(seqs[0].generated()));
     println!(
         "steps {} | prefills {} | {:.1} tok/s | {:.3}s",
         report.steps,
@@ -132,15 +189,21 @@ fn generate(args: &Args) -> Result<()> {
         report.tokens_per_sec(),
         report.wall_secs
     );
-    let _ = Request { id: 0, prompt, method, gen_len: cfg.gen_len }; // wire type sanity
     Ok(())
 }
 
 fn list_models(args: &Args) -> Result<()> {
     let root = artifacts(args);
-    let index = ArtifactsIndex::load(&root)?;
-    for m in &index.models {
-        println!("{m}");
+    if root.join("index.json").exists() {
+        let index = streaming_dllm::runtime::ArtifactsIndex::load(&root)?;
+        for m in &index.models {
+            println!("{m}");
+        }
+    } else {
+        println!(
+            "reference (no artifacts at {}; run `make artifacts` for PJRT models)",
+            root.display()
+        );
     }
     Ok(())
 }

@@ -17,6 +17,8 @@ use anyhow::{anyhow, bail, Context, Result};
 
 use crate::util::json::Json;
 
+pub use crate::engine::types::SpecialTokens;
+
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub enum ExeKind {
     Prefill,
@@ -58,15 +60,6 @@ pub struct ExeKey {
 pub struct ArtifactEntry {
     pub key: ExeKey,
     pub file: PathBuf,
-}
-
-#[derive(Debug, Clone)]
-pub struct SpecialTokens {
-    pub pad: i32,
-    pub mask: i32,
-    pub bos: i32,
-    pub eos: i32,
-    pub sep: i32,
 }
 
 #[derive(Debug, Clone)]
@@ -121,7 +114,13 @@ impl Manifest {
             let g = |k: &str| -> Result<i32> {
                 Ok(s.req(k).map_err(|e| anyhow!("{e}"))?.as_i64().unwrap_or(-1) as i32)
             };
-            SpecialTokens { pad: g("pad")?, mask: g("mask")?, bos: g("bos")?, eos: g("eos")?, sep: g("sep")? }
+            SpecialTokens {
+                pad: g("pad")?,
+                mask: g("mask")?,
+                bos: g("bos")?,
+                eos: g("eos")?,
+                sep: g("sep")?,
+            }
         };
 
         let kv = j.req("kv_dims").map_err(|e| anyhow!("{e}"))?;
@@ -139,7 +138,12 @@ impl Manifest {
             .iter()
             .map(|p| -> Result<ParamSpec> {
                 Ok(ParamSpec {
-                    name: p.req("name").map_err(|e| anyhow!("{e}"))?.as_str().unwrap_or("").to_string(),
+                    name: p
+                        .req("name")
+                        .map_err(|e| anyhow!("{e}"))?
+                        .as_str()
+                        .unwrap_or("")
+                        .to_string(),
                     shape: p
                         .req("shape")
                         .map_err(|e| anyhow!("{e}"))?
@@ -161,18 +165,24 @@ impl Manifest {
             .as_arr()
             .ok_or_else(|| anyhow!("artifacts not an array"))?
         {
-            let kind = ExeKind::parse(a.req("kind").map_err(|e| anyhow!("{e}"))?.as_str().unwrap_or(""))?;
+            let kind_str = a.req("kind").map_err(|e| anyhow!("{e}"))?.as_str().unwrap_or("");
+            let kind = ExeKind::parse(kind_str)?;
             let batch = a.req("batch").map_err(|e| anyhow!("{e}"))?.as_usize().unwrap_or(0);
             let len = match kind {
-                ExeKind::Logits => a.req("seq").map_err(|e| anyhow!("{e}"))?.as_usize().unwrap_or(0),
+                ExeKind::Logits => {
+                    a.req("seq").map_err(|e| anyhow!("{e}"))?.as_usize().unwrap_or(0)
+                }
                 _ => a.req("prefix").map_err(|e| anyhow!("{e}"))?.as_usize().unwrap_or(0),
             };
             let query = match kind {
-                ExeKind::Decode => a.req("query").map_err(|e| anyhow!("{e}"))?.as_usize().unwrap_or(0),
+                ExeKind::Decode => {
+                    a.req("query").map_err(|e| anyhow!("{e}"))?.as_usize().unwrap_or(0)
+                }
                 _ => 0,
             };
             let key = ExeKey { kind, batch, len, query };
-            let file = model_dir.join(a.req("file").map_err(|e| anyhow!("{e}"))?.as_str().unwrap_or(""));
+            let rel = a.req("file").map_err(|e| anyhow!("{e}"))?.as_str().unwrap_or("");
+            let file = model_dir.join(rel);
             if !file.exists() {
                 bail!("artifact file missing: {}", file.display());
             }
@@ -182,7 +192,12 @@ impl Manifest {
         Ok(Manifest {
             model: j.req("model").map_err(|e| anyhow!("{e}"))?.as_str().unwrap_or("").to_string(),
             dir: model_dir.to_path_buf(),
-            attn_mode: j.req("attn_mode").map_err(|e| anyhow!("{e}"))?.as_str().unwrap_or("full").to_string(),
+            attn_mode: j
+                .req("attn_mode")
+                .map_err(|e| anyhow!("{e}"))?
+                .as_str()
+                .unwrap_or("full")
+                .to_string(),
             wants_p0: j.req("wants_p0").map_err(|e| anyhow!("{e}"))?.as_bool().unwrap_or(false),
             special,
             vocab: j
@@ -206,9 +221,10 @@ impl Manifest {
         })
     }
 
-    /// Smallest bucket ≥ `need` from a sorted grid.
+    /// Smallest bucket ≥ `need` from a sorted grid (shared rule in
+    /// `engine::types::pick_bucket`).
     pub fn pick_bucket(grid: &[usize], need: usize) -> Option<usize> {
-        grid.iter().copied().filter(|&b| b >= need).min()
+        crate::engine::types::pick_bucket(grid, need)
     }
 
     pub fn pick_batch(&self, need: usize) -> Option<usize> {
@@ -237,18 +253,7 @@ impl Manifest {
     /// special tokens — must match `tokenizer.decode_until_eos` on the
     /// python side (pinned by an integration test).
     pub fn detokenize_until_eos(&self, ids: &[i32]) -> String {
-        let mut s = String::new();
-        let n_special = 5;
-        for &id in ids {
-            if id == self.special.eos {
-                break;
-            }
-            if id < n_special || (id as usize) >= self.vocab.len() {
-                continue;
-            }
-            s.push_str(&self.vocab[id as usize]);
-        }
-        s
+        crate::engine::types::detokenize_until_eos(&self.vocab, &self.special, ids)
     }
 }
 
@@ -277,8 +282,11 @@ impl ArtifactsIndex {
                 .iter()
                 .map(|m| m.as_str().unwrap_or("").to_string())
                 .collect(),
-            eval_dir: root.join(j.req("eval_dir").map_err(|e| anyhow!("{e}"))?.as_str().unwrap_or("eval")),
-            models_dir: root.join(j.req("models_dir").map_err(|e| anyhow!("{e}"))?.as_str().unwrap_or("models")),
+            eval_dir: root
+                .join(j.req("eval_dir").map_err(|e| anyhow!("{e}"))?.as_str().unwrap_or("eval")),
+            models_dir: root.join(
+                j.req("models_dir").map_err(|e| anyhow!("{e}"))?.as_str().unwrap_or("models"),
+            ),
         })
     }
 

@@ -1,30 +1,45 @@
-//! Runtime: the PJRT bridge. Loads AOT HLO-text artifacts produced by
-//! `python/compile/aot.py`, compiles them once (lazily, memoized), keeps
-//! model parameters device-resident, and executes decode/prefill/logits
-//! steps from the serving hot path — python is never involved at runtime.
+//! Runtime: artifact manifests (always available) and the PJRT bridge
+//! (behind the `pjrt` cargo feature).
 //!
-//! Pattern follows /opt/xla-example/load_hlo: `HloModuleProto::
+//! The PJRT path loads AOT HLO-text artifacts produced by
+//! `python/compile/aot.py`, compiles them once (lazily, memoized),
+//! keeps model parameters device-resident, and executes
+//! decode/prefill/logits steps from the serving hot path — python is
+//! never involved at runtime. The default build compiles none of that:
+//! manifest parsing and bucket math stay, so evaluation tooling can
+//! inspect artifacts without an accelerator toolchain, while the
+//! scheduler stack runs against `engine::ReferenceBackend`.
+//!
+//! PJRT pattern follows /opt/xla-example/load_hlo: `HloModuleProto::
 //! from_text_file` → `XlaComputation::from_proto` → `client.compile` →
 //! `execute_b` (device buffers in, device buffers out).
 
 pub mod artifact;
+#[cfg(feature = "pjrt")]
 pub mod model;
+#[cfg(feature = "pjrt")]
 pub mod warmup;
 
 pub use artifact::{ArtifactsIndex, ExeKey, ExeKind, Manifest};
+#[cfg(feature = "pjrt")]
 pub use model::{DecodeOut, KvCache, ModelRuntime, RuntimeStats};
+#[cfg(feature = "pjrt")]
 pub use warmup::{plan_keys, warm_for};
 
+#[cfg(feature = "pjrt")]
 use std::sync::Arc;
 
+#[cfg(feature = "pjrt")]
 use anyhow::Result;
 
 /// Shared PJRT client. One per process.
+#[cfg(feature = "pjrt")]
 #[derive(Clone)]
 pub struct Runtime {
     client: Arc<xla::PjRtClient>,
 }
 
+#[cfg(feature = "pjrt")]
 impl Runtime {
     pub fn cpu() -> Result<Runtime> {
         let client = xla::PjRtClient::cpu()?;

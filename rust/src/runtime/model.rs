@@ -13,8 +13,13 @@ use std::time::Instant;
 use anyhow::{anyhow, bail, Context, Result};
 use xla::{FromRawBytes, Literal, PjRtBuffer, PjRtLoadedExecutable};
 
+use crate::engine::types::SpecialTokens;
+use crate::engine::Backend;
+
 use super::artifact::{ExeKey, ExeKind, Manifest};
 use super::Runtime;
+
+pub use crate::engine::types::DecodeOut;
 
 /// Execution counters — the NFE/compute accounting the benches report.
 #[derive(Debug, Clone, Default)]
@@ -55,23 +60,6 @@ pub struct KvCache {
     /// steps reuse it instead of re-uploading every step (§Perf: saves
     /// one host→device transfer per diffusion step).
     pub valid_buf: PjRtBuffer,
-}
-
-/// Packed decode output: [B, Q, 2] of (token id, confidence).
-pub struct DecodeOut {
-    pub data: Vec<f32>,
-    pub batch: usize,
-    pub q: usize,
-}
-
-impl DecodeOut {
-    pub fn token(&self, b: usize, i: usize) -> i32 {
-        self.data[(b * self.q + i) * 2] as i32
-    }
-
-    pub fn conf(&self, b: usize, i: usize) -> f32 {
-        self.data[(b * self.q + i) * 2 + 1]
-    }
 }
 
 pub struct ModelRuntime {
@@ -265,5 +253,78 @@ impl ModelRuntime {
         st.logits_secs += t0.elapsed().as_secs_f64();
         st.logits_cells += (batch * s_bucket) as u64;
         Ok(DecodeOut { data, batch, q: s_bucket })
+    }
+}
+
+/// The production `engine::Backend`: bucket selection and tokenizer
+/// views come from the manifest, forwards run on PJRT.
+impl Backend for ModelRuntime {
+    type Kv = KvCache;
+
+    fn special(&self) -> SpecialTokens {
+        self.manifest.special.clone()
+    }
+
+    fn wants_p0(&self) -> bool {
+        self.manifest.wants_p0
+    }
+
+    fn pick_batch(&self, need: usize) -> Option<usize> {
+        self.manifest.pick_batch(need)
+    }
+
+    fn pick_prefix(&self, need: usize) -> Option<usize> {
+        self.manifest.pick_prefix(need)
+    }
+
+    fn pick_query(&self, need: usize) -> Option<usize> {
+        self.manifest.pick_query(need)
+    }
+
+    fn pick_seq(&self, need: usize) -> Option<usize> {
+        self.manifest.pick_seq(need)
+    }
+
+    fn prefill(
+        &self,
+        batch: usize,
+        p_bucket: usize,
+        tokens: &[i32],
+        pos: &[i32],
+        valid: &[i32],
+        p0: Option<&[i32]>,
+    ) -> Result<KvCache> {
+        ModelRuntime::prefill(self, batch, p_bucket, tokens, pos, valid, p0)
+    }
+
+    fn decode(
+        &self,
+        kv: &KvCache,
+        q_bucket: usize,
+        q_tok: &[i32],
+        q_pos: &[i32],
+        q_valid: &[i32],
+    ) -> Result<DecodeOut> {
+        ModelRuntime::decode(self, kv, q_bucket, q_tok, q_pos, q_valid)
+    }
+
+    fn logits(
+        &self,
+        batch: usize,
+        s_bucket: usize,
+        tokens: &[i32],
+        pos: &[i32],
+        valid: &[i32],
+        p0: Option<&[i32]>,
+    ) -> Result<DecodeOut> {
+        ModelRuntime::logits(self, batch, s_bucket, tokens, pos, valid, p0)
+    }
+
+    fn detokenize(&self, ids: &[i32]) -> String {
+        self.manifest.detokenize_until_eos(ids)
+    }
+
+    fn compile_secs(&self) -> f64 {
+        self.stats.borrow().compile_secs
     }
 }

@@ -128,11 +128,14 @@ pub fn rows_to_json(rows: &[Row]) -> super::json::Json {
     )
 }
 
-/// Write the JSON dump under target/bench-results/ (best effort).
+/// Write the JSON dump under target/bench-results/ (best effort). The
+/// `BENCH_` prefix is the contract with CI's bench-smoke job, which
+/// uploads `target/bench-results/BENCH_*.json` as run artifacts so the
+/// perf trajectory accumulates across commits.
 pub fn save_rows(name: &str, rows: &[Row]) {
     let dir = std::path::Path::new("target/bench-results");
     let _ = std::fs::create_dir_all(dir);
-    let path = dir.join(format!("{name}.json"));
+    let path = dir.join(format!("BENCH_{name}.json"));
     let _ = std::fs::write(&path, rows_to_json(rows).to_string());
     println!("[saved {}]", path.display());
 }
@@ -151,10 +154,9 @@ mod tests {
 
     #[test]
     fn rows_json_shape() {
-        let rows = vec![Row {
-            label: "gsm 64".into(),
-            cells: vec![("vanilla".into(), Cell { accuracy: 50.0, cot_sim: 70.0, tokens_per_s: 2.0, latency_s: 1.0, nfe: 64.0 })],
-        }];
+        let cell =
+            Cell { accuracy: 50.0, cot_sim: 70.0, tokens_per_s: 2.0, latency_s: 1.0, nfe: 64.0 };
+        let rows = vec![Row { label: "gsm 64".into(), cells: vec![("vanilla".into(), cell)] }];
         let j = rows_to_json(&rows);
         let s = j.to_string();
         assert!(s.contains("vanilla") && s.contains("gsm 64"));

@@ -124,12 +124,7 @@ impl Json {
     }
 
     // ---- serialization --------------------------------------------------
-
-    pub fn to_string(&self) -> String {
-        let mut out = String::new();
-        self.write(&mut out);
-        out
-    }
+    // (via `Display`, so `.to_string()` comes from the blanket impl)
 
     fn write(&self, out: &mut String) {
         match self {
@@ -167,6 +162,14 @@ impl Json {
                 out.push('}');
             }
         }
+    }
+}
+
+impl fmt::Display for Json {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let mut out = String::new();
+        self.write(&mut out);
+        f.write_str(&out)
     }
 }
 
@@ -297,8 +300,10 @@ impl<'a> Parser<'a> {
         if self.peek() == Some(b'-') {
             self.i += 1;
         }
-        while matches!(self.peek(), Some(c) if c.is_ascii_digit() || matches!(c, b'.' | b'e' | b'E' | b'+' | b'-'))
-        {
+        while matches!(
+            self.peek(),
+            Some(c) if c.is_ascii_digit() || matches!(c, b'.' | b'e' | b'E' | b'+' | b'-')
+        ) {
             self.i += 1;
         }
         std::str::from_utf8(&self.b[start..self.i])
@@ -406,5 +411,106 @@ mod tests {
     fn unicode_passthrough() {
         let v = Json::parse("\"héllo ✓\"").unwrap();
         assert_eq!(v.as_str(), Some("héllo ✓"));
+    }
+
+    // The module now carries the server wire protocol and the CI bench
+    // reports; the tests below pin the round-trip guarantees those rely
+    // on: every value we *write* must parse back to an equal value.
+
+    fn roundtrip(v: &Json) -> Json {
+        Json::parse(&v.to_string()).unwrap_or_else(|e| panic!("re-parse failed: {e} on {v:?}"))
+    }
+
+    #[test]
+    fn escape_roundtrip_exhaustive_controls() {
+        // every C0 control plus the two mandatory escapes
+        for cp in (0u32..0x20).chain(['"' as u32, '\\' as u32]) {
+            let s: String = char::from_u32(cp).unwrap().to_string();
+            let v = Json::Str(s.clone());
+            assert_eq!(roundtrip(&v).as_str(), Some(s.as_str()), "codepoint {cp:#x}");
+        }
+    }
+
+    #[test]
+    fn unicode_escape_parses() {
+        assert_eq!(Json::parse("\"\\u0041\\u00e9\"").unwrap().as_str(), Some("Aé"));
+        // lone bad escape is rejected, not mangled
+        assert!(Json::parse("\"\\u00g1\"").is_err());
+        assert!(Json::parse("\"\\u00\"").is_err());
+    }
+
+    #[test]
+    fn nested_obj_arr_roundtrip() {
+        let v = Json::obj(vec![
+            (
+                "rows",
+                Json::Arr(vec![
+                    Json::obj(vec![
+                        ("label", Json::Str("gsm \"quoted\"\n".into())),
+                        ("cells", Json::Arr(vec![Json::Num(1.5), Json::Null, Json::Bool(false)])),
+                    ]),
+                    Json::Arr(vec![]),
+                    Json::Obj(Default::default()),
+                ]),
+            ),
+            ("n", Json::Num(3.0)),
+        ]);
+        assert_eq!(roundtrip(&v), v);
+    }
+
+    #[test]
+    fn f64_edge_cases_roundtrip() {
+        for x in [
+            0.0,
+            -1.0,
+            0.1,
+            1e-7,
+            -2.5e10,
+            1.5e300,
+            f64::MIN_POSITIVE,
+            (1u64 << 53) as f64,       // integer precision boundary
+            ((1u64 << 53) - 1) as f64, // largest exact integer
+            1e15,                      // integer-formatting threshold
+            1e15 + 2.0,
+            0.30000000000000004, // classic accumulation artifact
+        ] {
+            let v = Json::Num(x);
+            let back = roundtrip(&v).as_f64().unwrap();
+            assert_eq!(back, x, "value {x:e} did not survive the wire");
+        }
+    }
+
+    #[test]
+    fn exponent_forms_parse() {
+        assert_eq!(Json::parse("1e3").unwrap().as_f64(), Some(1000.0));
+        assert_eq!(Json::parse("1E-2").unwrap().as_f64(), Some(0.01));
+        assert_eq!(Json::parse("-1.25e+2").unwrap().as_f64(), Some(-125.0));
+    }
+
+    #[test]
+    fn large_integers_stay_integral_on_the_wire() {
+        // ids/counters are u64-as-f64; below 2^53 they serialize without
+        // a fraction and re-parse exactly
+        let v = Json::Num(9007199254740991.0); // 2^53 - 1 — above the 1e15 pretty-print cutoff
+        let s = v.to_string();
+        assert!(!s.contains('.'), "unexpected fraction in {s}");
+        assert_eq!(roundtrip(&v), v);
+    }
+
+    #[test]
+    fn deep_nesting_roundtrip() {
+        let mut v = Json::Num(7.0);
+        for _ in 0..64 {
+            v = Json::Arr(vec![v]);
+        }
+        assert_eq!(roundtrip(&v), v);
+    }
+
+    #[test]
+    fn key_ordering_is_stable() {
+        let a = Json::parse(r#"{"b":1,"a":2}"#).unwrap();
+        let b = Json::parse(r#"{"a":2,"b":1}"#).unwrap();
+        assert_eq!(a, b);
+        assert_eq!(a.to_string(), b.to_string());
     }
 }

@@ -44,15 +44,22 @@ impl Gen {
         v
     }
 
-    pub fn vec_usize(&mut self, lo: usize, hi: usize, len_range: std::ops::Range<usize>) -> Vec<usize> {
-        let n = self.rng.range(len_range.start, len_range.end.saturating_sub(1).max(len_range.start));
+    pub fn vec_usize(
+        &mut self,
+        lo: usize,
+        hi: usize,
+        len_range: std::ops::Range<usize>,
+    ) -> Vec<usize> {
+        let hi_len = len_range.end.saturating_sub(1).max(len_range.start);
+        let n = self.rng.range(len_range.start, hi_len);
         let v: Vec<usize> = (0..n).map(|_| self.rng.range(lo, hi)).collect();
         self.trace.push(("vec_usize".into(), format!("{v:?}")));
         v
     }
 
     pub fn vec_f32(&mut self, lo: f32, hi: f32, len_range: std::ops::Range<usize>) -> Vec<f32> {
-        let n = self.rng.range(len_range.start, len_range.end.saturating_sub(1).max(len_range.start));
+        let hi_len = len_range.end.saturating_sub(1).max(len_range.start);
+        let n = self.rng.range(len_range.start, hi_len);
         let v: Vec<f32> = (0..n).map(|_| lo + (hi - lo) * self.rng.f32()).collect();
         self.trace.push(("vec_f32".into(), format!("{v:?}")));
         v

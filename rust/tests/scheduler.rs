@@ -1,22 +1,24 @@
-//! Scheduler tests over the MockBackend: no artifacts needed. These pin
-//! the generator's control-flow invariants — termination under arbitrary
-//! confidence streams, early-exit semantics, per-method call accounting
-//! (prefill counts for dKV vs prefix-cache), and bundle/bucket behavior.
+//! Scheduler tests over the scripted ReferenceBackend: no artifacts
+//! needed. These pin the generator's control-flow invariants —
+//! termination under arbitrary confidence streams, early-exit
+//! semantics, per-method call accounting (prefill counts for dKV vs
+//! prefix-cache), and bundle/bucket behavior.
 
-use streaming_dllm::engine::{GenConfig, Generator, Method, MockBackend, SeqState};
+use streaming_dllm::engine::{GenConfig, Generator, Method, ReferenceBackend, SeqState};
 use streaming_dllm::util::prop;
 
-fn seq(backend: &MockBackend, prompt_len: usize, gen_len: usize) -> SeqState {
+fn seq(backend: &ReferenceBackend, prompt_len: usize, gen_len: usize) -> SeqState {
     let prompt: Vec<i32> = std::iter::once(backend.special.bos)
         .chain((0..prompt_len as i32 - 1).map(|i| 10 + (i % 30)))
         .collect();
     SeqState::new(&prompt, gen_len, &backend.special)
 }
 
-/// Mock emits content below `answer_len` absolute position and EOS
-/// after — so with prompt_len=16 and answer_len=24, 8 content tokens.
-fn backend(answer_abs: usize) -> MockBackend {
-    MockBackend::new(answer_abs)
+/// The scripted backend emits content below `answer_abs` absolute
+/// position and EOS after — so with prompt_len=16 and answer_abs=24,
+/// 8 content tokens.
+fn backend(answer_abs: usize) -> ReferenceBackend {
+    ReferenceBackend::scripted(answer_abs)
 }
 
 #[test]

@@ -1,0 +1,136 @@
+//! Offline stand-in for the `anyhow` crate.
+//!
+//! The build environment has no crates.io access, so this vendored shim
+//! provides the small API subset the workspace actually uses: `Result`,
+//! `Error`, `anyhow!`, `bail!`, and the `Context` extension trait.
+//! Errors are a single message string with context frames prepended,
+//! which matches how the serving stack reports them (`{e:#}` and `{e}`
+//! both render the full chain).
+
+use std::fmt;
+
+/// A type-erased error: the message chain, outermost context first.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    pub fn msg<M: fmt::Display>(m: M) -> Error {
+        Error { msg: m.to_string() }
+    }
+
+    /// Prepend a context frame (what `Context::context` does).
+    fn wrap<C: fmt::Display>(self, ctx: C) -> Error {
+        Error { msg: format!("{ctx}: {}", self.msg) }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+// Deliberately NOT `impl std::error::Error for Error`: that keeps the
+// blanket `From` below coherent, exactly as in the real anyhow.
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        // include one level of source, the common case for io errors
+        match e.source() {
+            Some(src) => Error { msg: format!("{e}: {src}") },
+            None => Error { msg: e.to_string() },
+        }
+    }
+}
+
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] built from a format string.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Attach context to errors (subset of anyhow's trait of the same name).
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.map_err(|e| Error::msg(e).wrap(ctx))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::msg(e).wrap(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(ctx))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "gone")
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn inner() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        let e = inner().unwrap_err();
+        assert!(e.to_string().contains("gone"));
+    }
+
+    #[test]
+    fn context_prepends() {
+        let r: std::result::Result<(), std::io::Error> = Err(io_err());
+        let e = r.with_context(|| "reading x").unwrap_err();
+        assert!(e.to_string().starts_with("reading x: "));
+    }
+
+    #[test]
+    fn macros_format() {
+        let e = anyhow!("bad {}", 7);
+        assert_eq!(e.to_string(), "bad 7");
+        fn f() -> Result<()> {
+            bail!("stop {}", "now")
+        }
+        assert_eq!(f().unwrap_err().to_string(), "stop now");
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u32> = None;
+        assert_eq!(v.context("missing").unwrap_err().to_string(), "missing");
+    }
+}
