@@ -9,7 +9,9 @@
 //!
 //! Knobs (env): SDLLM_BENCH_N (items per cell, default 12),
 //! SDLLM_ARTIFACTS (artifacts dir), SDLLM_SYNTH_N (synthetic suite
-//! size, default 64).
+//! size, default 64), SDLLM_REF_MODE (reference mode toy|causal —
+//! causal makes the accuracy axis schedule-dependent, so the
+//! accuracy-vs-NFE curves actually bend).
 
 #![allow(dead_code)]
 
@@ -47,8 +49,9 @@ impl Setup {
             Some(ArtifactsIndex::load(&root).expect("artifacts index"))
         } else {
             println!(
-                "[no PJRT artifacts at {}; running the deterministic reference backend]",
-                root.display()
+                "[no PJRT artifacts at {}; running the reference backend (mode: {})]",
+                root.display(),
+                ref_mode()
             );
             None
         };
@@ -57,6 +60,11 @@ impl Setup {
 
     pub fn model(&self, name: &str) -> AnyBackend {
         AnyBackend::auto(&self.root, name).expect("backend")
+    }
+
+    /// Whether this setup serves the reference backend (no artifacts).
+    pub fn is_reference(&self) -> bool {
+        self.index.is_none()
     }
 
     pub fn suite(&self, name: &str) -> Vec<EvalItem> {
@@ -68,10 +76,17 @@ impl Setup {
             Some(index) => load_suite(&index.eval_dir.join(file)).expect("suite"),
             None => {
                 let name = file.trim_end_matches(".jsonl");
-                suite_for(&AnyBackend::reference(), &self.root, name).expect("suite")
+                // mode-matched suite: a causal backend must be scored
+                // against the sequential-chain oracle, not the toy one
+                suite_for(&AnyBackend::reference_from_env(), &self.root, name).expect("suite")
             }
         }
     }
+}
+
+/// Active reference mode (env `SDLLM_REF_MODE`), for labels/banners.
+pub fn ref_mode() -> &'static str {
+    AnyBackend::env_ref_mode().name()
 }
 
 /// Method config for a (model, suite, len) cell: Streaming uses the

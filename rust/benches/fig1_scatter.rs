@@ -1,62 +1,52 @@
 //! Paper Figure 1: accuracy-vs-throughput scatter across acceleration
-//! strategies. Aggregates the saved main-table JSON (run table2 first)
-//! or recomputes a small grid, then prints the scatter series.
+//! strategies. Runs the five methods over gsm-mini and prints the
+//! scatter series with accuracy, throughput and NFE per method, saving
+//! `BENCH_fig1_scatter.json` (uploaded by CI's bench-smoke job).
+//!
+//! Under the toy reference mode every method sits at 100% accuracy and
+//! only throughput moves; under `SDLLM_REF_MODE=causal` premature
+//! commits corrupt dependent tokens, so the scatter reproduces the
+//! paper's actual quality/throughput frontier on a bare checkout.
 #[path = "common.rs"]
 mod common;
 
 use streaming_dllm::engine::Method;
-use streaming_dllm::util::json::Json;
+use streaming_dllm::util::bench::{save_rows, Cell, Row};
 
 fn main() {
-    let saved = std::path::Path::new("target/bench-results/BENCH_main_llada15-mini.json");
-    let rows: Vec<(String, Vec<(String, f64, f64)>)> = if saved.exists() {
-        let j = Json::parse(&std::fs::read_to_string(saved).unwrap()).unwrap();
-        j.as_arr()
-            .unwrap()
-            .iter()
-            .map(|r| {
-                let label = r.get("label").unwrap().as_str().unwrap().to_string();
-                let cells = r
-                    .get("cells")
-                    .unwrap()
-                    .as_arr()
-                    .unwrap()
-                    .iter()
-                    .map(|c| {
-                        (
-                            c.get("method").unwrap().as_str().unwrap().to_string(),
-                            c.get("accuracy").unwrap().as_f64().unwrap(),
-                            c.get("tokens_per_s").unwrap().as_f64().unwrap(),
-                        )
-                    })
-                    .collect();
-                (label, cells)
-            })
-            .collect()
-    } else {
-        println!("(no saved main-table results; computing a reduced grid — run table2 first)");
-        let Some(setup) = common::Setup::new() else { return };
-        let model = "llada15-mini";
-        let mrt = setup.model(model);
-        let n = common::bench_n().min(8);
-        let items = setup.suite("gsm-mini");
-        let items = &items[..n.min(items.len())];
-        let cells = Method::all()
-            .into_iter()
-            .map(|m| {
-                let res = common::run_cell(&mrt, m, model, "gsm-mini", 64, items);
-                (m.name().to_string(), res.accuracy(), res.tokens_per_sec())
-            })
-            .collect();
-        vec![("gsm-mini L=64".to_string(), cells)]
-    };
+    let Some(setup) = common::Setup::new() else { return };
+    let model = "llada15-mini";
+    let n = common::bench_n();
+    let gen_len = 64;
+    let suite = "gsm-mini";
+    let items = setup.suite(suite);
+    let items = &items[..n.min(items.len())];
 
-    println!("=== Figure 1 — accuracy vs throughput scatter ===");
-    println!("{:<28}{:<16}{:>10}{:>14}", "setting", "method", "acc(%)", "tok/s");
-    for (label, cells) in &rows {
-        for (method, acc, tps) in cells {
-            println!("{:<28}{:<16}{:>10.1}{:>14.1}", label, method, acc, tps);
-        }
+    let label = if setup.is_reference() {
+        format!("{suite} L={gen_len} [{}]", common::ref_mode())
+    } else {
+        format!("{suite} L={gen_len}")
+    };
+    println!("=== Figure 1 — accuracy vs throughput scatter ({label}) ===");
+    println!("{:<16}{:>10}{:>10}{:>14}{:>10}", "method", "acc(%)", "cot(%)", "tok/s", "NFE");
+    let mut cells: Vec<(String, Cell)> = vec![];
+    for method in Method::all() {
+        // fresh backend per method: under causal mode the emit call
+        // counter seeds guess/jitter draws, so sharing one backend
+        // would let each method's result depend on its predecessors
+        let mrt = setup.model(model);
+        let res = common::run_cell(&mrt, method, model, suite, gen_len, items);
+        let cell = res.to_cell();
+        println!(
+            "{:<16}{:>10.1}{:>10.1}{:>14.1}{:>10.1}",
+            method.name(),
+            cell.accuracy,
+            cell.cot_sim,
+            cell.tokens_per_s,
+            cell.nfe
+        );
+        cells.push((method.name().to_string(), cell));
     }
+    save_rows("fig1_scatter", &[Row { label, cells }]);
     println!("(expected: ours sits on the top-right frontier of accuracy vs throughput)");
 }

@@ -3,12 +3,21 @@
 //! mean + IQR(25–75%) of masked-token confidences at each step of the
 //! fixed-threshold decode (the paper's Fast-dLLM setting) over GSM-mini
 //! prompts — the motivation plot for the dynamic threshold.
+//!
+//! Part B sweeps the static threshold τ ∈ {1.0, 0.9, 0.7, 0.5} and
+//! reports accuracy vs NFE. Under `SDLLM_REF_MODE=causal` the curve
+//! actually bends: lower τ commits guesses whose masked predecessors
+//! make them wrong, trading accuracy for steps — the trade-off the
+//! paper's dynamic threshold (Eq. 10) navigates. Saves
+//! `BENCH_fig3_tau_sweep.json` alongside the confidence-trace CSV.
 #[path = "common.rs"]
 mod common;
 
 use std::collections::BTreeMap;
 
 use streaming_dllm::engine::{Backend, GenConfig, Generator, Method, SeqState, StepEvent};
+use streaming_dllm::eval::run_suite;
+use streaming_dllm::util::bench::{save_rows, Cell, Row};
 use streaming_dllm::util::stats::mean_iqr;
 
 fn main() {
@@ -60,4 +69,29 @@ fn main() {
     let _ = std::fs::write("target/bench-results/fig3_confidence.csv", csv);
     println!("[saved target/bench-results/fig3_confidence.csv]");
     println!("(expected: confidence rises with step in a block; later blocks start higher)");
+
+    // Part B — the accuracy/NFE trade-off as the static threshold drops.
+    let label = if setup.is_reference() {
+        format!("gsm-mini L={gen_len} fast-dllm [{}]", common::ref_mode())
+    } else {
+        format!("gsm-mini L={gen_len} fast-dllm")
+    };
+    println!("\n=== Figure 3b — τ sweep, accuracy vs NFE ({label}) ===");
+    println!("{:<10}{:>10}{:>10}{:>10}{:>14}", "tau", "acc(%)", "cot(%)", "NFE", "tok/s");
+    let mut cells: Vec<(String, Cell)> = vec![];
+    for tau in [1.0f32, 0.9, 0.7, 0.5] {
+        // fresh backend per point: call-counter state stays comparable
+        let be = setup.model(model);
+        let mut cfg = GenConfig::preset(Method::FastDllm, gen_len);
+        cfg.tau0 = tau;
+        let res = run_suite(&be, &cfg, items, None).expect("suite");
+        let cell = res.to_cell();
+        println!(
+            "{:<10.1}{:>10.1}{:>10.1}{:>10.1}{:>14.1}",
+            tau, cell.accuracy, cell.cot_sim, cell.nfe, cell.tokens_per_s
+        );
+        cells.push((format!("tau={tau:.1}"), cell));
+    }
+    save_rows("fig3_tau_sweep", &[Row { label, cells }]);
+    println!("(expected under causal mode: NFE falls and accuracy degrades as τ drops)");
 }

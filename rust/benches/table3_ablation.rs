@@ -13,6 +13,11 @@ fn main() {
     let n = common::bench_n();
     let gen_len = 128;
     println!("=== Table 3 — ablation on gsm-mini, L={gen_len} (paper: GSM8K L=512) ===");
+    if setup.is_reference() {
+        // under the causal mode the Acc. column actually responds to the
+        // ablated modules; toy mode pins it at 100 and varies NFE only
+        println!("[reference mode: {}]", common::ref_mode());
+    }
     println!(
         "{:<14}{:<6}{:<6}{:<7}{:>9}{:>13}{:>8}",
         "model", "Suf.", "Dyn.", "Exit.", "Acc.(%)", "Th.(tok/s)", "NFE"

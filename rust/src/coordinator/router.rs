@@ -17,7 +17,9 @@ use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
-use crate::engine::{Backend, GenConfig, Generator, ReferenceBackend, SeqState, REFERENCE_SEED};
+use crate::engine::{
+    Backend, GenConfig, Generator, RefMode, ReferenceBackend, SeqState, REFERENCE_SEED,
+};
 
 use super::batcher::Batcher;
 use super::metrics::Metrics;
@@ -63,11 +65,27 @@ impl RouterHandle {
         RouterHandle { tx, join: Some(join), metrics }
     }
 
-    /// Engine thread over the deterministic reference backend — serves
-    /// on a bare checkout, no artifacts or accelerator required.
+    /// Engine thread over the deterministic reference backend (toy
+    /// mode) — serves on a bare checkout, no artifacts or accelerator
+    /// required.
     pub fn spawn_reference(max_batch: usize, max_wait: Duration) -> RouterHandle {
+        RouterHandle::spawn_reference_mode(RefMode::Toy, max_batch, max_wait)
+    }
+
+    /// Engine thread over a reference backend in the given mode (the
+    /// serve-path analogue of `--ref-mode`; scripted maps to toy).
+    pub fn spawn_reference_mode(
+        mode: RefMode,
+        max_batch: usize,
+        max_wait: Duration,
+    ) -> RouterHandle {
         RouterHandle::spawn_with(
-            || Ok(ReferenceBackend::toy(REFERENCE_SEED)),
+            move || {
+                Ok(match mode {
+                    RefMode::Causal => ReferenceBackend::causal(REFERENCE_SEED),
+                    _ => ReferenceBackend::toy(REFERENCE_SEED),
+                })
+            },
             max_batch,
             max_wait,
         )

@@ -9,7 +9,7 @@
 use anyhow::Result;
 
 use super::backend::Backend;
-use super::reference::{ReferenceBackend, RefKv, REFERENCE_SEED};
+use super::reference::{RefKv, RefMode, ReferenceBackend, REFERENCE_SEED};
 use super::types::{DecodeOut, SpecialTokens};
 
 #[cfg(feature = "pjrt")]
@@ -28,9 +28,45 @@ pub enum AnyKv {
 }
 
 impl AnyBackend {
-    /// The deterministic reference model with the shared default seed.
+    /// The deterministic reference model (toy mode) with the shared
+    /// default seed.
     pub fn reference() -> AnyBackend {
         AnyBackend::Reference(ReferenceBackend::toy(REFERENCE_SEED))
+    }
+
+    /// The confidence-coupled causal reference model with the shared
+    /// default seed.
+    pub fn reference_causal() -> AnyBackend {
+        AnyBackend::Reference(ReferenceBackend::causal(REFERENCE_SEED))
+    }
+
+    /// A reference backend in the given mode (scripted maps to toy —
+    /// it is test-only and not selectable).
+    pub fn reference_with(mode: RefMode) -> AnyBackend {
+        match mode {
+            RefMode::Causal => AnyBackend::reference_causal(),
+            _ => AnyBackend::reference(),
+        }
+    }
+
+    /// The reference-mode selection every auto-selecting entry point
+    /// shares: `SDLLM_REF_MODE=toy|causal`, default toy. A set-but-
+    /// unrecognized value panics loudly rather than silently running the
+    /// toy model (which would upload a flat-100%-accuracy "frontier"
+    /// from CI with no failure anywhere).
+    pub fn env_ref_mode() -> RefMode {
+        match std::env::var("SDLLM_REF_MODE") {
+            Err(_) => RefMode::Toy,
+            Ok(s) if s.trim().is_empty() => RefMode::Toy,
+            Ok(s) => RefMode::parse(s.trim().to_lowercase().as_str()).unwrap_or_else(|| {
+                panic!("unrecognized SDLLM_REF_MODE {s:?} (expected toy|causal)")
+            }),
+        }
+    }
+
+    /// Reference backend in the env-selected mode.
+    pub fn reference_from_env() -> AnyBackend {
+        AnyBackend::reference_with(AnyBackend::env_ref_mode())
     }
 
     /// The one shared selection predicate: can this build serve `root`
@@ -52,8 +88,15 @@ impl AnyBackend {
 
     /// Pick the best available backend for `model`: the PJRT runtime
     /// when [`AnyBackend::pjrt_available`] says so; the reference model
-    /// otherwise.
+    /// (in the `SDLLM_REF_MODE` env-selected mode) otherwise.
     pub fn auto(root: &std::path::Path, model: &str) -> Result<AnyBackend> {
+        AnyBackend::auto_with(root, model, AnyBackend::env_ref_mode())
+    }
+
+    /// [`AnyBackend::auto`] with an explicit reference-mode fallback —
+    /// the single selection predicate the CLI threads `--ref-mode`
+    /// through (so the availability rule can't drift between callers).
+    pub fn auto_with(root: &std::path::Path, model: &str, mode: RefMode) -> Result<AnyBackend> {
         #[cfg(feature = "pjrt")]
         {
             if AnyBackend::pjrt_available(root) {
@@ -61,13 +104,17 @@ impl AnyBackend {
             }
         }
         let _ = (root, model);
-        Ok(AnyBackend::reference())
+        Ok(AnyBackend::reference_with(mode))
     }
 
     /// Human-readable description for banners/logs.
     pub fn describe(&self) -> &'static str {
         match self {
-            AnyBackend::Reference(_) => "reference (deterministic pure-Rust toy model)",
+            AnyBackend::Reference(b) => match b.mode {
+                RefMode::Causal => "reference (causal confidence-coupled model)",
+                RefMode::Scripted { .. } => "reference (scripted test model)",
+                RefMode::Toy => "reference (deterministic pure-Rust toy model)",
+            },
             #[cfg(feature = "pjrt")]
             AnyBackend::Pjrt(_) => "pjrt (AOT executables)",
         }
@@ -206,5 +253,20 @@ impl Backend for AnyBackend {
             #[cfg(feature = "pjrt")]
             AnyBackend::Pjrt(m) => Backend::compile_secs(m),
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reference_with_mode_selects_backend() {
+        let toy = AnyBackend::reference_with(RefMode::Toy);
+        let causal = AnyBackend::reference_with(RefMode::Causal);
+        assert_eq!(toy.describe(), "reference (deterministic pure-Rust toy model)");
+        assert_eq!(causal.describe(), "reference (causal confidence-coupled model)");
+        assert_eq!(toy.as_reference().unwrap().mode, RefMode::Toy);
+        assert_eq!(causal.as_reference().unwrap().mode, RefMode::Causal);
     }
 }

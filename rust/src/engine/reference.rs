@@ -4,7 +4,7 @@
 //! bucket/manifest contract as the PJRT runtime (bucket grids, packed
 //! (token, confidence) outputs, KV handles, p0 plumbing) but computes
 //! everything on the CPU from a seeded RNG — no artifacts, no xla, no
-//! network. Two modes:
+//! network. Three modes:
 //!
 //! - [`RefMode::Scripted`] — the original test script: content below an
 //!   absolute position boundary, EOS at and after it. Scheduler tests
@@ -15,6 +15,14 @@
 //!   to the same text. `eval::synthetic_suite` derives matching
 //!   expected answers from the same function, which gives CI benches a
 //!   meaningful accuracy axis on a bare checkout.
+//! - [`RefMode::Causal`] — the confidence-coupled model: each token is
+//!   a hash chain over the *committed* prefix, and confidence reflects
+//!   how many predecessors are still masked. Committing a low-confidence
+//!   guess early corrupts every dependent downstream token — exactly
+//!   the failure mode the paper's dynamic threshold (Eq. 10) avoids —
+//!   so the accuracy/NFE trade-off benches actually bend on a bare
+//!   checkout. Suites score against the fully-sequential chain (the
+//!   analogue of the AR teacher).
 
 use std::cell::RefCell;
 
@@ -29,16 +37,52 @@ use super::types::{detokenize_until_eos, reference_vocab, Buckets, DecodeOut, Sp
 /// agree on it so synthesized suites score against the right oracle.
 pub const REFERENCE_SEED: u64 = 0x5d11_a5ee_d001;
 
-/// Prompt tokens hashed into the row signature (toy mode).
+/// Prompt tokens hashed into the row signature (toy/causal modes).
 const SIG_WINDOW: usize = 16;
+
+/// Domain-separation salts for the causal hash chain.
+const CHAIN_SALT: u64 = 0xC4A5_A11C_4A15_0001;
+const WRONG_SALT: u64 = 0x00BA_DD1E_0000_0001;
+const GUESS_SALT: u64 = 0x6E55_0000_0000_0001;
+const CONF_SALT: u64 = 0xC0FF_1D3A_0000_0001;
+
+/// Probability that the causal model's imagined value for a still-masked
+/// predecessor matches its own chain prediction (per offset, per call) —
+/// the knob that sets how often an early parallel commit happens to be
+/// right anyway.
+const GUESS_P: f32 = 0.75;
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum RefMode {
     /// Emit `content_token` below absolute position `boundary`, EOS at
     /// and after it.
     Scripted { boundary: usize, content_token: i32 },
-    /// Prompt-signature toy model (block-causal style: wants p0).
+    /// Prompt-signature toy model: schedule-independent (every decode
+    /// path converges to the oracle text).
     Toy,
+    /// Committed-prefix hash chain with prefix-coupled confidences:
+    /// schedule-*dependent*, reproduces the accuracy/speed trade-off.
+    Causal,
+}
+
+impl RefMode {
+    pub fn name(&self) -> &'static str {
+        match self {
+            RefMode::Scripted { .. } => "scripted",
+            RefMode::Toy => "toy",
+            RefMode::Causal => "causal",
+        }
+    }
+
+    /// CLI/env selection (`--ref-mode`, `SDLLM_REF_MODE`). The scripted
+    /// mode is test-only and not selectable.
+    pub fn parse(s: &str) -> Option<RefMode> {
+        match s {
+            "toy" => Some(RefMode::Toy),
+            "causal" => Some(RefMode::Causal),
+            _ => None,
+        }
+    }
 }
 
 /// Per-kind call counters (the reference analogue of `RuntimeStats`).
@@ -49,14 +93,23 @@ pub struct RefStats {
     pub logits: u64,
 }
 
+/// Per-row prefill capture: prompt signature, prompt length, and (causal
+/// mode) the committed generation tokens the KV prefix carries, so
+/// decode can replay the hash chain up to any queried offset.
+#[derive(Debug, Clone)]
+pub struct RefRow {
+    pub sig: u64,
+    pub p0: usize,
+    pub gen_prefix: Vec<i32>,
+}
+
 /// Reference KV: remembers what prefill saw (enough for decode and for
 /// test assertions).
 pub struct RefKv {
     pub batch: usize,
     pub p_bucket: usize,
     pub valid: Vec<i32>,
-    /// per-row (signature, p0) captured at prefill time
-    rows: Vec<(u64, usize)>,
+    rows: Vec<RefRow>,
 }
 
 pub struct ReferenceBackend {
@@ -64,7 +117,8 @@ pub struct ReferenceBackend {
     pub vocab: Vec<String>,
     pub buckets: Buckets,
     pub mode: RefMode,
-    /// confidence floor; draws land in [base_conf, base_conf + 0.5]
+    /// confidence floor (scripted/toy); draws land in
+    /// [base_conf, base_conf + 0.5]
     pub base_conf: f32,
     pub conf_seed: u64,
     pub calls: RefCell<RefStats>,
@@ -79,13 +133,43 @@ fn default_buckets() -> Buckets {
     }
 }
 
-/// splitmix64 finalizer — the hash primitive behind signatures and
-/// per-position token draws.
+/// splitmix64 finalizer — the hash primitive behind signatures, chain
+/// states and per-position token draws.
 fn mix(mut x: u64) -> u64 {
     x = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
     x = (x ^ (x >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
     x = (x ^ (x >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
     x ^ (x >> 31)
+}
+
+/// Map a mixed 64-bit state to a uniform f32 in [0, 1) (top 24 bits —
+/// the same reduction `util::rng::Rng::f32` uses).
+fn uniform01(h: u64) -> f32 {
+    (h >> 40) as f32 / (1u64 << 24) as f32
+}
+
+/// Digits/letters content draw shared by the toy and causal models.
+fn content_token(h: u64) -> i32 {
+    let mut r = Rng::new(h);
+    if r.f32() < 0.75 {
+        5 + r.below(10) as i32 // digit
+    } else {
+        15 + r.below(26) as i32 // lowercase letter
+    }
+}
+
+/// Confidence of a causal prediction with `u` still-masked predecessors:
+/// certain when fully determined, else a band that decays with `u` —
+/// tuned so τ sweeps bend: τ=1.0 only ever commits determined tokens,
+/// τ≈0.9 occasionally admits single-gap guesses, lower τ admits deeper
+/// (and likelier-wrong) guesses.
+fn causal_conf(u: usize, jit: f32) -> f32 {
+    if u == 0 {
+        1.0
+    } else {
+        let center = 0.33 + 0.5 * 0.7f32.powi(u as i32 - 1);
+        (center + (jit - 0.5) * 0.3).clamp(0.05, 0.99)
+    }
 }
 
 impl ReferenceBackend {
@@ -95,9 +179,16 @@ impl ReferenceBackend {
         ReferenceBackend::with_mode(RefMode::Scripted { boundary, content_token: 10 }, 7)
     }
 
-    /// The deterministic toy model (prompt-dependent answers).
+    /// The deterministic toy model (prompt-dependent, schedule-independent
+    /// answers).
     pub fn toy(seed: u64) -> ReferenceBackend {
         ReferenceBackend::with_mode(RefMode::Toy, seed)
+    }
+
+    /// The confidence-coupled causal model (schedule-dependent answers;
+    /// premature commits corrupt dependent tokens).
+    pub fn causal(seed: u64) -> ReferenceBackend {
+        ReferenceBackend::with_mode(RefMode::Causal, seed)
     }
 
     fn with_mode(mode: RefMode, conf_seed: u64) -> ReferenceBackend {
@@ -117,8 +208,9 @@ impl ReferenceBackend {
     }
 
     /// Row signature: hash of the first `SIG_WINDOW` prompt tokens.
-    /// Depends only on the prompt (never on committed tokens), so every
-    /// decode schedule sees the same toy model.
+    /// Depends only on the prompt, so every decode schedule sees the
+    /// same model parameters (what differs in causal mode is the
+    /// *conditioning*, not the model).
     fn row_sig(&self, prompt: &[i32]) -> u64 {
         let mut h = mix(self.conf_seed ^ 0xA076_1D64_78BD_642F);
         for &t in prompt.iter().take(SIG_WINDOW) {
@@ -132,9 +224,9 @@ impl ReferenceBackend {
         4 + (sig % 13) as usize
     }
 
-    /// Deterministic token at generation offset `d` (0-based after the
+    /// Toy-mode token at generation offset `d` (0-based after the
     /// prompt): digits/letters with a ';' separator near the end, EOS
-    /// from `answer_len` on.
+    /// from `answer_len` on. A pure function of (sig, d).
     fn toy_token(&self, sig: u64, d: usize, answer_len: usize) -> i32 {
         if d >= answer_len {
             return self.special.eos;
@@ -142,26 +234,54 @@ impl ReferenceBackend {
         if d == answer_len - 3 {
             return 46; // ';' — gives extract_final a non-trivial split
         }
-        let mut r = Rng::new(mix(sig ^ (d as u64).wrapping_mul(0xD6E8_FEB8_6659_FD93)));
-        if r.f32() < 0.75 {
-            5 + r.below(10) as i32 // digit
-        } else {
-            15 + r.below(26) as i32 // lowercase letter
-        }
+        content_token(mix(sig ^ (d as u64).wrapping_mul(0xD6E8_FEB8_6659_FD93)))
     }
 
-    /// What the toy model deterministically generates for `prompt` —
-    /// the oracle `eval::synthetic_suite` scores against.
+    /// Causal-mode token emitted from chain state `h` at offset `d`.
+    /// Length and the ';' separator position stay signature-fixed (so
+    /// termination and answer extraction are schedule-independent); the
+    /// content tokens are chain-dependent.
+    fn chain_token(&self, h: u64, d: usize, answer_len: usize) -> i32 {
+        if d >= answer_len {
+            return self.special.eos;
+        }
+        if d == answer_len - 3 {
+            return 46;
+        }
+        content_token(mix(h ^ CHAIN_SALT))
+    }
+
+    /// Fold a committed (or imagined) token into the chain state.
+    fn chain_absorb(h: u64, tok: i32) -> u64 {
+        mix(h ^ (tok as u64).wrapping_add(0x1_0000))
+    }
+
+    /// What the model deterministically generates for `prompt` under a
+    /// fully-sequential schedule — the oracle `eval::synthetic_suite`
+    /// scores against. In causal mode this walks the hash chain absorbing
+    /// its own tokens (the AR-teacher analogue); aggressive schedules may
+    /// diverge from it, which is the whole point.
     pub fn oracle_text(&self, prompt: &[i32]) -> String {
         let sig = self.row_sig(prompt);
         let answer_len = Self::answer_len(sig);
-        let ids: Vec<i32> = (0..answer_len).map(|d| self.toy_token(sig, d, answer_len)).collect();
+        let ids: Vec<i32> = match self.mode {
+            RefMode::Causal => {
+                let mut h = mix(sig ^ CHAIN_SALT);
+                let mut ids = Vec::with_capacity(answer_len);
+                for d in 0..answer_len {
+                    let t = self.chain_token(h, d, answer_len);
+                    h = Self::chain_absorb(h, t);
+                    ids.push(t);
+                }
+                ids
+            }
+            _ => (0..answer_len).map(|d| self.toy_token(sig, d, answer_len)).collect(),
+        };
         detokenize_until_eos(&self.vocab, &self.special, &ids)
     }
 
-    /// Token emitted at absolute position `pos` for a row with
-    /// signature/p0 `row`.
-    fn token_at(&self, row: (u64, usize), pos: usize) -> i32 {
+    /// Token emitted at absolute position `pos` for a scripted/toy row.
+    fn token_at(&self, row: &RefRow, pos: usize) -> i32 {
         match self.mode {
             RefMode::Scripted { boundary, content_token } => {
                 if pos >= boundary {
@@ -170,55 +290,157 @@ impl ReferenceBackend {
                     content_token
                 }
             }
-            RefMode::Toy => {
-                let (sig, p0) = row;
-                let answer_len = Self::answer_len(sig);
-                self.toy_token(sig, pos.saturating_sub(p0), answer_len)
+            _ => {
+                let answer_len = Self::answer_len(row.sig);
+                self.toy_token(row.sig, pos.saturating_sub(row.p0), answer_len)
             }
         }
     }
 
+    /// Deterministic f32 in [0, 1), unique per (row, position, slot,
+    /// call): the call counter keeps draws fresh across steps, and
+    /// positions are mixed order-sensitively so permuted or partially
+    /// overlapping bundles can't collide.
+    fn jitter(&self, b: usize, pos: usize, slot: usize, call: u64) -> f32 {
+        let mut h = mix(self.conf_seed ^ CONF_SALT ^ call);
+        h = mix(h ^ b as u64);
+        h = mix(h ^ ((pos as u64) << 20) ^ slot as u64);
+        uniform01(h)
+    }
+
     fn emit(
         &self,
-        rows: &[(u64, usize)],
+        rows: &[RefRow],
+        q_tok: &[i32],
         q_pos: &[i32],
         q_valid: &[i32],
         batch: usize,
         bucket: usize,
     ) -> DecodeOut {
-        let mut rng =
-            Rng::new(self.conf_seed ^ q_pos.iter().map(|&p| p as u64).sum::<u64>());
-        let mut data = vec![0f32; batch * bucket * 2];
+        let call = {
+            let c = self.calls.borrow();
+            c.prefills + c.decodes + c.logits
+        };
+        let mut out = DecodeOut::filled(batch, bucket);
         for b in 0..batch {
+            let live = q_valid.get(b).copied().unwrap_or(bucket as i32).max(0) as usize;
+            if self.mode == RefMode::Causal {
+                self.emit_causal_row(&rows[b], q_tok, q_pos, live, call, b, bucket, &mut out);
+                continue;
+            }
             for i in 0..bucket {
-                let idx = (b * bucket + i) * 2;
+                if i >= live {
+                    out.put(b, i, self.special.pad, 0.0);
+                    continue;
+                }
                 let pos = q_pos[b * bucket + i].max(0) as usize;
-                let live = q_valid.get(b).copied().unwrap_or(bucket as i32) as usize;
-                let tok = if i < live { self.token_at(rows[b], pos) } else { self.special.pad };
-                data[idx] = tok as f32;
-                data[idx + 1] = (self.base_conf + rng.f32() * 0.5).min(1.0);
+                let tok = self.token_at(&rows[b], pos);
+                let jit = self.jitter(b, pos, i, call);
+                out.put(b, i, tok, (self.base_conf + jit * 0.5).min(1.0));
             }
         }
-        DecodeOut { data, batch, q: bucket }
+        out
     }
 
-    /// Per-row (signature, p0) for a `[batch, width]` token block.
+    /// The causal forward for one row: reconstruct which generation
+    /// offsets are visibly committed (KV prefix + committed bundle
+    /// slots), then run one rollout of the chain. Committed offsets are
+    /// absorbed as-is; masked offsets absorb the model's own prediction,
+    /// which is only right with probability `GUESS_P` per offset — so
+    /// every prediction past a masked gap is a guess, and a wrong guess
+    /// that gets committed corrupts the chain for all downstream offsets.
+    #[allow(clippy::too_many_arguments)]
+    fn emit_causal_row(
+        &self,
+        row: &RefRow,
+        q_tok: &[i32],
+        q_pos: &[i32],
+        live: usize,
+        call: u64,
+        b: usize,
+        bucket: usize,
+        out: &mut DecodeOut,
+    ) {
+        let (sig, p0) = (row.sig, row.p0);
+        let answer_len = Self::answer_len(sig);
+        let max_d = (0..live)
+            .map(|i| (q_pos[b * bucket + i].max(0) as usize).saturating_sub(p0))
+            .max()
+            .unwrap_or(0);
+        let mut committed: Vec<Option<i32>> = vec![None; max_d + 1];
+        for (j, &t) in row.gen_prefix.iter().enumerate() {
+            if j <= max_d && t != self.special.mask && t != self.special.pad {
+                committed[j] = Some(t);
+            }
+        }
+        for i in 0..live {
+            let pos = q_pos[b * bucket + i].max(0) as usize;
+            let t = q_tok[b * bucket + i];
+            if pos >= p0 && t != self.special.mask && t != self.special.pad {
+                committed[pos - p0] = Some(t);
+            }
+        }
+        let mut pred = vec![0i32; max_d + 1];
+        let mut unknown = vec![0usize; max_d + 1];
+        let mut h = mix(sig ^ CHAIN_SALT);
+        let mut u = 0usize;
+        for d in 0..=max_d {
+            pred[d] = self.chain_token(h, d, answer_len);
+            unknown[d] = u;
+            let absorbed = match committed[d] {
+                Some(t) => t,
+                None => {
+                    u += 1;
+                    let roll =
+                        uniform01(mix(self.conf_seed ^ GUESS_SALT ^ call ^ mix(sig ^ d as u64)));
+                    if roll < GUESS_P {
+                        pred[d]
+                    } else {
+                        content_token(mix(h ^ WRONG_SALT))
+                    }
+                }
+            };
+            h = Self::chain_absorb(h, absorbed);
+        }
+        for i in 0..bucket {
+            if i >= live {
+                out.put(b, i, self.special.pad, 0.0);
+                continue;
+            }
+            let pos = q_pos[b * bucket + i].max(0) as usize;
+            let d = pos.saturating_sub(p0);
+            out.put(b, i, pred[d], causal_conf(unknown[d], self.jitter(b, pos, i, call)));
+        }
+    }
+
+    /// Per-row capture for a `[batch, width]` token block.
     fn sig_rows(
         &self,
         tokens: &[i32],
         width: usize,
         batch: usize,
+        valid: &[i32],
         p0: Option<&[i32]>,
-    ) -> Result<Vec<(u64, usize)>> {
+    ) -> Result<Vec<RefRow>> {
         match self.mode {
-            RefMode::Scripted { .. } => Ok(vec![(0, 0); batch]),
-            RefMode::Toy => {
-                let p0 = p0.ok_or_else(|| anyhow!("reference toy backend needs p0"))?;
+            RefMode::Scripted { .. } => {
+                Ok((0..batch).map(|_| RefRow { sig: 0, p0: 0, gen_prefix: vec![] }).collect())
+            }
+            RefMode::Toy | RefMode::Causal => {
+                let p0 = p0
+                    .ok_or_else(|| anyhow!("reference {} backend needs p0", self.mode.name()))?;
                 let mut rows = Vec::with_capacity(batch);
                 for b in 0..batch {
                     let p0b = p0[b].max(0) as usize;
                     let row = &tokens[b * width..(b + 1) * width];
-                    rows.push((self.row_sig(&row[..p0b.min(width)]), p0b));
+                    let sig = self.row_sig(&row[..p0b.min(width)]);
+                    let gen_prefix = if self.mode == RefMode::Causal {
+                        let hi = (valid.get(b).copied().unwrap_or(0).max(0) as usize).min(width);
+                        row[p0b.min(hi)..hi].to_vec()
+                    } else {
+                        vec![]
+                    };
+                    rows.push(RefRow { sig, p0: p0b, gen_prefix });
                 }
                 Ok(rows)
             }
@@ -234,7 +456,7 @@ impl Backend for ReferenceBackend {
     }
 
     fn wants_p0(&self) -> bool {
-        matches!(self.mode, RefMode::Toy)
+        matches!(self.mode, RefMode::Toy | RefMode::Causal)
     }
 
     fn pick_batch(&self, need: usize) -> Option<usize> {
@@ -263,7 +485,7 @@ impl Backend for ReferenceBackend {
         p0: Option<&[i32]>,
     ) -> Result<RefKv> {
         self.calls.borrow_mut().prefills += 1;
-        let rows = self.sig_rows(tokens, p_bucket, batch, p0)?;
+        let rows = self.sig_rows(tokens, p_bucket, batch, valid, p0)?;
         Ok(RefKv { batch, p_bucket, valid: valid.to_vec(), rows })
     }
 
@@ -271,12 +493,12 @@ impl Backend for ReferenceBackend {
         &self,
         kv: &RefKv,
         q_bucket: usize,
-        _q_tok: &[i32],
+        q_tok: &[i32],
         q_pos: &[i32],
         q_valid: &[i32],
     ) -> Result<DecodeOut> {
         self.calls.borrow_mut().decodes += 1;
-        Ok(self.emit(&kv.rows, q_pos, q_valid, kv.batch, q_bucket))
+        Ok(self.emit(&kv.rows, q_tok, q_pos, q_valid, kv.batch, q_bucket))
     }
 
     fn logits(
@@ -289,8 +511,10 @@ impl Backend for ReferenceBackend {
         p0: Option<&[i32]>,
     ) -> Result<DecodeOut> {
         self.calls.borrow_mut().logits += 1;
-        let rows = self.sig_rows(tokens, s_bucket, batch, p0)?;
-        Ok(self.emit(&rows, pos, valid, batch, s_bucket))
+        let rows = self.sig_rows(tokens, s_bucket, batch, valid, p0)?;
+        // the full canvas doubles as the query bundle: every committed
+        // position is visible to the causal chain.
+        Ok(self.emit(&rows, tokens, pos, valid, batch, s_bucket))
     }
 
     fn detokenize(&self, ids: &[i32]) -> String {
@@ -320,6 +544,28 @@ mod tests {
         assert!(text.contains(';'), "toy answers carry a ';' split: {text:?}");
         let tail = crate::eval::extract_final(&text);
         assert_eq!(tail.chars().count(), 2);
+    }
+
+    #[test]
+    fn causal_oracle_shares_shape_with_toy_but_not_content() {
+        let toy = ReferenceBackend::toy(REFERENCE_SEED);
+        let causal = ReferenceBackend::causal(REFERENCE_SEED);
+        let prompt = [2, 20, 21, 22, 23];
+        let a = toy.oracle_text(&prompt);
+        let b = causal.oracle_text(&prompt);
+        // same signature → same length and ';' position …
+        assert_eq!(a.len(), b.len());
+        assert_eq!(a.find(';'), b.find(';'));
+        // … but the chain produces different content
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn ref_mode_parse_roundtrip() {
+        assert_eq!(RefMode::parse("toy"), Some(RefMode::Toy));
+        assert_eq!(RefMode::parse("causal"), Some(RefMode::Causal));
+        assert_eq!(RefMode::parse("scripted"), None);
+        assert_eq!(RefMode::Causal.name(), "causal");
     }
 
     #[test]
@@ -356,6 +602,58 @@ mod tests {
     }
 
     #[test]
+    fn causal_fully_visible_decode_matches_oracle() {
+        // when every predecessor is committed to its chain value, the
+        // prediction at each offset is the oracle token with conf 1.0
+        let be = ReferenceBackend::causal(REFERENCE_SEED);
+        let prompt = vec![2i32, 15, 16, 17, 18, 19];
+        let p0 = prompt.len();
+        let sig = be.row_sig(&prompt);
+        let answer_len = ReferenceBackend::answer_len(sig);
+        // commit the oracle chain into the canvas one position at a time
+        let mut canvas = vec![be.special.mask; 32];
+        for d in 0..answer_len {
+            let mut tokens = vec![0i32; 96];
+            tokens[..p0].copy_from_slice(&prompt);
+            let kv = be.prefill(1, 96, &tokens, &[0; 96], &[p0 as i32], Some(&[p0 as i32]))
+                .unwrap();
+            let q: usize = 25;
+            let mut q_tok = vec![be.special.mask; q];
+            q_tok[..canvas.len().min(q)].copy_from_slice(&canvas[..canvas.len().min(q)]);
+            let q_pos: Vec<i32> = (p0 as i32..(p0 + q) as i32).collect();
+            let out = be.decode(&kv, q, &q_tok, &q_pos, &[q as i32]).unwrap();
+            assert!(
+                (out.conf(0, d) - 1.0).abs() < 1e-6,
+                "fully-determined offset {d} must be certain"
+            );
+            canvas[d] = out.token(0, d);
+        }
+        let text = be.detokenize(&canvas);
+        assert_eq!(text, be.oracle_text(&prompt));
+    }
+
+    #[test]
+    fn causal_masked_predecessors_lower_confidence() {
+        let be = ReferenceBackend::causal(REFERENCE_SEED);
+        let prompt = vec![2i32, 15, 16, 17, 18, 19];
+        let p0 = prompt.len();
+        let mut tokens = vec![0i32; 96];
+        tokens[..p0].copy_from_slice(&prompt);
+        let kv = be.prefill(1, 96, &tokens, &[0; 96], &[p0 as i32], Some(&[p0 as i32])).unwrap();
+        let q: usize = 13;
+        let q_tok = vec![be.special.mask; q];
+        let q_pos: Vec<i32> = (p0 as i32..(p0 + q) as i32).collect();
+        let out = be.decode(&kv, q, &q_tok, &q_pos, &[q as i32]).unwrap();
+        // offset 0 is fully determined; deeper offsets are guesses
+        assert!((out.conf(0, 0) - 1.0).abs() < 1e-6);
+        for i in 1..q {
+            let c = out.conf(0, i);
+            assert!(c < 1.0, "offset {i} has masked predecessors but conf {c}");
+            assert!(c >= 0.05);
+        }
+    }
+
+    #[test]
     fn confidences_in_range() {
         let be = ReferenceBackend::scripted(24);
         let tokens = vec![2i32; 96];
@@ -368,5 +666,24 @@ mod tests {
             let c = out.conf(0, i);
             assert!((0.0..=1.0).contains(&c), "conf {c}");
         }
+    }
+
+    #[test]
+    fn confidence_draws_vary_per_row_and_step() {
+        // satellite fix: the old RNG was seeded by q_pos.sum(), making
+        // draws permutation-invariant and identical across rows/steps.
+        let be = ReferenceBackend::scripted(90);
+        let tokens = vec![2i32; 192];
+        let pos: Vec<i32> = (0..96).chain(0..96).collect();
+        let kv = be.prefill(2, 96, &tokens, &pos, &[8, 8], None).unwrap();
+        let q_tok = vec![1i32; 2 * 13];
+        let q_pos: Vec<i32> = (8..21).chain(8..21).collect();
+        let a = be.decode(&kv, 13, &q_tok, &q_pos, &[13, 13]).unwrap();
+        let b = be.decode(&kv, 13, &q_tok, &q_pos, &[13, 13]).unwrap();
+        let row0: Vec<f32> = (0..13).map(|i| a.conf(0, i)).collect();
+        let row1: Vec<f32> = (0..13).map(|i| a.conf(1, i)).collect();
+        let step2: Vec<f32> = (0..13).map(|i| b.conf(0, i)).collect();
+        assert_ne!(row0, row1, "rows must draw independent confidences");
+        assert_ne!(row0, step2, "steps must draw fresh confidences");
     }
 }

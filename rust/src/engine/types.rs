@@ -36,6 +36,19 @@ pub struct DecodeOut {
 }
 
 impl DecodeOut {
+    /// Zero-filled output of the given shape; backends fill slots via
+    /// [`DecodeOut::put`].
+    pub fn filled(batch: usize, q: usize) -> DecodeOut {
+        DecodeOut { data: vec![0.0; batch * q * 2], batch, q }
+    }
+
+    /// Write the (token, confidence) pair for slot (b, i).
+    pub fn put(&mut self, b: usize, i: usize, tok: i32, conf: f32) {
+        let idx = (b * self.q + i) * 2;
+        self.data[idx] = tok as f32;
+        self.data[idx + 1] = conf;
+    }
+
     pub fn token(&self, b: usize, i: usize) -> i32 {
         self.data[(b * self.q + i) * 2] as i32
     }
@@ -154,5 +167,14 @@ mod tests {
         assert_eq!(out.token(0, 1), 11);
         assert_eq!(out.token(1, 0), 12);
         assert!((out.conf(1, 1) - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn decode_out_put_roundtrips() {
+        let mut out = DecodeOut::filled(2, 3);
+        out.put(1, 2, 42, 0.625);
+        assert_eq!(out.token(1, 2), 42);
+        assert!((out.conf(1, 2) - 0.625).abs() < 1e-6);
+        assert_eq!(out.token(0, 0), 0);
     }
 }

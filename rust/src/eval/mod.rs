@@ -216,8 +216,12 @@ pub fn run_suite_batched<B: Backend>(
 
 /// Synthesize an eval suite from the reference backend's oracle: random
 /// prompts over the shared alphabet, expected answers computed by the
-/// exact function the toy model decodes with. Deterministic in `seed`,
-/// so CI bench runs are comparable across commits.
+/// backend's own `oracle_text`. In toy mode that is the function every
+/// decode schedule converges to; in causal mode it is the
+/// *fully-sequential* hash chain (the AR-teacher analogue), so
+/// aggressive schedules score below 100% — the paper's quality axis.
+/// Deterministic in `seed`, so CI bench runs are comparable across
+/// commits.
 pub fn synthetic_suite(be: &ReferenceBackend, n: usize, seed: u64) -> Vec<EvalItem> {
     let mut rng = Rng::new(seed ^ 0x5eed_ba5e);
     let mut items = Vec::with_capacity(n);
@@ -251,7 +255,8 @@ fn synth_n() -> usize {
 }
 
 /// The suite for a backend: reference backends synthesize from their
-/// oracle; the PJRT path loads the artifact JSONL exported by
+/// oracle (mode-matched: a causal backend yields causal-chain answers);
+/// the PJRT path loads the artifact JSONL exported by
 /// `python/compile/tasks.py`.
 #[cfg_attr(not(feature = "pjrt"), allow(unused_variables))]
 pub fn suite_for(backend: &AnyBackend, root: &Path, suite: &str) -> Result<Vec<EvalItem>> {
@@ -292,6 +297,24 @@ mod tests {
         assert!((r.accuracy() - 75.0).abs() < 1e-9);
         assert!((r.tokens_per_sec() - 20.0).abs() < 1e-9);
         assert!((r.mean_latency() - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn synthetic_suite_answers_follow_backend_mode() {
+        let toy = ReferenceBackend::toy(crate::engine::REFERENCE_SEED);
+        let causal = ReferenceBackend::causal(crate::engine::REFERENCE_SEED);
+        let a = synthetic_suite(&toy, 4, 3);
+        let b = synthetic_suite(&causal, 4, 3);
+        // same prompt stream (prompts only depend on the seed) …
+        let pa: Vec<_> = a.iter().map(|it| it.prompt.clone()).collect();
+        let pb: Vec<_> = b.iter().map(|it| it.prompt.clone()).collect();
+        assert_eq!(pa, pb);
+        // … but causal answers come from the sequential chain, not the
+        // toy function
+        assert!(
+            a.iter().zip(&b).any(|(x, y)| x.cot != y.cot),
+            "causal oracle should differ from toy"
+        );
     }
 
     #[test]

@@ -11,7 +11,7 @@ use std::time::Duration;
 use anyhow::{bail, Result};
 
 use streaming_dllm::coordinator::{RouterHandle, Server};
-use streaming_dllm::engine::{AnyBackend, Backend, GenConfig, Generator, Method, SeqState};
+use streaming_dllm::engine::{AnyBackend, Backend, GenConfig, Generator, Method, RefMode, SeqState};
 use streaming_dllm::eval::{run_suite, suite_for};
 use streaming_dllm::util::cli::Args;
 
@@ -20,6 +20,7 @@ const ABOUT: &str = "Streaming-dLLM serving framework (suffix pruning + dynamic 
 fn main() -> Result<()> {
     let args = Args::parse_env()
         .describe("backend", "model backend: reference|pjrt|auto", Some("auto"))
+        .describe("ref-mode", "reference mode: toy|causal (env: SDLLM_REF_MODE)", Some("toy"))
         .describe("artifacts", "artifacts directory", Some("artifacts"))
         .describe("model", "backbone to serve", Some("llada15-mini"))
         .describe("method", "vanilla|dkv-cache|prefix-cache|fast-dllm|streaming", Some("streaming"))
@@ -53,14 +54,27 @@ fn artifacts(args: &Args) -> std::path::PathBuf {
         .unwrap_or_else(streaming_dllm::artifacts_root)
 }
 
+/// The reference mode for this invocation: `--ref-mode` wins, then
+/// `SDLLM_REF_MODE`, then toy — normalized exactly like
+/// `AnyBackend::env_ref_mode` (trimmed, lowercased, empty = toy) so the
+/// CLI and the benches can't drift on the same value.
+fn reference_mode(args: &Args) -> Result<RefMode> {
+    let raw = args.get_env_or("ref-mode", "SDLLM_REF_MODE", "toy");
+    let s = raw.trim().to_lowercase();
+    if s.is_empty() {
+        return Ok(RefMode::Toy);
+    }
+    RefMode::parse(&s).ok_or_else(|| anyhow::anyhow!("unknown --ref-mode '{raw}' (toy|causal)"))
+}
+
 /// Build the in-process backend for one-shot commands.
 fn backend_for(args: &Args) -> Result<AnyBackend> {
     let root = artifacts(args);
     let model = args.get_or("model", "llada15-mini");
     match args.get_or("backend", "auto") {
-        "reference" => Ok(AnyBackend::reference()),
+        "reference" => Ok(AnyBackend::reference_with(reference_mode(args)?)),
         "pjrt" => pjrt_backend(&root, model),
-        "auto" => AnyBackend::auto(&root, model),
+        "auto" => AnyBackend::auto_with(&root, model, reference_mode(args)?),
         other => bail!("unknown backend '{other}' (reference|pjrt|auto)"),
     }
 }
@@ -85,13 +99,15 @@ fn router_for(args: &Args) -> Result<RouterHandle> {
     let max_batch = args.get_usize("max-batch", 4);
     let max_wait = Duration::from_millis(args.get_usize("max-wait-ms", 20) as u64);
     match args.get_or("backend", "auto") {
-        "reference" => Ok(RouterHandle::spawn_reference(max_batch, max_wait)),
+        "reference" => {
+            Ok(RouterHandle::spawn_reference_mode(reference_mode(args)?, max_batch, max_wait))
+        }
         "pjrt" => pjrt_router(root, model, max_batch, max_wait),
         "auto" => {
             if AnyBackend::pjrt_available(&root) {
                 pjrt_router(root, model, max_batch, max_wait)
             } else {
-                Ok(RouterHandle::spawn_reference(max_batch, max_wait))
+                Ok(RouterHandle::spawn_reference_mode(reference_mode(args)?, max_batch, max_wait))
             }
         }
         other => bail!("unknown backend '{other}' (reference|pjrt|auto)"),

@@ -58,6 +58,16 @@ impl Args {
         self.get(name).unwrap_or(default)
     }
 
+    /// Option value with an environment fallback: `--name` wins, then
+    /// the `env` variable, then `default` (how `--ref-mode` layers over
+    /// `SDLLM_REF_MODE`).
+    pub fn get_env_or(&self, name: &str, env: &str, default: &str) -> String {
+        match self.get(name) {
+            Some(v) => v.to_string(),
+            None => std::env::var(env).unwrap_or_else(|_| default.to_string()),
+        }
+    }
+
     pub fn get_usize(&self, name: &str, default: usize) -> usize {
         self.get(name).and_then(|s| s.parse().ok()).unwrap_or(default)
     }
@@ -136,5 +146,19 @@ mod tests {
         let a = parse(&["--fast"]);
         assert!(a.has_flag("fast"));
         assert!(a.get("fast").is_none());
+    }
+
+    #[test]
+    fn env_fallback_layers_cli_env_default() {
+        // unique env var name: tests run in parallel within one process
+        let var = "SDLLM_CLI_TEST_GET_ENV_OR";
+        std::env::remove_var(var);
+        let a = parse(&["--mode", "cli-wins"]);
+        assert_eq!(a.get_env_or("mode", var, "dflt"), "cli-wins");
+        assert_eq!(a.get_env_or("other", var, "dflt"), "dflt");
+        std::env::set_var(var, "env-wins");
+        assert_eq!(a.get_env_or("mode", var, "dflt"), "cli-wins");
+        assert_eq!(a.get_env_or("other", var, "dflt"), "env-wins");
+        std::env::remove_var(var);
     }
 }

@@ -1,0 +1,76 @@
+//! Golden-oracle regression tests: the reference oracles are pinned as
+//! literal strings so an accidental change to the hash functions, the
+//! RNG, the vocabulary layout or the signature window can't silently
+//! shift every synthesized suite's expected answers (which would make
+//! accuracy trends incomparable across commits). If one of these fails
+//! after an *intentional* oracle change, update the literals — and
+//! expect every accuracy trajectory in `BENCH_*.json` to reset.
+
+use streaming_dllm::engine::{
+    GenConfig, Generator, Method, ReferenceBackend, SeqState, REFERENCE_SEED,
+};
+use streaming_dllm::eval::{extract_final, synthetic_suite};
+
+const PROMPTS: [&[i32]; 4] = [
+    &[2, 10, 11, 12],
+    &[2, 15, 16, 17, 18, 19],
+    &[2, 20, 21, 22, 23, 24, 25],
+    &[2, 5, 6, 7, 47],
+];
+
+#[test]
+fn toy_oracle_golden_reference_seed() {
+    let be = ReferenceBackend::toy(REFERENCE_SEED);
+    let got: Vec<String> = PROMPTS.iter().map(|p| be.oracle_text(p)).collect();
+    assert_eq!(got, ["e49262x0l687;86", "673g7;18", "8;30", "x7982561372;26"]);
+}
+
+#[test]
+fn causal_oracle_golden_reference_seed() {
+    let be = ReferenceBackend::causal(REFERENCE_SEED);
+    let got: Vec<String> = PROMPTS.iter().map(|p| be.oracle_text(p)).collect();
+    assert_eq!(got, ["e48738751l89;2j", "0n565;06", "8;43", "89975729t9p;52"]);
+}
+
+#[test]
+fn oracle_golden_alt_seeds() {
+    // the seed must actually steer the oracle (catches a regression
+    // where the constructor drops or fixes the seed)
+    for (seed, toy_want, causal_want) in [
+        (1u64, "m8262z6a2a365;m3", "n6473437247s2;fw"),
+        (42u64, "799n686;10", "63734ew;62"),
+    ] {
+        assert_eq!(ReferenceBackend::toy(seed).oracle_text(PROMPTS[0]), toy_want);
+        assert_eq!(ReferenceBackend::causal(seed).oracle_text(PROMPTS[0]), causal_want);
+    }
+}
+
+#[test]
+fn synthetic_suite_first_item_golden() {
+    // pins the prompt-generation RNG stream *and* the oracle in one
+    // check: a change to either shifts every synthesized suite
+    let be = ReferenceBackend::toy(REFERENCE_SEED);
+    let items = synthetic_suite(&be, 1, 0x5eed);
+    assert_eq!(
+        items[0].prompt,
+        vec![2, 40, 33, 17, 40, 29, 8, 31, 21, 8, 15, 32, 38, 38, 24, 9, 19, 23, 47]
+    );
+    assert_eq!(items[0].cot, "m2410;9s");
+    assert_eq!(items[0].answer, "9s");
+    assert_eq!(extract_final(&items[0].cot), items[0].answer);
+}
+
+#[test]
+fn toy_decode_is_bit_identical_to_golden_oracles() {
+    // schedule independence, end to end: a streaming decode over the
+    // toy model must reproduce the pinned oracle byte for byte
+    let be = ReferenceBackend::toy(REFERENCE_SEED);
+    let golden = ["e49262x0l687;86", "673g7;18", "8;30", "x7982561372;26"];
+    for (p, want) in PROMPTS.iter().zip(golden) {
+        let cfg = GenConfig::preset(Method::Streaming, 64);
+        let generator = Generator::new(&be, cfg).unwrap();
+        let mut seqs = vec![SeqState::new(p, 64, &be.special)];
+        generator.generate(&mut seqs, None).unwrap();
+        assert_eq!(be.detokenize(seqs[0].generated()), want);
+    }
+}

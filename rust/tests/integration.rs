@@ -13,7 +13,7 @@ use std::time::Duration;
 
 use streaming_dllm::coordinator::{Client, Request, RouterHandle, Server};
 use streaming_dllm::engine::{
-    Backend, GenConfig, Generator, Method, ReferenceBackend, SeqState, REFERENCE_SEED,
+    Backend, GenConfig, Generator, Method, RefMode, ReferenceBackend, SeqState, REFERENCE_SEED,
 };
 use streaming_dllm::eval::{extract_final, run_suite, synthetic_suite};
 use streaming_dllm::runtime::{ArtifactsIndex, ExeKey, ExeKind, Manifest};
@@ -112,6 +112,66 @@ fn reference_batched_generation_matches_single() {
     generator.generate(&mut seqs, None).unwrap();
     let batched: Vec<String> = seqs.iter().map(|s| be.detokenize(s.generated())).collect();
     assert_eq!(singles, batched);
+}
+
+#[test]
+fn causal_reference_sequential_decode_matches_oracle() {
+    // one-per-step decoding only ever commits fully-determined
+    // predictions, so it replays the causal chain — the AR-teacher
+    // analogue the suite scores against
+    let be = ReferenceBackend::causal(REFERENCE_SEED);
+    let items = synthetic_suite(&be, 6, 17);
+    let res = run_suite(&be, &GenConfig::preset(Method::PrefixCache, 64), &items, None).unwrap();
+    assert!(res.accuracy() > 99.9, "sequential causal decode scored {:.1}%", res.accuracy());
+}
+
+#[test]
+fn causal_reference_aggressive_decoding_trades_accuracy_for_steps() {
+    // the headline behavior the toy mode cannot show: a low static
+    // threshold commits guessed tokens whose masked predecessors make
+    // them wrong, buying steps with accuracy
+    let oracle = ReferenceBackend::causal(REFERENCE_SEED);
+    let items = synthetic_suite(&oracle, 6, 17);
+    let mut lo_cfg = GenConfig::preset(Method::FastDllm, 64);
+    lo_cfg.tau0 = 0.5;
+    let lo = run_suite(&ReferenceBackend::causal(REFERENCE_SEED), &lo_cfg, &items, None).unwrap();
+    let hi_cfg = GenConfig::preset(Method::PrefixCache, 64);
+    let hi = run_suite(&ReferenceBackend::causal(REFERENCE_SEED), &hi_cfg, &items, None).unwrap();
+    assert!(lo.steps < hi.steps, "τ=0.5 should save steps: {} !< {}", lo.steps, hi.steps);
+    assert!(lo.accuracy() < 60.0, "τ=0.5 should corrupt rows, got {:.1}%", lo.accuracy());
+    assert!(hi.accuracy() > 99.9);
+}
+
+#[test]
+fn causal_reference_server_serves_the_causal_oracle() {
+    // the serve path must honor the reference mode: a causal-mode router
+    // decoding sequentially (prefix-cache) replays the causal chain, so
+    // served answers score against the causal suite — not the toy one
+    let oracle = ReferenceBackend::causal(REFERENCE_SEED);
+    let items = synthetic_suite(&oracle, 2, 23);
+    let router = RouterHandle::spawn_reference_mode(RefMode::Causal, 2, Duration::from_millis(5));
+    let server = Server::bind("127.0.0.1:0", router).unwrap();
+    let addr = server.local_addr().unwrap().to_string();
+    let handle = std::thread::spawn(move || server.serve_n(1));
+    let mut client = Client::connect(&addr).unwrap();
+    for (i, item) in items.iter().enumerate() {
+        let resp = client
+            .call(&Request {
+                id: i as u64,
+                prompt: item.prompt.clone(),
+                method: Method::PrefixCache,
+                gen_len: 64,
+            })
+            .unwrap();
+        assert!(resp.error.is_none(), "{:?}", resp.error);
+        assert_eq!(
+            extract_final(&resp.text),
+            item.answer,
+            "served causal text diverged from the sequential oracle"
+        );
+    }
+    drop(client);
+    handle.join().unwrap().unwrap();
 }
 
 #[test]

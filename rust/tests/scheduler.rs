@@ -4,7 +4,9 @@
 //! semantics, per-method call accounting (prefill counts for dKV vs
 //! prefix-cache), and bundle/bucket behavior.
 
-use streaming_dllm::engine::{GenConfig, Generator, Method, ReferenceBackend, SeqState};
+use streaming_dllm::engine::{
+    build_bundle, GenConfig, Generator, Method, ReferenceBackend, SeqState, SpecialTokens,
+};
 use streaming_dllm::util::prop;
 
 fn seq(backend: &ReferenceBackend, prompt_len: usize, gen_len: usize) -> SeqState {
@@ -213,6 +215,82 @@ fn remasking_terminates_and_adds_bounded_steps() {
     // revision costs extra steps, but bounded (≤ one extra pass per block)
     assert!(r_remask.steps >= r_plain.steps);
     assert!(r_remask.steps <= r_plain.steps + 64 * 2);
+}
+
+#[test]
+fn prop_bundle_invariants_under_random_geometry() {
+    // suffix::build_bundle across random p0/gen_len/block/window:
+    // positions strictly increasing (hence duplicate-free), the block
+    // prefix exact, and total length ≤ block + window + 1 (Eq. 7's
+    // Ĩ ∪ {p_L + L} bound).
+    prop::check(200, |g| {
+        let block = [2usize, 4, 8, 16][g.usize(0, 3)];
+        let n_blocks = g.usize(1, 10);
+        let gen_len = block * n_blocks;
+        let p0 = g.usize(1, 40);
+        let mut cfg = GenConfig::preset(Method::Streaming, gen_len);
+        cfg.block_size = block;
+        cfg.window = g.usize(0, 48);
+        cfg.trailing_position = g.bool(0.5);
+        let prompt: Vec<i32> = (0..p0).map(|i| 5 + (i % 36) as i32).collect();
+        let mut s = SeqState::new(&prompt, gen_len, &SpecialTokens::default());
+        s.block = g.usize(0, n_blocks - 1);
+        let b = build_bundle(&s, &cfg);
+        for w in b.positions.windows(2) {
+            if w[1] <= w[0] {
+                return Err(format!("positions not strictly increasing: {:?}", b.positions));
+            }
+        }
+        let (bs, be) = s.block_span(s.block, block);
+        if b.block_len != be - bs {
+            return Err(format!("block_len {} != span {}", b.block_len, be - bs));
+        }
+        if b.positions[..b.block_len] != (bs..be).collect::<Vec<_>>()[..] {
+            return Err("bundle does not start with the exact block".into());
+        }
+        if b.positions.len() > block + cfg.window + 1 {
+            return Err(format!(
+                "bundle len {} > block {} + window {} + 1",
+                b.positions.len(),
+                block,
+                cfg.window
+            ));
+        }
+        if *b.positions.last().unwrap() >= s.total_len() {
+            return Err("position beyond the canvas".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_bundle_prune_off_equals_full_suffix() {
+    // with pruning disabled the bundle must be the block plus the whole
+    // remaining suffix, and every pruned bundle is a subset of it
+    prop::check(120, |g| {
+        let block = [4usize, 8][g.usize(0, 1)];
+        let n_blocks = g.usize(1, 8);
+        let gen_len = block * n_blocks;
+        let p0 = g.usize(1, 24);
+        let mut pruned = GenConfig::preset(Method::Streaming, gen_len);
+        pruned.block_size = block;
+        pruned.window = g.usize(0, 32);
+        let mut full = pruned.clone();
+        full.suffix_pruning = false;
+        let prompt: Vec<i32> = (0..p0).map(|i| 5 + (i % 36) as i32).collect();
+        let mut s = SeqState::new(&prompt, gen_len, &SpecialTokens::default());
+        s.block = g.usize(0, n_blocks - 1);
+        let fb = build_bundle(&s, &full);
+        let (bs, _) = s.block_span(s.block, block);
+        if fb.positions != (bs..s.total_len()).collect::<Vec<_>>() {
+            return Err(format!("prune-off bundle is not the full suffix: {:?}", fb.positions));
+        }
+        let pb = build_bundle(&s, &pruned);
+        if !pb.positions.iter().all(|p| fb.positions.contains(p)) {
+            return Err("pruned bundle not a subset of the full bundle".into());
+        }
+        Ok(())
+    });
 }
 
 #[test]

@@ -1,0 +1,115 @@
+//! Trade-off invariants over the causal reference mode — the CI guard
+//! for the paper's central claim. Under `ReferenceBackend::causal`,
+//! token identity is a hash chain over the committed prefix and
+//! confidence reflects how many predecessors are still masked, so the
+//! accuracy/NFE frontier must actually bend:
+//!
+//! - any fully-sequential schedule reproduces the oracle exactly,
+//! - lowering the static threshold τ strictly cuts steps *and* costs
+//!   accuracy (the Fig. 3 sweep),
+//! - Streaming NFE < Fast-dLLM NFE < LLaDA one-per-step NFE.
+//!
+//! Everything here is deterministic (seeded hashes, no wall clock), so
+//! these are exact regression tests, not statistical ones.
+
+use streaming_dllm::engine::{GenConfig, Method, ReferenceBackend, REFERENCE_SEED};
+use streaming_dllm::eval::{run_suite, synthetic_suite, EvalItem, SuiteResult};
+
+const N: usize = 24;
+const SUITE_SEED: u64 = 0xF163;
+
+fn suite() -> Vec<EvalItem> {
+    synthetic_suite(&ReferenceBackend::causal(REFERENCE_SEED), N, SUITE_SEED)
+}
+
+/// One suite run on a fresh causal backend (fresh call counters keep
+/// runs independent and reproducible).
+fn run(method: Method, tau0: Option<f32>, items: &[EvalItem]) -> SuiteResult {
+    let be = ReferenceBackend::causal(REFERENCE_SEED);
+    let mut cfg = GenConfig::preset(method, 64);
+    if let Some(t) = tau0 {
+        cfg.tau0 = t;
+    }
+    run_suite(&be, &cfg, items, None).unwrap()
+}
+
+#[test]
+fn sequential_schedules_match_the_causal_oracle() {
+    // one-committed-token-per-step schedules only ever predict with a
+    // fully-determined prefix → they replay the oracle chain exactly
+    let items = suite();
+    for method in [Method::Vanilla, Method::PrefixCache, Method::DkvCache] {
+        let res = run(method, None, &items);
+        assert!(
+            res.accuracy() > 99.9,
+            "{} scored {:.1}% against the sequential oracle",
+            method.name(),
+            res.accuracy()
+        );
+    }
+    // τ0 = 1.0: only certainty-1.0 (fully-determined) predictions commit
+    let res = run(Method::FastDllm, Some(1.0), &items);
+    assert!(res.accuracy() > 99.9, "fast-dllm τ=1.0 scored {:.1}%", res.accuracy());
+}
+
+#[test]
+fn accuracy_monotone_in_threshold() {
+    let items = suite();
+    let hi = run(Method::FastDllm, Some(1.0), &items);
+    let lo = run(Method::FastDllm, Some(0.5), &items);
+    assert!(
+        hi.accuracy() >= lo.accuracy(),
+        "accuracy must not improve as τ drops: {:.1} vs {:.1}",
+        hi.accuracy(),
+        lo.accuracy()
+    );
+    assert!(
+        lo.accuracy() <= hi.accuracy() - 20.0,
+        "curve failed to bend: τ=1.0 {:.1}% vs τ=0.5 {:.1}%",
+        hi.accuracy(),
+        lo.accuracy()
+    );
+    assert!(lo.steps < hi.steps, "lower τ must also pay fewer steps");
+}
+
+#[test]
+fn nfe_orders_streaming_below_fast_dllm_below_one_per_step() {
+    let items = suite();
+    let llada = run(Method::PrefixCache, None, &items); // one-per-step
+    let fast = run(Method::FastDllm, None, &items); // static τ0 = 0.9
+    let streaming = run(Method::Streaming, None, &items);
+    assert!(
+        streaming.steps < fast.steps,
+        "streaming {} !< fast-dllm {}",
+        streaming.steps,
+        fast.steps
+    );
+    assert!(fast.steps < llada.steps, "fast-dllm {} !< llada {}", fast.steps, llada.steps);
+    // the speedup is not free under the causal model — streaming pays
+    // some accuracy (the trade-off), but never everything
+    assert!(streaming.accuracy() < 99.9);
+    assert!(streaming.accuracy() > 0.0);
+}
+
+#[test]
+fn tau_sweep_bends_the_curve() {
+    // the Fig. 3b sweep: strictly fewer steps AND measurably lower
+    // accuracy toward the low-τ end
+    let items = suite();
+    let sweep: Vec<SuiteResult> =
+        [1.0f32, 0.9, 0.7, 0.5].iter().map(|&t| run(Method::FastDllm, Some(t), &items)).collect();
+    for w in sweep.windows(2) {
+        assert!(
+            w[1].steps < w[0].steps,
+            "steps must strictly drop as τ drops: {} !< {}",
+            w[1].steps,
+            w[0].steps
+        );
+    }
+    assert!(sweep[0].accuracy() > 99.9);
+    assert!(
+        sweep[3].accuracy() < 50.0,
+        "τ=0.5 should corrupt most rows, got {:.1}%",
+        sweep[3].accuracy()
+    );
+}
