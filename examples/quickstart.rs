@@ -27,7 +27,7 @@ fn main() -> Result<()> {
 
     for method in [Method::Vanilla, Method::Streaming] {
         let cfg = GenConfig::preset(method, 64);
-        let generator = Generator::new(&backend, cfg.clone())?;
+        let mut generator = Generator::new(&backend, cfg.clone())?;
         println!("\n== {} (L={}, K={}) ==", method.name(), cfg.gen_len, cfg.block_size);
         let mut correct = 0;
         let mut wall = 0.0;

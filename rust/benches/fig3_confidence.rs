@@ -33,7 +33,7 @@ fn main() {
     // (block, step) -> confidences of still-masked tokens
     let mut traces: BTreeMap<(usize, usize), Vec<f64>> = BTreeMap::new();
     let cfg = GenConfig::preset(Method::FastDllm, gen_len);
-    let generator = Generator::new(&mrt, cfg.clone()).expect("generator");
+    let mut generator = Generator::new(&mrt, cfg.clone()).expect("generator");
     for item in items {
         let mut hook = |ev: StepEvent| {
             traces

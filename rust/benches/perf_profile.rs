@@ -63,19 +63,25 @@ fn main() {
     // -------- end-to-end breakdown -------------------------------------
     println!("\n=== end-to-end breakdown (streaming, gsm-mini L=64, 8 samples) ===");
     let cfg = GenConfig::preset(Method::Streaming, 64);
-    let generator = Generator::new(&be, cfg.clone()).expect("gen");
+    let mut generator = Generator::new(&be, cfg.clone()).expect("gen");
     let special = be.special();
     let compile_before = be.compile_secs();
     let t0 = Instant::now();
     let mut steps = 0u64;
     let mut prefills = 0u64;
     let mut tokens = 0u64;
+    let mut prefill_s = 0.0;
+    let mut decode_s = 0.0;
+    let mut host_s = 0.0;
     for item in items.iter().take(8) {
         let mut seqs = vec![SeqState::new(&item.prompt, 64, &special)];
         let report = generator.generate(&mut seqs, None).expect("generate");
         steps += report.steps;
         prefills += report.prefills;
         tokens += report.non_eos_tokens;
+        prefill_s += report.prefill_secs;
+        decode_s += report.decode_secs;
+        host_s += report.host_secs;
     }
     let wall = t0.elapsed().as_secs_f64();
     let compile = be.compile_secs() - compile_before;
@@ -85,6 +91,18 @@ fn main() {
     println!("prefills            : {prefills:>8}");
     println!("non-EOS tokens      : {tokens:>8}");
     println!("throughput          : {:>8.1} tok/s", tokens as f64 / (wall - compile).max(1e-9));
+    println!("\n--- per-phase breakdown (GenReport timers) ---");
+    let share = |s: f64| 100.0 * s / wall.max(1e-9);
+    println!("prefill (backend)   : {:>8.3}s ({:>5.1}%)", prefill_s, share(prefill_s));
+    println!("decode  (backend)   : {:>8.3}s ({:>5.1}%)", decode_s, share(decode_s));
+    println!("host (scheduling)   : {:>8.3}s ({:>5.1}%)", host_s, share(host_s));
+    let ws = generator.workspace_stats();
+    println!(
+        "workspace           : {} buffer grows / {} steps ({:.4} allocs-per-step proxy)",
+        ws.grows,
+        ws.steps,
+        ws.grows as f64 / ws.steps.max(1) as f64
+    );
     println!("\n(per-call model costs above vs this wall give the scheduling share;");
     println!(" L3 target: rust scheduling < 10% of wall on the PJRT backend)");
 }

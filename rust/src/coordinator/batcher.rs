@@ -60,32 +60,42 @@ impl Batcher {
         self.queues.iter().map(|(_, q)| q.len()).sum()
     }
 
+    /// Whether group `q` is ready to run at `now`: a full batch is
+    /// available, or its oldest member exceeded max_wait.
+    fn is_ready(&self, q: &VecDeque<Pending>, now: Instant) -> bool {
+        q.len() >= self.max_batch
+            || q.front()
+                .map(|p| now.duration_since(p.arrived) >= self.max_wait)
+                .unwrap_or(false)
+    }
+
+    /// Whether any group is ready to run right now (the router uses
+    /// this to avoid sleeping while work is already runnable).
+    pub fn has_ready(&self, now: Instant) -> bool {
+        self.queues.iter().any(|(_, q)| self.is_ready(q, now))
+    }
+
     /// Pop the next batch to run, if any group is ready. Ready = full
-    /// batch available, or oldest member exceeded max_wait (then take
-    /// whatever the group has, up to max_batch).
+    /// batch available (immediately), or oldest member exceeded
+    /// max_wait (then take whatever the group has, up to max_batch).
+    ///
+    /// Fairness: among ready groups, the one whose *front request*
+    /// arrived earliest wins. Full groups don't jump ahead of an older
+    /// timed-out group — that is what bounds cross-group starvation: a
+    /// waiting group's front only gets older, so it eventually beats
+    /// any hot group whose front is constantly refreshed by admission.
     pub fn pop_ready(&mut self, now: Instant) -> Option<(GroupKey, Vec<Request>)> {
-        // full groups first (throughput), then timed-out groups (latency)
-        let mut chosen: Option<usize> = None;
+        let mut oldest: Option<(usize, Instant)> = None;
         for (i, (_, q)) in self.queues.iter().enumerate() {
-            if q.len() >= self.max_batch {
-                chosen = Some(i);
-                break;
+            if !self.is_ready(q, now) {
+                continue;
+            }
+            let front = q.front().expect("ready queue has a front").arrived;
+            if oldest.map(|(_, t)| front < t).unwrap_or(true) {
+                oldest = Some((i, front));
             }
         }
-        if chosen.is_none() {
-            let mut oldest: Option<(usize, Instant)> = None;
-            for (i, (_, q)) in self.queues.iter().enumerate() {
-                if let Some(front) = q.front() {
-                    if now.duration_since(front.arrived) >= self.max_wait
-                        && oldest.map(|(_, t)| front.arrived < t).unwrap_or(true)
-                    {
-                        oldest = Some((i, front.arrived));
-                    }
-                }
-            }
-            chosen = oldest.map(|(i, _)| i);
-        }
-        let i = chosen?;
+        let i = oldest.map(|(i, _)| i)?;
         let (key, q) = &mut self.queues[i];
         let key = *key;
         let n = q.len().min(self.max_batch);
@@ -94,6 +104,33 @@ impl Batcher {
             self.queues.remove(i);
         }
         Some((key, batch))
+    }
+
+    /// Pop the single oldest waiting request of exactly this group —
+    /// the router uses this to fill freed engine slots mid-flight
+    /// (joining a running batch is always better than waiting, so
+    /// readiness rules don't apply).
+    pub fn pop_compatible(&mut self, key: GroupKey) -> Option<Request> {
+        let i = self.queues.iter().position(|(k, _)| *k == key)?;
+        let req = self.queues[i].1.pop_front().map(|p| p.req);
+        if self.queues[i].1.is_empty() {
+            self.queues.remove(i);
+        }
+        req
+    }
+
+    /// Whether any *other* group's front request has outlived
+    /// `max_wait`. The router stops admitting mid-flight joins into a
+    /// running batch when this turns true, letting the engine drain so
+    /// the starving group can be scheduled — a steady stream of
+    /// compatible requests must not keep one engine alive forever.
+    pub fn starving_other(&self, key: GroupKey, now: Instant) -> bool {
+        self.queues.iter().any(|(k, q)| {
+            *k != key
+                && q.front()
+                    .map(|p| now.duration_since(p.arrived) >= self.max_wait)
+                    .unwrap_or(false)
+        })
     }
 
     /// Time until the next queue would time out (router uses this as its
@@ -152,6 +189,59 @@ mod tests {
         let later = t + Duration::from_millis(11);
         let (_, batch) = b.pop_ready(later).unwrap();
         assert_eq!(batch.len(), 1);
+    }
+
+    #[test]
+    fn full_group_with_oldest_front_wins() {
+        // regression: two full groups; the one queued *second* has the
+        // older front request and must flush first (previously the
+        // insertion-ordered scan always picked the first full group)
+        let mut b = Batcher::new(2, Duration::from_secs(60));
+        let t = Instant::now();
+        b.push_at(req(1, Method::Streaming, 64), t + Duration::from_millis(5));
+        b.push_at(req(2, Method::Vanilla, 64), t); // older front, later queue
+        b.push_at(req(3, Method::Streaming, 64), t + Duration::from_millis(6));
+        b.push_at(req(4, Method::Vanilla, 64), t + Duration::from_millis(7));
+        let (key, batch) = b.pop_ready(t + Duration::from_millis(8)).unwrap();
+        assert_eq!(key.method, Method::Vanilla, "oldest full group must flush first");
+        assert_eq!(batch[0].id, 2);
+        let (key2, _) = b.pop_ready(t + Duration::from_millis(8)).unwrap();
+        assert_eq!(key2.method, Method::Streaming);
+    }
+
+    #[test]
+    fn pop_compatible_takes_only_matching_group() {
+        let mut b = Batcher::new(8, Duration::from_secs(60));
+        let t = Instant::now();
+        b.push_at(req(1, Method::Streaming, 64), t);
+        b.push_at(req(2, Method::Vanilla, 64), t);
+        b.push_at(req(3, Method::Streaming, 64), t);
+        let key = GroupKey { method: Method::Streaming, gen_len: 64 };
+        assert_eq!(b.pop_compatible(key).unwrap().id, 1);
+        assert_eq!(b.pop_compatible(key).unwrap().id, 3);
+        assert!(b.pop_compatible(key).is_none());
+        assert_eq!(b.pending(), 1); // the vanilla request stays queued
+        assert!(b
+            .pop_compatible(GroupKey { method: Method::Streaming, gen_len: 128 })
+            .is_none());
+    }
+
+    #[test]
+    fn starving_other_ignores_own_group_and_fresh_waiters() {
+        let mut b = Batcher::new(4, Duration::from_millis(10));
+        let t = Instant::now();
+        let streaming = GroupKey { method: Method::Streaming, gen_len: 64 };
+        b.push_at(req(1, Method::Streaming, 64), t);
+        // own group aging never counts as starvation
+        assert!(!b.starving_other(streaming, t + Duration::from_millis(50)));
+        b.push_at(req(2, Method::Vanilla, 64), t + Duration::from_millis(5));
+        // the vanilla waiter is fresh …
+        assert!(!b.starving_other(streaming, t + Duration::from_millis(10)));
+        // … and starving once it outlives max_wait
+        assert!(b.starving_other(streaming, t + Duration::from_millis(20)));
+        // from vanilla's perspective the aged streaming front starves too
+        let vanilla = GroupKey { method: Method::Vanilla, gen_len: 64 };
+        assert!(b.starving_other(vanilla, t + Duration::from_millis(20)));
     }
 
     #[test]

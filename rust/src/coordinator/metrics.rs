@@ -6,6 +6,7 @@
 use std::sync::Mutex;
 use std::time::Instant;
 
+use crate::engine::GenReport;
 use crate::util::json::Json;
 use crate::util::stats::Samples;
 
@@ -19,6 +20,18 @@ struct Inner {
     latency: Samples,
     queue_delay: Samples,
     started: Option<Instant>,
+    /// requests admitted into a batch already mid-flight (continuous
+    /// batching joins, as opposed to batch-start admissions)
+    joins: u64,
+    /// block rounds driven across all retired engines
+    engine_rounds: u64,
+    engine_steps: u64,
+    engine_prefills: u64,
+    engine_blocks_skipped: u64,
+    /// per-phase engine seconds (prefill / decode / host-gather)
+    prefill_secs: f64,
+    decode_secs: f64,
+    host_secs: f64,
 }
 
 #[derive(Debug, Default)]
@@ -42,6 +55,25 @@ impl Metrics {
         let mut m = self.inner.lock().unwrap();
         m.batches += 1;
         m.batch_sizes.push(size);
+    }
+
+    /// A request joined an already-running batch between block rounds.
+    pub fn record_join(&self) {
+        let mut m = self.inner.lock().unwrap();
+        m.joins += 1;
+    }
+
+    /// Fold a retired engine's cumulative report into the serving
+    /// totals (per-phase seconds, steps, prefills, skipped blocks).
+    pub fn record_engine(&self, report: &GenReport, rounds: u64) {
+        let mut m = self.inner.lock().unwrap();
+        m.engine_rounds += rounds;
+        m.engine_steps += report.steps;
+        m.engine_prefills += report.prefills;
+        m.engine_blocks_skipped += report.blocks_skipped;
+        m.prefill_secs += report.prefill_secs;
+        m.decode_secs += report.decode_secs;
+        m.host_secs += report.host_secs;
     }
 
     pub fn record_response(&self, ok: bool, tokens: usize, latency_s: f64, queue_s: f64) {
@@ -81,6 +113,14 @@ impl Metrics {
             ("latency_p95_s", Json::Num(p95)),
             ("latency_p99_s", Json::Num(p99)),
             ("queue_delay_mean_s", Json::Num(qmean)),
+            ("joins", Json::Num(m.joins as f64)),
+            ("engine_rounds", Json::Num(m.engine_rounds as f64)),
+            ("engine_steps", Json::Num(m.engine_steps as f64)),
+            ("engine_prefills", Json::Num(m.engine_prefills as f64)),
+            ("engine_blocks_skipped", Json::Num(m.engine_blocks_skipped as f64)),
+            ("prefill_s", Json::Num(m.prefill_secs)),
+            ("decode_s", Json::Num(m.decode_secs)),
+            ("host_s", Json::Num(m.host_secs)),
         ])
     }
 }
@@ -104,5 +144,30 @@ mod tests {
         assert_eq!(s.get("non_eos_tokens").unwrap().as_usize(), Some(100));
         assert!(s.get("latency_p95_s").unwrap().as_f64().unwrap() >= 0.9);
         assert_eq!(s.get("mean_batch_size").unwrap().as_f64(), Some(4.0));
+    }
+
+    #[test]
+    fn joins_and_engine_phases_accumulate() {
+        let m = Metrics::new();
+        m.record_join();
+        m.record_join();
+        let report = GenReport {
+            steps: 40,
+            prefills: 8,
+            blocks_skipped: 3,
+            prefill_secs: 0.25,
+            decode_secs: 0.5,
+            host_secs: 0.125,
+            ..Default::default()
+        };
+        m.record_engine(&report, 8);
+        m.record_engine(&report, 8);
+        let s = m.snapshot();
+        assert_eq!(s.get("joins").unwrap().as_usize(), Some(2));
+        assert_eq!(s.get("engine_rounds").unwrap().as_usize(), Some(16));
+        assert_eq!(s.get("engine_steps").unwrap().as_usize(), Some(80));
+        assert_eq!(s.get("engine_blocks_skipped").unwrap().as_usize(), Some(6));
+        assert!((s.get("prefill_s").unwrap().as_f64().unwrap() - 0.5).abs() < 1e-9);
+        assert!((s.get("host_s").unwrap().as_f64().unwrap() - 0.25).abs() < 1e-9);
     }
 }

@@ -1,27 +1,32 @@
 //! Router: the engine thread. Model backends are generally not `Send`
 //! (PJRT handles wrap raw pointers), so one dedicated thread *builds*
 //! and owns the backend; everything else talks to it through a channel
-//! of jobs. The router runs the admission loop: drain the inbox into
-//! the `Batcher`, pop ready batches, decode them with the `Generator`,
-//! and reply per request.
+//! of jobs.
+//!
+//! The admission loop is *continuous at block granularity*: ready
+//! batches from the `Batcher` start a slot-based [`BatchEngine`], and
+//! between block rounds the loop admits compatible queued requests into
+//! slots freed by finished or early-exited rows — a request that
+//! arrives while a batch is decoding joins it mid-flight instead of
+//! waiting for the full drain. Finished rows are answered the moment
+//! their own decode completes.
 //!
 //! Construction is a factory closure executed on the engine thread
 //! (`spawn_with`), with two conveniences: `spawn_reference` (pure-Rust
 //! backend, always available) and `spawn` (PJRT artifacts, behind the
 //! `pjrt` feature).
 
-use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::collections::HashMap;
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender, TryRecvError};
 use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
-use crate::engine::{
-    Backend, GenConfig, Generator, RefMode, ReferenceBackend, SeqState, REFERENCE_SEED,
-};
+use crate::engine::{Backend, BatchEngine, GenConfig, RefMode, ReferenceBackend, REFERENCE_SEED};
 
-use super::batcher::Batcher;
+use super::batcher::{Batcher, GroupKey};
 use super::metrics::Metrics;
 use super::request::{Request, Response};
 
@@ -159,6 +164,34 @@ impl Drop for RouterHandle {
     }
 }
 
+/// The in-flight engine plus per-request admission times (for queue /
+/// latency accounting).
+struct EngineRun<'b, B: Backend> {
+    key: GroupKey,
+    engine: BatchEngine<'b, B>,
+    admitted: HashMap<u64, Instant>,
+}
+
+/// Answer a request with an error and account for it.
+fn fail(
+    replies: &mut HashMap<u64, (Sender<Response>, Instant)>,
+    metrics: &Metrics,
+    id: u64,
+    err: &str,
+) {
+    if let Some((tx, _)) = replies.remove(&id) {
+        metrics.record_response(false, 0, 0.0, 0.0);
+        let _ = tx.send(Response {
+            id,
+            text: String::new(),
+            non_eos_tokens: 0,
+            latency_s: 0.0,
+            queue_s: 0.0,
+            error: Some(err.to_string()),
+        });
+    }
+}
+
 fn engine_loop<B: Backend>(
     backend: &B,
     max_batch: usize,
@@ -168,103 +201,175 @@ fn engine_loop<B: Backend>(
 ) -> Result<()> {
     metrics.start_clock();
 
-    let mut batcher = Batcher::new(max_batch, max_wait);
-    let mut replies: std::collections::HashMap<u64, (Sender<Response>, Instant)> =
-        std::collections::HashMap::new();
+    // Clamp the serving batch to what the backend's batch buckets carry
+    // up front, so the batcher never hands an engine more rows than it
+    // has slots (keeps record_batch and the joins metric honest).
+    let engine_cap = crate::engine::clamp_batch(backend, max_batch);
+    let mut batcher = Batcher::new(engine_cap, max_wait);
+    let mut replies: HashMap<u64, (Sender<Response>, Instant)> = HashMap::new();
     let mut shutdown = false;
+    let mut active: Option<EngineRun<'_, B>> = None;
 
     loop {
-        // Drain inbox (bounded wait so timed-out groups flush).
-        let timeout = batcher
-            .next_deadline(Instant::now())
-            .unwrap_or(Duration::from_millis(50));
-        match rx.recv_timeout(timeout) {
-            Ok(Msg::Submit(job)) => {
-                replies.insert(job.request.id, (job.reply, job.arrived));
-                batcher.push_at(job.request, job.arrived);
-                // opportunistically drain whatever else is queued
-                while let Ok(msg) = rx.try_recv() {
-                    match msg {
-                        Msg::Submit(j) => {
-                            replies.insert(j.request.id, (j.reply, j.arrived));
-                            batcher.push_at(j.request, j.arrived);
-                        }
-                        Msg::Shutdown => shutdown = true,
+        // Drain the inbox. With an engine mid-flight we must not block —
+        // decode keeps moving and new arrivals join at the next block
+        // boundary; when idle, wait out the batcher's flush deadline.
+        if active.is_some() {
+            loop {
+                match rx.try_recv() {
+                    Ok(Msg::Submit(job)) => {
+                        replies.insert(job.request.id, (job.reply, job.arrived));
+                        batcher.push_at(job.request, job.arrived);
+                    }
+                    Ok(Msg::Shutdown) => shutdown = true,
+                    Err(TryRecvError::Empty) => break,
+                    Err(TryRecvError::Disconnected) => {
+                        shutdown = true;
+                        break;
                     }
                 }
             }
-            Ok(Msg::Shutdown) => shutdown = true,
-            Err(RecvTimeoutError::Timeout) => {}
-            Err(RecvTimeoutError::Disconnected) => shutdown = true,
+        } else {
+            // A group can already be runnable (full, or flushed by a
+            // deadline that passed while the last engine was busy) —
+            // never sleep on the inbox in that case.
+            let now = Instant::now();
+            let timeout = if batcher.has_ready(now) {
+                Duration::ZERO
+            } else {
+                batcher.next_deadline(now).unwrap_or(Duration::from_millis(50))
+            };
+            match rx.recv_timeout(timeout) {
+                Ok(Msg::Submit(job)) => {
+                    replies.insert(job.request.id, (job.reply, job.arrived));
+                    batcher.push_at(job.request, job.arrived);
+                    // opportunistically drain whatever else is queued
+                    while let Ok(msg) = rx.try_recv() {
+                        match msg {
+                            Msg::Submit(j) => {
+                                replies.insert(j.request.id, (j.reply, j.arrived));
+                                batcher.push_at(j.request, j.arrived);
+                            }
+                            Msg::Shutdown => shutdown = true,
+                        }
+                    }
+                }
+                Ok(Msg::Shutdown) => shutdown = true,
+                Err(RecvTimeoutError::Timeout) => {}
+                Err(RecvTimeoutError::Disconnected) => shutdown = true,
+            }
         }
 
-        while let Some((key, batch)) = batcher.pop_ready(Instant::now()) {
-            metrics.record_batch(batch.len());
-            let t0 = Instant::now();
-            let cfg = GenConfig::preset(key.method, key.gen_len);
-            let result = run_batch(backend, &cfg, &batch, t0);
-            match result {
-                Ok(responses) => {
-                    for resp in responses {
-                        if let Some((tx, arrived)) = replies.remove(&resp.id) {
-                            let queue_s = t0.duration_since(arrived).as_secs_f64();
-                            let resp = Response { queue_s, ..resp };
-                            metrics.record_response(
-                                resp.error.is_none(),
-                                resp.non_eos_tokens,
-                                resp.latency_s,
+        // Start an engine when idle and a group is ready.
+        if active.is_none() {
+            if let Some((key, batch)) = batcher.pop_ready(Instant::now()) {
+                metrics.record_batch(batch.len());
+                let cfg = GenConfig::preset(key.method, key.gen_len);
+                match BatchEngine::new(backend, cfg, engine_cap) {
+                    Ok(engine) => {
+                        let mut run = EngineRun { key, engine, admitted: HashMap::new() };
+                        let now = Instant::now();
+                        for req in batch {
+                            if !run.engine.fits(req.prompt.len()) {
+                                // fail the oversized request alone — its
+                                // batchmates keep decoding
+                                fail(
+                                    &mut replies,
+                                    &metrics,
+                                    req.id,
+                                    "prompt exceeds backend buckets",
+                                );
+                            } else if run.engine.admit(req.id, &req.prompt) {
+                                run.admitted.insert(req.id, now);
+                            } else {
+                                // defensive: the batcher flush size is
+                                // clamped to engine capacity, but if the
+                                // two ever drift, requeue (original
+                                // arrival preserved) — the overflow joins
+                                // as rows finish and free slots
+                                let arrived = replies
+                                    .get(&req.id)
+                                    .map(|(_, a)| *a)
+                                    .unwrap_or_else(Instant::now);
+                                batcher.push_at(req, arrived);
+                            }
+                        }
+                        active = Some(run);
+                    }
+                    Err(e) => {
+                        let msg = format!("{e:#}");
+                        for req in &batch {
+                            fail(&mut replies, &metrics, req.id, &msg);
+                        }
+                    }
+                }
+            }
+        }
+
+        // Admit compatible waiters into free slots, run one block
+        // round, answer whoever finished. Joins pause the moment some
+        // *other* group's front request outlives max_wait: the engine
+        // then drains naturally and the starving group gets scheduled —
+        // a hot compatible stream can't keep one engine alive forever.
+        let mut retire = false;
+        if let Some(run) = active.as_mut() {
+            let now = Instant::now();
+            while run.engine.has_free_slot() && !batcher.starving_other(run.key, now) {
+                let Some(req) = batcher.pop_compatible(run.key) else { break };
+                if !run.engine.fits(req.prompt.len()) {
+                    // oversized joiner: fail it alone, keep admitting —
+                    // it must not poison the rows already mid-decode
+                    fail(&mut replies, &metrics, req.id, "prompt exceeds backend buckets");
+                    continue;
+                }
+                if run.engine.admit(req.id, &req.prompt) {
+                    run.admitted.insert(req.id, Instant::now());
+                    metrics.record_join();
+                } else {
+                    fail(&mut replies, &metrics, req.id, "engine slots exhausted");
+                }
+            }
+            match run.engine.step_block() {
+                Ok(done) => {
+                    let now = Instant::now();
+                    for f in done {
+                        let started = run.admitted.remove(&f.tag);
+                        if let Some((tx, arrived)) = replies.remove(&f.tag) {
+                            let started = started.unwrap_or(arrived);
+                            let queue_s = started.duration_since(arrived).as_secs_f64();
+                            let latency_s = now.duration_since(started).as_secs_f64();
+                            let resp = Response {
+                                id: f.tag,
+                                text: backend.detokenize(f.seq.generated()),
+                                non_eos_tokens: f.seq.non_eos_tokens(),
+                                latency_s,
                                 queue_s,
-                            );
+                                error: None,
+                            };
+                            metrics.record_response(true, resp.non_eos_tokens, latency_s, queue_s);
                             let _ = tx.send(resp);
                         }
                     }
+                    retire = run.engine.active() == 0;
                 }
                 Err(e) => {
-                    for req in &batch {
-                        if let Some((tx, _)) = replies.remove(&req.id) {
-                            metrics.record_response(false, 0, 0.0, 0.0);
-                            let _ = tx.send(Response {
-                                id: req.id,
-                                text: String::new(),
-                                non_eos_tokens: 0,
-                                latency_s: 0.0,
-                                queue_s: 0.0,
-                                error: Some(format!("{e:#}")),
-                            });
-                        }
+                    // engine poisoned: fail every row still inside
+                    let msg = format!("{e:#}");
+                    for (id, _) in run.admitted.drain() {
+                        fail(&mut replies, &metrics, id, &msg);
                     }
+                    retire = true;
                 }
             }
         }
+        if retire {
+            if let Some(run) = active.take() {
+                metrics.record_engine(run.engine.report(), run.engine.rounds());
+            }
+        }
 
-        if shutdown && batcher.pending() == 0 {
+        if shutdown && active.is_none() && batcher.pending() == 0 {
             return Ok(());
         }
     }
-}
-
-fn run_batch<B: Backend>(
-    backend: &B,
-    cfg: &GenConfig,
-    batch: &[Request],
-    t0: Instant,
-) -> Result<Vec<Response>> {
-    let generator = Generator::new(backend, cfg.clone())?;
-    let special = backend.special();
-    let mut seqs: Vec<SeqState> =
-        batch.iter().map(|r| SeqState::new(&r.prompt, cfg.gen_len, &special)).collect();
-    generator.generate(&mut seqs, None)?;
-    let latency = t0.elapsed().as_secs_f64();
-    Ok(batch
-        .iter()
-        .zip(seqs.iter())
-        .map(|(req, seq)| Response {
-            id: req.id,
-            text: backend.detokenize(seq.generated()),
-            non_eos_tokens: seq.non_eos_tokens(),
-            latency_s: latency,
-            queue_s: 0.0,
-            error: None,
-        })
-        .collect())
 }

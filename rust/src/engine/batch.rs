@@ -1,0 +1,335 @@
+//! `BatchEngine`: slot-based continuous batching over the shared
+//! zero-allocation decode core.
+//!
+//! Where [`super::Generator::generate`] runs one fixed batch to
+//! completion, the engine exposes a *resumable* `step_block` API: each
+//! call decodes exactly one block round for every live row (each at its
+//! own block cursor) and returns the rows that finished. Between
+//! rounds, the router admits compatible queued requests into freed
+//! slots — a request that arrives while a batch is mid-flight starts
+//! decoding at the next block boundary instead of waiting for the full
+//! drain. That turns the serving stack from batch-at-a-time into
+//! streaming admission at block granularity (the dLLM analogue of
+//! vLLM-style continuous batching; decode is block-synchronous, so
+//! blocks are the natural admission points).
+//!
+//! Rows live in a dense vec (finished rows are swap-removed when
+//! harvested), so the batch bucket shrinks as rows retire; padding up
+//! to the bucket is done with inert buffer rows, never decoded.
+
+use std::time::Instant;
+
+use anyhow::{bail, Result};
+
+use super::backend::Backend;
+use super::config::{GenConfig, Method};
+use super::generator::{GenReport, WorkspaceStats};
+use super::sequence::SeqState;
+use super::workspace::{run_block_round, run_vanilla, RowsMut, StepWorkspace};
+
+/// A sequence that completed inside the engine, tagged with the id it
+/// was admitted under.
+#[derive(Debug)]
+pub struct Finished {
+    pub tag: u64,
+    pub seq: SeqState,
+}
+
+/// Largest concurrent batch the backend's bucket grid can carry, capped
+/// at `want` — shared by `BatchEngine::new` and the router so the
+/// batcher's flush size and the engine's slot count can't drift apart.
+pub fn clamp_batch<B: Backend>(rt: &B, want: usize) -> usize {
+    let mut cap = want.max(1);
+    while cap > 1 && rt.pick_batch(cap).is_none() {
+        cap -= 1;
+    }
+    cap
+}
+
+pub struct BatchEngine<'a, B: Backend> {
+    rt: &'a B,
+    cfg: GenConfig,
+    capacity: usize,
+    rows: Vec<SeqState>,
+    tags: Vec<u64>,
+    ws: StepWorkspace,
+    report: GenReport,
+    rounds: u64,
+}
+
+impl<'a, B: Backend> BatchEngine<'a, B> {
+    /// An empty engine with room for `capacity` concurrent rows
+    /// (clamped to the backend's largest batch bucket).
+    pub fn new(rt: &'a B, cfg: GenConfig, capacity: usize) -> Result<BatchEngine<'a, B>> {
+        if let Err(e) = cfg.validate() {
+            bail!("invalid GenConfig: {e}");
+        }
+        let cap = clamp_batch(rt, capacity);
+        if rt.pick_batch(cap).is_none() {
+            bail!("backend exposes no batch bucket");
+        }
+        Ok(BatchEngine {
+            rt,
+            cfg,
+            capacity: cap,
+            rows: Vec::new(),
+            tags: Vec::new(),
+            ws: StepWorkspace::new(),
+            report: GenReport::default(),
+            rounds: 0,
+        })
+    }
+
+    pub fn config(&self) -> &GenConfig {
+        &self.cfg
+    }
+
+    /// Live rows currently decoding.
+    pub fn active(&self) -> usize {
+        self.rows.len()
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn has_free_slot(&self) -> bool {
+        self.rows.len() < self.capacity
+    }
+
+    /// Cumulative engine totals (steps, prefills, skipped blocks,
+    /// per-phase seconds) across every row served so far.
+    pub fn report(&self) -> &GenReport {
+        &self.report
+    }
+
+    /// Block rounds driven so far.
+    pub fn rounds(&self) -> u64 {
+        self.rounds
+    }
+
+    pub fn workspace_stats(&self) -> WorkspaceStats {
+        WorkspaceStats { grows: self.ws.grows, steps: self.ws.steps }
+    }
+
+    /// Whether a prompt of this length can decode under the backend's
+    /// bucket grids: the worst-case prefix (prompt + all decoded
+    /// blocks) must fit a prefix bucket, and the vanilla full-forward
+    /// path needs the whole canvas inside a seq bucket. The router
+    /// checks this before admitting so one oversized request is failed
+    /// alone instead of poisoning every in-flight row of the batch.
+    pub fn fits(&self, prompt_len: usize) -> bool {
+        let k = self.cfg.block_size;
+        let worst_prefix = prompt_len + self.cfg.n_blocks().saturating_sub(1) * k;
+        if self.rt.pick_prefix(worst_prefix.max(1)).is_none() {
+            return false;
+        }
+        self.cfg.method != Method::Vanilla
+            || self.rt.pick_seq(prompt_len + self.cfg.gen_len).is_some()
+    }
+
+    /// Claim a free slot for a new request. Returns false when the
+    /// engine is full or the prompt cannot fit the backend's buckets
+    /// (see [`BatchEngine::fits`]); the row otherwise joins at the next
+    /// block round, starting from its own block 0 regardless of where
+    /// the incumbent rows are.
+    pub fn admit(&mut self, tag: u64, prompt: &[i32]) -> bool {
+        if self.rows.len() >= self.capacity || !self.fits(prompt.len()) {
+            return false;
+        }
+        let special = self.rt.special();
+        let mut s = SeqState::new(prompt, self.cfg.gen_len, &special);
+        s.init_block_counts(self.cfg.block_size);
+        self.rows.push(s);
+        self.tags.push(tag);
+        true
+    }
+
+    /// Run one block round for every live row and harvest the rows that
+    /// finished (by early exit or by running out of blocks). A no-op
+    /// returning no rows when the engine is idle.
+    ///
+    /// For the vanilla method (no block structure to resume across)
+    /// this degenerates to running the current rows to completion in
+    /// one call; admission then happens between full runs.
+    pub fn step_block(&mut self) -> Result<Vec<Finished>> {
+        let mut done = Vec::new();
+        if self.rows.is_empty() {
+            return Ok(done);
+        }
+        let t0 = Instant::now();
+        let batch = self
+            .rt
+            .pick_batch(self.rows.len())
+            .ok_or_else(|| anyhow::anyhow!("batch {} exceeds buckets", self.rows.len()))?;
+        {
+            let mut hook: Option<&mut dyn FnMut(super::generator::StepEvent)> = None;
+            let mut rows = RowsMut { real: &mut self.rows, pad: &mut [] };
+            match self.cfg.method {
+                Method::Vanilla => run_vanilla(
+                    self.rt,
+                    &self.cfg,
+                    &mut self.ws,
+                    &mut rows,
+                    batch,
+                    &mut self.report,
+                    &mut hook,
+                )?,
+                _ => run_block_round(
+                    self.rt,
+                    &self.cfg,
+                    &mut self.ws,
+                    &mut rows,
+                    batch,
+                    &mut self.report,
+                    &mut hook,
+                )?,
+            }
+        }
+        self.rounds += 1;
+
+        let mut i = 0;
+        while i < self.rows.len() {
+            if self.rows[i].finished {
+                let seq = self.rows.swap_remove(i);
+                let tag = self.tags.swap_remove(i);
+                self.report.non_eos_tokens += seq.non_eos_tokens() as u64;
+                done.push(Finished { tag, seq });
+            } else {
+                i += 1;
+            }
+        }
+        self.report.wall_secs += t0.elapsed().as_secs_f64();
+        self.report.finish_phases();
+        Ok(done)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use std::collections::HashMap;
+
+    use super::*;
+    use crate::engine::{Generator, ReferenceBackend, REFERENCE_SEED};
+
+    fn prompt(i: i32) -> Vec<i32> {
+        vec![2, 20 + i, 21, 22, 23, 47]
+    }
+
+    fn drain(engine: &mut BatchEngine<ReferenceBackend>) -> HashMap<u64, String> {
+        let mut out = HashMap::new();
+        let mut guard = 0;
+        while engine.active() > 0 {
+            guard += 1;
+            assert!(guard < 1000, "engine failed to drain");
+            for f in engine.step_block().unwrap() {
+                out.insert(f.tag, engine_text(&f.seq));
+            }
+        }
+        out
+    }
+
+    fn engine_text(seq: &SeqState) -> String {
+        ReferenceBackend::toy(REFERENCE_SEED).detokenize(seq.generated())
+    }
+
+    #[test]
+    fn empty_engine_steps_are_noops() {
+        let be = ReferenceBackend::toy(REFERENCE_SEED);
+        let cfg = GenConfig::preset(Method::Streaming, 64);
+        let mut engine = BatchEngine::new(&be, cfg, 4).unwrap();
+        assert_eq!(engine.active(), 0);
+        assert!(engine.step_block().unwrap().is_empty());
+        assert_eq!(engine.rounds(), 0);
+    }
+
+    #[test]
+    fn capacity_clamps_to_batch_buckets() {
+        let be = ReferenceBackend::toy(REFERENCE_SEED);
+        let cfg = GenConfig::preset(Method::Streaming, 64);
+        // reference buckets top out at 4
+        let engine = BatchEngine::new(&be, cfg, 64).unwrap();
+        assert_eq!(engine.capacity(), 4);
+        assert!(engine.has_free_slot());
+    }
+
+    #[test]
+    fn fits_rejects_prompts_beyond_prefix_buckets() {
+        // reference prefix buckets top out at 1056; gen 64 / block 8
+        // leaves 56 worst-case decoded-prefix tokens on top of the
+        // prompt, so 1000 fits exactly and 1001 does not
+        let be = ReferenceBackend::toy(REFERENCE_SEED);
+        let cfg = GenConfig::preset(Method::Streaming, 64);
+        let mut engine = BatchEngine::new(&be, cfg, 4).unwrap();
+        assert!(engine.fits(1000));
+        assert!(!engine.fits(1001));
+        let long = vec![2i32; 1001];
+        assert!(!engine.admit(9, &long), "oversized prompt must be rejected at admit");
+        assert_eq!(engine.active(), 0);
+    }
+
+    #[test]
+    fn admit_rejects_when_full() {
+        let be = ReferenceBackend::toy(REFERENCE_SEED);
+        let cfg = GenConfig::preset(Method::Streaming, 64);
+        let mut engine = BatchEngine::new(&be, cfg, 2).unwrap();
+        assert!(engine.admit(1, &prompt(0)));
+        assert!(engine.admit(2, &prompt(1)));
+        assert!(!engine.admit(3, &prompt(2)));
+        assert_eq!(engine.active(), 2);
+    }
+
+    #[test]
+    fn engine_matches_generator_for_a_static_batch() {
+        // toy mode is schedule-independent: slot decoding must converge
+        // to the same text as the batch generator
+        let be = ReferenceBackend::toy(REFERENCE_SEED);
+        let cfg = GenConfig::preset(Method::Streaming, 64);
+        let mut engine = BatchEngine::new(&be, cfg.clone(), 4).unwrap();
+        for i in 0..3 {
+            assert!(engine.admit(i as u64, &prompt(i)));
+        }
+        let texts = drain(&mut engine);
+        assert!(engine.report().steps > 0);
+
+        let be2 = ReferenceBackend::toy(REFERENCE_SEED);
+        let mut generator = Generator::new(&be2, cfg).unwrap();
+        for i in 0..3 {
+            let mut seqs = vec![SeqState::new(&prompt(i), 64, &be2.special)];
+            generator.generate(&mut seqs, None).unwrap();
+            assert_eq!(texts[&(i as u64)], be2.detokenize(seqs[0].generated()), "row {i}");
+        }
+    }
+
+    #[test]
+    fn mid_flight_join_preserves_row_output() {
+        // rows join the running batch at block boundaries (each decoding
+        // alone for at least one round first); every row's text must
+        // still equal its solo decode. PrefixCache decodes one token per
+        // step with no early exit, so rows reliably overlap mid-flight.
+        let be = ReferenceBackend::toy(REFERENCE_SEED);
+        let cfg = GenConfig::preset(Method::PrefixCache, 64);
+        let mut engine = BatchEngine::new(&be, cfg.clone(), 4).unwrap();
+        let mut texts = HashMap::new();
+        assert!(engine.admit(0, &prompt(0)));
+        for f in engine.step_block().unwrap() {
+            texts.insert(f.tag, engine_text(&f.seq));
+        }
+        assert!(engine.admit(1, &prompt(1)));
+        for f in engine.step_block().unwrap() {
+            texts.insert(f.tag, engine_text(&f.seq));
+        }
+        assert!(engine.admit(2, &prompt(2)));
+        assert_eq!(engine.active(), 3, "joined rows should overlap mid-flight");
+        texts.extend(drain(&mut engine));
+        assert_eq!(texts.len(), 3);
+
+        let be2 = ReferenceBackend::toy(REFERENCE_SEED);
+        let mut generator = Generator::new(&be2, cfg).unwrap();
+        for i in 0..3 {
+            let mut seqs = vec![SeqState::new(&prompt(i), 64, &be2.special)];
+            generator.generate(&mut seqs, None).unwrap();
+            assert_eq!(texts[&(i as u64)], be2.detokenize(seqs[0].generated()), "row {i}");
+        }
+    }
+}

@@ -9,6 +9,7 @@
 
 pub mod any;
 pub mod backend;
+pub mod batch;
 pub mod config;
 pub mod generator;
 pub mod policy;
@@ -16,13 +17,16 @@ pub mod reference;
 pub mod sequence;
 pub mod suffix;
 pub mod types;
+pub mod workspace;
 
 pub use any::{AnyBackend, AnyKv};
 pub use backend::Backend;
+pub use batch::{clamp_batch, BatchEngine, Finished};
 pub use config::{table12_config, GenConfig, Method};
-pub use generator::{GenReport, Generator, StepEvent};
-pub use policy::{select, Candidate, Selection};
+pub use generator::{GenReport, Generator, StepEvent, WorkspaceStats};
+pub use policy::{select, select_into, Candidate, Selection};
 pub use reference::{RefKv, RefMode, RefStats, ReferenceBackend, REFERENCE_SEED};
 pub use sequence::SeqState;
-pub use suffix::{build_bundle, bundle_tokens, Bundle};
+pub use suffix::{build_bundle, build_bundle_into, bundle_tokens, Bundle};
 pub use types::{detokenize_until_eos, pick_bucket, Buckets, DecodeOut, SpecialTokens};
+pub use workspace::StepWorkspace;

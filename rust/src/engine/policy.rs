@@ -28,31 +28,37 @@ pub enum Selection {
     Threshold(f32),
 }
 
-/// Returns the indices (into `cands`) to commit. Invariants (pinned by
-/// property tests):
+/// Writes the indices (into `cands`) to commit into `out`, reusing its
+/// allocation — the zero-allocation form the decode hot path uses.
+/// Invariants (pinned by property tests):
 /// - never empty when `cands` is non-empty (progress guarantee)
 /// - threshold mode: every candidate with conf ≥ τ is selected
 /// - one-per-step: exactly one, the argmax by confidence
-pub fn select(policy: Selection, cands: &[Candidate]) -> Vec<usize> {
+pub fn select_into(policy: Selection, cands: &[Candidate], out: &mut Vec<usize>) {
+    out.clear();
     if cands.is_empty() {
-        return vec![];
+        return;
     }
     match policy {
-        Selection::OnePerStep => vec![argmax(cands)],
+        Selection::OnePerStep => out.push(argmax(cands)),
         Selection::Threshold(tau) => {
-            let picked: Vec<usize> = cands
-                .iter()
-                .enumerate()
-                .filter(|(_, c)| c.conf >= tau)
-                .map(|(i, _)| i)
-                .collect();
-            if picked.is_empty() {
-                vec![argmax(cands)]
-            } else {
-                picked
+            for (i, c) in cands.iter().enumerate() {
+                if c.conf >= tau {
+                    out.push(i);
+                }
+            }
+            if out.is_empty() {
+                out.push(argmax(cands));
             }
         }
     }
+}
+
+/// Allocating convenience wrapper over [`select_into`].
+pub fn select(policy: Selection, cands: &[Candidate]) -> Vec<usize> {
+    let mut out = Vec::new();
+    select_into(policy, cands, &mut out);
+    out
 }
 
 fn argmax(cands: &[Candidate]) -> usize {
@@ -90,6 +96,16 @@ mod tests {
     fn threshold_fallback_to_best() {
         let cands = [cand(0, 0.1), cand(1, 0.4), cand(2, 0.3)];
         assert_eq!(select(Selection::Threshold(0.9), &cands), vec![1]);
+    }
+
+    #[test]
+    fn select_into_clears_previous_contents() {
+        let mut out = vec![99, 98, 97];
+        let cands = [cand(0, 0.95), cand(1, 0.5)];
+        select_into(Selection::Threshold(0.9), &cands, &mut out);
+        assert_eq!(out, vec![0]);
+        select_into(Selection::OnePerStep, &[], &mut out);
+        assert!(out.is_empty());
     }
 
     #[test]

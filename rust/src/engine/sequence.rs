@@ -24,6 +24,13 @@ pub struct SeqState {
     pub remasked: Vec<bool>,
     mask_id: i32,
     eos_id: i32,
+    /// block size the masked-count cache is keyed to (0 = uninitialized)
+    counts_block: usize,
+    /// per-block count of still-masked generation positions, maintained
+    /// incrementally by commit/remask/EOS-fill once initialized — the
+    /// O(1) backing for `block_done` / `mask_ratio` on the decode hot
+    /// path (the scan fallback still covers ad-hoc block sizes)
+    masked_counts: Vec<u32>,
 }
 
 impl SeqState {
@@ -42,6 +49,73 @@ impl SeqState {
             remasked: vec![false; gen_len],
             mask_id: special.mask,
             eos_id: special.eos,
+            counts_block: 0,
+            masked_counts: Vec::new(),
+        }
+    }
+
+    /// Re-initialize in place to the state `SeqState::new(prompt,
+    /// gen_len, special)` would produce, reusing the existing
+    /// allocations — the generator recycles its padding rows through
+    /// this instead of constructing fresh ones every call.
+    pub fn reset(&mut self, prompt: &[i32], gen_len: usize, special: &SpecialTokens) {
+        self.tokens.clear();
+        self.tokens.extend_from_slice(prompt);
+        self.tokens.resize(prompt.len() + gen_len, special.mask);
+        self.p0 = prompt.len();
+        self.gen_len = gen_len;
+        self.block = 0;
+        self.finished = false;
+        self.steps = 0;
+        self.commit_conf.clear();
+        self.commit_conf.resize(gen_len, 1.0);
+        self.remasked.clear();
+        self.remasked.resize(gen_len, false);
+        self.mask_id = special.mask;
+        self.eos_id = special.eos;
+        self.counts_block = 0;
+        self.masked_counts.clear();
+    }
+
+    /// Initialize (or re-key) the per-block masked-count cache for
+    /// `block_size`: one scan now, O(1) `block_done`/`mask_ratio`
+    /// afterwards. Idempotent for the same block size.
+    pub fn init_block_counts(&mut self, block_size: usize) {
+        debug_assert!(block_size > 0);
+        if self.counts_block == block_size {
+            return;
+        }
+        let n_blocks = self.gen_len.div_ceil(block_size).max(1);
+        self.masked_counts.clear();
+        self.masked_counts.resize(n_blocks, 0);
+        for i in self.p0..self.total_len() {
+            if self.tokens[i] == self.mask_id {
+                self.masked_counts[(i - self.p0) / block_size] += 1;
+            }
+        }
+        self.counts_block = block_size;
+    }
+
+    /// Cache slot for an absolute position, when the cache is live.
+    fn count_block_of(&self, abs: usize) -> Option<usize> {
+        if self.counts_block == 0 || abs < self.p0 {
+            return None;
+        }
+        let b = (abs - self.p0) / self.counts_block;
+        (b < self.masked_counts.len()).then_some(b)
+    }
+
+    /// Still-masked positions in block `b` — O(1) when the count cache
+    /// is keyed to `block_size`, a span scan otherwise.
+    pub fn masked_count_in(&self, b: usize, block_size: usize) -> usize {
+        if self.counts_block == block_size {
+            self.masked_counts.get(b).copied().unwrap_or(0) as usize
+        } else {
+            let (s, e) = self.block_span(b, block_size);
+            if e <= s {
+                return 0;
+            }
+            (s..e).filter(|&i| self.is_masked(i)).count()
         }
     }
 
@@ -74,15 +148,14 @@ impl SeqState {
     /// Fraction of the current block still masked (r_mask of Eq. 10).
     pub fn mask_ratio(&self, block_size: usize) -> f32 {
         let (s, e) = self.block_span(self.block, block_size);
-        if e == s {
+        if e <= s {
             return 0.0;
         }
-        let masked = (s..e).filter(|&i| self.is_masked(i)).count();
-        masked as f32 / (e - s) as f32
+        self.masked_count_in(self.block, block_size) as f32 / (e - s) as f32
     }
 
     pub fn block_done(&self, block_size: usize) -> bool {
-        self.masked_in_block(block_size).is_empty()
+        self.masked_count_in(self.block, block_size) == 0
     }
 
     pub fn commit(&mut self, abs: usize, token: i32) {
@@ -92,8 +165,14 @@ impl SeqState {
     pub fn commit_with_conf(&mut self, abs: usize, token: i32, conf: f32) {
         debug_assert!(self.is_masked(abs), "double commit at {abs}");
         debug_assert!(abs >= self.p0, "commit into prompt at {abs}");
+        let was_masked = self.tokens[abs] == self.mask_id;
         self.tokens[abs] = token;
         self.commit_conf[abs - self.p0] = conf;
+        if was_masked && token != self.mask_id {
+            if let Some(b) = self.count_block_of(abs) {
+                self.masked_counts[b] -= 1;
+            }
+        }
     }
 
     /// ReMDM-style revision: re-mask committed low-confidence tokens in
@@ -111,6 +190,9 @@ impl SeqState {
             {
                 self.tokens[i] = self.mask_id;
                 self.remasked[g] = true;
+                if let Some(b) = self.count_block_of(i) {
+                    self.masked_counts[b] += 1;
+                }
                 n += 1;
             }
         }
@@ -133,6 +215,9 @@ impl SeqState {
                 for j in i + 1..e {
                     if self.is_masked(j) {
                         self.tokens[j] = self.eos_id;
+                        if let Some(b) = self.count_block_of(j) {
+                            self.masked_counts[b] -= 1;
+                        }
                     }
                 }
                 return true;
@@ -156,6 +241,7 @@ impl SeqState {
                 self.tokens[i] = self.eos_id;
             }
         }
+        self.masked_counts.fill(0);
         self.finished = true;
     }
 
@@ -250,6 +336,74 @@ mod tests {
         s.commit(0, 42);
         s.commit(1, 3);
         assert_eq!(s.non_eos_tokens(), 1);
+    }
+
+    #[test]
+    fn block_counts_track_commits_and_remasks() {
+        let mut s = seq(5, 16);
+        s.init_block_counts(8);
+        assert_eq!(s.masked_count_in(0, 8), 8);
+        assert_eq!(s.masked_count_in(1, 8), 8);
+        s.commit_with_conf(5, 42, 0.3);
+        s.commit_with_conf(6, 43, 0.9);
+        assert_eq!(s.masked_count_in(0, 8), 6);
+        assert!((s.mask_ratio(8) - 0.75).abs() < 1e-6);
+        // remasking puts the position back
+        assert_eq!(s.remask_low_confidence(8, 0.5), 1);
+        assert_eq!(s.masked_count_in(0, 8), 7);
+        // cached and scanned counts agree at every step
+        assert_eq!(s.masked_count_in(0, 8), s.masked_in_block(8).len());
+    }
+
+    #[test]
+    fn block_counts_survive_eos_fill_paths() {
+        let mut s = seq(0, 16);
+        s.init_block_counts(8);
+        for i in 0..3 {
+            s.commit(i, 42);
+        }
+        s.commit(3, 3); // EOS
+        assert!(s.early_exit_scan(8));
+        assert_eq!(s.masked_count_in(0, 8), 0);
+        assert!(s.block_done(8));
+        s.finish_with_eos();
+        assert_eq!(s.masked_count_in(1, 8), 0);
+    }
+
+    #[test]
+    fn block_counts_fall_back_for_other_block_sizes() {
+        let mut s = seq(5, 16);
+        s.init_block_counts(8);
+        s.commit(5, 42);
+        // queries at a different block size scan instead of reading the
+        // 8-keyed cache
+        assert_eq!(s.masked_count_in(0, 4), 3);
+        assert_eq!(s.masked_count_in(1, 4), 4);
+        // re-keying rebuilds from the canvas
+        s.init_block_counts(4);
+        assert_eq!(s.masked_count_in(0, 4), 3);
+    }
+
+    #[test]
+    fn reset_matches_fresh_state() {
+        let mut s = seq(5, 16);
+        s.init_block_counts(8);
+        s.commit(5, 42);
+        s.block = 1;
+        s.steps = 9;
+        s.finish_with_eos();
+        let prompt: Vec<i32> = (30..34).collect();
+        s.reset(&prompt, 8, &special());
+        let fresh = SeqState::new(&prompt, 8, &special());
+        assert_eq!(s.tokens, fresh.tokens);
+        assert_eq!(s.p0, fresh.p0);
+        assert_eq!(s.gen_len, fresh.gen_len);
+        assert_eq!(s.block, 0);
+        assert!(!s.finished);
+        assert_eq!(s.steps, 0);
+        assert_eq!(s.commit_conf, fresh.commit_conf);
+        assert_eq!(s.remasked, fresh.remasked);
+        assert_eq!(s.masked_count_in(0, 8), 8);
     }
 
     #[test]

@@ -15,33 +15,50 @@ use super::sequence::SeqState;
 /// positions, in the order they are fed to the decode executable
 /// (current block first — the policy layer indexes commits by bundle
 /// slot j < K).
-#[derive(Debug, Clone, PartialEq, Eq)]
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
 pub struct Bundle {
     pub positions: Vec<usize>,
     /// how many leading slots belong to the current block
     pub block_len: usize,
 }
 
-/// Build the bundle per the active method:
+impl Bundle {
+    /// Drop all positions (an inert bundle for finished/waiting rows)
+    /// without releasing the backing allocation.
+    pub fn clear(&mut self) {
+        self.positions.clear();
+        self.block_len = 0;
+    }
+}
+
+/// Build the bundle per the active method, reusing `out`'s allocation
+/// (the decode hot path calls this every step for every row):
 /// - suffix pruning on  → current block + w-token window + trailing pos
 /// - suffix pruning off → current block + the entire remaining suffix
-pub fn build_bundle(seq: &SeqState, cfg: &GenConfig) -> Bundle {
+pub fn build_bundle_into(seq: &SeqState, cfg: &GenConfig, out: &mut Bundle) {
     let (bs, be) = seq.block_span(seq.block, cfg.block_size);
     let end = seq.total_len();
-    let mut positions: Vec<usize> = (bs..be).collect();
-    let block_len = positions.len();
+    out.positions.clear();
+    out.positions.extend(bs..be);
+    out.block_len = out.positions.len();
 
     if cfg.suffix_pruning {
         let win_end = (be + cfg.window).min(end);
-        positions.extend(be..win_end);
+        out.positions.extend(be..win_end);
         if cfg.trailing_position && win_end < end {
             // Ĩ ∪ {p_L + L}: keep the final position id (Eq. 7)
-            positions.push(end - 1);
+            out.positions.push(end - 1);
         }
     } else {
-        positions.extend(be..end);
+        out.positions.extend(be..end);
     }
-    Bundle { positions, block_len }
+}
+
+/// Allocating convenience wrapper over [`build_bundle_into`].
+pub fn build_bundle(seq: &SeqState, cfg: &GenConfig) -> Bundle {
+    let mut out = Bundle::default();
+    build_bundle_into(seq, cfg, &mut out);
+    out
 }
 
 /// Gather bundle tokens from the sequence canvas (suffix positions are
@@ -125,6 +142,21 @@ mod tests {
         let b = build_bundle(&s, &c);
         assert_eq!(b.positions.len(), 64); // whole generation region
         assert_eq!(b.positions, (10..74).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn build_into_reuses_and_matches_allocating_path() {
+        let mut s = seq(10, 64);
+        let c = streaming(64, 16);
+        let mut reused = Bundle::default();
+        for blk in 0..8 {
+            s.block = blk;
+            build_bundle_into(&s, &c, &mut reused);
+            assert_eq!(reused, build_bundle(&s, &c), "block {blk}");
+        }
+        reused.clear();
+        assert!(reused.positions.is_empty());
+        assert_eq!(reused.block_len, 0);
     }
 
     #[test]

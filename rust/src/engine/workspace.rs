@@ -1,0 +1,528 @@
+//! The zero-allocation decode core.
+//!
+//! `StepWorkspace` is a scratch arena threaded through every decode
+//! step: padded host buffers (prefill `tokens`/`pos`/`valid`/`p0`,
+//! decode `q_tok`/`q_pos`/`q_valid`), per-row query bundles and the
+//! candidate/selection scratch are all reused across steps, blocks and
+//! whole `generate` calls — after warmup the per-step hot path performs
+//! no heap allocation. On the reference backend, where host overhead
+//! dominates wall time, this is the difference the `host_overhead`
+//! bench measures.
+//!
+//! The block-round functions here are the shared engine between
+//! [`crate::engine::Generator`] (batch-at-a-time, seed-compatible
+//! schedule) and [`crate::engine::BatchEngine`] (slot-based streaming
+//! admission): one prefill per row-block, then decode steps until every
+//! live row's *own* current block is complete, then per-row cursor
+//! advance with early exit. Rows carry their block cursor themselves
+//! (`SeqState::block`), so rows at different blocks coexist in one
+//! batch — that is what lets the router admit requests mid-flight.
+
+use std::time::Instant;
+
+use anyhow::{bail, Result};
+
+use super::backend::Backend;
+use super::config::{GenConfig, Method};
+use super::generator::{GenReport, StepEvent};
+use super::policy::{select_into, Candidate, Selection};
+use super::sequence::SeqState;
+use super::suffix::{build_bundle_into, Bundle};
+
+/// Reusable per-step scratch. All buffers grow monotonically to the
+/// high-water mark of the workload and are reset (not reallocated) each
+/// use; `grows`/`steps` expose an allocations-per-step proxy for the
+/// `host_overhead` bench.
+#[derive(Debug, Default)]
+pub struct StepWorkspace {
+    // prefill / vanilla host buffers
+    tokens: Vec<i32>,
+    pos: Vec<i32>,
+    valid: Vec<i32>,
+    p0s: Vec<i32>,
+    // decode host buffers
+    q_tok: Vec<i32>,
+    q_pos: Vec<i32>,
+    q_valid: Vec<i32>,
+    // per-row query bundles (position vecs reused across steps)
+    bundles: Vec<Bundle>,
+    // candidate + selection scratch
+    cands: Vec<Candidate>,
+    picked: Vec<usize>,
+    /// buffer-growth events (capacity misses) since construction
+    pub grows: u64,
+    /// decode/logits steps driven through this workspace
+    pub steps: u64,
+}
+
+impl StepWorkspace {
+    pub fn new() -> StepWorkspace {
+        StepWorkspace::default()
+    }
+}
+
+/// Reset `buf` to `len` elements of `fill`, reporting whether the
+/// backing allocation had to grow (the allocs-per-step signal).
+fn reset_i32(buf: &mut Vec<i32>, len: usize, fill: i32) -> bool {
+    let grew = buf.capacity() < len;
+    buf.clear();
+    buf.resize(len, fill);
+    grew
+}
+
+/// A batch of decode rows: the caller's live sequences plus the
+/// generator's recycled padding rows, addressed by one flat row index
+/// (real rows first). `BatchEngine` passes an empty pad slice and lets
+/// the buffer-fill code pad with inert rows instead.
+pub(crate) struct RowsMut<'a> {
+    pub real: &'a mut [SeqState],
+    pub pad: &'a mut [SeqState],
+}
+
+impl RowsMut<'_> {
+    pub fn len(&self) -> usize {
+        self.real.len() + self.pad.len()
+    }
+
+    pub fn is_real(&self, b: usize) -> bool {
+        b < self.real.len()
+    }
+
+    pub fn get(&self, b: usize) -> &SeqState {
+        if b < self.real.len() {
+            &self.real[b]
+        } else {
+            &self.pad[b - self.real.len()]
+        }
+    }
+
+    pub fn get_mut(&mut self, b: usize) -> &mut SeqState {
+        if b < self.real.len() {
+            &mut self.real[b]
+        } else {
+            &mut self.pad[b - self.real.len()]
+        }
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &SeqState> {
+        self.real.iter().chain(self.pad.iter())
+    }
+}
+
+/// The head can in principle emit special tokens that would corrupt the
+/// canvas (committing MASK would livelock the loop). Map them to EOS —
+/// never a legal content token, and harmless to answer extraction.
+pub(crate) fn sanitize(tok: i32, mask: i32, pad: i32, eos: i32) -> i32 {
+    if tok == mask || tok == pad {
+        eos
+    } else {
+        tok
+    }
+}
+
+/// Prefix forward for every row at its own committed prefix (finished
+/// rows collapse to a 1-token stub; inert padding rows `b ≥ rows.len()`
+/// carry a 1-token BOS prompt). `batch` is the padded batch bucket.
+pub(crate) fn prefill_rows<B: Backend>(
+    rt: &B,
+    cfg: &GenConfig,
+    ws: &mut StepWorkspace,
+    rows: &RowsMut,
+    batch: usize,
+    report: &mut GenReport,
+) -> Result<B::Kv> {
+    let k = cfg.block_size;
+    let special = rt.special();
+    let p_need = rows
+        .iter()
+        .map(|s| if s.finished { 1 } else { s.prefix_len(k) })
+        .max()
+        .unwrap_or(1)
+        .max(1);
+    let p_bucket = rt
+        .pick_prefix(p_need)
+        .ok_or_else(|| anyhow::anyhow!("prefix {p_need} exceeds buckets"))?;
+
+    ws.grows += reset_i32(&mut ws.tokens, batch * p_bucket, special.pad) as u64;
+    ws.grows += reset_i32(&mut ws.pos, batch * p_bucket, 0) as u64;
+    ws.grows += reset_i32(&mut ws.valid, batch, 1) as u64;
+    ws.grows += reset_i32(&mut ws.p0s, batch, 0) as u64;
+    for b in 0..batch {
+        for j in 0..p_bucket {
+            ws.pos[b * p_bucket + j] = j as i32;
+        }
+        if b >= rows.len() {
+            // inert padding row: 1-token BOS prompt, nothing to decode
+            ws.tokens[b * p_bucket] = special.bos;
+            ws.p0s[b] = 1;
+            continue;
+        }
+        let s = rows.get(b);
+        let plen = if s.finished { 1 } else { s.prefix_len(k) };
+        ws.valid[b] = plen as i32;
+        ws.p0s[b] = s.p0 as i32;
+        for j in 0..plen.min(s.tokens.len()) {
+            ws.tokens[b * p_bucket + j] = s.tokens[j];
+        }
+    }
+    let t = Instant::now();
+    let kv = rt.prefill(
+        batch,
+        p_bucket,
+        &ws.tokens,
+        &ws.pos,
+        &ws.valid,
+        if rt.wants_p0() { Some(&ws.p0s) } else { None },
+    )?;
+    report.prefill_secs += t.elapsed().as_secs_f64();
+    report.prefills += 1;
+    Ok(kv)
+}
+
+/// One diffusion decode step over every live row's query bundle.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn decode_step<B: Backend>(
+    rt: &B,
+    cfg: &GenConfig,
+    ws: &mut StepWorkspace,
+    rows: &mut RowsMut,
+    batch: usize,
+    kv: &B::Kv,
+    step_in_block: usize,
+    early_exit: bool,
+    report: &mut GenReport,
+    on_step: &mut Option<&mut dyn FnMut(StepEvent)>,
+) -> Result<()> {
+    let k = cfg.block_size;
+    let n_blocks = cfg.n_blocks();
+    let special = rt.special();
+    let StepWorkspace { q_tok, q_pos, q_valid, bundles, cands, picked, grows, steps, .. } = ws;
+
+    // Bundles for live rows; finished / block-complete / padding rows
+    // get an inert bundle (q_valid 0), so dead rows stop inflating the
+    // query bucket and the backend skips them entirely.
+    if bundles.len() < batch {
+        bundles.resize_with(batch, Bundle::default);
+    }
+    let mut q_need = 1usize;
+    for b in 0..batch {
+        let bun = &mut bundles[b];
+        if b >= rows.len() {
+            bun.clear();
+            continue;
+        }
+        let s = rows.get(b);
+        if s.finished || s.block_done(k) {
+            bun.clear();
+            continue;
+        }
+        build_bundle_into(s, cfg, bun);
+        q_need = q_need.max(bun.positions.len());
+    }
+    let q_bucket = rt
+        .pick_query(q_need)
+        .ok_or_else(|| anyhow::anyhow!("query {q_need} exceeds buckets"))?;
+
+    *grows += reset_i32(q_tok, batch * q_bucket, special.mask) as u64;
+    *grows += reset_i32(q_pos, batch * q_bucket, 0) as u64;
+    *grows += reset_i32(q_valid, batch, 0) as u64;
+    for b in 0..batch {
+        let bun = &bundles[b];
+        if bun.positions.is_empty() {
+            continue;
+        }
+        let s = rows.get(b);
+        q_valid[b] = bun.positions.len() as i32;
+        let base = b * q_bucket;
+        for (j, &p) in bun.positions.iter().enumerate() {
+            q_tok[base + j] = s.tokens[p];
+            q_pos[base + j] = p as i32;
+        }
+    }
+
+    let t = Instant::now();
+    let out = rt.decode(kv, q_bucket, q_tok, q_pos, q_valid)?;
+    report.decode_secs += t.elapsed().as_secs_f64();
+    report.steps += 1;
+    *steps += 1;
+
+    for b in 0..rows.len() {
+        let is_real = rows.is_real(b);
+        let s = rows.get_mut(b);
+        if s.finished || s.block_done(k) {
+            continue;
+        }
+        let bun = &bundles[b];
+        let r_mask = s.mask_ratio(k);
+        // candidates: masked positions within the current block, which
+        // occupy the first `block_len` bundle slots.
+        cands.clear();
+        for j in 0..bun.block_len {
+            let abs = bun.positions[j];
+            if s.is_masked(abs) {
+                cands.push(Candidate {
+                    pos: abs,
+                    token: sanitize(out.token(b, j), special.mask, special.pad, special.eos),
+                    conf: out.conf(b, j),
+                });
+            }
+        }
+        if cands.is_empty() {
+            continue;
+        }
+        let policy = if cfg.parallel_decoding() {
+            Selection::Threshold(cfg.threshold(r_mask))
+        } else {
+            Selection::OnePerStep
+        };
+        select_into(policy, cands, picked);
+        if b == 0 {
+            if let Some(cb) = on_step.as_mut() {
+                cb(StepEvent {
+                    block: s.block,
+                    step_in_block,
+                    masked_confs: cands.iter().map(|c| c.conf).collect(),
+                    threshold: match policy {
+                        Selection::Threshold(t) => t,
+                        Selection::OnePerStep => 1.0,
+                    },
+                    committed: picked.len(),
+                });
+            }
+        }
+        for &i in picked.iter() {
+            s.commit_with_conf(cands[i].pos, cands[i].token, cands[i].conf);
+        }
+        // ReMDM extension: revise low-confidence commits (once per
+        // position) while the block is still open.
+        if cfg.remask && !s.block_done(k) {
+            s.remask_low_confidence(k, cfg.remask_tau);
+        }
+        s.steps += 1;
+        if early_exit && s.early_exit_scan(k) {
+            // rest of the block was EOS-filled; skipped blocks counted
+            // exactly once per real row, here or never.
+            if is_real {
+                report.blocks_skipped += (n_blocks - (s.block + 1)) as u64;
+            }
+            s.finish_with_eos();
+        }
+    }
+    Ok(())
+}
+
+/// Per-row block-cursor advance after a completed block round: early
+/// exit on all-EOS blocks (skipped blocks counted once per real row),
+/// otherwise step the cursor and retire rows that ran out of blocks.
+pub(crate) fn advance_blocks(
+    cfg: &GenConfig,
+    rows: &mut RowsMut,
+    early_exit: bool,
+    report: &mut GenReport,
+) {
+    let k = cfg.block_size;
+    let n_blocks = cfg.n_blocks();
+    for b in 0..rows.len() {
+        let is_real = rows.is_real(b);
+        let s = rows.get_mut(b);
+        if s.finished {
+            continue;
+        }
+        if early_exit && s.block_all_eos(k) {
+            if is_real {
+                report.blocks_skipped += (n_blocks - (s.block + 1)) as u64;
+            }
+            s.finish_with_eos();
+            continue;
+        }
+        s.block += 1;
+        if s.block >= n_blocks {
+            s.finished = true;
+        }
+    }
+}
+
+/// One block round for every live row: prefill at each row's committed
+/// prefix, decode until every live row's current block completes (with
+/// dKV-Cache periodic prefix refresh), then advance cursors.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn run_block_round<B: Backend>(
+    rt: &B,
+    cfg: &GenConfig,
+    ws: &mut StepWorkspace,
+    rows: &mut RowsMut,
+    batch: usize,
+    report: &mut GenReport,
+    on_step: &mut Option<&mut dyn FnMut(StepEvent)>,
+) -> Result<()> {
+    let k = cfg.block_size;
+    let early_exit = cfg.method == Method::Streaming && cfg.early_exit;
+    let mut kv = prefill_rows(rt, cfg, ws, rows, batch, report)?;
+
+    let mut step_in_block = 0usize;
+    let guard_max = k * 4 + 8 + if cfg.remask { k } else { 0 };
+    loop {
+        let any_masked = rows.iter().any(|s| !s.finished && !s.block_done(k));
+        if !any_masked {
+            break;
+        }
+        if step_in_block > guard_max {
+            bail!("block decode failed to terminate");
+        }
+        // dKV-Cache emulation: delayed refresh pays periodic prefix
+        // recompute inside the block.
+        if cfg.method == Method::DkvCache
+            && step_in_block > 0
+            && step_in_block % cfg.dkv_refresh == 0
+        {
+            kv = prefill_rows(rt, cfg, ws, rows, batch, report)?;
+        }
+        decode_step(rt, cfg, ws, rows, batch, &kv, step_in_block, early_exit, report, on_step)?;
+        step_in_block += 1;
+    }
+
+    advance_blocks(cfg, rows, early_exit, report);
+    Ok(())
+}
+
+/// Vanilla baseline: full forward over the whole canvas every step, one
+/// commit per row per step, no cache — reusing the workspace buffers.
+pub(crate) fn run_vanilla<B: Backend>(
+    rt: &B,
+    cfg: &GenConfig,
+    ws: &mut StepWorkspace,
+    rows: &mut RowsMut,
+    batch: usize,
+    report: &mut GenReport,
+    on_step: &mut Option<&mut dyn FnMut(StepEvent)>,
+) -> Result<()> {
+    let k = cfg.block_size;
+    let special = rt.special();
+    let s_need = rows.iter().map(|s| s.total_len()).max().unwrap_or(1).max(1);
+    let s_bucket =
+        rt.pick_seq(s_need).ok_or_else(|| anyhow::anyhow!("seq {s_need} exceeds buckets"))?;
+
+    ws.grows += reset_i32(&mut ws.tokens, batch * s_bucket, special.pad) as u64;
+    ws.grows += reset_i32(&mut ws.pos, batch * s_bucket, 0) as u64;
+    ws.grows += reset_i32(&mut ws.valid, batch, 1) as u64;
+    ws.grows += reset_i32(&mut ws.p0s, batch, 0) as u64;
+    for b in 0..batch {
+        for j in 0..s_bucket {
+            ws.pos[b * s_bucket + j] = j as i32;
+        }
+        if b >= rows.len() {
+            ws.tokens[b * s_bucket] = special.bos;
+            ws.p0s[b] = 1;
+            continue;
+        }
+        let s = rows.get(b);
+        ws.valid[b] = s.total_len() as i32;
+        ws.p0s[b] = s.p0 as i32;
+    }
+
+    let n_blocks = cfg.n_blocks();
+    let max_steps = (n_blocks * k * 4) as u64 + 8;
+    let mut guard = 0u64;
+    while rows.iter().any(|s| !s.finished) {
+        guard += 1;
+        if guard > max_steps {
+            bail!("vanilla decode failed to terminate");
+        }
+        for b in 0..rows.len() {
+            let s = rows.get(b);
+            let base = b * s_bucket;
+            for (j, &t) in s.tokens.iter().enumerate() {
+                ws.tokens[base + j] = t;
+            }
+            for j in s.tokens.len()..s_bucket {
+                ws.tokens[base + j] = special.pad;
+            }
+        }
+        let t = Instant::now();
+        let out = rt.logits(
+            batch,
+            s_bucket,
+            &ws.tokens,
+            &ws.pos,
+            &ws.valid,
+            if rt.wants_p0() { Some(&ws.p0s) } else { None },
+        )?;
+        report.decode_secs += t.elapsed().as_secs_f64();
+        report.steps += 1;
+        ws.steps += 1;
+
+        for b in 0..rows.len() {
+            let s = rows.get_mut(b);
+            if s.finished {
+                continue;
+            }
+            let (bs, be) = s.block_span(s.block, k);
+            ws.cands.clear();
+            for abs in bs..be {
+                if s.is_masked(abs) {
+                    ws.cands.push(Candidate {
+                        pos: abs,
+                        token: sanitize(out.token(b, abs), special.mask, special.pad, special.eos),
+                        conf: out.conf(b, abs),
+                    });
+                }
+            }
+            if ws.cands.is_empty() {
+                // advance block cursor
+                s.block += 1;
+                if s.block >= n_blocks {
+                    s.finished = true;
+                }
+                continue;
+            }
+            if b == 0 {
+                if let Some(cb) = on_step.as_mut() {
+                    cb(StepEvent {
+                        block: s.block,
+                        step_in_block: k - ws.cands.len().min(k),
+                        masked_confs: ws.cands.iter().map(|c| c.conf).collect(),
+                        threshold: 1.0,
+                        committed: 1,
+                    });
+                }
+            }
+            select_into(Selection::OnePerStep, &ws.cands, &mut ws.picked);
+            for &i in ws.picked.iter() {
+                s.commit_with_conf(ws.cands[i].pos, ws.cands[i].token, ws.cands[i].conf);
+            }
+            s.steps += 1;
+            if s.block_done(k) {
+                s.block += 1;
+                if s.block >= n_blocks {
+                    s.finished = true;
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sanitize_maps_specials_to_eos() {
+        assert_eq!(sanitize(1, 1, 0, 3), 3);
+        assert_eq!(sanitize(0, 1, 0, 3), 3);
+        assert_eq!(sanitize(42, 1, 0, 3), 42);
+        assert_eq!(sanitize(3, 1, 0, 3), 3);
+    }
+
+    #[test]
+    fn reset_reports_growth_once() {
+        let mut buf = Vec::new();
+        assert!(reset_i32(&mut buf, 8, 7));
+        assert_eq!(buf, vec![7; 8]);
+        buf[0] = 99;
+        assert!(!reset_i32(&mut buf, 8, 5));
+        assert_eq!(buf, vec![5; 8]);
+        assert!(!reset_i32(&mut buf, 4, 1));
+        assert_eq!(buf.len(), 4);
+    }
+}

@@ -142,7 +142,7 @@ pub fn run_suite<B: Backend>(
     items: &[EvalItem],
     mut on_step: Option<&mut dyn FnMut(StepEvent)>,
 ) -> Result<SuiteResult> {
-    let generator = Generator::new(rt, cfg.clone())?;
+    let mut generator = Generator::new(rt, cfg.clone())?;
     let special = rt.special();
     let mut res = SuiteResult { n: items.len(), ..Default::default() };
     for item in items {
@@ -184,7 +184,7 @@ pub fn run_suite_batched<B: Backend>(
     items: &[EvalItem],
     batch: usize,
 ) -> Result<SuiteResult> {
-    let generator = Generator::new(rt, cfg.clone())?;
+    let mut generator = Generator::new(rt, cfg.clone())?;
     let special = rt.special();
     let mut res = SuiteResult { n: items.len(), ..Default::default() };
     for chunk in items.chunks(batch) {

@@ -194,7 +194,7 @@ fn generate(args: &Args) -> Result<()> {
             items[0].prompt.clone()
         }
     };
-    let generator = Generator::new(&backend, cfg.clone())?;
+    let mut generator = Generator::new(&backend, cfg.clone())?;
     let mut seqs = vec![SeqState::new(&prompt, cfg.gen_len, &backend.special())];
     let report = generator.generate(&mut seqs, None)?;
     println!("generated: {:?}", backend.detokenize(seqs[0].generated()));

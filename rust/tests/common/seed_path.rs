@@ -1,0 +1,305 @@
+//! A faithful replica of the seed (pre-workspace) decode hot path:
+//! fresh bundle/candidate/host-buffer allocations every step, the
+//! `SeqState` clone round-trip per batch, and the block-lockstep march.
+//!
+//! Shared (via `#[path]`) between `tests/parity.rs` — which pins the
+//! production workspace core bit-identical to this — and
+//! `benches/host_overhead.rs`, which measures it as the `before` arm.
+//! Keep it byte-for-byte equivalent to the code the workspace refactor
+//! deleted; any behavioral edit here invalidates both the parity pins
+//! and the before/after comparison.
+#![allow(dead_code)]
+
+use anyhow::{bail, Result};
+use streaming_dllm::engine::{
+    build_bundle, bundle_tokens, select, Backend, Candidate, GenConfig, Method, SeqState,
+    Selection,
+};
+
+pub struct SeedReport {
+    pub steps: u64,
+    pub prefills: u64,
+}
+
+fn sanitize(tok: i32, mask: i32, pad: i32, eos: i32) -> i32 {
+    if tok == mask || tok == pad {
+        eos
+    } else {
+        tok
+    }
+}
+
+pub fn generate<B: Backend>(rt: &B, cfg: &GenConfig, seqs: &mut [SeqState]) -> Result<SeedReport> {
+    let mut report = SeedReport { steps: 0, prefills: 0 };
+    if seqs.is_empty() {
+        return Ok(report);
+    }
+    let batch = rt.pick_batch(seqs.len()).expect("batch bucket");
+    let special = rt.special();
+    let gen_len = cfg.gen_len;
+    let mut all: Vec<SeqState> = Vec::with_capacity(batch);
+    let n_real = seqs.len();
+    for s in seqs.iter() {
+        all.push(s.clone());
+    }
+    for _ in n_real..batch {
+        all.push(SeqState::new(&[special.bos], gen_len, &special));
+    }
+    match cfg.method {
+        Method::Vanilla => run_vanilla(rt, cfg, &mut all, &mut report)?,
+        _ => run_cached(rt, cfg, &mut all, &mut report)?,
+    }
+    for (dst, src) in seqs.iter_mut().zip(all.iter()) {
+        *dst = src.clone();
+    }
+    Ok(report)
+}
+
+fn run_vanilla<B: Backend>(
+    rt: &B,
+    cfg: &GenConfig,
+    seqs: &mut [SeqState],
+    report: &mut SeedReport,
+) -> Result<()> {
+    let batch = seqs.len();
+    let k = cfg.block_size;
+    let s_need = seqs.iter().map(|s| s.total_len()).max().unwrap();
+    let s_bucket = rt.pick_seq(s_need).expect("seq bucket");
+    let special = rt.special();
+
+    let mut tokens = vec![special.pad; batch * s_bucket];
+    let mut pos = vec![0i32; batch * s_bucket];
+    let mut valid = vec![0i32; batch];
+    let mut p0s = vec![0i32; batch];
+    for (b, s) in seqs.iter().enumerate() {
+        valid[b] = s.total_len() as i32;
+        p0s[b] = s.p0 as i32;
+        for j in 0..s_bucket {
+            pos[b * s_bucket + j] = j as i32;
+        }
+    }
+
+    let n_blocks = cfg.n_blocks();
+    let max_steps = (n_blocks * k * 4) as u64 + 8;
+    let mut guard = 0u64;
+    while seqs.iter().any(|s| !s.finished) {
+        guard += 1;
+        if guard > max_steps {
+            bail!("vanilla decode failed to terminate");
+        }
+        for (b, s) in seqs.iter().enumerate() {
+            for (j, &t) in s.tokens.iter().enumerate() {
+                tokens[b * s_bucket + j] = t;
+            }
+            for j in s.tokens.len()..s_bucket {
+                tokens[b * s_bucket + j] = special.pad;
+            }
+        }
+        let out = rt.logits(
+            batch,
+            s_bucket,
+            &tokens,
+            &pos,
+            &valid,
+            if rt.wants_p0() { Some(&p0s) } else { None },
+        )?;
+        report.steps += 1;
+
+        for (b, s) in seqs.iter_mut().enumerate() {
+            if s.finished {
+                continue;
+            }
+            let masked = s.masked_in_block(k);
+            if masked.is_empty() {
+                s.block += 1;
+                if s.block >= n_blocks {
+                    s.finished = true;
+                }
+                continue;
+            }
+            let cands: Vec<Candidate> = masked
+                .iter()
+                .map(|&p| Candidate {
+                    pos: p,
+                    token: sanitize(out.token(b, p), special.mask, special.pad, special.eos),
+                    conf: out.conf(b, p),
+                })
+                .collect();
+            for i in select(Selection::OnePerStep, &cands) {
+                s.commit_with_conf(cands[i].pos, cands[i].token, cands[i].conf);
+            }
+            s.steps += 1;
+            if s.block_done(k) {
+                s.block += 1;
+                if s.block >= n_blocks {
+                    s.finished = true;
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+fn run_cached<B: Backend>(
+    rt: &B,
+    cfg: &GenConfig,
+    seqs: &mut [SeqState],
+    report: &mut SeedReport,
+) -> Result<()> {
+    let k = cfg.block_size;
+    let n_blocks = cfg.n_blocks();
+    let early_exit = cfg.method == Method::Streaming && cfg.early_exit;
+
+    for _blk in 0..n_blocks {
+        if seqs.iter().all(|s| s.finished) {
+            break;
+        }
+        let mut kv = prefill_block(rt, cfg, seqs)?;
+        report.prefills += 1;
+
+        let mut step_in_block = 0usize;
+        let guard_max = k * 4 + 8 + if cfg.remask { k } else { 0 };
+        loop {
+            let any_masked = seqs.iter().any(|s| !s.finished && !s.block_done(k));
+            if !any_masked {
+                break;
+            }
+            if step_in_block > guard_max {
+                bail!("block decode failed to terminate");
+            }
+            if cfg.method == Method::DkvCache
+                && step_in_block > 0
+                && step_in_block % cfg.dkv_refresh == 0
+            {
+                kv = prefill_block(rt, cfg, seqs)?;
+                report.prefills += 1;
+            }
+            decode_step(rt, cfg, seqs, &kv, early_exit, report)?;
+            step_in_block += 1;
+        }
+
+        for s in seqs.iter_mut() {
+            if s.finished {
+                continue;
+            }
+            if early_exit && s.block_all_eos(k) {
+                s.finish_with_eos();
+                continue;
+            }
+            s.block += 1;
+            if s.block >= n_blocks {
+                s.finished = true;
+            }
+        }
+    }
+    Ok(())
+}
+
+fn prefill_block<B: Backend>(rt: &B, cfg: &GenConfig, seqs: &[SeqState]) -> Result<B::Kv> {
+    let batch = seqs.len();
+    let k = cfg.block_size;
+    let special = rt.special();
+    let p_need = seqs
+        .iter()
+        .map(|s| if s.finished { 1 } else { s.p0 + s.block * k })
+        .max()
+        .unwrap()
+        .max(1);
+    let p_bucket = rt.pick_prefix(p_need).expect("prefix bucket");
+
+    let mut tokens = vec![special.pad; batch * p_bucket];
+    let mut pos = vec![0i32; batch * p_bucket];
+    let mut valid = vec![1i32; batch];
+    let mut p0s = vec![0i32; batch];
+    for (b, s) in seqs.iter().enumerate() {
+        let plen = if s.finished { 1 } else { s.p0 + s.block * k };
+        valid[b] = plen as i32;
+        p0s[b] = s.p0 as i32;
+        for j in 0..p_bucket {
+            pos[b * p_bucket + j] = j as i32;
+        }
+        for j in 0..plen.min(s.tokens.len()) {
+            tokens[b * p_bucket + j] = s.tokens[j];
+        }
+    }
+    rt.prefill(
+        batch,
+        p_bucket,
+        &tokens,
+        &pos,
+        &valid,
+        if rt.wants_p0() { Some(&p0s) } else { None },
+    )
+}
+
+fn decode_step<B: Backend>(
+    rt: &B,
+    cfg: &GenConfig,
+    seqs: &mut [SeqState],
+    kv: &B::Kv,
+    early_exit: bool,
+    report: &mut SeedReport,
+) -> Result<()> {
+    let batch = seqs.len();
+    let k = cfg.block_size;
+    let special = rt.special();
+
+    let bundles: Vec<_> = seqs.iter().map(|s| build_bundle(s, cfg)).collect();
+    let q_need = bundles.iter().map(|b| b.positions.len()).max().unwrap().max(1);
+    let q_bucket = rt.pick_query(q_need).expect("query bucket");
+
+    let mut q_tok = vec![special.mask; batch * q_bucket];
+    let mut q_pos = vec![0i32; batch * q_bucket];
+    let mut q_valid = vec![0i32; batch];
+    for (b, s) in seqs.iter().enumerate() {
+        let bun = &bundles[b];
+        q_valid[b] = bun.positions.len() as i32;
+        let toks = bundle_tokens(s, bun);
+        for (j, (&p, &t)) in bun.positions.iter().zip(toks.iter()).enumerate() {
+            q_tok[b * q_bucket + j] = t;
+            q_pos[b * q_bucket + j] = p as i32;
+        }
+    }
+
+    let out = rt.decode(kv, q_bucket, &q_tok, &q_pos, &q_valid)?;
+    report.steps += 1;
+
+    for (b, s) in seqs.iter_mut().enumerate() {
+        if s.finished || s.block_done(k) {
+            continue;
+        }
+        let bun = &bundles[b];
+        let r_mask = s.mask_ratio(k);
+        let mut cands = Vec::with_capacity(bun.block_len);
+        for j in 0..bun.block_len {
+            let abs = bun.positions[j];
+            if s.is_masked(abs) {
+                cands.push(Candidate {
+                    pos: abs,
+                    token: sanitize(out.token(b, j), special.mask, special.pad, special.eos),
+                    conf: out.conf(b, j),
+                });
+            }
+        }
+        if cands.is_empty() {
+            continue;
+        }
+        let policy = if cfg.parallel_decoding() {
+            Selection::Threshold(cfg.threshold(r_mask))
+        } else {
+            Selection::OnePerStep
+        };
+        let picked = select(policy, &cands);
+        for &i in &picked {
+            s.commit_with_conf(cands[i].pos, cands[i].token, cands[i].conf);
+        }
+        if cfg.remask && !s.block_done(k) {
+            s.remask_low_confidence(k, cfg.remask_tau);
+        }
+        s.steps += 1;
+        if early_exit && s.early_exit_scan(k) {
+            s.finish_with_eos();
+        }
+    }
+    Ok(())
+}

@@ -68,7 +68,7 @@ fn toy_decode_is_bit_identical_to_golden_oracles() {
     let golden = ["e49262x0l687;86", "673g7;18", "8;30", "x7982561372;26"];
     for (p, want) in PROMPTS.iter().zip(golden) {
         let cfg = GenConfig::preset(Method::Streaming, 64);
-        let generator = Generator::new(&be, cfg).unwrap();
+        let mut generator = Generator::new(&be, cfg).unwrap();
         let mut seqs = vec![SeqState::new(p, 64, &be.special)];
         generator.generate(&mut seqs, None).unwrap();
         assert_eq!(be.detokenize(seqs[0].generated()), want);

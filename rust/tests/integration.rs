@@ -9,11 +9,12 @@
 //! 3. PJRT tier (`--features pjrt` + artifacts): real runtime smoke
 //!    over the AOT executables.
 
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use streaming_dllm::coordinator::{Client, Request, RouterHandle, Server};
 use streaming_dllm::engine::{
-    Backend, GenConfig, Generator, Method, RefMode, ReferenceBackend, SeqState, REFERENCE_SEED,
+    Backend, DecodeOut, GenConfig, Generator, Method, RefKv, RefMode, ReferenceBackend, SeqState,
+    SpecialTokens, REFERENCE_SEED,
 };
 use streaming_dllm::eval::{extract_final, run_suite, synthetic_suite};
 use streaming_dllm::runtime::{ArtifactsIndex, ExeKey, ExeKind, Manifest};
@@ -41,7 +42,7 @@ fn reference_all_methods_terminate_and_produce_text() {
     let items = synthetic_suite(&be, 1, 42);
     for method in Method::all() {
         let cfg = GenConfig::preset(method, 64);
-        let generator = Generator::new(&be, cfg).unwrap();
+        let mut generator = Generator::new(&be, cfg).unwrap();
         let mut seqs = vec![SeqState::new(&items[0].prompt, 64, &be.special())];
         let report = generator.generate(&mut seqs, None).unwrap();
         assert!(seqs[0].finished, "{} did not finish", method.name());
@@ -77,7 +78,7 @@ fn reference_streaming_uses_fewer_steps_than_vanilla() {
     let mut steps = std::collections::HashMap::new();
     for method in [Method::Vanilla, Method::FastDllm, Method::Streaming] {
         let cfg = GenConfig::preset(method, 64);
-        let generator = Generator::new(&be, cfg).unwrap();
+        let mut generator = Generator::new(&be, cfg).unwrap();
         let mut total = 0u64;
         for item in &items {
             let mut seqs = vec![SeqState::new(&item.prompt, 64, &be.special())];
@@ -99,7 +100,7 @@ fn reference_batched_generation_matches_single() {
     let be = ReferenceBackend::toy(REFERENCE_SEED);
     let items = synthetic_suite(&be, 2, 11);
     let cfg = GenConfig::preset(Method::Streaming, 64);
-    let generator = Generator::new(&be, cfg).unwrap();
+    let mut generator = Generator::new(&be, cfg).unwrap();
 
     let mut singles = vec![];
     for item in &items {
@@ -218,6 +219,146 @@ fn reference_server_end_to_end_roundtrip() {
     assert!(snap.get("tokens_per_s").unwrap().as_f64().unwrap() > 0.0);
 }
 
+/// Reference backend with an artificial per-decode delay — makes batch
+/// runs take long enough that mid-flight admission is deterministic to
+/// observe, without depending on wall-clock luck.
+struct SlowBackend {
+    inner: ReferenceBackend,
+    delay: Duration,
+}
+
+impl Backend for SlowBackend {
+    type Kv = RefKv;
+
+    fn special(&self) -> SpecialTokens {
+        self.inner.special()
+    }
+
+    fn wants_p0(&self) -> bool {
+        self.inner.wants_p0()
+    }
+
+    fn pick_batch(&self, need: usize) -> Option<usize> {
+        self.inner.pick_batch(need)
+    }
+
+    fn pick_prefix(&self, need: usize) -> Option<usize> {
+        self.inner.pick_prefix(need)
+    }
+
+    fn pick_query(&self, need: usize) -> Option<usize> {
+        self.inner.pick_query(need)
+    }
+
+    fn pick_seq(&self, need: usize) -> Option<usize> {
+        self.inner.pick_seq(need)
+    }
+
+    fn prefill(
+        &self,
+        batch: usize,
+        p_bucket: usize,
+        tokens: &[i32],
+        pos: &[i32],
+        valid: &[i32],
+        p0: Option<&[i32]>,
+    ) -> anyhow::Result<RefKv> {
+        self.inner.prefill(batch, p_bucket, tokens, pos, valid, p0)
+    }
+
+    fn decode(
+        &self,
+        kv: &RefKv,
+        q_bucket: usize,
+        q_tok: &[i32],
+        q_pos: &[i32],
+        q_valid: &[i32],
+    ) -> anyhow::Result<DecodeOut> {
+        std::thread::sleep(self.delay);
+        self.inner.decode(kv, q_bucket, q_tok, q_pos, q_valid)
+    }
+
+    fn logits(
+        &self,
+        batch: usize,
+        s_bucket: usize,
+        tokens: &[i32],
+        pos: &[i32],
+        valid: &[i32],
+        p0: Option<&[i32]>,
+    ) -> anyhow::Result<DecodeOut> {
+        self.inner.logits(batch, s_bucket, tokens, pos, valid, p0)
+    }
+
+    fn detokenize(&self, ids: &[i32]) -> String {
+        self.inner.detokenize(ids)
+    }
+}
+
+#[test]
+fn router_serves_mid_flight_join() {
+    // Request A decodes a long answer (content past its whole generation
+    // region → early exit never fires → 32 full block rounds, slowed to
+    // ~2ms per decode step). Request B arrives while A's batch is
+    // mid-flight; its prompt sits past the content boundary, so its whole
+    // generation is EOS and it early-exits within its first block round.
+    // B must join A's running batch and complete long before A drains —
+    // the continuous-batching acceptance path.
+    let boundary = 300usize;
+    let router = RouterHandle::spawn_with(
+        move || {
+            Ok(SlowBackend {
+                inner: ReferenceBackend::scripted(boundary),
+                delay: Duration::from_millis(2),
+            })
+        },
+        2,
+        Duration::from_millis(1),
+    );
+    let metrics = router.metrics.clone();
+
+    let rx_a = router.submit(Request {
+        id: 1,
+        prompt: vec![2; 4],
+        method: Method::Streaming,
+        gen_len: 256,
+    });
+    // wait (bounded) until A's engine has actually started
+    let t0 = Instant::now();
+    loop {
+        let started = metrics.snapshot().get("batches").unwrap().as_usize().unwrap_or(0);
+        if started >= 1 {
+            break;
+        }
+        assert!(t0.elapsed() < Duration::from_secs(10), "engine never started");
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    let rx_b = router.submit(Request {
+        id: 2,
+        prompt: vec![2; 301],
+        method: Method::Streaming,
+        gen_len: 256,
+    });
+
+    let resp_b = rx_b.recv_timeout(Duration::from_secs(20)).expect("B never completed");
+    assert!(resp_b.error.is_none(), "{:?}", resp_b.error);
+    assert_eq!(resp_b.non_eos_tokens, 0, "B's generation is pure EOS");
+    // B finished while A was still decoding: A's reply must not exist yet
+    assert!(
+        rx_a.try_recv().is_err(),
+        "B should complete without waiting for A's batch to drain"
+    );
+
+    let resp_a = rx_a.recv_timeout(Duration::from_secs(120)).expect("A never completed");
+    assert!(resp_a.error.is_none(), "{:?}", resp_a.error);
+    assert!(resp_a.non_eos_tokens > 0);
+
+    let snap = metrics.snapshot();
+    assert_eq!(snap.get("joins").unwrap().as_usize(), Some(1), "B must join mid-flight");
+    assert!(snap.get("engine_rounds").unwrap().as_usize().unwrap() >= 32);
+    router.shutdown().unwrap();
+}
+
 // ---------------------------------------------------------------------
 // Tier 2: artifact manifests — runs when `make artifacts` has been run;
 // loudly skips otherwise. Pure manifest parsing, no xla.
@@ -326,7 +467,7 @@ mod pjrt_tier {
         let item = &items[0];
         for method in Method::all() {
             let cfg = GenConfig::preset(method, 64);
-            let generator = Generator::new(&mrt, cfg.clone()).unwrap();
+            let mut generator = Generator::new(&mrt, cfg.clone()).unwrap();
             let mut seqs = vec![SeqState::new(&item.prompt, 64, &mrt.manifest.special)];
             let report = generator.generate(&mut seqs, None).unwrap();
             assert!(seqs[0].finished, "{} did not finish", method.name());
@@ -346,7 +487,7 @@ mod pjrt_tier {
         let mut steps = std::collections::HashMap::new();
         for method in [Method::Vanilla, Method::FastDllm, Method::Streaming] {
             let cfg = GenConfig::preset(method, 64);
-            let generator = Generator::new(&mrt, cfg).unwrap();
+            let mut generator = Generator::new(&mrt, cfg).unwrap();
             let mut total = 0u64;
             for item in items.iter().take(3) {
                 let mut seqs = vec![SeqState::new(&item.prompt, 64, &mrt.manifest.special)];
@@ -392,7 +533,7 @@ mod pjrt_tier {
         let root = artifacts().unwrap();
         let items = load_suite(&root.join("eval/math-mini.jsonl")).unwrap();
         let cfg = GenConfig::preset(Method::Streaming, 64);
-        let generator = Generator::new(&mrt, cfg.clone()).unwrap();
+        let mut generator = Generator::new(&mrt, cfg.clone()).unwrap();
 
         let mut singles = vec![];
         for item in items.iter().take(2) {
@@ -458,7 +599,7 @@ mod pjrt_tier {
         let mut cfg = GenConfig::preset(Method::Streaming, 64);
         cfg.window = 0;
         cfg.trailing_position = false;
-        let generator = Generator::new(&mrt, cfg).unwrap();
+        let mut generator = Generator::new(&mrt, cfg).unwrap();
         let mut seqs = vec![SeqState::new(&items[0].prompt, 64, &mrt.manifest.special)];
         let report = generator.generate(&mut seqs, None).unwrap();
         assert!(seqs[0].finished);

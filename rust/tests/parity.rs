@@ -1,0 +1,187 @@
+//! Golden parity: the workspace-reuse decode core must be bit-identical
+//! to the seed implementation it replaced.
+//!
+//! `seed_path` below is a faithful replica of the pre-workspace
+//! generator hot path (fresh bundle/candidate/buffer allocations every
+//! step, `SeqState` clone round-trip, block-lockstep batch march) built
+//! on the same public API. Running both against identically-seeded
+//! reference backends must produce the same canvases, the same NFE
+//! count and the same prefill count — for the schedule-independent toy
+//! mode *and* the schedule-dependent causal mode, where any divergence
+//! in call order, buffer layout or commit order would corrupt the
+//! confidence stream and show up as different tokens.
+
+use streaming_dllm::engine::{
+    Backend, BatchEngine, GenConfig, Generator, Method, RefMode, ReferenceBackend, SeqState,
+    REFERENCE_SEED,
+};
+use streaming_dllm::eval::{extract_final, synthetic_suite};
+
+/// The seed-path replica shared with `benches/host_overhead.rs` (the
+/// `before` arm there): fresh allocations every step, clone round-trip,
+/// block lockstep — see `tests/common/seed_path.rs`.
+#[path = "common/seed_path.rs"]
+mod seed_path;
+
+const PROMPTS: [&[i32]; 4] = [
+    &[2, 10, 11, 12],
+    &[2, 15, 16, 17, 18, 19],
+    &[2, 20, 21, 22, 23, 24, 25],
+    &[2, 5, 6, 7, 47],
+];
+
+fn backend(mode: RefMode) -> ReferenceBackend {
+    match mode {
+        RefMode::Causal => ReferenceBackend::causal(REFERENCE_SEED),
+        _ => ReferenceBackend::toy(REFERENCE_SEED),
+    }
+}
+
+/// Run the production generator over `prompts` as one batch.
+fn run_new(mode: RefMode, cfg: &GenConfig, prompts: &[&[i32]]) -> (Vec<Vec<i32>>, u64, u64) {
+    let be = backend(mode);
+    let mut generator = Generator::new(&be, cfg.clone()).unwrap();
+    let mut seqs: Vec<SeqState> =
+        prompts.iter().map(|p| SeqState::new(p, cfg.gen_len, &be.special())).collect();
+    let report = generator.generate(&mut seqs, None).unwrap();
+    (seqs.into_iter().map(|s| s.tokens).collect(), report.steps, report.prefills)
+}
+
+/// Run the seed replica over `prompts` as one batch.
+fn run_seed(mode: RefMode, cfg: &GenConfig, prompts: &[&[i32]]) -> (Vec<Vec<i32>>, u64, u64) {
+    let be = backend(mode);
+    let mut seqs: Vec<SeqState> =
+        prompts.iter().map(|p| SeqState::new(p, cfg.gen_len, &be.special())).collect();
+    let report = seed_path::generate(&be, cfg, &mut seqs).unwrap();
+    (seqs.into_iter().map(|s| s.tokens).collect(), report.steps, report.prefills)
+}
+
+fn assert_parity(mode: RefMode, cfg: &GenConfig, prompts: &[&[i32]], label: &str) {
+    let (new_tokens, new_steps, new_prefills) = run_new(mode, cfg, prompts);
+    let (seed_tokens, seed_steps, seed_prefills) = run_seed(mode, cfg, prompts);
+    assert_eq!(new_tokens, seed_tokens, "canvas diverged: {label}");
+    assert_eq!(new_steps, seed_steps, "NFE diverged: {label}");
+    assert_eq!(new_prefills, seed_prefills, "prefills diverged: {label}");
+}
+
+#[test]
+fn toy_decode_bit_identical_to_seed_path() {
+    for method in Method::all() {
+        let cfg = GenConfig::preset(method, 64);
+        for p in PROMPTS {
+            assert_parity(RefMode::Toy, &cfg, &[p], &format!("toy {} single", method.name()));
+        }
+        assert_parity(
+            RefMode::Toy,
+            &cfg,
+            &[PROMPTS[0], PROMPTS[1]],
+            &format!("toy {} batch-2 (padded to bucket 4)", method.name()),
+        );
+    }
+}
+
+#[test]
+fn causal_decode_bit_identical_to_seed_path() {
+    // the schedule-dependent mode: any change in call order, buffer
+    // contents or commit order shifts the confidence stream and the
+    // committed chain — exact parity is the strongest regression signal
+    let mut fast = GenConfig::preset(Method::FastDllm, 64);
+    fast.tau0 = 0.7; // aggressive: plenty of guessed commits
+    let configs: Vec<(GenConfig, &str)> = vec![
+        (GenConfig::preset(Method::Streaming, 64), "streaming"),
+        (fast, "fast-dllm tau=0.7"),
+        (GenConfig::preset(Method::PrefixCache, 64), "prefix-cache"),
+        (GenConfig::preset(Method::DkvCache, 64), "dkv-cache"),
+        (GenConfig::preset(Method::Vanilla, 64), "vanilla"),
+    ];
+    for (cfg, label) in &configs {
+        for p in PROMPTS {
+            assert_parity(RefMode::Causal, cfg, &[p], &format!("causal {label} single"));
+        }
+        assert_parity(
+            RefMode::Causal,
+            cfg,
+            &[PROMPTS[2], PROMPTS[3]],
+            &format!("causal {label} batch-2 (padded to bucket 4)"),
+        );
+    }
+}
+
+#[test]
+fn remask_and_pruning_variants_bit_identical_to_seed_path() {
+    let mut cfg = GenConfig::preset(Method::Streaming, 64);
+    cfg.remask = true;
+    cfg.remask_tau = 0.8;
+    cfg.window = 8;
+    cfg.trailing_position = false;
+    for mode in [RefMode::Toy, RefMode::Causal] {
+        assert_parity(mode, &cfg, &[PROMPTS[0]], &format!("{} remask variant", mode.name()));
+        assert_parity(
+            mode,
+            &cfg,
+            &[PROMPTS[1], PROMPTS[2]],
+            &format!("{} remask variant batch-2", mode.name()),
+        );
+    }
+}
+
+#[test]
+fn workspace_reuse_is_deterministic_across_calls() {
+    // the same generator (and thus the same recycled workspace) must
+    // produce identical output on repeated calls — stale scratch
+    // contents leaking between calls would break this
+    let be = backend(RefMode::Causal);
+    let mut generator = Generator::new(&be, GenConfig::preset(Method::Streaming, 64)).unwrap();
+    let mut outs = vec![];
+    for _ in 0..3 {
+        let mut seqs = vec![SeqState::new(PROMPTS[0], 64, &be.special())];
+        generator.generate(&mut seqs, None).unwrap();
+        outs.push(seqs.pop().unwrap().tokens);
+    }
+    // causal draws are keyed by the backend call counter, so re-runs on
+    // one backend legitimately differ; determinism is vs a fresh
+    // backend replaying the same call sequence
+    let be2 = backend(RefMode::Causal);
+    let mut generator2 = Generator::new(&be2, GenConfig::preset(Method::Streaming, 64)).unwrap();
+    let mut seqs = vec![SeqState::new(PROMPTS[0], 64, &be2.special())];
+    generator2.generate(&mut seqs, None).unwrap();
+    assert_eq!(outs[0], seqs[0].tokens);
+}
+
+#[test]
+fn engine_row_output_stable_under_mid_flight_joins_causal() {
+    // sequential (one-per-step) decoding under the causal model only
+    // ever commits fully-determined predictions, so a row's output must
+    // equal the sequential oracle no matter which rows join or leave
+    // its batch mid-flight
+    let oracle = ReferenceBackend::causal(REFERENCE_SEED);
+    let items = synthetic_suite(&oracle, 4, 0xA11);
+    let be = ReferenceBackend::causal(REFERENCE_SEED);
+    let cfg = GenConfig::preset(Method::PrefixCache, 64);
+    let mut engine = BatchEngine::new(&be, cfg, 4).unwrap();
+    let mut texts: std::collections::HashMap<u64, String> = std::collections::HashMap::new();
+
+    // stagger admissions: row i joins after i rounds of the running batch
+    assert!(engine.admit(0, &items[0].prompt));
+    let mut next = 1usize;
+    let mut guard = 0;
+    while engine.active() > 0 || next < items.len() {
+        guard += 1;
+        assert!(guard < 2000, "engine failed to drain");
+        if next < items.len() && engine.has_free_slot() {
+            assert!(engine.admit(next as u64, &items[next].prompt));
+            next += 1;
+        }
+        for f in engine.step_block().unwrap() {
+            texts.insert(f.tag, be.detokenize(f.seq.generated()));
+        }
+    }
+    assert_eq!(texts.len(), items.len());
+    for (i, item) in items.iter().enumerate() {
+        assert_eq!(
+            extract_final(&texts[&(i as u64)]),
+            item.answer,
+            "row {i} diverged from the sequential oracle under mid-flight joins"
+        );
+    }
+}

@@ -28,7 +28,7 @@ fn all_methods_terminate_on_mock() {
     for method in Method::all() {
         let be = backend(24);
         let cfg = GenConfig::preset(method, 64);
-        let generator = Generator::new(&be, cfg).unwrap();
+        let mut generator = Generator::new(&be, cfg).unwrap();
         let mut seqs = vec![seq(&be, 16, 64)];
         let report = generator.generate(&mut seqs, None).unwrap();
         assert!(seqs[0].finished, "{}", method.name());
@@ -51,12 +51,12 @@ fn early_exit_skips_blocks_and_saves_steps() {
     let mut without = with.clone();
     without.early_exit = false;
 
-    let g1 = Generator::new(&be, with).unwrap();
+    let mut g1 = Generator::new(&be, with).unwrap();
     let mut s1 = vec![seq(&be, 16, 64)];
     let r1 = g1.generate(&mut s1, None).unwrap();
 
     let be2 = backend(20);
-    let g2 = Generator::new(&be2, without).unwrap();
+    let mut g2 = Generator::new(&be2, without).unwrap();
     let mut s2 = vec![seq(&be2, 16, 64)];
     let r2 = g2.generate(&mut s2, None).unwrap();
 
@@ -67,17 +67,38 @@ fn early_exit_skips_blocks_and_saves_steps() {
 }
 
 #[test]
+fn blocks_skipped_counts_each_real_row_exactly_once() {
+    // answer ends at absolute 20 (prompt 16 + 4 content tokens), so a
+    // row early-exits inside block 0 and skips blocks 1..8: exactly 7.
+    // The seed path double-counted: the all-finished fast path re-added
+    // every remaining block (and counted dummy padding rows too).
+    let be = backend(20);
+    let cfg = GenConfig::preset(Method::Streaming, 64);
+    let mut g = Generator::new(&be, cfg.clone()).unwrap();
+    let mut s = vec![seq(&be, 16, 64)];
+    let r = g.generate(&mut s, None).unwrap();
+    assert_eq!(r.blocks_skipped, 7, "single row must count its skipped blocks once");
+
+    // two real rows padded to bucket 4: 7 per real row, dummies excluded
+    let be2 = backend(20);
+    let mut g2 = Generator::new(&be2, cfg).unwrap();
+    let mut s2 = vec![seq(&be2, 16, 64), seq(&be2, 16, 64)];
+    let r2 = g2.generate(&mut s2, None).unwrap();
+    assert_eq!(r2.blocks_skipped, 14, "padding rows must not contribute skipped blocks");
+}
+
+#[test]
 fn dkv_pays_more_prefills_than_prefix_cache() {
     let be1 = backend(70);
     let cfg = GenConfig::preset(Method::DkvCache, 64);
-    let g = Generator::new(&be1, cfg).unwrap();
+    let mut g = Generator::new(&be1, cfg).unwrap();
     let mut s = vec![seq(&be1, 16, 64)];
     g.generate(&mut s, None).unwrap();
     let dkv_prefills = be1.calls.borrow().prefills;
 
     let be2 = backend(70);
     let cfg = GenConfig::preset(Method::PrefixCache, 64);
-    let g = Generator::new(&be2, cfg).unwrap();
+    let mut g = Generator::new(&be2, cfg).unwrap();
     let mut s = vec![seq(&be2, 16, 64)];
     g.generate(&mut s, None).unwrap();
     let pc_prefills = be2.calls.borrow().prefills;
@@ -91,7 +112,7 @@ fn dkv_pays_more_prefills_than_prefix_cache() {
 fn vanilla_never_prefills_and_uses_full_forwards() {
     let be = backend(70);
     let cfg = GenConfig::preset(Method::Vanilla, 64);
-    let g = Generator::new(&be, cfg).unwrap();
+    let mut g = Generator::new(&be, cfg).unwrap();
     let mut s = vec![seq(&be, 16, 64)];
     let report = g.generate(&mut s, None).unwrap();
     let calls = be.calls.borrow().clone();
@@ -108,13 +129,13 @@ fn parallel_decoding_uses_fewer_steps_than_one_per_step() {
     // high confidences from the mock (base 0.5..1.0); τ0=0.6 commits many
     let mut fast = GenConfig::preset(Method::FastDllm, 64);
     fast.tau0 = 0.6;
-    let g = Generator::new(&be1, fast).unwrap();
+    let mut g = Generator::new(&be1, fast).unwrap();
     let mut s = vec![seq(&be1, 16, 64)];
     let r_fast = g.generate(&mut s, None).unwrap();
 
     let be2 = backend(70);
     let cfg = GenConfig::preset(Method::PrefixCache, 64);
-    let g = Generator::new(&be2, cfg).unwrap();
+    let mut g = Generator::new(&be2, cfg).unwrap();
     let mut s = vec![seq(&be2, 16, 64)];
     let r_pc = g.generate(&mut s, None).unwrap();
 
@@ -125,7 +146,7 @@ fn parallel_decoding_uses_fewer_steps_than_one_per_step() {
 fn batch_padding_preserves_real_rows() {
     let be = backend(24);
     let cfg = GenConfig::preset(Method::Streaming, 64);
-    let g = Generator::new(&be, cfg).unwrap();
+    let mut g = Generator::new(&be, cfg).unwrap();
     // 2 real rows → padded to bucket 4 internally
     let mut seqs = vec![seq(&be, 16, 64), seq(&be, 12, 64)];
     let report = g.generate(&mut seqs, None).unwrap();
@@ -149,7 +170,7 @@ fn prop_terminates_under_any_confidence_stream() {
         cfg.tau0 = g.f32(0.3, 1.0);
         cfg.alpha = g.f32(0.0, 0.9);
         cfg.window = g.usize(0, 40);
-        let generator = Generator::new(&be, cfg).map_err(|e| e.to_string())?;
+        let mut generator = Generator::new(&be, cfg).map_err(|e| e.to_string())?;
         let mut seqs = vec![seq(&be, prompt_len, gen_len)];
         let report = generator.generate(&mut seqs, None).map_err(|e| e.to_string())?;
         if !seqs[0].finished {
@@ -178,7 +199,7 @@ fn prop_early_exit_never_loses_content() {
             be.conf_seed = seed;
             let mut cfg = GenConfig::preset(Method::Streaming, 64);
             cfg.early_exit = exit;
-            let generator = Generator::new(&be, cfg).map_err(|e| e.to_string())?;
+            let mut generator = Generator::new(&be, cfg).map_err(|e| e.to_string())?;
             let mut seqs = vec![seq(&be, prompt_len, 64)];
             generator.generate(&mut seqs, None).map_err(|e| e.to_string())?;
             Ok(seqs[0].non_eos_tokens())
@@ -200,7 +221,7 @@ fn remasking_terminates_and_adds_bounded_steps() {
     cfg.remask = true;
     cfg.remask_tau = 0.8; // mock confs ∈ [0.5, 1.0] → plenty of remasks
     cfg.early_exit = false;
-    let g = Generator::new(&be1, cfg).unwrap();
+    let mut g = Generator::new(&be1, cfg).unwrap();
     let mut s = vec![seq(&be1, 16, 64)];
     let r_remask = g.generate(&mut s, None).unwrap();
     assert!(s[0].finished);
@@ -209,7 +230,7 @@ fn remasking_terminates_and_adds_bounded_steps() {
     let be2 = backend(70);
     let mut cfg2 = GenConfig::preset(Method::Streaming, 64);
     cfg2.early_exit = false;
-    let g2 = Generator::new(&be2, cfg2).unwrap();
+    let mut g2 = Generator::new(&be2, cfg2).unwrap();
     let mut s2 = vec![seq(&be2, 16, 64)];
     let r_plain = g2.generate(&mut s2, None).unwrap();
     // revision costs extra steps, but bounded (≤ one extra pass per block)
@@ -303,7 +324,7 @@ fn prop_remasking_always_terminates() {
         cfg.remask = true;
         cfg.remask_tau = g.f32(0.0, 1.0);
         cfg.tau0 = g.f32(0.3, 1.0);
-        let generator = Generator::new(&be, cfg).map_err(|e| e.to_string())?;
+        let mut generator = Generator::new(&be, cfg).map_err(|e| e.to_string())?;
         let mut seqs = vec![seq(&be, g.usize(2, 24), 32)];
         generator.generate(&mut seqs, None).map_err(|e| e.to_string())?;
         if !seqs[0].finished {
