@@ -45,6 +45,14 @@ fn main() -> Result<()> {
     let concurrency = args.get_usize("concurrency", 8);
     let max_batch = args.get_usize("max-batch", 4);
     let method = Method::parse(args.get_or("method", "streaming")).expect("method");
+    // mixed-length load: comma-separated gen lengths assigned round-robin
+    let gen_lens: Vec<usize> = args
+        .get_or("gen-lens", "64")
+        .split(',')
+        .map(|s| s.trim().parse().expect("gen-lens"))
+        .collect();
+    // optional SLA budget (ms) stamped on every request; 0 = none
+    let deadline_ms = args.get_usize("deadline-ms", 0);
 
     let root = streaming_dllm::artifacts_root();
     // The oracle backend only sources/scores the workload; the server's
@@ -87,7 +95,8 @@ fn main() -> Result<()> {
                 id: i as u64,
                 prompt: item.prompt.clone(),
                 method,
-                gen_len: 64,
+                gen_len: gen_lens[i % gen_lens.len()],
+                deadline_ms: (deadline_ms > 0).then_some(deadline_ms as u64),
             })
             .collect();
 

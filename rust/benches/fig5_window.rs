@@ -7,6 +7,7 @@ mod common;
 
 use streaming_dllm::engine::{GenConfig, Method};
 use streaming_dllm::eval::run_suite;
+use streaming_dllm::util::bench::{save_rows, Row};
 
 fn main() {
     let Some(setup) = common::Setup::new() else { return };
@@ -17,8 +18,12 @@ fn main() {
     let items = setup.suite("gsm-mini");
     let items = &items[..n.min(items.len())];
 
-    println!("=== Figure 5 — window sweep (gsm-mini, L={gen_len}; paper w = 4x these) ===");
+    println!(
+        "=== Figure 5 — window sweep (gsm-mini, L={gen_len}, mode {}; paper w = 4x these) ===",
+        common::ref_mode()
+    );
     println!("{:<10}{:>10}{:>14}{:>10}", "w", "Acc.(%)", "Th.(tok/s)", "NFE");
+    let mut rows = vec![];
     // full window = whole suffix (120) — the paper's "no suffix windows, mean size=512" anchor
     for w in [4usize, 8, 16, 32, 64, 120] {
         let mut cfg = GenConfig::preset(Method::Streaming, gen_len);
@@ -33,6 +38,11 @@ fn main() {
             res.tokens_per_sec(),
             res.steps as f64 / items.len() as f64
         );
+        let cells = vec![("streaming".to_string(), res.to_cell())];
+        rows.push(Row { label: format!("w={w}"), cells });
     }
+    // under SDLLM_REF_MODE=causal this charts the paper's window/quality
+    // sensitivity on a bare checkout; CI bench-smoke uploads it
+    save_rows("fig5_window", &rows);
     println!("(n={n}; expected: throughput decays with w, accuracy saturates at the knee)");
 }

@@ -7,6 +7,7 @@ mod common;
 
 use streaming_dllm::engine::{GenConfig, Method};
 use streaming_dllm::eval::run_suite;
+use streaming_dllm::util::bench::{save_rows, Row};
 
 fn main() {
     let Some(setup) = common::Setup::new() else { return };
@@ -17,8 +18,10 @@ fn main() {
     let items = setup.suite("gsm-mini");
     let items = &items[..n.min(items.len())];
 
-    println!("=== Figure 6 — alpha sweep (gsm-mini, L={gen_len}) ===");
+    let mode = common::ref_mode();
+    println!("=== Figure 6 — alpha sweep (gsm-mini, L={gen_len}, mode {mode}) ===");
     println!("{:<10}{:>10}{:>14}{:>10}", "alpha", "Acc.(%)", "Th.(tok/s)", "NFE");
+    let mut rows = vec![];
     for alpha in [0.0f32, 0.1, 0.2, 0.3, 0.4, 0.6, 0.8, 0.9] {
         let mut cfg = GenConfig::preset(Method::Streaming, gen_len);
         cfg.alpha = alpha;
@@ -31,6 +34,13 @@ fn main() {
             res.tokens_per_sec(),
             res.steps as f64 / items.len() as f64
         );
+        rows.push(Row {
+            label: format!("alpha={alpha}"),
+            cells: vec![("streaming".into(), res.to_cell())],
+        });
     }
+    // under SDLLM_REF_MODE=causal this charts the paper's α/quality
+    // sensitivity on a bare checkout; CI bench-smoke uploads it
+    save_rows("fig6_alpha", &rows);
     println!("(n={n}; alpha=0 = static threshold; NFE falls with alpha, knee past ~0.6)");
 }

@@ -1,10 +1,24 @@
 //! Dynamic batcher: groups admitted requests into executable-compatible
-//! batches. Compatibility = same (method, gen_len) — those determine the
-//! decode schedule; prompt lengths may differ (bucketed + masked).
+//! batches. Compatibility = same method — methods determine the decode
+//! *schedule shape*; gen lengths and prompt lengths may both differ per
+//! row (each row carries its own block budget in the engine, buffers
+//! are bucketed to the max in-flight length).
 //!
-//! Policy: flush a group when it reaches `max_batch`, or when its oldest
-//! member has waited `max_wait` (classic vLLM-style continuous admission,
-//! simplified to block granularity since dLLM decode is block-wise).
+//! Queues are kept ordered by **effective deadline**: every request is
+//! assigned `arrived + deadline_ms` (or `arrived + default_sla` when
+//! the client sets none), and slot claiming always takes the earliest
+//! deadline first. Because effective deadlines are finite and anchored
+//! to arrival, an aged request eventually out-ranks any stream of
+//! fresher arrivals — the anti-starvation property the old
+//! arrival-FIFO order had, preserved under SLA ordering. With no
+//! deadlines set, the order degenerates to exactly the old FIFO.
+//!
+//! Flush policy: a group runs when it reaches `max_batch`, when its
+//! oldest member has waited `max_wait` (classic vLLM-style continuous
+//! admission, simplified to block granularity since dLLM decode is
+//! block-wise), or when a member with an *explicit* deadline is within
+//! one flush window of missing it — an urgent request on an idle
+//! server must not burn its whole SLA budget waiting out `max_wait`.
 //!
 //! Pure logic — no runtime handles — so the property tests can hammer it.
 
@@ -15,103 +29,163 @@ use crate::engine::Method;
 
 use super::request::Request;
 
-#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
-pub struct GroupKey {
-    pub method: Method,
-    pub gen_len: usize,
-}
+/// Fallback SLA assigned to requests that carry no `deadline_ms`: late
+/// enough that explicit deadlines win while fresh, finite so an aged
+/// request cannot be starved by an endless stream of urgent arrivals.
+pub const DEFAULT_SLA: Duration = Duration::from_secs(30);
+
+/// Explicit deadlines are clamped to this cap (24 h): a bogus
+/// client-supplied `deadline_ms` must not overflow `Instant +
+/// Duration` (which panics on platforms where `Instant` is a u64 tick
+/// count) or distort the queue order.
+pub const MAX_DEADLINE_MS: u64 = 24 * 60 * 60 * 1000;
 
 #[derive(Debug)]
 struct Pending {
     req: Request,
     arrived: Instant,
+    /// effective deadline: `arrived + deadline_ms.unwrap_or(default_sla)`
+    deadline: Instant,
+}
+
+impl Pending {
+    /// Queue order: earliest deadline first, ties broken by arrival.
+    fn urgency(&self) -> (Instant, Instant) {
+        (self.deadline, self.arrived)
+    }
 }
 
 #[derive(Debug)]
 pub struct Batcher {
-    queues: Vec<(GroupKey, VecDeque<Pending>)>,
+    queues: Vec<(Method, VecDeque<Pending>)>,
     pub max_batch: usize,
     pub max_wait: Duration,
+    pub default_sla: Duration,
 }
 
 impl Batcher {
     pub fn new(max_batch: usize, max_wait: Duration) -> Batcher {
         assert!(max_batch >= 1);
-        Batcher { queues: vec![], max_batch, max_wait }
+        Batcher { queues: vec![], max_batch, max_wait, default_sla: DEFAULT_SLA }
     }
 
     pub fn push(&mut self, req: Request) {
         self.push_at(req, Instant::now())
     }
 
+    /// The effective deadline a request is scheduled (and its
+    /// `deadline_misses` judged) by: `arrived + deadline_ms` (clamped
+    /// to [`MAX_DEADLINE_MS`]), or `arrived + default_sla` when the
+    /// client set none. Single source of truth — the router stamps
+    /// reply slots through this too, so queue order and the miss
+    /// metric can't drift apart.
+    pub fn effective_deadline(&self, req: &Request, arrived: Instant) -> Instant {
+        let sla = req
+            .deadline_ms
+            .map(|d| Duration::from_millis(d.min(MAX_DEADLINE_MS)))
+            .unwrap_or(self.default_sla);
+        arrived + sla
+    }
+
     pub fn push_at(&mut self, req: Request, now: Instant) {
-        let key = GroupKey { method: req.method, gen_len: req.gen_len };
-        let q = match self.queues.iter_mut().find(|(k, _)| *k == key) {
+        let deadline = self.effective_deadline(&req, now);
+        let p = Pending { req, arrived: now, deadline };
+        let q = match self.queues.iter_mut().find(|(m, _)| *m == p.req.method) {
             Some((_, q)) => q,
             None => {
-                self.queues.push((key, VecDeque::new()));
+                self.queues.push((p.req.method, VecDeque::new()));
                 &mut self.queues.last_mut().unwrap().1
             }
         };
-        q.push_back(Pending { req, arrived: now });
+        // sorted insert, stable for equal urgency (new goes after ties)
+        let at = q.partition_point(|e| e.urgency() <= p.urgency());
+        q.insert(at, p);
     }
 
     pub fn pending(&self) -> usize {
         self.queues.iter().map(|(_, q)| q.len()).sum()
     }
 
-    /// Whether group `q` is ready to run at `now`: a full batch is
-    /// available, or its oldest member exceeded max_wait.
-    fn is_ready(&self, q: &VecDeque<Pending>, now: Instant) -> bool {
-        q.len() >= self.max_batch
-            || q.front()
-                .map(|p| now.duration_since(p.arrived) >= self.max_wait)
-                .unwrap_or(false)
+    /// Queued depth of one method group (the router's per-group gauge).
+    pub fn depth(&self, method: Method) -> usize {
+        self.queues.iter().find(|(m, _)| *m == method).map(|(_, q)| q.len()).unwrap_or(0)
     }
 
-    /// Whether any group is ready to run right now (the router uses
-    /// this to avoid sleeping while work is already runnable).
+    /// Oldest arrival in a queue — readiness and starvation age are
+    /// arrival-based even though the queue is deadline-ordered.
+    fn oldest_arrival(q: &VecDeque<Pending>) -> Option<Instant> {
+        q.iter().map(|p| p.arrived).min()
+    }
+
+    /// Whether group `q` is ready to run at `now`: a full batch is
+    /// available, its oldest member exceeded max_wait, or a member with
+    /// an *explicit* deadline is within one flush window of missing it
+    /// (waiting out max_wait on an idle server would burn the whole SLA
+    /// budget before decode even starts). Default-SLA members never
+    /// pull the flush forward — without explicit deadlines the policy
+    /// is exactly the classic full-or-aged rule.
+    fn is_ready(&self, q: &VecDeque<Pending>, now: Instant) -> bool {
+        if q.len() >= self.max_batch {
+            return true;
+        }
+        let aged = Self::oldest_arrival(q)
+            .map(|a| now.duration_since(a) >= self.max_wait)
+            .unwrap_or(false);
+        let urgent = q.iter().any(|p| {
+            p.req.deadline_ms.is_some()
+                && p.deadline.saturating_duration_since(now) <= self.max_wait
+        });
+        aged || urgent
+    }
+
+    /// Whether any group without a running engine is ready right now
+    /// (the router uses this to avoid sleeping while work is already
+    /// runnable).
     pub fn has_ready(&self, now: Instant) -> bool {
         self.queues.iter().any(|(_, q)| self.is_ready(q, now))
     }
 
-    /// Pop the next batch to run, if any group is ready. Ready = full
-    /// batch available (immediately), or oldest member exceeded
-    /// max_wait (then take whatever the group has, up to max_batch).
+    /// Pop the next batch to run, if any group not in `busy` is ready.
+    /// Ready = full batch available (immediately), or oldest member
+    /// exceeded max_wait (then take whatever the group has, up to
+    /// max_batch). `busy` lists methods that already have a running
+    /// engine — their waiters join that engine through
+    /// [`Batcher::pop_compatible`] instead of starting a second one.
     ///
-    /// Fairness: among ready groups, the one whose *front request*
-    /// arrived earliest wins. Full groups don't jump ahead of an older
-    /// timed-out group — that is what bounds cross-group starvation: a
-    /// waiting group's front only gets older, so it eventually beats
-    /// any hot group whose front is constantly refreshed by admission.
-    pub fn pop_ready(&mut self, now: Instant) -> Option<(GroupKey, Vec<Request>)> {
-        let mut oldest: Option<(usize, Instant)> = None;
-        for (i, (_, q)) in self.queues.iter().enumerate() {
-            if !self.is_ready(q, now) {
+    /// Among ready groups the earliest front deadline wins (ties by
+    /// arrival). The router calls this in a loop until `None`, so every
+    /// ready group gets its own engine in the same scheduling pass —
+    /// cross-method blocking is structural, not ordering-dependent.
+    /// Within the popped batch, requests come out oldest-deadline
+    /// first.
+    pub fn pop_ready(&mut self, now: Instant, busy: &[Method]) -> Option<(Method, Vec<Request>)> {
+        let mut best: Option<(usize, (Instant, Instant))> = None;
+        for (i, (m, q)) in self.queues.iter().enumerate() {
+            if busy.contains(m) || !self.is_ready(q, now) {
                 continue;
             }
-            let front = q.front().expect("ready queue has a front").arrived;
-            if oldest.map(|(_, t)| front < t).unwrap_or(true) {
-                oldest = Some((i, front));
+            let front = q.front().expect("ready queue has a front").urgency();
+            if best.map(|(_, u)| front < u).unwrap_or(true) {
+                best = Some((i, front));
             }
         }
-        let i = oldest.map(|(i, _)| i)?;
-        let (key, q) = &mut self.queues[i];
-        let key = *key;
+        let i = best.map(|(i, _)| i)?;
+        let (method, q) = &mut self.queues[i];
+        let method = *method;
         let n = q.len().min(self.max_batch);
         let batch: Vec<Request> = q.drain(..n).map(|p| p.req).collect();
         if q.is_empty() {
             self.queues.remove(i);
         }
-        Some((key, batch))
+        Some((method, batch))
     }
 
-    /// Pop the single oldest waiting request of exactly this group —
-    /// the router uses this to fill freed engine slots mid-flight
-    /// (joining a running batch is always better than waiting, so
-    /// readiness rules don't apply).
-    pub fn pop_compatible(&mut self, key: GroupKey) -> Option<Request> {
-        let i = self.queues.iter().position(|(k, _)| *k == key)?;
+    /// Pop the most urgent waiting request of exactly this method — the
+    /// router uses this to fill freed engine slots mid-flight (joining
+    /// a running batch is always better than waiting, so readiness
+    /// rules don't apply; deadline order does).
+    pub fn pop_compatible(&mut self, method: Method) -> Option<Request> {
+        let i = self.queues.iter().position(|(m, _)| *m == method)?;
         let req = self.queues[i].1.pop_front().map(|p| p.req);
         if self.queues[i].1.is_empty() {
             self.queues.remove(i);
@@ -119,29 +193,23 @@ impl Batcher {
         req
     }
 
-    /// Whether any *other* group's front request has outlived
-    /// `max_wait`. The router stops admitting mid-flight joins into a
-    /// running batch when this turns true, letting the engine drain so
-    /// the starving group can be scheduled — a steady stream of
-    /// compatible requests must not keep one engine alive forever.
-    pub fn starving_other(&self, key: GroupKey, now: Instant) -> bool {
-        self.queues.iter().any(|(k, q)| {
-            *k != key
-                && q.front()
-                    .map(|p| now.duration_since(p.arrived) >= self.max_wait)
-                    .unwrap_or(false)
-        })
-    }
-
-    /// Time until the next queue would time out (router uses this as its
-    /// poll timeout). None when idle.
+    /// Time until the next queue becomes ready by aging out max_wait or
+    /// by an explicit deadline entering the pull-forward window (router
+    /// uses this as its poll timeout). None when idle.
     pub fn next_deadline(&self, now: Instant) -> Option<Duration> {
         self.queues
             .iter()
-            .filter_map(|(_, q)| q.front())
-            .map(|p| {
-                let waited = now.duration_since(p.arrived);
-                self.max_wait.saturating_sub(waited)
+            .filter_map(|(_, q)| {
+                let oldest = Self::oldest_arrival(q)?;
+                let aged_in = self.max_wait.saturating_sub(now.duration_since(oldest));
+                let urgent_in = q
+                    .iter()
+                    .filter(|p| p.req.deadline_ms.is_some())
+                    .map(|p| {
+                        p.deadline.saturating_duration_since(now).saturating_sub(self.max_wait)
+                    })
+                    .min();
+                Some(urgent_in.map(|u| u.min(aged_in)).unwrap_or(aged_in))
             })
             .min()
     }
@@ -153,7 +221,11 @@ mod tests {
     use crate::util::prop;
 
     fn req(id: u64, method: Method, gen_len: usize) -> Request {
-        Request { id, prompt: vec![2], method, gen_len }
+        Request { id, prompt: vec![2], method, gen_len, deadline_ms: None }
+    }
+
+    fn req_sla(id: u64, method: Method, deadline_ms: u64) -> Request {
+        Request { id, prompt: vec![2], method, gen_len: 64, deadline_ms: Some(deadline_ms) }
     }
 
     #[test]
@@ -161,23 +233,40 @@ mod tests {
         let mut b = Batcher::new(2, Duration::from_secs(60));
         let t = Instant::now();
         b.push_at(req(1, Method::Streaming, 64), t);
-        assert!(b.pop_ready(t).is_none());
+        assert!(b.pop_ready(t, &[]).is_none());
         b.push_at(req(2, Method::Streaming, 64), t);
-        let (key, batch) = b.pop_ready(t).unwrap();
+        let (method, batch) = b.pop_ready(t, &[]).unwrap();
         assert_eq!(batch.len(), 2);
-        assert_eq!(key.gen_len, 64);
+        assert_eq!(method, Method::Streaming);
         assert_eq!(b.pending(), 0);
     }
 
     #[test]
-    fn incompatible_requests_never_mix() {
+    fn mixed_gen_lens_share_a_method_group() {
+        // gen_len no longer splits groups: a 64 and a 128 streaming
+        // request flush together; only the method divides queues
+        let mut b = Batcher::new(2, Duration::from_secs(60));
+        let t = Instant::now();
+        b.push_at(req(1, Method::Streaming, 64), t);
+        b.push_at(req(2, Method::Streaming, 128), t);
+        let (method, batch) = b.pop_ready(t, &[]).unwrap();
+        assert_eq!(method, Method::Streaming);
+        assert_eq!(batch.len(), 2);
+        assert_eq!(batch[0].gen_len, 64);
+        assert_eq!(batch[1].gen_len, 128);
+    }
+
+    #[test]
+    fn different_methods_never_mix() {
         let mut b = Batcher::new(2, Duration::from_secs(60));
         let t = Instant::now();
         b.push_at(req(1, Method::Streaming, 64), t);
         b.push_at(req(2, Method::Vanilla, 64), t);
-        b.push_at(req(3, Method::Streaming, 128), t);
-        assert!(b.pop_ready(t).is_none()); // three singleton groups
-        assert_eq!(b.pending(), 3);
+        assert!(b.pop_ready(t, &[]).is_none()); // two singleton groups
+        assert_eq!(b.pending(), 2);
+        assert_eq!(b.depth(Method::Streaming), 1);
+        assert_eq!(b.depth(Method::Vanilla), 1);
+        assert_eq!(b.depth(Method::FastDllm), 0);
     }
 
     #[test]
@@ -185,88 +274,152 @@ mod tests {
         let mut b = Batcher::new(8, Duration::from_millis(10));
         let t = Instant::now();
         b.push_at(req(1, Method::Streaming, 64), t);
-        assert!(b.pop_ready(t).is_none());
+        assert!(b.pop_ready(t, &[]).is_none());
         let later = t + Duration::from_millis(11);
-        let (_, batch) = b.pop_ready(later).unwrap();
+        let (_, batch) = b.pop_ready(later, &[]).unwrap();
         assert_eq!(batch.len(), 1);
     }
 
     #[test]
-    fn full_group_with_oldest_front_wins() {
-        // regression: two full groups; the one queued *second* has the
-        // older front request and must flush first (previously the
-        // insertion-ordered scan always picked the first full group)
-        let mut b = Batcher::new(2, Duration::from_secs(60));
+    fn busy_methods_are_skipped() {
+        let mut b = Batcher::new(1, Duration::from_millis(0));
         let t = Instant::now();
-        b.push_at(req(1, Method::Streaming, 64), t + Duration::from_millis(5));
-        b.push_at(req(2, Method::Vanilla, 64), t); // older front, later queue
-        b.push_at(req(3, Method::Streaming, 64), t + Duration::from_millis(6));
-        b.push_at(req(4, Method::Vanilla, 64), t + Duration::from_millis(7));
-        let (key, batch) = b.pop_ready(t + Duration::from_millis(8)).unwrap();
-        assert_eq!(key.method, Method::Vanilla, "oldest full group must flush first");
-        assert_eq!(batch[0].id, 2);
-        let (key2, _) = b.pop_ready(t + Duration::from_millis(8)).unwrap();
-        assert_eq!(key2.method, Method::Streaming);
+        b.push_at(req(1, Method::Streaming, 64), t);
+        b.push_at(req(2, Method::Vanilla, 64), t);
+        let later = t + Duration::from_millis(1);
+        // streaming has a running engine: only vanilla may start one
+        let (m, _) = b.pop_ready(later, &[Method::Streaming]).unwrap();
+        assert_eq!(m, Method::Vanilla);
+        assert!(b.pop_ready(later, &[Method::Streaming]).is_none());
+        // the streaming waiter is still there for mid-flight joining
+        assert_eq!(b.pop_compatible(Method::Streaming).unwrap().id, 1);
     }
 
     #[test]
-    fn pop_compatible_takes_only_matching_group() {
+    fn earlier_deadline_jumps_the_queue() {
+        let mut b = Batcher::new(8, Duration::from_millis(0));
+        let t = Instant::now();
+        b.push_at(req(1, Method::Streaming, 64), t); // default SLA (30s)
+        b.push_at(req_sla(2, Method::Streaming, 50), t + Duration::from_millis(1));
+        b.push_at(req_sla(3, Method::Streaming, 10), t + Duration::from_millis(2));
+        assert_eq!(b.pop_compatible(Method::Streaming).unwrap().id, 3);
+        assert_eq!(b.pop_compatible(Method::Streaming).unwrap().id, 2);
+        assert_eq!(b.pop_compatible(Method::Streaming).unwrap().id, 1);
+        assert!(b.pop_compatible(Method::Streaming).is_none());
+    }
+
+    #[test]
+    fn aged_request_eventually_outranks_urgent_arrivals() {
+        // anti-starvation: an old default-SLA request's effective
+        // deadline is fixed; later tight-deadline arrivals anchored far
+        // enough in the future rank behind it
+        let mut b = Batcher::new(8, Duration::from_millis(0));
+        let t = Instant::now();
+        b.push_at(req(1, Method::Streaming, 64), t); // deadline t+30s
+        let late = t + DEFAULT_SLA; // 30s later
+        b.push_at(req_sla(2, Method::Streaming, 100), late); // deadline t+30.1s
+        assert_eq!(b.pop_compatible(Method::Streaming).unwrap().id, 1);
+        assert_eq!(b.pop_compatible(Method::Streaming).unwrap().id, 2);
+    }
+
+    #[test]
+    fn ready_group_with_most_urgent_front_wins() {
+        // two full groups; the one whose front deadline is earliest
+        // flushes first regardless of queue insertion order
+        let mut b = Batcher::new(2, Duration::from_secs(60));
+        let t = Instant::now();
+        b.push_at(req(1, Method::Streaming, 64), t);
+        b.push_at(req_sla(2, Method::Vanilla, 5), t + Duration::from_millis(1));
+        b.push_at(req(3, Method::Streaming, 64), t + Duration::from_millis(2));
+        b.push_at(req(4, Method::Vanilla, 64), t + Duration::from_millis(3));
+        let (m1, batch) = b.pop_ready(t + Duration::from_millis(4), &[]).unwrap();
+        assert_eq!(m1, Method::Vanilla, "urgent-front group must flush first");
+        assert_eq!(batch[0].id, 2);
+        let (m2, _) = b.pop_ready(t + Duration::from_millis(4), &[]).unwrap();
+        assert_eq!(m2, Method::Streaming);
+    }
+
+    #[test]
+    fn pop_compatible_takes_only_matching_method() {
         let mut b = Batcher::new(8, Duration::from_secs(60));
         let t = Instant::now();
         b.push_at(req(1, Method::Streaming, 64), t);
         b.push_at(req(2, Method::Vanilla, 64), t);
-        b.push_at(req(3, Method::Streaming, 64), t);
-        let key = GroupKey { method: Method::Streaming, gen_len: 64 };
-        assert_eq!(b.pop_compatible(key).unwrap().id, 1);
-        assert_eq!(b.pop_compatible(key).unwrap().id, 3);
-        assert!(b.pop_compatible(key).is_none());
+        b.push_at(req(3, Method::Streaming, 128), t + Duration::from_millis(1));
+        assert_eq!(b.pop_compatible(Method::Streaming).unwrap().id, 1);
+        // mixed gen_len joins the same method group
+        assert_eq!(b.pop_compatible(Method::Streaming).unwrap().id, 3);
+        assert!(b.pop_compatible(Method::Streaming).is_none());
         assert_eq!(b.pending(), 1); // the vanilla request stays queued
-        assert!(b
-            .pop_compatible(GroupKey { method: Method::Streaming, gen_len: 128 })
-            .is_none());
     }
 
     #[test]
-    fn starving_other_ignores_own_group_and_fresh_waiters() {
-        let mut b = Batcher::new(4, Duration::from_millis(10));
-        let t = Instant::now();
-        let streaming = GroupKey { method: Method::Streaming, gen_len: 64 };
-        b.push_at(req(1, Method::Streaming, 64), t);
-        // own group aging never counts as starvation
-        assert!(!b.starving_other(streaming, t + Duration::from_millis(50)));
-        b.push_at(req(2, Method::Vanilla, 64), t + Duration::from_millis(5));
-        // the vanilla waiter is fresh …
-        assert!(!b.starving_other(streaming, t + Duration::from_millis(10)));
-        // … and starving once it outlives max_wait
-        assert!(b.starving_other(streaming, t + Duration::from_millis(20)));
-        // from vanilla's perspective the aged streaming front starves too
-        let vanilla = GroupKey { method: Method::Vanilla, gen_len: 64 };
-        assert!(b.starving_other(vanilla, t + Duration::from_millis(20)));
-    }
-
-    #[test]
-    fn oldest_group_flushes_first() {
+    fn oldest_group_flushes_first_on_timeout() {
         let mut b = Batcher::new(8, Duration::from_millis(10));
         let t = Instant::now();
         b.push_at(req(1, Method::Vanilla, 64), t);
         b.push_at(req(2, Method::Streaming, 64), t + Duration::from_millis(2));
         let later = t + Duration::from_millis(20);
-        let (key, _) = b.pop_ready(later).unwrap();
-        assert_eq!(key.method, Method::Vanilla);
+        // equal default SLAs: vanilla's front deadline (t+30s) is
+        // earlier than streaming's (t+2ms+30s)
+        let (m, _) = b.pop_ready(later, &[]).unwrap();
+        assert_eq!(m, Method::Vanilla);
     }
 
     #[test]
-    fn deadline_reflects_oldest() {
+    fn absurd_deadline_is_clamped_not_panicking() {
+        // u64::MAX ms would overflow Instant + Duration on some
+        // platforms; the clamp caps it at 24h, which also keeps it
+        // ranked behind a fresh default-SLA request
+        let mut b = Batcher::new(8, Duration::from_millis(0));
+        let t = Instant::now();
+        b.push_at(req_sla(1, Method::Streaming, u64::MAX), t);
+        b.push_at(req(2, Method::Streaming, 64), t + Duration::from_millis(1));
+        assert_eq!(b.pop_compatible(Method::Streaming).unwrap().id, 2);
+        assert_eq!(b.pop_compatible(Method::Streaming).unwrap().id, 1);
+    }
+
+    #[test]
+    fn explicit_deadline_pulls_flush_forward() {
+        let mut b = Batcher::new(8, Duration::from_millis(500));
+        let t = Instant::now();
+        b.push_at(req(1, Method::Streaming, 64), t);
+        // a lone default-SLA waiter follows the classic aged rule
+        assert!(!b.has_ready(t + Duration::from_millis(10)));
+        // a 50ms-deadline arrival sits inside the 500ms flush window,
+        // so the partial group flushes immediately (urgent first)
+        b.push_at(req_sla(2, Method::Streaming, 50), t + Duration::from_millis(10));
+        let now = t + Duration::from_millis(11);
+        assert!(b.has_ready(now));
+        let (_, batch) = b.pop_ready(now, &[]).unwrap();
+        assert_eq!(batch.len(), 2);
+        assert_eq!(batch[0].id, 2);
+
+        // the poll timeout anticipates the pull-forward point:
+        // deadline 600ms − window 500ms = ready in ≤100ms
+        let mut b2 = Batcher::new(8, Duration::from_millis(500));
+        b2.push_at(req_sla(3, Method::Vanilla, 600), t);
+        assert!(!b2.has_ready(t + Duration::from_millis(50)));
+        let d = b2.next_deadline(t).unwrap();
+        assert!(d <= Duration::from_millis(100));
+        assert!(b2.has_ready(t + Duration::from_millis(150)));
+    }
+
+    #[test]
+    fn deadline_reflects_oldest_arrival() {
         let mut b = Batcher::new(8, Duration::from_millis(100));
         let t = Instant::now();
         assert!(b.next_deadline(t).is_none());
+        // a tight-deadline later arrival sorts first, but the flush
+        // timer still keys off the oldest *arrival*
         b.push_at(req(1, Method::Streaming, 64), t);
+        b.push_at(req_sla(2, Method::Streaming, 1), t + Duration::from_millis(20));
         let d = b.next_deadline(t + Duration::from_millis(30)).unwrap();
         assert!(d <= Duration::from_millis(70));
     }
 
     #[test]
-    fn prop_batches_homogeneous_and_complete() {
+    fn prop_batches_method_homogeneous_and_complete() {
         prop::check(200, |g| {
             let max_batch = g.usize(1, 8);
             let n = g.usize(0, 40);
@@ -276,17 +429,21 @@ mod tests {
             let mut pushed = 0usize;
             for i in 0..n {
                 let m = methods[g.usize(0, 4)];
-                let len = [64, 128][g.usize(0, 1)];
-                b.push_at(req(i as u64, m, len), t);
+                let len = [16, 64, 128][g.usize(0, 2)];
+                let mut r = req(i as u64, m, len);
+                if g.bool(0.5) {
+                    r.deadline_ms = Some(g.usize(0, 500) as u64);
+                }
+                b.push_at(r, t + Duration::from_millis(g.usize(0, 5) as u64));
                 pushed += 1;
             }
             let mut popped = 0usize;
-            while let Some((key, batch)) = b.pop_ready(t + Duration::from_millis(1)) {
+            while let Some((method, batch)) = b.pop_ready(t + Duration::from_millis(6), &[]) {
                 if batch.is_empty() || batch.len() > max_batch {
                     return Err(format!("bad batch size {}", batch.len()));
                 }
-                if !batch.iter().all(|r| r.method == key.method && r.gen_len == key.gen_len) {
-                    return Err("mixed batch".into());
+                if !batch.iter().all(|r| r.method == method) {
+                    return Err("mixed-method batch".into());
                 }
                 popped += batch.len();
             }
@@ -298,16 +455,19 @@ mod tests {
     }
 
     #[test]
-    fn prop_fifo_within_group() {
+    fn prop_fifo_within_group_without_deadlines() {
+        // no explicit deadlines → effective deadlines are arrival+SLA,
+        // so deadline order degenerates to the old arrival FIFO
         prop::check(100, |g| {
             let n = g.usize(1, 20);
             let mut b = Batcher::new(4, Duration::from_millis(0));
             let t = Instant::now();
             for i in 0..n {
-                b.push_at(req(i as u64, Method::Streaming, 64), t);
+                let at = t + Duration::from_millis(i as u64);
+                b.push_at(req(i as u64, Method::Streaming, 64), at);
             }
             let mut last = None;
-            while let Some((_, batch)) = b.pop_ready(t) {
+            while let Some((_, batch)) = b.pop_ready(t + Duration::from_millis(n as u64), &[]) {
                 for r in batch {
                     if let Some(prev) = last {
                         if r.id <= prev {

@@ -23,8 +23,19 @@ struct Inner {
     /// requests admitted into a batch already mid-flight (continuous
     /// batching joins, as opposed to batch-start admissions)
     joins: u64,
+    /// requests admitted when their engine's batch started
+    batch_started: u64,
+    /// every successful engine admission, regardless of path — the
+    /// conservation identity `joins + batch_started == admissions`
+    /// pins the router wiring (the stress harness asserts it)
+    admissions: u64,
+    /// ok responses that completed past their effective deadline
+    deadline_misses: u64,
     /// block rounds driven across all retired engines
     engine_rounds: u64,
+    /// rounds whose live rows spanned ≥ 2 distinct gen lengths
+    /// (mixed-length occupancy numerator, against engine_rounds)
+    mixed_len_rounds: u64,
     engine_steps: u64,
     engine_prefills: u64,
     engine_blocks_skipped: u64,
@@ -32,6 +43,12 @@ struct Inner {
     prefill_secs: f64,
     decode_secs: f64,
     host_secs: f64,
+    /// gauge: per-method (queued, active-in-engine) depths, refreshed
+    /// by the router every scheduling pass
+    group_depth: Vec<(&'static str, usize, usize)>,
+    /// gauge + high-water mark of concurrently running engines
+    engines_active: usize,
+    max_engines_active: usize,
 }
 
 #[derive(Debug, Default)]
@@ -63,11 +80,43 @@ impl Metrics {
         m.joins += 1;
     }
 
+    /// A request was admitted when its engine's batch started.
+    pub fn record_batch_admit(&self) {
+        let mut m = self.inner.lock().unwrap();
+        m.batch_started += 1;
+    }
+
+    /// Any successful engine admission (batch start or join). Recorded
+    /// at the `BatchEngine::admit` call site, independently of the
+    /// per-path counters, so `joins + batch_started == admissions`
+    /// holds exactly when the router wiring is correct.
+    pub fn record_admission(&self) {
+        let mut m = self.inner.lock().unwrap();
+        m.admissions += 1;
+    }
+
+    /// An ok response completed past its effective deadline.
+    pub fn record_deadline_miss(&self) {
+        let mut m = self.inner.lock().unwrap();
+        m.deadline_misses += 1;
+    }
+
+    /// Refresh the scheduling gauges: per-method (queued, active) depth
+    /// and the number of concurrently running engines.
+    pub fn set_groups(&self, depths: Vec<(&'static str, usize, usize)>, engines: usize) {
+        let mut m = self.inner.lock().unwrap();
+        m.group_depth = depths;
+        m.engines_active = engines;
+        m.max_engines_active = m.max_engines_active.max(engines);
+    }
+
     /// Fold a retired engine's cumulative report into the serving
-    /// totals (per-phase seconds, steps, prefills, skipped blocks).
-    pub fn record_engine(&self, report: &GenReport, rounds: u64) {
+    /// totals (per-phase seconds, steps, prefills, skipped blocks,
+    /// mixed-length rounds).
+    pub fn record_engine(&self, report: &GenReport, rounds: u64, mixed_rounds: u64) {
         let mut m = self.inner.lock().unwrap();
         m.engine_rounds += rounds;
+        m.mixed_len_rounds += mixed_rounds;
         m.engine_steps += report.steps;
         m.engine_prefills += report.prefills;
         m.engine_blocks_skipped += report.blocks_skipped;
@@ -114,6 +163,29 @@ impl Metrics {
             ("latency_p99_s", Json::Num(p99)),
             ("queue_delay_mean_s", Json::Num(qmean)),
             ("joins", Json::Num(m.joins as f64)),
+            ("batch_started", Json::Num(m.batch_started as f64)),
+            ("admissions", Json::Num(m.admissions as f64)),
+            ("deadline_misses", Json::Num(m.deadline_misses as f64)),
+            ("mixed_len_rounds", Json::Num(m.mixed_len_rounds as f64)),
+            ("engines_active", Json::Num(m.engines_active as f64)),
+            ("max_engines_active", Json::Num(m.max_engines_active as f64)),
+            (
+                "group_depth",
+                Json::obj(
+                    m.group_depth
+                        .iter()
+                        .map(|&(name, queued, active)| {
+                            (
+                                name,
+                                Json::obj(vec![
+                                    ("queued", Json::Num(queued as f64)),
+                                    ("active", Json::Num(active as f64)),
+                                ]),
+                            )
+                        })
+                        .collect(),
+                ),
+            ),
             ("engine_rounds", Json::Num(m.engine_rounds as f64)),
             ("engine_steps", Json::Num(m.engine_steps as f64)),
             ("engine_prefills", Json::Num(m.engine_prefills as f64)),
@@ -160,14 +232,37 @@ mod tests {
             host_secs: 0.125,
             ..Default::default()
         };
-        m.record_engine(&report, 8);
-        m.record_engine(&report, 8);
+        m.record_engine(&report, 8, 3);
+        m.record_engine(&report, 8, 2);
         let s = m.snapshot();
         assert_eq!(s.get("joins").unwrap().as_usize(), Some(2));
         assert_eq!(s.get("engine_rounds").unwrap().as_usize(), Some(16));
+        assert_eq!(s.get("mixed_len_rounds").unwrap().as_usize(), Some(5));
         assert_eq!(s.get("engine_steps").unwrap().as_usize(), Some(80));
         assert_eq!(s.get("engine_blocks_skipped").unwrap().as_usize(), Some(6));
         assert!((s.get("prefill_s").unwrap().as_f64().unwrap() - 0.5).abs() < 1e-9);
         assert!((s.get("host_s").unwrap().as_f64().unwrap() - 0.25).abs() < 1e-9);
+    }
+
+    #[test]
+    fn admission_conservation_and_gauges() {
+        let m = Metrics::new();
+        m.record_batch_admit();
+        m.record_admission();
+        m.record_join();
+        m.record_admission();
+        m.record_deadline_miss();
+        m.set_groups(vec![("streaming", 3, 2), ("vanilla", 1, 0)], 2);
+        m.set_groups(vec![("streaming", 0, 1)], 1);
+        let s = m.snapshot();
+        assert_eq!(s.get("admissions").unwrap().as_usize(), Some(2));
+        assert_eq!(s.get("batch_started").unwrap().as_usize(), Some(1));
+        assert_eq!(s.get("joins").unwrap().as_usize(), Some(1));
+        assert_eq!(s.get("deadline_misses").unwrap().as_usize(), Some(1));
+        assert_eq!(s.get("engines_active").unwrap().as_usize(), Some(1));
+        assert_eq!(s.get("max_engines_active").unwrap().as_usize(), Some(2));
+        let depth = s.get("group_depth").unwrap();
+        assert_eq!(depth.get("streaming").unwrap().get("queued").unwrap().as_usize(), Some(0));
+        assert_eq!(depth.get("streaming").unwrap().get("active").unwrap().as_usize(), Some(1));
     }
 }

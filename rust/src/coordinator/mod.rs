@@ -8,7 +8,7 @@ pub mod request;
 pub mod router;
 pub mod server;
 
-pub use batcher::{Batcher, GroupKey};
+pub use batcher::{Batcher, DEFAULT_SLA};
 pub use client::{run_load, Client, LoadReport};
 pub use metrics::Metrics;
 pub use request::{Request, Response};

@@ -11,6 +11,13 @@ pub struct Request {
     pub prompt: Vec<i32>,
     pub method: Method,
     pub gen_len: usize,
+    /// SLA budget in milliseconds from submission. Drives slot
+    /// claiming: the batcher orders every queue by effective deadline
+    /// (`arrival + deadline_ms`, or a default SLA when `None`), so
+    /// tighter-deadline requests claim freed slots first. Purely a
+    /// scheduling priority — a missed deadline is still answered, and
+    /// counted in the `deadline_misses` metric.
+    pub deadline_ms: Option<u64>,
 }
 
 #[derive(Debug, Clone)]
@@ -25,12 +32,16 @@ pub struct Response {
 
 impl Request {
     pub fn to_json(&self) -> Json {
-        Json::obj(vec![
+        let mut fields = vec![
             ("id", Json::Num(self.id as f64)),
             ("prompt", Json::Arr(self.prompt.iter().map(|&t| Json::Num(t as f64)).collect())),
             ("method", Json::Str(self.method.name().to_string())),
             ("gen_len", Json::Num(self.gen_len as f64)),
-        ])
+        ];
+        if let Some(d) = self.deadline_ms {
+            fields.push(("deadline_ms", Json::Num(d as f64)));
+        }
+        Json::obj(fields)
     }
 
     pub fn from_json(j: &Json) -> Result<Request, String> {
@@ -48,7 +59,8 @@ impl Request {
         let method = Method::parse(j.get("method").and_then(|v| v.as_str()).unwrap_or("streaming"))
             .ok_or("unknown method")?;
         let gen_len = j.get("gen_len").and_then(|v| v.as_usize()).unwrap_or(64);
-        Ok(Request { id, prompt, method, gen_len })
+        let deadline_ms = j.get("deadline_ms").and_then(|v| v.as_i64()).map(|d| d.max(0) as u64);
+        Ok(Request { id, prompt, method, gen_len, deadline_ms })
     }
 }
 
@@ -85,13 +97,38 @@ mod tests {
 
     #[test]
     fn request_roundtrip() {
-        let r = Request { id: 7, prompt: vec![2, 10, 11], method: Method::Streaming, gen_len: 64 };
+        let r = Request {
+            id: 7,
+            prompt: vec![2, 10, 11],
+            method: Method::Streaming,
+            gen_len: 64,
+            deadline_ms: None,
+        };
         let j = Json::parse(&r.to_json().to_string()).unwrap();
         let r2 = Request::from_json(&j).unwrap();
         assert_eq!(r2.id, 7);
         assert_eq!(r2.prompt, vec![2, 10, 11]);
         assert_eq!(r2.method, Method::Streaming);
         assert_eq!(r2.gen_len, 64);
+        assert_eq!(r2.deadline_ms, None);
+    }
+
+    #[test]
+    fn deadline_roundtrip_and_default() {
+        let r = Request {
+            id: 8,
+            prompt: vec![2],
+            method: Method::Vanilla,
+            gen_len: 32,
+            deadline_ms: Some(250),
+        };
+        let j = Json::parse(&r.to_json().to_string()).unwrap();
+        assert_eq!(Request::from_json(&j).unwrap().deadline_ms, Some(250));
+        // absent on the wire → None; negative values clamp to zero
+        let j = Json::parse("{\"id\":1,\"prompt\":[2]}").unwrap();
+        assert_eq!(Request::from_json(&j).unwrap().deadline_ms, None);
+        let j = Json::parse("{\"id\":1,\"prompt\":[2],\"deadline_ms\":-5}").unwrap();
+        assert_eq!(Request::from_json(&j).unwrap().deadline_ms, Some(0));
     }
 
     #[test]

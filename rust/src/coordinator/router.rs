@@ -3,13 +3,18 @@
 //! and owns the backend; everything else talks to it through a channel
 //! of jobs.
 //!
-//! The admission loop is *continuous at block granularity*: ready
-//! batches from the `Batcher` start a slot-based [`BatchEngine`], and
-//! between block rounds the loop admits compatible queued requests into
-//! slots freed by finished or early-exited rows — a request that
-//! arrives while a batch is decoding joins it mid-flight instead of
-//! waiting for the full drain. Finished rows are answered the moment
-//! their own decode completes.
+//! The admission loop is *continuous at block granularity* and
+//! **multi-engine**: every method group that becomes ready gets its own
+//! slot-based [`BatchEngine`], and each scheduling pass drives one
+//! block round per active engine — Streaming and Vanilla traffic decode
+//! concurrently instead of blocking each other, which also removes the
+//! old join-pause rule (a starving group now simply starts its own
+//! engine on the next pass). Between block rounds the loop admits
+//! queued same-method requests into slots freed by finished or
+//! early-exited rows, earliest effective deadline first; rows carry
+//! their own `gen_len`, so mixed-length requests share one engine and
+//! a short row's retirement frees its slot while long rows continue.
+//! Finished rows are answered the moment their own decode completes.
 //!
 //! Construction is a factory closure executed on the engine thread
 //! (`spawn_with`), with two conveniences: `spawn_reference` (pure-Rust
@@ -24,9 +29,11 @@ use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
-use crate::engine::{Backend, BatchEngine, GenConfig, RefMode, ReferenceBackend, REFERENCE_SEED};
+use crate::engine::{
+    Backend, BatchEngine, GenConfig, Method, RefMode, ReferenceBackend, REFERENCE_SEED,
+};
 
-use super::batcher::{Batcher, GroupKey};
+use super::batcher::Batcher;
 use super::metrics::Metrics;
 use super::request::{Request, Response};
 
@@ -164,24 +171,52 @@ impl Drop for RouterHandle {
     }
 }
 
-/// The in-flight engine plus per-request admission times (for queue /
-/// latency accounting).
+/// Placeholder gen length for the per-method engine config. Rows carry
+/// their own `gen_len` at admission — this only has to satisfy
+/// `GenConfig::validate` (positive, block-aligned).
+const ENGINE_CFG_GEN_LEN: usize = 64;
+
+/// Per-request bookkeeping held until the reply is sent: the channel,
+/// arrival time, and the effective deadline — `arrival + deadline_ms`,
+/// or `arrival + default SLA` when none was given — for the miss
+/// metric, mirroring the batcher's ordering semantics.
+struct ReplySlot {
+    tx: Sender<Response>,
+    arrived: Instant,
+    deadline: Instant,
+}
+
+/// One in-flight engine (there is at most one per method) plus
+/// per-request admission times for queue / latency accounting.
 struct EngineRun<'b, B: Backend> {
-    key: GroupKey,
+    method: Method,
     engine: BatchEngine<'b, B>,
     admitted: HashMap<u64, Instant>,
 }
 
+/// Refresh the scheduling gauges: per-method (queued, active) depth
+/// and the engines-active gauge + high-water mark. Called right after
+/// engines start (so short-lived engines that drain within the same
+/// pass still count toward the peak) and again at the end of the pass
+/// (so the current-state gauges reflect retirements).
+fn refresh_gauges<B: Backend>(batcher: &Batcher, runs: &[EngineRun<'_, B>], metrics: &Metrics) {
+    let depths: Vec<(&'static str, usize, usize)> = Method::all()
+        .into_iter()
+        .filter_map(|m| {
+            let queued = batcher.depth(m);
+            let active =
+                runs.iter().find(|r| r.method == m).map(|r| r.engine.active()).unwrap_or(0);
+            (queued + active > 0).then_some((m.name(), queued, active))
+        })
+        .collect();
+    metrics.set_groups(depths, runs.len());
+}
+
 /// Answer a request with an error and account for it.
-fn fail(
-    replies: &mut HashMap<u64, (Sender<Response>, Instant)>,
-    metrics: &Metrics,
-    id: u64,
-    err: &str,
-) {
-    if let Some((tx, _)) = replies.remove(&id) {
+fn fail(replies: &mut HashMap<u64, ReplySlot>, metrics: &Metrics, id: u64, err: &str) {
+    if let Some(slot) = replies.remove(&id) {
         metrics.record_response(false, 0, 0.0, 0.0);
-        let _ = tx.send(Response {
+        let _ = slot.tx.send(Response {
             id,
             text: String::new(),
             non_eos_tokens: 0,
@@ -189,6 +224,40 @@ fn fail(
             queue_s: 0.0,
             error: Some(err.to_string()),
         });
+    }
+}
+
+/// Try to admit `req` into `run`'s engine; answers the request with an
+/// error (and returns false) when it can never decode there.
+fn admit_or_fail<B: Backend>(
+    run: &mut EngineRun<'_, B>,
+    req: &Request,
+    replies: &mut HashMap<u64, ReplySlot>,
+    metrics: &Metrics,
+) -> bool {
+    if !run.engine.valid_gen_len(req.gen_len) {
+        let k = run.engine.config().block_size;
+        fail(
+            replies,
+            metrics,
+            req.id,
+            &format!("gen_len {} is not a positive multiple of block size {k}", req.gen_len),
+        );
+        return false;
+    }
+    if !run.engine.fits(req.prompt.len(), req.gen_len) {
+        // fail the oversized request alone — it must not poison the
+        // rows already (or about to be) mid-decode
+        fail(replies, metrics, req.id, "prompt exceeds backend buckets");
+        return false;
+    }
+    if run.engine.admit(req.id, &req.prompt, req.gen_len) {
+        run.admitted.insert(req.id, Instant::now());
+        metrics.record_admission();
+        true
+    } else {
+        fail(replies, metrics, req.id, "engine slots exhausted");
+        false
     }
 }
 
@@ -203,24 +272,28 @@ fn engine_loop<B: Backend>(
 
     // Clamp the serving batch to what the backend's batch buckets carry
     // up front, so the batcher never hands an engine more rows than it
-    // has slots (keeps record_batch and the joins metric honest).
+    // has slots (keeps record_batch and the admission metrics honest).
     let engine_cap = crate::engine::clamp_batch(backend, max_batch);
     let mut batcher = Batcher::new(engine_cap, max_wait);
-    let mut replies: HashMap<u64, (Sender<Response>, Instant)> = HashMap::new();
+    let mut replies: HashMap<u64, ReplySlot> = HashMap::new();
     let mut shutdown = false;
-    let mut active: Option<EngineRun<'_, B>> = None;
+    let mut runs: Vec<EngineRun<'_, B>> = Vec::new();
+
+    let enqueue = |job: Job, batcher: &mut Batcher, replies: &mut HashMap<u64, ReplySlot>| {
+        let deadline = batcher.effective_deadline(&job.request, job.arrived);
+        let slot = ReplySlot { tx: job.reply, arrived: job.arrived, deadline };
+        replies.insert(job.request.id, slot);
+        batcher.push_at(job.request, job.arrived);
+    };
 
     loop {
-        // Drain the inbox. With an engine mid-flight we must not block —
+        // Drain the inbox. With engines mid-flight we must not block —
         // decode keeps moving and new arrivals join at the next block
         // boundary; when idle, wait out the batcher's flush deadline.
-        if active.is_some() {
+        if !runs.is_empty() {
             loop {
                 match rx.try_recv() {
-                    Ok(Msg::Submit(job)) => {
-                        replies.insert(job.request.id, (job.reply, job.arrived));
-                        batcher.push_at(job.request, job.arrived);
-                    }
+                    Ok(Msg::Submit(job)) => enqueue(job, &mut batcher, &mut replies),
                     Ok(Msg::Shutdown) => shutdown = true,
                     Err(TryRecvError::Empty) => break,
                     Err(TryRecvError::Disconnected) => {
@@ -231,8 +304,8 @@ fn engine_loop<B: Backend>(
             }
         } else {
             // A group can already be runnable (full, or flushed by a
-            // deadline that passed while the last engine was busy) —
-            // never sleep on the inbox in that case.
+            // deadline that passed while the engines were busy) — never
+            // sleep on the inbox in that case.
             let now = Instant::now();
             let timeout = if batcher.has_ready(now) {
                 Duration::ZERO
@@ -241,15 +314,11 @@ fn engine_loop<B: Backend>(
             };
             match rx.recv_timeout(timeout) {
                 Ok(Msg::Submit(job)) => {
-                    replies.insert(job.request.id, (job.reply, job.arrived));
-                    batcher.push_at(job.request, job.arrived);
+                    enqueue(job, &mut batcher, &mut replies);
                     // opportunistically drain whatever else is queued
                     while let Ok(msg) = rx.try_recv() {
                         match msg {
-                            Msg::Submit(j) => {
-                                replies.insert(j.request.id, (j.reply, j.arrived));
-                                batcher.push_at(j.request, j.arrived);
-                            }
+                            Msg::Submit(j) => enqueue(j, &mut batcher, &mut replies),
                             Msg::Shutdown => shutdown = true,
                         }
                     }
@@ -260,83 +329,74 @@ fn engine_loop<B: Backend>(
             }
         }
 
-        // Start an engine when idle and a group is ready.
-        if active.is_none() {
-            if let Some((key, batch)) = batcher.pop_ready(Instant::now()) {
-                metrics.record_batch(batch.len());
-                let cfg = GenConfig::preset(key.method, key.gen_len);
-                match BatchEngine::new(backend, cfg, engine_cap) {
-                    Ok(engine) => {
-                        let mut run = EngineRun { key, engine, admitted: HashMap::new() };
-                        let now = Instant::now();
-                        for req in batch {
-                            if !run.engine.fits(req.prompt.len()) {
-                                // fail the oversized request alone — its
-                                // batchmates keep decoding
-                                fail(
-                                    &mut replies,
-                                    &metrics,
-                                    req.id,
-                                    "prompt exceeds backend buckets",
-                                );
-                            } else if run.engine.admit(req.id, &req.prompt) {
-                                run.admitted.insert(req.id, now);
-                            } else {
-                                // defensive: the batcher flush size is
-                                // clamped to engine capacity, but if the
-                                // two ever drift, requeue (original
-                                // arrival preserved) — the overflow joins
-                                // as rows finish and free slots
-                                let arrived = replies
-                                    .get(&req.id)
-                                    .map(|(_, a)| *a)
-                                    .unwrap_or_else(Instant::now);
-                                batcher.push_at(req, arrived);
+        // Start an engine for every ready group that doesn't have one —
+        // distinct methods decode concurrently, so a ready group never
+        // waits behind another method's batch.
+        loop {
+            let busy: Vec<Method> = runs.iter().map(|r| r.method).collect();
+            let Some((method, batch)) = batcher.pop_ready(Instant::now(), &busy) else { break };
+            metrics.record_batch(batch.len());
+            let cfg = GenConfig::preset(method, ENGINE_CFG_GEN_LEN);
+            match BatchEngine::new(backend, cfg, engine_cap) {
+                Ok(engine) => {
+                    let mut run = EngineRun { method, engine, admitted: HashMap::new() };
+                    for req in batch {
+                        if run.engine.has_free_slot() {
+                            if admit_or_fail(&mut run, &req, &mut replies, &metrics) {
+                                metrics.record_batch_admit();
                             }
+                        } else {
+                            // defensive: the batcher flush size is
+                            // clamped to engine capacity, but if the two
+                            // ever drift, requeue (original arrival
+                            // preserved) — the overflow joins as rows
+                            // finish and free slots
+                            let arrived = replies
+                                .get(&req.id)
+                                .map(|s| s.arrived)
+                                .unwrap_or_else(Instant::now);
+                            batcher.push_at(req, arrived);
                         }
-                        active = Some(run);
                     }
-                    Err(e) => {
-                        let msg = format!("{e:#}");
-                        for req in &batch {
-                            fail(&mut replies, &metrics, req.id, &msg);
-                        }
+                    if run.engine.active() > 0 {
+                        runs.push(run);
+                    }
+                }
+                Err(e) => {
+                    let msg = format!("{e:#}");
+                    for req in &batch {
+                        fail(&mut replies, &metrics, req.id, &msg);
                     }
                 }
             }
         }
 
-        // Admit compatible waiters into free slots, run one block
-        // round, answer whoever finished. Joins pause the moment some
-        // *other* group's front request outlives max_wait: the engine
-        // then drains naturally and the starving group gets scheduled —
-        // a hot compatible stream can't keep one engine alive forever.
-        let mut retire = false;
-        if let Some(run) = active.as_mut() {
-            let now = Instant::now();
-            while run.engine.has_free_slot() && !batcher.starving_other(run.key, now) {
-                let Some(req) = batcher.pop_compatible(run.key) else { break };
-                if !run.engine.fits(req.prompt.len()) {
-                    // oversized joiner: fail it alone, keep admitting —
-                    // it must not poison the rows already mid-decode
-                    fail(&mut replies, &metrics, req.id, "prompt exceeds backend buckets");
-                    continue;
-                }
-                if run.engine.admit(req.id, &req.prompt) {
-                    run.admitted.insert(req.id, Instant::now());
+        // Peak sampled before any same-pass retirement, so an engine
+        // that starts and drains within one pass still registers in
+        // max_engines_active.
+        refresh_gauges(&batcher, &runs, &metrics);
+
+        // For each engine: admit same-method waiters (earliest deadline
+        // first) into free slots, run one block round, answer whoever
+        // finished; retire engines that drained.
+        let mut i = 0;
+        while i < runs.len() {
+            let run = &mut runs[i];
+            while run.engine.has_free_slot() {
+                let Some(req) = batcher.pop_compatible(run.method) else { break };
+                if admit_or_fail(run, &req, &mut replies, &metrics) {
                     metrics.record_join();
-                } else {
-                    fail(&mut replies, &metrics, req.id, "engine slots exhausted");
                 }
             }
+            let mut retire = false;
             match run.engine.step_block() {
                 Ok(done) => {
                     let now = Instant::now();
                     for f in done {
                         let started = run.admitted.remove(&f.tag);
-                        if let Some((tx, arrived)) = replies.remove(&f.tag) {
-                            let started = started.unwrap_or(arrived);
-                            let queue_s = started.duration_since(arrived).as_secs_f64();
+                        if let Some(slot) = replies.remove(&f.tag) {
+                            let started = started.unwrap_or(slot.arrived);
+                            let queue_s = started.duration_since(slot.arrived).as_secs_f64();
                             let latency_s = now.duration_since(started).as_secs_f64();
                             let resp = Response {
                                 id: f.tag,
@@ -347,7 +407,10 @@ fn engine_loop<B: Backend>(
                                 error: None,
                             };
                             metrics.record_response(true, resp.non_eos_tokens, latency_s, queue_s);
-                            let _ = tx.send(resp);
+                            if now > slot.deadline {
+                                metrics.record_deadline_miss();
+                            }
+                            let _ = slot.tx.send(resp);
                         }
                     }
                     retire = run.engine.active() == 0;
@@ -361,14 +424,22 @@ fn engine_loop<B: Backend>(
                     retire = true;
                 }
             }
-        }
-        if retire {
-            if let Some(run) = active.take() {
-                metrics.record_engine(run.engine.report(), run.engine.rounds());
+            if retire {
+                let run = runs.swap_remove(i);
+                metrics.record_engine(
+                    run.engine.report(),
+                    run.engine.rounds(),
+                    run.engine.mixed_rounds(),
+                );
+            } else {
+                i += 1;
             }
         }
 
-        if shutdown && active.is_none() && batcher.pending() == 0 {
+        // Refresh the current-state gauges after retirements.
+        refresh_gauges(&batcher, &runs, &metrics);
+
+        if shutdown && runs.is_empty() && batcher.pending() == 0 {
             return Ok(());
         }
     }

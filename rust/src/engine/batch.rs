@@ -55,6 +55,7 @@ pub struct BatchEngine<'a, B: Backend> {
     ws: StepWorkspace,
     report: GenReport,
     rounds: u64,
+    mixed_rounds: u64,
 }
 
 impl<'a, B: Backend> BatchEngine<'a, B> {
@@ -77,6 +78,7 @@ impl<'a, B: Backend> BatchEngine<'a, B> {
             ws: StepWorkspace::new(),
             report: GenReport::default(),
             rounds: 0,
+            mixed_rounds: 0,
         })
     }
 
@@ -108,37 +110,69 @@ impl<'a, B: Backend> BatchEngine<'a, B> {
         self.rounds
     }
 
+    /// Rounds driven while the live rows spanned ≥ 2 distinct gen
+    /// lengths — the mixed-length occupancy numerator the metrics
+    /// snapshot reports against `rounds`.
+    pub fn mixed_rounds(&self) -> u64 {
+        self.mixed_rounds
+    }
+
     pub fn workspace_stats(&self) -> WorkspaceStats {
         WorkspaceStats { grows: self.ws.grows, steps: self.ws.steps }
     }
 
-    /// Whether a prompt of this length can decode under the backend's
-    /// bucket grids: the worst-case prefix (prompt + all decoded
-    /// blocks) must fit a prefix bucket, and the vanilla full-forward
-    /// path needs the whole canvas inside a seq bucket. The router
-    /// checks this before admitting so one oversized request is failed
-    /// alone instead of poisoning every in-flight row of the batch.
-    pub fn fits(&self, prompt_len: usize) -> bool {
+    /// Whether a gen length can be admitted at all: positive and block
+    /// aligned (the same invariant `GenConfig::validate` enforces for
+    /// homogeneous batches, here per row).
+    pub fn valid_gen_len(&self, gen_len: usize) -> bool {
+        gen_len > 0 && gen_len % self.cfg.block_size == 0
+    }
+
+    /// Whether a (prompt, gen_len) pair can decode under the backend's
+    /// bucket grids: the worst-case prefix (prompt + all of this row's
+    /// decoded blocks) must fit a prefix bucket, the worst-case query
+    /// bundle must fit a query bucket (the whole remaining suffix for
+    /// non-pruned cached methods at block 0; block + window + trailing
+    /// for suffix pruning), and the vanilla full-forward path needs the
+    /// whole canvas inside a seq bucket. The router checks this before
+    /// admitting so one oversized request is failed alone instead of
+    /// poisoning every in-flight row of the batch. Rows carry their own
+    /// `gen_len`, so the check is per request, not per engine config.
+    pub fn fits(&self, prompt_len: usize, gen_len: usize) -> bool {
         let k = self.cfg.block_size;
-        let worst_prefix = prompt_len + self.cfg.n_blocks().saturating_sub(1) * k;
+        let n_blocks = gen_len.div_ceil(k).max(1);
+        let worst_prefix = prompt_len + n_blocks.saturating_sub(1) * k;
         if self.rt.pick_prefix(worst_prefix.max(1)).is_none() {
             return false;
         }
-        self.cfg.method != Method::Vanilla
-            || self.rt.pick_seq(prompt_len + self.cfg.gen_len).is_some()
+        if self.cfg.method == Method::Vanilla {
+            return self.rt.pick_seq(prompt_len + gen_len).is_some();
+        }
+        let q_worst = if self.cfg.suffix_pruning {
+            (k + self.cfg.window + 1).min(gen_len)
+        } else {
+            // block 0's bundle is the entire generation region
+            gen_len
+        };
+        self.rt.pick_query(q_worst.max(1)).is_some()
     }
 
-    /// Claim a free slot for a new request. Returns false when the
-    /// engine is full or the prompt cannot fit the backend's buckets
-    /// (see [`BatchEngine::fits`]); the row otherwise joins at the next
+    /// Claim a free slot for a new request with its own generation
+    /// length. Returns false when the engine is full, the gen length is
+    /// invalid, or the prompt cannot fit the backend's buckets (see
+    /// [`BatchEngine::fits`]); the row otherwise joins at the next
     /// block round, starting from its own block 0 regardless of where
-    /// the incumbent rows are.
-    pub fn admit(&mut self, tag: u64, prompt: &[i32]) -> bool {
-        if self.rows.len() >= self.capacity || !self.fits(prompt.len()) {
+    /// the incumbent rows are, and retires when its *own* block budget
+    /// runs out — rows of different lengths share the batch freely.
+    pub fn admit(&mut self, tag: u64, prompt: &[i32], gen_len: usize) -> bool {
+        if self.rows.len() >= self.capacity
+            || !self.valid_gen_len(gen_len)
+            || !self.fits(prompt.len(), gen_len)
+        {
             return false;
         }
         let special = self.rt.special();
-        let mut s = SeqState::new(prompt, self.cfg.gen_len, &special);
+        let mut s = SeqState::new(prompt, gen_len, &special);
         s.init_block_counts(self.cfg.block_size);
         self.rows.push(s);
         self.tags.push(tag);
@@ -149,9 +183,12 @@ impl<'a, B: Backend> BatchEngine<'a, B> {
     /// finished (by early exit or by running out of blocks). A no-op
     /// returning no rows when the engine is idle.
     ///
-    /// For the vanilla method (no block structure to resume across)
-    /// this degenerates to running the current rows to completion in
-    /// one call; admission then happens between full runs.
+    /// The vanilla method has no prefix-cache block structure, but its
+    /// decode is still sliced into block-sized step budgets per call
+    /// (state lives in `SeqState`), so a vanilla engine interleaves
+    /// with other engines on the router thread and accepts mid-flight
+    /// joins between slices instead of monopolizing the thread for a
+    /// full drain.
     pub fn step_block(&mut self) -> Result<Vec<Finished>> {
         let mut done = Vec::new();
         if self.rows.is_empty() {
@@ -162,7 +199,12 @@ impl<'a, B: Backend> BatchEngine<'a, B> {
             .rt
             .pick_batch(self.rows.len())
             .ok_or_else(|| anyhow::anyhow!("batch {} exceeds buckets", self.rows.len()))?;
+        let first_len = self.rows[0].gen_len;
+        if self.rows.iter().any(|s| s.gen_len != first_len) {
+            self.mixed_rounds += 1;
+        }
         {
+            let slice = self.cfg.block_size as u64;
             let mut hook: Option<&mut dyn FnMut(super::generator::StepEvent)> = None;
             let mut rows = RowsMut { real: &mut self.rows, pad: &mut [] };
             match self.cfg.method {
@@ -174,6 +216,7 @@ impl<'a, B: Backend> BatchEngine<'a, B> {
                     batch,
                     &mut self.report,
                     &mut hook,
+                    slice,
                 )?,
                 _ => run_block_round(
                     self.rt,
@@ -261,11 +304,31 @@ mod tests {
         let be = ReferenceBackend::toy(REFERENCE_SEED);
         let cfg = GenConfig::preset(Method::Streaming, 64);
         let mut engine = BatchEngine::new(&be, cfg, 4).unwrap();
-        assert!(engine.fits(1000));
-        assert!(!engine.fits(1001));
+        assert!(engine.fits(1000, 64));
+        assert!(!engine.fits(1001, 64));
         let long = vec![2i32; 1001];
-        assert!(!engine.admit(9, &long), "oversized prompt must be rejected at admit");
+        assert!(!engine.admit(9, &long, 64), "oversized prompt must be rejected at admit");
         assert_eq!(engine.active(), 0);
+    }
+
+    #[test]
+    fn fits_rejects_gen_lens_beyond_query_buckets() {
+        // reference query buckets top out at 520. A non-pruned cached
+        // method queries the whole generation region at block 0, so
+        // gen 528 must be rejected at admission instead of poisoning
+        // the engine when pick_query fails mid-decode; suffix pruning
+        // bounds the bundle to block + window + 1 and still fits.
+        let be = ReferenceBackend::toy(REFERENCE_SEED);
+        let pc = GenConfig::preset(Method::PrefixCache, 64);
+        let mut engine = BatchEngine::new(&be, pc, 4).unwrap();
+        assert!(engine.fits(4, 520));
+        assert!(!engine.fits(4, 528), "whole-suffix query beyond buckets must be rejected");
+        assert!(!engine.admit(1, &prompt(0), 528));
+        assert_eq!(engine.active(), 0);
+
+        let streaming = GenConfig::preset(Method::Streaming, 64);
+        let engine = BatchEngine::new(&be, streaming, 4).unwrap();
+        assert!(engine.fits(4, 528), "pruned bundle (block + window + 1) fits fine");
     }
 
     #[test]
@@ -273,9 +336,9 @@ mod tests {
         let be = ReferenceBackend::toy(REFERENCE_SEED);
         let cfg = GenConfig::preset(Method::Streaming, 64);
         let mut engine = BatchEngine::new(&be, cfg, 2).unwrap();
-        assert!(engine.admit(1, &prompt(0)));
-        assert!(engine.admit(2, &prompt(1)));
-        assert!(!engine.admit(3, &prompt(2)));
+        assert!(engine.admit(1, &prompt(0), 64));
+        assert!(engine.admit(2, &prompt(1), 64));
+        assert!(!engine.admit(3, &prompt(2), 64));
         assert_eq!(engine.active(), 2);
     }
 
@@ -287,7 +350,7 @@ mod tests {
         let cfg = GenConfig::preset(Method::Streaming, 64);
         let mut engine = BatchEngine::new(&be, cfg.clone(), 4).unwrap();
         for i in 0..3 {
-            assert!(engine.admit(i as u64, &prompt(i)));
+            assert!(engine.admit(i as u64, &prompt(i), 64));
         }
         let texts = drain(&mut engine);
         assert!(engine.report().steps > 0);
@@ -302,6 +365,64 @@ mod tests {
     }
 
     #[test]
+    fn mixed_gen_lens_retire_per_row() {
+        // rows with different gen lengths share the batch; the short
+        // rows retire when their own block budget runs out while the
+        // long row keeps decoding — PrefixCache commits exactly one
+        // token per step with no early exit, so round counts are exact
+        let be = ReferenceBackend::toy(REFERENCE_SEED);
+        let cfg = GenConfig::preset(Method::PrefixCache, 64);
+        let mut engine = BatchEngine::new(&be, cfg, 4).unwrap();
+        assert!(engine.admit(0, &prompt(0), 64));
+        assert!(engine.admit(1, &prompt(1), 16));
+        assert!(engine.admit(2, &prompt(2), 32));
+        assert!(!engine.admit(3, &prompt(3), 12), "misaligned gen_len must be rejected");
+        assert!(!engine.admit(3, &prompt(3), 0), "zero gen_len must be rejected");
+
+        let mut finish_round = HashMap::new();
+        let mut texts = HashMap::new();
+        let mut round = 0u64;
+        while engine.active() > 0 {
+            round += 1;
+            assert!(round < 100, "engine failed to drain");
+            for f in engine.step_block().unwrap() {
+                assert_eq!(
+                    f.seq.generated().len(),
+                    match f.tag {
+                        0 => 64,
+                        1 => 16,
+                        _ => 32,
+                    },
+                    "row decoded to its own gen_len"
+                );
+                finish_round.insert(f.tag, round);
+                texts.insert(f.tag, engine_text(&f.seq));
+            }
+        }
+        // 8-token blocks: gen 16 → 2 rounds, 32 → 4, 64 → 8
+        assert_eq!(finish_round[&1], 2);
+        assert_eq!(finish_round[&2], 4);
+        assert_eq!(finish_round[&0], 8);
+        // rounds 1..4 ran with ≥2 distinct gen lengths live
+        assert_eq!(engine.mixed_rounds(), 4);
+
+        // each row's text equals its solo decode at its own length
+        // (toy mode is schedule-independent)
+        let be2 = ReferenceBackend::toy(REFERENCE_SEED);
+        for (i, len) in [(0usize, 64usize), (1, 16), (2, 32)] {
+            let cfg = GenConfig::preset(Method::PrefixCache, len);
+            let mut generator = Generator::new(&be2, cfg).unwrap();
+            let mut seqs = vec![SeqState::new(&prompt(i as i32), len, &be2.special)];
+            generator.generate(&mut seqs, None).unwrap();
+            assert_eq!(
+                texts[&(i as u64)],
+                be2.detokenize(seqs[0].generated()),
+                "row {i} (gen {len}) diverged from its solo decode"
+            );
+        }
+    }
+
+    #[test]
     fn mid_flight_join_preserves_row_output() {
         // rows join the running batch at block boundaries (each decoding
         // alone for at least one round first); every row's text must
@@ -311,15 +432,15 @@ mod tests {
         let cfg = GenConfig::preset(Method::PrefixCache, 64);
         let mut engine = BatchEngine::new(&be, cfg.clone(), 4).unwrap();
         let mut texts = HashMap::new();
-        assert!(engine.admit(0, &prompt(0)));
+        assert!(engine.admit(0, &prompt(0), 64));
         for f in engine.step_block().unwrap() {
             texts.insert(f.tag, engine_text(&f.seq));
         }
-        assert!(engine.admit(1, &prompt(1)));
+        assert!(engine.admit(1, &prompt(1), 64));
         for f in engine.step_block().unwrap() {
             texts.insert(f.tag, engine_text(&f.seq));
         }
-        assert!(engine.admit(2, &prompt(2)));
+        assert!(engine.admit(2, &prompt(2), 64));
         assert_eq!(engine.active(), 3, "joined rows should overlap mid-flight");
         texts.extend(drain(&mut engine));
         assert_eq!(texts.len(), 3);

@@ -152,6 +152,7 @@ impl<'a, B: Backend> Generator<'a, B> {
                     batch_rows,
                     &mut report,
                     &mut on_step,
+                    u64::MAX, // batch-at-a-time: classic run to completion
                 )?,
                 _ => run_cached(
                     this.rt,

@@ -123,6 +123,13 @@ impl SeqState {
         self.p0 + self.gen_len
     }
 
+    /// This row's own block budget: how many blocks its generation
+    /// region spans. Rows with different `gen_len` can share a batch —
+    /// each retires when its *own* cursor runs out, not the config's.
+    pub fn n_blocks(&self, block_size: usize) -> usize {
+        self.gen_len.div_ceil(block_size).max(1)
+    }
+
     /// Absolute start/end of block `b`.
     pub fn block_span(&self, b: usize, block_size: usize) -> (usize, usize) {
         let start = self.p0 + b * block_size;

@@ -194,7 +194,6 @@ pub(crate) fn decode_step<B: Backend>(
     on_step: &mut Option<&mut dyn FnMut(StepEvent)>,
 ) -> Result<()> {
     let k = cfg.block_size;
-    let n_blocks = cfg.n_blocks();
     let special = rt.special();
     let StepWorkspace { q_tok, q_pos, q_valid, bundles, cands, picked, grows, steps, .. } = ws;
 
@@ -301,9 +300,11 @@ pub(crate) fn decode_step<B: Backend>(
         s.steps += 1;
         if early_exit && s.early_exit_scan(k) {
             // rest of the block was EOS-filled; skipped blocks counted
-            // exactly once per real row, here or never.
+            // exactly once per real row, here or never. The budget is
+            // the row's own (`SeqState::n_blocks`), so mixed-length
+            // batches account each row against its own gen_len.
             if is_real {
-                report.blocks_skipped += (n_blocks - (s.block + 1)) as u64;
+                report.blocks_skipped += (s.n_blocks(k) - (s.block + 1)) as u64;
             }
             s.finish_with_eos();
         }
@@ -313,7 +314,9 @@ pub(crate) fn decode_step<B: Backend>(
 
 /// Per-row block-cursor advance after a completed block round: early
 /// exit on all-EOS blocks (skipped blocks counted once per real row),
-/// otherwise step the cursor and retire rows that ran out of blocks.
+/// otherwise step the cursor and retire rows that ran out of *their
+/// own* block budget — rows with different `gen_len` coexist in one
+/// batch and each retires when its own cursor finishes.
 pub(crate) fn advance_blocks(
     cfg: &GenConfig,
     rows: &mut RowsMut,
@@ -321,22 +324,22 @@ pub(crate) fn advance_blocks(
     report: &mut GenReport,
 ) {
     let k = cfg.block_size;
-    let n_blocks = cfg.n_blocks();
     for b in 0..rows.len() {
         let is_real = rows.is_real(b);
         let s = rows.get_mut(b);
         if s.finished {
             continue;
         }
+        let row_blocks = s.n_blocks(k);
         if early_exit && s.block_all_eos(k) {
             if is_real {
-                report.blocks_skipped += (n_blocks - (s.block + 1)) as u64;
+                report.blocks_skipped += (row_blocks - (s.block + 1)) as u64;
             }
             s.finish_with_eos();
             continue;
         }
         s.block += 1;
-        if s.block >= n_blocks {
+        if s.block >= row_blocks {
             s.finished = true;
         }
     }
@@ -387,6 +390,15 @@ pub(crate) fn run_block_round<B: Backend>(
 
 /// Vanilla baseline: full forward over the whole canvas every step, one
 /// commit per row per step, no cache — reusing the workspace buffers.
+///
+/// `step_budget` bounds the forwards taken in this call; the function
+/// returns early (rows left unfinished, all state in `SeqState`) once
+/// it is spent, so the slot engine can slice a vanilla decode into
+/// block-sized turns instead of monopolizing its thread for the whole
+/// drain. Callers wanting the classic run-to-completion semantics pass
+/// `u64::MAX`. Every step makes progress (a commit or a block-cursor
+/// advance per live row), so chunked calls always terminate.
+#[allow(clippy::too_many_arguments)]
 pub(crate) fn run_vanilla<B: Backend>(
     rt: &B,
     cfg: &GenConfig,
@@ -395,6 +407,7 @@ pub(crate) fn run_vanilla<B: Backend>(
     batch: usize,
     report: &mut GenReport,
     on_step: &mut Option<&mut dyn FnMut(StepEvent)>,
+    step_budget: u64,
 ) -> Result<()> {
     let k = cfg.block_size;
     let special = rt.special();
@@ -420,10 +433,13 @@ pub(crate) fn run_vanilla<B: Backend>(
         ws.p0s[b] = s.p0 as i32;
     }
 
-    let n_blocks = cfg.n_blocks();
-    let max_steps = (n_blocks * k * 4) as u64 + 8;
+    let max_blocks = rows.iter().map(|s| s.n_blocks(k)).max().unwrap_or(1);
+    let max_steps = (max_blocks * k * 4) as u64 + 8;
     let mut guard = 0u64;
     while rows.iter().any(|s| !s.finished) {
+        if guard >= step_budget {
+            return Ok(()); // budget spent; resume from SeqState next call
+        }
         guard += 1;
         if guard > max_steps {
             bail!("vanilla decode failed to terminate");
@@ -456,6 +472,7 @@ pub(crate) fn run_vanilla<B: Backend>(
             if s.finished {
                 continue;
             }
+            let row_blocks = s.n_blocks(k);
             let (bs, be) = s.block_span(s.block, k);
             ws.cands.clear();
             for abs in bs..be {
@@ -470,7 +487,7 @@ pub(crate) fn run_vanilla<B: Backend>(
             if ws.cands.is_empty() {
                 // advance block cursor
                 s.block += 1;
-                if s.block >= n_blocks {
+                if s.block >= row_blocks {
                     s.finished = true;
                 }
                 continue;
@@ -493,7 +510,7 @@ pub(crate) fn run_vanilla<B: Backend>(
             s.steps += 1;
             if s.block_done(k) {
                 s.block += 1;
-                if s.block >= n_blocks {
+                if s.block >= row_blocks {
                     s.finished = true;
                 }
             }

@@ -162,6 +162,7 @@ fn causal_reference_server_serves_the_causal_oracle() {
                 prompt: item.prompt.clone(),
                 method: Method::PrefixCache,
                 gen_len: 64,
+                deadline_ms: None,
             })
             .unwrap();
         assert!(resp.error.is_none(), "{:?}", resp.error);
@@ -206,6 +207,7 @@ fn reference_server_end_to_end_roundtrip() {
                 prompt: item.prompt.clone(),
                 method: Method::Streaming,
                 gen_len: 64,
+                deadline_ms: None,
             })
             .unwrap();
         assert!(resp.error.is_none(), "{:?}", resp.error);
@@ -322,6 +324,7 @@ fn router_serves_mid_flight_join() {
         prompt: vec![2; 4],
         method: Method::Streaming,
         gen_len: 256,
+        deadline_ms: None,
     });
     // wait (bounded) until A's engine has actually started
     let t0 = Instant::now();
@@ -338,6 +341,7 @@ fn router_serves_mid_flight_join() {
         prompt: vec![2; 301],
         method: Method::Streaming,
         gen_len: 256,
+        deadline_ms: None,
     });
 
     let resp_b = rx_b.recv_timeout(Duration::from_secs(20)).expect("B never completed");
@@ -357,6 +361,93 @@ fn router_serves_mid_flight_join() {
     assert_eq!(snap.get("joins").unwrap().as_usize(), Some(1), "B must join mid-flight");
     assert!(snap.get("engine_rounds").unwrap().as_usize().unwrap() >= 32);
     router.shutdown().unwrap();
+}
+
+#[test]
+fn short_row_retirement_frees_slot_for_next_join() {
+    // Per-row block budgets: request A decodes gen_len 256 (content past
+    // its whole generation region → 32 slow block rounds), B joins
+    // mid-flight with gen_len 16 and retires after its *own* two block
+    // rounds — freeing the slot while A continues — and C then joins
+    // into exactly that freed slot. Both short requests must complete
+    // long before A drains, and both admissions must be mid-flight
+    // joins (engine capacity is 2, so this only works if B's
+    // retirement actually released its slot).
+    let boundary = 300usize;
+    let router = RouterHandle::spawn_with(
+        move || {
+            Ok(SlowBackend {
+                inner: ReferenceBackend::scripted(boundary),
+                delay: Duration::from_millis(2),
+            })
+        },
+        2,
+        Duration::from_millis(1),
+    );
+    let metrics = router.metrics.clone();
+
+    let rx_a = router.submit(Request {
+        id: 1,
+        prompt: vec![2; 4],
+        method: Method::Streaming,
+        gen_len: 256,
+        deadline_ms: None,
+    });
+    let t0 = Instant::now();
+    loop {
+        let started = metrics.snapshot().get("batches").unwrap().as_usize().unwrap_or(0);
+        if started >= 1 {
+            break;
+        }
+        assert!(t0.elapsed() < Duration::from_secs(10), "engine never started");
+        std::thread::sleep(Duration::from_millis(2));
+    }
+
+    let rx_b = router.submit(Request {
+        id: 2,
+        prompt: vec![2; 4],
+        method: Method::Streaming,
+        gen_len: 16,
+        deadline_ms: Some(5_000),
+    });
+    let resp_b = rx_b.recv_timeout(Duration::from_secs(20)).expect("B never completed");
+    assert!(resp_b.error.is_none(), "{:?}", resp_b.error);
+    assert!(rx_a.try_recv().is_err(), "B must finish while A is still decoding");
+
+    // B's slot is free again: C joins the same still-running engine
+    let rx_c = router.submit(Request {
+        id: 3,
+        prompt: vec![2; 4],
+        method: Method::Streaming,
+        gen_len: 16,
+        deadline_ms: None,
+    });
+    let resp_c = rx_c.recv_timeout(Duration::from_secs(20)).expect("C never completed");
+    assert!(resp_c.error.is_none(), "{:?}", resp_c.error);
+    assert!(
+        rx_a.try_recv().is_err(),
+        "C should complete in B's freed slot without waiting for A's batch to drain"
+    );
+
+    let resp_a = rx_a.recv_timeout(Duration::from_secs(120)).expect("A never completed");
+    assert!(resp_a.error.is_none(), "{:?}", resp_a.error);
+    assert!(resp_a.non_eos_tokens > 0);
+
+    let snap = metrics.snapshot();
+    assert_eq!(snap.get("joins").unwrap().as_usize(), Some(2), "B and C must join mid-flight");
+    assert_eq!(snap.get("batches").unwrap().as_usize(), Some(1), "one engine serves all three");
+    router.shutdown().unwrap();
+    let snap = metrics.snapshot();
+    assert!(
+        snap.get("mixed_len_rounds").unwrap().as_usize().unwrap() >= 1,
+        "rounds with 16- and 256-length rows live together must be counted as mixed"
+    );
+    assert_eq!(
+        snap.get("admissions").unwrap().as_usize(),
+        Some(3),
+        "batch-start + join admissions must conserve"
+    );
+    assert_eq!(snap.get("batch_started").unwrap().as_usize(), Some(1));
 }
 
 // ---------------------------------------------------------------------
@@ -574,6 +665,7 @@ mod pjrt_tier {
                     prompt: item.prompt.clone(),
                     method: Method::Streaming,
                     gen_len: 64,
+                    deadline_ms: None,
                 })
                 .unwrap();
             assert!(resp.error.is_none(), "{:?}", resp.error);

@@ -149,6 +149,52 @@ fn workspace_reuse_is_deterministic_across_calls() {
 }
 
 #[test]
+fn mixed_gen_len_batch_bit_identical_to_solo() {
+    // Heterogeneous batch: rows with gen lengths {64, 16, 32, 64}
+    // decode together in one BatchEngine, each retiring on its own
+    // block budget. Every row's full canvas must be bit-identical to
+    // the same request run solo at its own length — in toy mode
+    // (schedule-independent by construction, checked with Streaming)
+    // and in causal mode (sequential PrefixCache decoding only commits
+    // fully-determined predictions, so batchmates cannot perturb it).
+    let lens = [64usize, 16, 32, 64];
+    for (mode, method) in
+        [(RefMode::Toy, Method::Streaming), (RefMode::Causal, Method::PrefixCache)]
+    {
+        let be = backend(mode);
+        let cfg = GenConfig::preset(method, 64);
+        let mut engine = BatchEngine::new(&be, cfg, 4).unwrap();
+        for (i, (&p, len)) in PROMPTS.iter().zip(lens).enumerate() {
+            assert!(engine.admit(i as u64, p, len), "admit row {i} (gen {len})");
+        }
+        let mut canvases: std::collections::HashMap<u64, Vec<i32>> = Default::default();
+        let mut guard = 0;
+        while engine.active() > 0 {
+            guard += 1;
+            assert!(guard < 1000, "engine failed to drain");
+            for f in engine.step_block().unwrap() {
+                canvases.insert(f.tag, f.seq.tokens.clone());
+            }
+        }
+        assert_eq!(canvases.len(), lens.len());
+        assert!(engine.mixed_rounds() > 0, "mixed-length rounds must be observed");
+
+        for (i, (&p, len)) in PROMPTS.iter().zip(lens).enumerate() {
+            let be2 = backend(mode);
+            let mut generator = Generator::new(&be2, GenConfig::preset(method, len)).unwrap();
+            let mut seqs = vec![SeqState::new(p, len, &be2.special())];
+            generator.generate(&mut seqs, None).unwrap();
+            assert_eq!(
+                canvases[&(i as u64)],
+                seqs[0].tokens,
+                "{} row {i} (gen {len}) diverged from its solo decode",
+                mode.name()
+            );
+        }
+    }
+}
+
+#[test]
 fn engine_row_output_stable_under_mid_flight_joins_causal() {
     // sequential (one-per-step) decoding under the causal model only
     // ever commits fully-determined predictions, so a row's output must
@@ -162,14 +208,14 @@ fn engine_row_output_stable_under_mid_flight_joins_causal() {
     let mut texts: std::collections::HashMap<u64, String> = std::collections::HashMap::new();
 
     // stagger admissions: row i joins after i rounds of the running batch
-    assert!(engine.admit(0, &items[0].prompt));
+    assert!(engine.admit(0, &items[0].prompt, 64));
     let mut next = 1usize;
     let mut guard = 0;
     while engine.active() > 0 || next < items.len() {
         guard += 1;
         assert!(guard < 2000, "engine failed to drain");
         if next < items.len() && engine.has_free_slot() {
-            assert!(engine.admit(next as u64, &items[next].prompt));
+            assert!(engine.admit(next as u64, &items[next].prompt, 64));
             next += 1;
         }
         for f in engine.step_block().unwrap() {

@@ -1,0 +1,294 @@
+//! Randomized scheduler stress harness: seeded random arrival schedules
+//! (mixed methods, gen lengths, priorities, a sprinkling of oversized
+//! prompts) driven through the full router, plus a pure-`Batcher`
+//! randomized model check. Invariants pinned:
+//!
+//! 1. every request is answered exactly once (no drops, no duplicates)
+//! 2. an oversized prompt fails alone — it never poisons a batch, and
+//!    every well-formed request still decodes its solo-oracle text
+//! 3. deadline ordering: slot claiming within a method group always
+//!    takes the earliest effective deadline first
+//! 4. metrics conservation: `joins + batch_started == admissions`, and
+//!    every admission is answered ok
+//!
+//! Seeds are printed per schedule and embedded in every assertion, so a
+//! CI flake bisects to a single reproducible seed:
+//! `SDLLM_STRESS_SEED_BASE=<seed> SDLLM_STRESS_SCHEDULES=1 cargo test --test stress`.
+
+use std::time::{Duration, Instant};
+
+use streaming_dllm::coordinator::{Batcher, Request, RouterHandle};
+use streaming_dllm::engine::{
+    GenConfig, Generator, Method, ReferenceBackend, SeqState, REFERENCE_SEED,
+};
+use streaming_dllm::util::rng::Rng;
+
+fn schedules() -> u64 {
+    std::env::var("SDLLM_STRESS_SCHEDULES").ok().and_then(|s| s.parse().ok()).unwrap_or(20)
+}
+
+fn seed_base() -> u64 {
+    std::env::var("SDLLM_STRESS_SEED_BASE").ok().and_then(|s| s.parse().ok()).unwrap_or(0)
+}
+
+/// Solo decode of one request on a fresh toy backend — the oracle every
+/// served row is checked against (toy mode is schedule-independent, so
+/// batch composition must never change a row's text).
+fn solo_text(prompt: &[i32], method: Method, gen_len: usize) -> String {
+    let be = ReferenceBackend::toy(REFERENCE_SEED);
+    let mut generator = Generator::new(&be, GenConfig::preset(method, gen_len)).unwrap();
+    let mut seqs = vec![SeqState::new(prompt, gen_len, &be.special)];
+    generator.generate(&mut seqs, None).unwrap();
+    be.detokenize(seqs[0].generated())
+}
+
+struct Planned {
+    req: Request,
+    oversized: bool,
+}
+
+fn plan_schedule(rng: &mut Rng) -> Vec<Planned> {
+    let n = rng.range(6, 14);
+    let methods = Method::all();
+    (0..n)
+        .map(|i| {
+            let oversized = rng.bool(0.12);
+            let prompt: Vec<i32> = if oversized {
+                // beyond the reference prefix/seq buckets (1056)
+                vec![2; 1100]
+            } else {
+                std::iter::once(2)
+                    .chain((0..rng.range(1, 9)).map(|_| rng.range(5, 45) as i32))
+                    .collect()
+            };
+            let req = Request {
+                id: i as u64,
+                prompt,
+                method: methods[rng.below(methods.len())],
+                gen_len: *rng.choose(&[16usize, 32, 64]),
+                deadline_ms: rng.bool(0.5).then(|| rng.range(0, 80) as u64),
+            };
+            Planned { req, oversized }
+        })
+        .collect()
+}
+
+#[test]
+fn randomized_schedules_answer_every_request_exactly_once() {
+    let base = seed_base();
+    for s in 0..schedules() {
+        let seed = base.wrapping_add(s);
+        eprintln!("[stress] schedule seed {seed}");
+        let mut rng = Rng::new(seed ^ 0x5DCE_DDE5);
+        let max_batch = rng.range(2, 4);
+        let router = RouterHandle::spawn_reference(max_batch, Duration::from_millis(1));
+        let metrics = router.metrics.clone();
+
+        let planned = plan_schedule(&mut rng);
+        let mut receivers = vec![];
+        for p in &planned {
+            receivers.push(router.submit(p.req.clone()));
+            if rng.bool(0.35) {
+                // stagger arrivals so some requests start batches and
+                // others join mid-flight
+                std::thread::sleep(Duration::from_millis(rng.range(1, 3) as u64));
+            }
+        }
+
+        let mut ok = 0usize;
+        let mut err = 0usize;
+        for (p, rx) in planned.iter().zip(&receivers) {
+            let resp = rx
+                .recv_timeout(Duration::from_secs(60))
+                .unwrap_or_else(|e| panic!("seed {seed}: request {} unanswered: {e}", p.req.id));
+            assert_eq!(resp.id, p.req.id, "seed {seed}: reply routed to the wrong request");
+            if p.oversized {
+                err += 1;
+                let msg = resp.error.as_deref().unwrap_or_else(|| {
+                    panic!("seed {seed}: oversized request {} must fail", p.req.id)
+                });
+                assert!(msg.contains("buckets"), "seed {seed}: wrong oversize error: {msg}");
+            } else {
+                ok += 1;
+                assert!(
+                    resp.error.is_none(),
+                    "seed {seed}: request {} ({}, gen {}) failed: {:?}",
+                    p.req.id,
+                    p.req.method.name(),
+                    p.req.gen_len,
+                    resp.error
+                );
+                // oversized batchmates must not have poisoned this row
+                assert_eq!(
+                    resp.text,
+                    solo_text(&p.req.prompt, p.req.method, p.req.gen_len),
+                    "seed {seed}: request {} ({}, gen {}) diverged from its solo decode",
+                    p.req.id,
+                    p.req.method.name(),
+                    p.req.gen_len
+                );
+            }
+            // exactly once: the reply channel must never carry a second
+            // message for the same request
+            assert!(
+                rx.try_recv().is_err(),
+                "seed {seed}: request {} answered more than once",
+                p.req.id
+            );
+        }
+
+        router.shutdown().unwrap_or_else(|e| panic!("seed {seed}: router died: {e:#}"));
+        let snap = metrics.snapshot();
+        let get = |k: &str| snap.get(k).unwrap().as_usize().unwrap();
+        assert_eq!(get("requests_ok"), ok, "seed {seed}: ok-count conservation");
+        assert_eq!(get("requests_err"), err, "seed {seed}: err-count conservation");
+        assert_eq!(
+            get("joins") + get("batch_started"),
+            get("admissions"),
+            "seed {seed}: joins + batch-starts must equal admissions"
+        );
+        assert_eq!(
+            get("admissions"),
+            ok,
+            "seed {seed}: every admission must be answered ok (toy backend never poisons)"
+        );
+    }
+}
+
+// ---------------------------------------------------------------------
+// Pure-batcher model check: deadline ordering + conservation, no router
+// timing involved, so the invariant is exact.
+// ---------------------------------------------------------------------
+
+/// Shadow entry mirroring the batcher's effective-deadline order.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+struct Shadow {
+    id: u64,
+    method_ix: usize,
+    deadline: Instant,
+    arrived: Instant,
+}
+
+impl Shadow {
+    fn urgency(&self) -> (Instant, Instant) {
+        (self.deadline, self.arrived)
+    }
+}
+
+#[test]
+fn randomized_batcher_respects_deadline_order_and_conserves_requests() {
+    let base = seed_base();
+    for s in 0..schedules() {
+        let seed = base.wrapping_add(s);
+        let mut rng = Rng::new(seed ^ 0xBA7C_4E12);
+        let max_batch = rng.range(1, 6);
+        let mut b = Batcher::new(max_batch, Duration::from_millis(5));
+        let methods = Method::all();
+        let t0 = Instant::now();
+        let mut clock_ms = 0u64;
+        let mut next_id = 0u64;
+        let mut model: Vec<Shadow> = vec![];
+        let mut popped_ids: Vec<u64> = vec![];
+        let mut pushed = 0usize;
+
+        for _ in 0..rng.range(30, 80) {
+            clock_ms += 1; // distinct arrivals → total order, no ties
+            let now = t0 + Duration::from_millis(clock_ms);
+            match rng.below(3) {
+                0 => {
+                    let method_ix = rng.below(methods.len());
+                    let deadline_ms = rng.bool(0.6).then(|| rng.range(0, 40) as u64);
+                    let req = Request {
+                        id: next_id,
+                        prompt: vec![2],
+                        method: methods[method_ix],
+                        gen_len: *rng.choose(&[16usize, 64]),
+                        deadline_ms,
+                    };
+                    let deadline =
+                        now + deadline_ms.map(Duration::from_millis).unwrap_or(b.default_sla);
+                    b.push_at(req, now);
+                    model.push(Shadow { id: next_id, method_ix, deadline, arrived: now });
+                    next_id += 1;
+                    pushed += 1;
+                }
+                1 => {
+                    let method_ix = rng.below(methods.len());
+                    let got = b.pop_compatible(methods[method_ix]);
+                    let want = model
+                        .iter()
+                        .filter(|e| e.method_ix == method_ix)
+                        .min_by_key(|e| e.urgency())
+                        .copied();
+                    match (got, want) {
+                        (None, None) => {}
+                        (Some(r), Some(w)) => {
+                            assert_eq!(
+                                r.id,
+                                w.id,
+                                "seed {seed}: pop_compatible must take the earliest deadline"
+                            );
+                            model.retain(|e| e.id != w.id);
+                            popped_ids.push(r.id);
+                        }
+                        (got, want) => panic!(
+                            "seed {seed}: pop_compatible disagreed with model: \
+                             got {got:?} want {want:?}"
+                        ),
+                    }
+                }
+                _ => {
+                    if let Some((method, batch)) = b.pop_ready(now, &[]) {
+                        assert!(
+                            !batch.is_empty() && batch.len() <= max_batch,
+                            "seed {seed}: bad batch size {}",
+                            batch.len()
+                        );
+                        let method_ix = methods.iter().position(|m| *m == method).unwrap();
+                        // the batch is exactly the n most urgent waiters
+                        // of its group, most urgent first
+                        let mut expect: Vec<Shadow> = model
+                            .iter()
+                            .filter(|e| e.method_ix == method_ix)
+                            .copied()
+                            .collect();
+                        expect.sort_by_key(|e| e.urgency());
+                        for (r, w) in batch.iter().zip(&expect) {
+                            assert_eq!(r.method, method, "seed {seed}: mixed-method batch");
+                            assert_eq!(
+                                r.id,
+                                w.id,
+                                "seed {seed}: batch must drain in deadline order"
+                            );
+                        }
+                        for r in &batch {
+                            model.retain(|e| e.id != r.id);
+                            popped_ids.push(r.id);
+                        }
+                    }
+                }
+            }
+        }
+
+        // drain whatever is left; nothing may be lost or duplicated
+        for (ix, m) in methods.iter().enumerate() {
+            while let Some(r) = b.pop_compatible(*m) {
+                let want = model
+                    .iter()
+                    .filter(|e| e.method_ix == ix)
+                    .min_by_key(|e| e.urgency())
+                    .copied()
+                    .unwrap_or_else(|| panic!("seed {seed}: popped unknown id {}", r.id));
+                assert_eq!(r.id, want.id, "seed {seed}: drain must follow deadline order");
+                model.retain(|e| e.id != r.id);
+                popped_ids.push(r.id);
+            }
+        }
+        assert!(model.is_empty(), "seed {seed}: batcher lost requests: {model:?}");
+        assert_eq!(popped_ids.len(), pushed, "seed {seed}: pop count != push count");
+        popped_ids.sort_unstable();
+        popped_ids.dedup();
+        assert_eq!(popped_ids.len(), pushed, "seed {seed}: duplicate pops");
+        assert_eq!(b.pending(), 0, "seed {seed}: batcher still holds requests");
+    }
+}
