@@ -1,63 +1,55 @@
 //! End-to-end serving driver (the EXPERIMENTS.md §End-to-end run):
-//! boots the full stack — engine thread, dynamic batcher, TCP server —
-//! fires concurrent client load from the eval suites, then reports
-//! accuracy, throughput (non-EOS tok/s), latency percentiles and server
-//! metrics. Proves all layers compose: rust coordinator → model backend
-//! (PJRT AOT executables, or the pure-Rust reference model on a bare
-//! checkout).
+//! boots the full stack — per-engine worker threads, dynamic batcher,
+//! TCP server — fires concurrent client load from the eval suites, then
+//! reports accuracy, throughput (non-EOS tok/s), latency percentiles
+//! and server metrics. Proves all layers compose: rust coordinator →
+//! model backend (PJRT AOT executables, or the pure-Rust reference
+//! model on a bare checkout).
+//!
+//! Serving knobs (`--max-batch`, `--gen-lens`, `--deadline-ms`,
+//! `--max-engines`, ...) resolve through [`ServeConfig`] with the same
+//! CLI > `SDLLM_*` env > default precedence as the `serve` subcommand.
 //!
 //! ```sh
 //! cargo run --release --example serve_batch -- --n 32 --concurrency 8
 //! ```
 
-use std::time::Duration;
-
 use anyhow::Result;
-use streaming_dllm::coordinator::{run_load, Request, RouterHandle, Server};
+use streaming_dllm::coordinator::{run_load, Request, RouterHandle, ServeConfig, Server};
 use streaming_dllm::engine::{AnyBackend, Method};
 use streaming_dllm::eval::{extract_final, suite_for, EvalItem};
 use streaming_dllm::util::cli::Args;
 use streaming_dllm::util::stats::Samples;
 
 #[cfg(feature = "pjrt")]
-fn spawn_router(root: &std::path::Path, model: &str, max_batch: usize) -> RouterHandle {
+fn spawn_router(root: &std::path::Path, cfg: &ServeConfig) -> RouterHandle {
     if AnyBackend::pjrt_available(root) {
-        RouterHandle::spawn(
+        RouterHandle::spawn_pjrt_opts(
             root.to_path_buf(),
-            model.to_string(),
-            max_batch,
-            Duration::from_millis(30),
+            cfg.model.clone(),
+            cfg.router_options(),
         )
     } else {
-        RouterHandle::spawn_reference(max_batch, Duration::from_millis(30))
+        RouterHandle::spawn_reference_opts(cfg.ref_mode, cfg.router_options())
     }
 }
 
 #[cfg(not(feature = "pjrt"))]
-fn spawn_router(_root: &std::path::Path, _model: &str, max_batch: usize) -> RouterHandle {
-    RouterHandle::spawn_reference(max_batch, Duration::from_millis(30))
+fn spawn_router(_root: &std::path::Path, cfg: &ServeConfig) -> RouterHandle {
+    RouterHandle::spawn_reference_opts(cfg.ref_mode, cfg.router_options())
 }
 
 fn main() -> Result<()> {
     let args = Args::parse_env();
-    let model = args.get_or("model", "llada15-mini").to_string();
+    let cfg = ServeConfig::from_env_and_args(&args)?;
     let n = args.get_usize("n", 32);
     let concurrency = args.get_usize("concurrency", 8);
-    let max_batch = args.get_usize("max-batch", 4);
     let method = Method::parse(args.get_or("method", "streaming")).expect("method");
-    // mixed-length load: comma-separated gen lengths assigned round-robin
-    let gen_lens: Vec<usize> = args
-        .get_or("gen-lens", "64")
-        .split(',')
-        .map(|s| s.trim().parse().expect("gen-lens"))
-        .collect();
-    // optional SLA budget (ms) stamped on every request; 0 = none
-    let deadline_ms = args.get_usize("deadline-ms", 0);
 
-    let root = streaming_dllm::artifacts_root();
-    // The oracle backend only sources/scores the workload; the server's
-    // engine thread builds its own identical backend.
-    let oracle = AnyBackend::auto(&root, &model)?;
+    let root = cfg.artifacts_root();
+    // The oracle backend only sources/scores the workload; every server
+    // worker thread builds its own identical backend.
+    let oracle = AnyBackend::auto_with(&root, &cfg.model, cfg.ref_mode)?;
 
     // mixed workload: round-robin over all four suites
     let suites = ["gsm-mini", "humaneval-mini", "mbpp-mini", "math-mini"];
@@ -72,14 +64,17 @@ fn main() -> Result<()> {
         .collect();
 
     // boot the stack on an ephemeral port
-    let router = spawn_router(&root, &model, max_batch);
+    let router = spawn_router(&root, &cfg);
     let metrics = router.metrics.clone();
     let server = Server::bind("127.0.0.1:0", router)?;
     let addr = server.local_addr()?.to_string();
     println!(
-        "serving {model} [{}] on {addr}; {} reqs, {concurrency} conns, max_batch {max_batch}",
+        "serving {} [{}] on {addr}; {} reqs, {concurrency} conns, max_batch {} max_engines {}",
+        cfg.model,
         oracle.describe(),
-        picked.len()
+        picked.len(),
+        cfg.max_batch,
+        cfg.max_engines,
     );
     std::thread::scope(|scope| -> Result<()> {
         let srv = &server;
@@ -95,8 +90,9 @@ fn main() -> Result<()> {
                 id: i as u64,
                 prompt: item.prompt.clone(),
                 method,
-                gen_len: gen_lens[i % gen_lens.len()],
-                deadline_ms: (deadline_ms > 0).then_some(deadline_ms as u64),
+                gen_len: cfg.gen_lens[i % cfg.gen_lens.len()],
+                deadline_ms: cfg.deadline_ms,
+                park_on_miss: false,
             })
             .collect();
 

@@ -221,11 +221,18 @@ mod tests {
     use crate::util::prop;
 
     fn req(id: u64, method: Method, gen_len: usize) -> Request {
-        Request { id, prompt: vec![2], method, gen_len, deadline_ms: None }
+        Request { id, prompt: vec![2], method, gen_len, deadline_ms: None, park_on_miss: false }
     }
 
     fn req_sla(id: u64, method: Method, deadline_ms: u64) -> Request {
-        Request { id, prompt: vec![2], method, gen_len: 64, deadline_ms: Some(deadline_ms) }
+        Request {
+            id,
+            prompt: vec![2],
+            method,
+            gen_len: 64,
+            deadline_ms: Some(deadline_ms),
+            park_on_miss: false,
+        }
     }
 
     #[test]

@@ -11,16 +11,28 @@ use anyhow::{anyhow, Context, Result};
 
 use crate::util::json::Json;
 
+use super::protocol::CommitEvent;
 use super::request::{Request, Response};
+
+/// One v1 server frame as seen by a subscribed client.
+#[derive(Debug)]
+pub enum ServerFrame {
+    Commit(CommitEvent),
+    Done(Response),
+}
 
 pub struct Client {
     stream: TcpStream,
+    /// persistent reader — streamed frames arrive back-to-back, so
+    /// read-ahead bytes must survive between reads
+    reader: BufReader<TcpStream>,
 }
 
 impl Client {
     pub fn connect(addr: &str) -> Result<Client> {
         let stream = TcpStream::connect(addr).with_context(|| format!("connecting {addr}"))?;
-        Ok(Client { stream })
+        let reader = BufReader::new(stream.try_clone()?);
+        Ok(Client { stream, reader })
     }
 
     pub fn call(&mut self, req: &Request) -> Result<Response> {
@@ -28,10 +40,7 @@ impl Client {
         line.push('\n');
         self.stream.write_all(line.as_bytes())?;
         self.stream.flush()?;
-        let mut reader = BufReader::new(self.stream.try_clone()?);
-        let mut resp_line = String::new();
-        reader.read_line(&mut resp_line)?;
-        let j = Json::parse(resp_line.trim()).map_err(|e| anyhow!("bad response: {e}"))?;
+        let j = self.read_json()?;
         if let Some(err) = j.get("error").and_then(|e| e.as_str()) {
             if j.get("id").is_none() {
                 anyhow::bail!("server error: {err}");
@@ -40,13 +49,66 @@ impl Client {
         Response::from_json(&j).map_err(|e| anyhow!("bad response: {e}"))
     }
 
+    /// v1 one-shot call: send a `generate` envelope, wait for the
+    /// `done` frame.
+    pub fn call_v1(&mut self, req: &Request) -> Result<Response> {
+        let mut line = req.to_frame("generate").to_string();
+        line.push('\n');
+        self.stream.write_all(line.as_bytes())?;
+        self.stream.flush()?;
+        let j = self.read_json()?;
+        match j.get("type").and_then(|t| t.as_str()) {
+            Some("done") => Response::from_json(&j).map_err(|e| anyhow!("bad response: {e}")),
+            Some("error") => {
+                let msg = j.get("error").and_then(|e| e.as_str()).unwrap_or("unknown");
+                anyhow::bail!("server error: {msg}")
+            }
+            other => anyhow::bail!("unexpected frame type {other:?}"),
+        }
+    }
+
+    /// v1 streaming call: send a `subscribe` envelope and collect every
+    /// frame of the per-request stream — the out-of-order `commit`
+    /// events in arrival order, then the terminal `done`.
+    pub fn subscribe(&mut self, req: &Request) -> Result<Vec<ServerFrame>> {
+        let mut line = req.to_frame("subscribe").to_string();
+        line.push('\n');
+        self.stream.write_all(line.as_bytes())?;
+        self.stream.flush()?;
+        let mut frames = Vec::new();
+        loop {
+            let j = self.read_json()?;
+            match j.get("type").and_then(|t| t.as_str()) {
+                Some("commit") => frames.push(ServerFrame::Commit(
+                    CommitEvent::from_json(&j).map_err(|e| anyhow!("bad commit: {e}"))?,
+                )),
+                Some("done") => {
+                    let resp =
+                        Response::from_json(&j).map_err(|e| anyhow!("bad response: {e}"))?;
+                    frames.push(ServerFrame::Done(resp));
+                    return Ok(frames);
+                }
+                Some("error") => {
+                    let msg = j.get("error").and_then(|e| e.as_str()).unwrap_or("unknown");
+                    anyhow::bail!("server error: {msg}")
+                }
+                other => anyhow::bail!("unexpected frame type {other:?}"),
+            }
+        }
+    }
+
+    fn read_json(&mut self) -> Result<Json> {
+        let mut line = String::new();
+        if self.reader.read_line(&mut line)? == 0 {
+            anyhow::bail!("connection closed mid-stream");
+        }
+        Json::parse(line.trim()).map_err(|e| anyhow!("bad frame: {e}"))
+    }
+
     pub fn stats(&mut self) -> Result<Json> {
         self.stream.write_all(b"{\"cmd\":\"stats\"}\n")?;
         self.stream.flush()?;
-        let mut reader = BufReader::new(self.stream.try_clone()?);
-        let mut line = String::new();
-        reader.read_line(&mut line)?;
-        Json::parse(line.trim()).map_err(|e| anyhow!("bad stats: {e}"))
+        self.read_json()
     }
 }
 

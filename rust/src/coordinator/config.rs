@@ -1,0 +1,279 @@
+//! `ServeConfig`: the one typed configuration for every serving
+//! surface. Historically each knob lived wherever it was consumed —
+//! `SDLLM_REF_MODE` in the backend, `SDLLM_STRESS_*` in the stress
+//! harness, `--ref-mode`/`--gen-lens`/`--deadline-ms` in binaries —
+//! with per-site defaults that could drift. This module collapses the
+//! env/CLI split into a single struct with one precedence rule,
+//! CLI flag > `SDLLM_*` environment variable > default, applied
+//! uniformly by [`ServeConfig::from_env_and_args`]. `main.rs`, the
+//! serve_batch example and the stress harness all consume it.
+
+use std::path::PathBuf;
+use std::str::FromStr;
+use std::time::Duration;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::engine::RefMode;
+use crate::util::cli::Args;
+
+use super::router::{RouterOptions, DEFAULT_MAX_ENGINES};
+
+/// Typed serving configuration. Construct with
+/// [`ServeConfig::from_env_and_args`] (binaries) or
+/// [`ServeConfig::from_env`] (tests/harnesses with no CLI).
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// listen address (`--addr` / `SDLLM_ADDR`)
+    pub addr: String,
+    /// reference-backend mode (`--ref-mode` / `SDLLM_REF_MODE`)
+    pub ref_mode: RefMode,
+    /// backend selector: reference|pjrt|auto (`--backend` / `SDLLM_BACKEND`)
+    pub backend: String,
+    /// model name under the artifacts index (`--model` / `SDLLM_MODEL`)
+    pub model: String,
+    /// artifacts directory override (`--artifacts` / `SDLLM_ARTIFACTS`)
+    pub artifacts: Option<PathBuf>,
+    /// dynamic batcher flush size (`--max-batch` / `SDLLM_MAX_BATCH`)
+    pub max_batch: usize,
+    /// batcher flush deadline (`--max-wait-ms` / `SDLLM_MAX_WAIT_MS`)
+    pub max_wait: Duration,
+    /// worker-thread cap (`--max-engines` / `SDLLM_MAX_ENGINES`)
+    pub max_engines: usize,
+    /// generation lengths driven by harnesses (`--gen-lens` / `SDLLM_GEN_LENS`)
+    pub gen_lens: Vec<usize>,
+    /// default SLA budget; 0/absent means none (`--deadline-ms` / `SDLLM_DEADLINE_MS`)
+    pub deadline_ms: Option<u64>,
+    /// stress harness: schedules per scenario (`--schedules` / `SDLLM_STRESS_SCHEDULES`)
+    pub stress_schedules: u64,
+    /// stress harness: RNG seed base (`--seed-base` / `SDLLM_STRESS_SEED_BASE`)
+    pub stress_seed_base: u64,
+}
+
+impl Default for ServeConfig {
+    fn default() -> ServeConfig {
+        ServeConfig {
+            addr: "127.0.0.1:7333".to_string(),
+            ref_mode: RefMode::Toy,
+            backend: "auto".to_string(),
+            model: "llada15-mini".to_string(),
+            artifacts: None,
+            max_batch: 4,
+            max_wait: Duration::from_millis(20),
+            max_engines: DEFAULT_MAX_ENGINES,
+            gen_lens: vec![64],
+            deadline_ms: None,
+            stress_schedules: 20,
+            stress_seed_base: 0,
+        }
+    }
+}
+
+/// A non-empty environment value (empty/whitespace counts as unset, so
+/// `SDLLM_X= cmd` doesn't shadow the default with garbage).
+fn env_str(var: &str) -> Option<String> {
+    std::env::var(var).ok().filter(|s| !s.trim().is_empty())
+}
+
+/// CLI option first, then environment variable.
+fn pick(args: &Args, name: &str, env: &str) -> Option<String> {
+    args.get(name).map(|s| s.to_string()).or_else(|| env_str(env))
+}
+
+/// Strict numeric parse — a typo in a knob is an error, not a silent
+/// fallback to the default.
+fn parse_num<T: FromStr>(src: Option<String>, what: &str) -> Result<Option<T>> {
+    match src {
+        Some(s) => s
+            .trim()
+            .parse()
+            .map(Some)
+            .map_err(|_| anyhow!("invalid {what} '{s}'")),
+        None => Ok(None),
+    }
+}
+
+impl ServeConfig {
+    /// Environment-only construction (stress harness, tests).
+    pub fn from_env() -> Result<ServeConfig> {
+        ServeConfig::from_env_and_args(&Args::default())
+    }
+
+    /// Resolve every knob with the uniform precedence
+    /// CLI > `SDLLM_*` env > default, validating as it goes.
+    pub fn from_env_and_args(args: &Args) -> Result<ServeConfig> {
+        let d = ServeConfig::default();
+
+        let raw_mode = pick(args, "ref-mode", "SDLLM_REF_MODE").unwrap_or_default();
+        let norm = raw_mode.trim().to_lowercase();
+        let ref_mode = if norm.is_empty() {
+            RefMode::Toy
+        } else {
+            RefMode::parse(&norm)
+                .ok_or_else(|| anyhow!("unknown --ref-mode '{raw_mode}' (toy|causal)"))?
+        };
+
+        let gen_lens = match pick(args, "gen-lens", "SDLLM_GEN_LENS") {
+            Some(s) => {
+                let lens: Vec<usize> = s
+                    .split(',')
+                    .map(|x| {
+                        x.trim().parse().map_err(|_| anyhow!("invalid gen len '{}'", x.trim()))
+                    })
+                    .collect::<Result<_>>()?;
+                if lens.is_empty() || lens.iter().any(|&l| l == 0) {
+                    bail!("gen-lens must be non-empty positive lengths, got '{s}'");
+                }
+                lens
+            }
+            None => d.gen_lens,
+        };
+
+        let max_batch =
+            parse_num(pick(args, "max-batch", "SDLLM_MAX_BATCH"), "max-batch")?
+                .unwrap_or(d.max_batch);
+        if max_batch == 0 {
+            bail!("max-batch must be >= 1");
+        }
+        let max_engines =
+            parse_num(pick(args, "max-engines", "SDLLM_MAX_ENGINES"), "max-engines")?
+                .unwrap_or(d.max_engines);
+        if max_engines == 0 {
+            bail!("max-engines must be >= 1");
+        }
+        let max_wait_ms: u64 =
+            parse_num(pick(args, "max-wait-ms", "SDLLM_MAX_WAIT_MS"), "max-wait-ms")?
+                .unwrap_or(d.max_wait.as_millis() as u64);
+        let deadline_ms: Option<u64> =
+            parse_num(pick(args, "deadline-ms", "SDLLM_DEADLINE_MS"), "deadline-ms")?
+                .filter(|&ms| ms > 0);
+
+        Ok(ServeConfig {
+            addr: pick(args, "addr", "SDLLM_ADDR").unwrap_or(d.addr),
+            ref_mode,
+            backend: pick(args, "backend", "SDLLM_BACKEND").unwrap_or(d.backend),
+            model: pick(args, "model", "SDLLM_MODEL").unwrap_or(d.model),
+            artifacts: pick(args, "artifacts", "SDLLM_ARTIFACTS").map(PathBuf::from),
+            max_batch,
+            max_wait: Duration::from_millis(max_wait_ms),
+            max_engines,
+            gen_lens,
+            deadline_ms,
+            stress_schedules: parse_num(
+                pick(args, "schedules", "SDLLM_STRESS_SCHEDULES"),
+                "schedules",
+            )?
+            .unwrap_or(d.stress_schedules),
+            stress_seed_base: parse_num(
+                pick(args, "seed-base", "SDLLM_STRESS_SEED_BASE"),
+                "seed-base",
+            )?
+            .unwrap_or(d.stress_seed_base),
+        })
+    }
+
+    /// The router options this configuration asks for.
+    pub fn router_options(&self) -> RouterOptions {
+        RouterOptions {
+            max_batch: self.max_batch,
+            max_wait: self.max_wait,
+            max_engines: self.max_engines,
+        }
+    }
+
+    /// The artifacts directory: explicit override or the workspace
+    /// default.
+    pub fn artifacts_root(&self) -> PathBuf {
+        self.artifacts.clone().unwrap_or_else(crate::artifacts_root)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(args: &[&str]) -> Args {
+        Args::parse_from(args.iter().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn cli_overrides_parse_and_validate() {
+        let c = ServeConfig::from_env_and_args(&parse(&[
+            "--ref-mode",
+            "causal",
+            "--gen-lens",
+            "32, 64,128",
+            "--deadline-ms",
+            "250",
+            "--max-engines",
+            "2",
+            "--max-batch",
+            "8",
+        ]))
+        .unwrap();
+        assert_eq!(c.ref_mode, RefMode::Causal);
+        assert_eq!(c.gen_lens, vec![32, 64, 128]);
+        assert_eq!(c.deadline_ms, Some(250));
+        assert_eq!(c.router_options().max_engines, 2);
+        assert_eq!(c.router_options().max_batch, 8);
+
+        assert!(ServeConfig::from_env_and_args(&parse(&["--ref-mode", "bogus"])).is_err());
+        assert!(ServeConfig::from_env_and_args(&parse(&["--gen-lens", "64,x"])).is_err());
+        assert!(ServeConfig::from_env_and_args(&parse(&["--max-batch", "0"])).is_err());
+        assert!(ServeConfig::from_env_and_args(&parse(&["--max-engines", "nope"])).is_err());
+        // deadline 0 means "no deadline", not an error
+        let c = ServeConfig::from_env_and_args(&parse(&["--deadline-ms", "0"])).unwrap();
+        assert_eq!(c.deadline_ms, None);
+    }
+
+    #[test]
+    fn env_layering_under_cli() {
+        // all env manipulation — and every assertion that depends on the
+        // SDLLM_* variables being unset — lives in this one test: unit
+        // tests in this binary run in parallel and share the process
+        // environment, so defaults are checked here, strictly before the
+        // variables are set. The harness may also inherit SDLLM_* from
+        // the caller (CI exports SDLLM_STRESS_SCHEDULES) — clear first.
+        for var in [
+            "SDLLM_ADDR",
+            "SDLLM_REF_MODE",
+            "SDLLM_BACKEND",
+            "SDLLM_MODEL",
+            "SDLLM_ARTIFACTS",
+            "SDLLM_MAX_BATCH",
+            "SDLLM_MAX_WAIT_MS",
+            "SDLLM_MAX_ENGINES",
+            "SDLLM_GEN_LENS",
+            "SDLLM_DEADLINE_MS",
+            "SDLLM_STRESS_SCHEDULES",
+            "SDLLM_STRESS_SEED_BASE",
+        ] {
+            std::env::remove_var(var);
+        }
+        let c = ServeConfig::from_env_and_args(&parse(&[])).unwrap();
+        assert_eq!(c.addr, "127.0.0.1:7333");
+        assert_eq!(c.ref_mode, RefMode::Toy);
+        assert_eq!(c.backend, "auto");
+        assert_eq!(c.max_batch, 4);
+        assert_eq!(c.max_wait, Duration::from_millis(20));
+        assert_eq!(c.max_engines, DEFAULT_MAX_ENGINES);
+        assert_eq!(c.gen_lens, vec![64]);
+        assert_eq!(c.deadline_ms, None);
+        assert_eq!(c.stress_schedules, 20);
+
+        std::env::set_var("SDLLM_GEN_LENS", "16,32");
+        std::env::set_var("SDLLM_STRESS_SEED_BASE", "77");
+        std::env::set_var("SDLLM_DEADLINE_MS", "  ");
+        let c = ServeConfig::from_env_and_args(&parse(&[])).unwrap();
+        assert_eq!(c.gen_lens, vec![16, 32]);
+        assert_eq!(c.stress_seed_base, 77);
+        // whitespace-only env value counts as unset
+        assert_eq!(c.deadline_ms, None);
+        // CLI wins over env
+        let c = ServeConfig::from_env_and_args(&parse(&["--gen-lens", "64"])).unwrap();
+        assert_eq!(c.gen_lens, vec![64]);
+        std::env::remove_var("SDLLM_GEN_LENS");
+        std::env::remove_var("SDLLM_STRESS_SEED_BASE");
+        std::env::remove_var("SDLLM_DEADLINE_MS");
+    }
+}

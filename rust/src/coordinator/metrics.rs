@@ -49,6 +49,14 @@ struct Inner {
     /// gauge + high-water mark of concurrently running engines
     engines_active: usize,
     max_engines_active: usize,
+    /// decode wall-clock summed across all worker threads — with true
+    /// parallel engines this exceeds router elapsed time (the
+    /// `engines_overlap` bench asserts exactly that)
+    busy_secs: f64,
+    busy_by_method: Vec<(&'static str, f64)>,
+    /// rows SLA-evicted into the `parked` terminal state (counted as ok
+    /// responses, never as deadline misses)
+    parked: u64,
 }
 
 #[derive(Debug, Default)]
@@ -125,6 +133,24 @@ impl Metrics {
         m.host_secs += report.host_secs;
     }
 
+    /// Decode wall-clock one worker spent on one block round. Summed
+    /// per method and in total; overlap across workers is what makes
+    /// `busy_s` exceed `elapsed_s` under parallel serving.
+    pub fn record_busy(&self, method: &'static str, secs: f64) {
+        let mut m = self.inner.lock().unwrap();
+        m.busy_secs += secs;
+        match m.busy_by_method.iter_mut().find(|(name, _)| *name == method) {
+            Some((_, total)) => *total += secs,
+            None => m.busy_by_method.push((method, secs)),
+        }
+    }
+
+    /// A row was SLA-evicted and answered in the parked terminal state.
+    pub fn record_parked(&self) {
+        let mut m = self.inner.lock().unwrap();
+        m.parked += 1;
+    }
+
     pub fn record_response(&self, ok: bool, tokens: usize, latency_s: f64, queue_s: f64) {
         let mut m = self.inner.lock().unwrap();
         if ok {
@@ -166,6 +192,17 @@ impl Metrics {
             ("batch_started", Json::Num(m.batch_started as f64)),
             ("admissions", Json::Num(m.admissions as f64)),
             ("deadline_misses", Json::Num(m.deadline_misses as f64)),
+            ("parked", Json::Num(m.parked as f64)),
+            ("busy_s", Json::Num(m.busy_secs)),
+            (
+                "busy_by_method",
+                Json::obj(
+                    m.busy_by_method
+                        .iter()
+                        .map(|&(name, secs)| (name, Json::Num(secs)))
+                        .collect(),
+                ),
+            ),
             ("mixed_len_rounds", Json::Num(m.mixed_len_rounds as f64)),
             ("engines_active", Json::Num(m.engines_active as f64)),
             ("max_engines_active", Json::Num(m.max_engines_active as f64)),
@@ -264,5 +301,20 @@ mod tests {
         let depth = s.get("group_depth").unwrap();
         assert_eq!(depth.get("streaming").unwrap().get("queued").unwrap().as_usize(), Some(0));
         assert_eq!(depth.get("streaming").unwrap().get("active").unwrap().as_usize(), Some(1));
+    }
+
+    #[test]
+    fn busy_time_and_parked_accumulate() {
+        let m = Metrics::new();
+        m.record_busy("streaming", 0.5);
+        m.record_busy("vanilla", 0.25);
+        m.record_busy("streaming", 0.5);
+        m.record_parked();
+        let s = m.snapshot();
+        assert!((s.get("busy_s").unwrap().as_f64().unwrap() - 1.25).abs() < 1e-9);
+        let by = s.get("busy_by_method").unwrap();
+        assert!((by.get("streaming").unwrap().as_f64().unwrap() - 1.0).abs() < 1e-9);
+        assert!((by.get("vanilla").unwrap().as_f64().unwrap() - 0.25).abs() < 1e-9);
+        assert_eq!(s.get("parked").unwrap().as_usize(), Some(1));
     }
 }

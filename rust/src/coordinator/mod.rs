@@ -1,16 +1,26 @@
-//! L3 coordinator: admission, dynamic batching, the engine thread that
-//! owns the PJRT runtime, the TCP server and a load-generating client.
+//! L3 coordinator: admission, dynamic batching, per-engine worker
+//! threads (each owning its backend), the pure-scheduler router, the
+//! versioned wire protocol, the TCP server and a load-generating
+//! client.
 
 pub mod batcher;
 pub mod client;
+pub mod config;
 pub mod metrics;
+pub mod protocol;
 pub mod request;
 pub mod router;
 pub mod server;
+pub mod worker;
 
 pub use batcher::{Batcher, DEFAULT_SLA};
-pub use client::{run_load, Client, LoadReport};
+pub use client::{run_load, Client, LoadReport, ServerFrame};
+pub use config::ServeConfig;
 pub use metrics::Metrics;
-pub use request::{Request, Response};
-pub use router::{Job, Msg, RouterHandle};
+pub use protocol::{parse_client_line, ClientFrame, CommitEvent, WireError, PROTOCOL_VERSION};
+pub use request::{Request, RequestError, Response};
+pub use router::{
+    Job, Msg, ReplyTx, RouterHandle, RouterOptions, StreamFrame, DEFAULT_MAX_ENGINES,
+};
 pub use server::Server;
+pub use worker::{AdmitReq, RowDone, WorkerCmd, WorkerEvent};

@@ -1,0 +1,496 @@
+//! Wire protocol: every (de)serialization of the line-delimited JSON
+//! surface lives here — nothing in `request.rs`/`server.rs` touches
+//! bytes.
+//!
+//! Two generations coexist on the same port:
+//!
+//! - **v0 (legacy)**: bare request objects (`{"id":..,"prompt":[..]}`),
+//!   `{"cmd":"stats"}` / `{"cmd":"ping"}` control lines, flat response
+//!   objects, and bare `{"error":..}` lines *without* an id. Any line
+//!   with no `"v"` key parses as v0 and is answered in v0 shapes, so
+//!   old clients keep working byte-for-byte.
+//! - **v1 (versioned envelope)**: `{"v":1,"type":...}` plus the same
+//!   flat fields. Types from clients: `generate`, `subscribe`, `stats`,
+//!   `ping`; from the server: `done`, `commit`, `stats`, `pong`,
+//!   `error`. `subscribe` is v1-only — it opens a per-request stream of
+//!   out-of-order [`CommitEvent`] frames (the committed canvas
+//!   frontier) terminated by a `done` frame.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+use crate::util::json::Json;
+
+use super::request::{Request, RequestError, Response};
+
+/// Current envelope version. Lines carrying any other `"v"` are
+/// rejected with a versioned error frame.
+pub const PROTOCOL_VERSION: u64 = 1;
+
+/// Wrap a flat object body in the v1 envelope (insert `v` + `type`).
+fn with_envelope(ty: &str, body: Json) -> Json {
+    let mut m = match body {
+        Json::Obj(m) => m,
+        other => {
+            let mut m = BTreeMap::new();
+            m.insert("body".to_string(), other);
+            m
+        }
+    };
+    m.insert("v".to_string(), Json::Num(PROTOCOL_VERSION as f64));
+    m.insert("type".to_string(), Json::Str(ty.to_string()));
+    Json::Obj(m)
+}
+
+// ---------------------------------------------------------------------
+// Request / Response wire forms (v0 flat objects; v1 adds the envelope)
+// ---------------------------------------------------------------------
+
+impl Request {
+    /// v0 flat object. Optional fields are omitted when default so the
+    /// legacy bytes are unchanged for legacy requests.
+    pub fn to_json(&self) -> Json {
+        let mut fields = vec![
+            ("id", Json::Num(self.id as f64)),
+            ("prompt", Json::Arr(self.prompt.iter().map(|&t| Json::Num(t as f64)).collect())),
+            ("method", Json::Str(self.method.name().to_string())),
+            ("gen_len", Json::Num(self.gen_len as f64)),
+        ];
+        if let Some(d) = self.deadline_ms {
+            fields.push(("deadline_ms", Json::Num(d as f64)));
+        }
+        if self.park_on_miss {
+            fields.push(("park_on_miss", Json::Bool(true)));
+        }
+        Json::obj(fields)
+    }
+
+    /// Parse the flat fields (v0 bare object, or a v1 envelope — the
+    /// extra `v`/`type` keys are simply ignored) through the validating
+    /// builder.
+    pub fn from_json(j: &Json) -> Result<Request, RequestError> {
+        let mut b = Request::builder();
+        if let Some(id) = j.get("id").and_then(|v| v.as_i64()) {
+            b = b.id(id as u64);
+        }
+        let prompt: Vec<i32> = j
+            .get("prompt")
+            .and_then(|v| v.as_arr())
+            .ok_or(RequestError::MissingField("prompt"))?
+            .iter()
+            .map(|x| x.as_i64().unwrap_or(0) as i32)
+            .collect();
+        b = b.prompt(prompt);
+        if let Some(m) = j.get("method").and_then(|v| v.as_str()) {
+            b = b.method_name(m);
+        }
+        if let Some(g) = j.get("gen_len").and_then(|v| v.as_usize()) {
+            b = b.gen_len(g);
+        }
+        if let Some(d) = j.get("deadline_ms").and_then(|v| v.as_i64()) {
+            // negative values clamp to zero (immediately due)
+            b = b.deadline_ms(d.max(0) as u64);
+        }
+        if let Some(p) = j.get("park_on_miss").and_then(|v| v.as_bool()) {
+            b = b.park_on_miss(p);
+        }
+        b.build()
+    }
+
+    /// v1 envelope carrying this request (`ty` is `"generate"` or
+    /// `"subscribe"`).
+    pub fn to_frame(&self, ty: &str) -> Json {
+        with_envelope(ty, self.to_json())
+    }
+}
+
+impl Response {
+    /// v0 flat object. The parked terminal state rides as
+    /// `"state":"parked"` and is omitted otherwise, so non-parked
+    /// legacy responses are byte-identical to the pre-v1 wire.
+    pub fn to_json(&self) -> Json {
+        let mut fields = vec![
+            ("id", Json::Num(self.id as f64)),
+            ("text", Json::Str(self.text.clone())),
+            ("non_eos_tokens", Json::Num(self.non_eos_tokens as f64)),
+            ("latency_s", Json::Num(self.latency_s)),
+            ("queue_s", Json::Num(self.queue_s)),
+        ];
+        if self.parked {
+            fields.push(("state", Json::Str("parked".to_string())));
+        }
+        if let Some(e) = &self.error {
+            fields.push(("error", Json::Str(e.clone())));
+        }
+        Json::obj(fields)
+    }
+
+    /// Parse the flat fields of either generation (extra envelope keys
+    /// are ignored).
+    pub fn from_json(j: &Json) -> Result<Response, RequestError> {
+        Ok(Response {
+            id: j.get("id").and_then(|v| v.as_i64()).ok_or(RequestError::MissingField("id"))?
+                as u64,
+            text: j.get("text").and_then(|v| v.as_str()).unwrap_or("").to_string(),
+            non_eos_tokens: j.get("non_eos_tokens").and_then(|v| v.as_usize()).unwrap_or(0),
+            latency_s: j.get("latency_s").and_then(|v| v.as_f64()).unwrap_or(0.0),
+            queue_s: j.get("queue_s").and_then(|v| v.as_f64()).unwrap_or(0.0),
+            parked: j.get("state").and_then(|v| v.as_str()) == Some("parked"),
+            error: j.get("error").and_then(|v| v.as_str()).map(|s| s.to_string()),
+        })
+    }
+}
+
+// ---------------------------------------------------------------------
+// Commit events (v1-only server frames on a subscribe stream)
+// ---------------------------------------------------------------------
+
+/// One committed-canvas delta for a subscribed row, as shipped on the
+/// wire: applying the `writes` of events in `seq` order onto an
+/// all-mask canvas rebuilds the generation region exactly — including
+/// out-of-order confidence commits, early-exit EOS fills and remask
+/// retractions (confidence 0, token back to mask).
+#[derive(Debug, Clone, PartialEq)]
+pub struct CommitEvent {
+    pub id: u64,
+    /// per-row sequence number, gapless from 0
+    pub seq: u64,
+    /// the row's block cursor when the delta was captured
+    pub block: usize,
+    /// (generation-region offset, new token, commit confidence)
+    pub writes: Vec<(usize, i32, f32)>,
+}
+
+impl CommitEvent {
+    pub fn to_json(&self) -> Json {
+        with_envelope(
+            "commit",
+            Json::obj(vec![
+                ("id", Json::Num(self.id as f64)),
+                ("seq", Json::Num(self.seq as f64)),
+                ("block", Json::Num(self.block as f64)),
+                (
+                    "writes",
+                    Json::Arr(
+                        self.writes
+                            .iter()
+                            .map(|&(off, tok, conf)| {
+                                Json::Arr(vec![
+                                    Json::Num(off as f64),
+                                    Json::Num(tok as f64),
+                                    Json::Num(conf as f64),
+                                ])
+                            })
+                            .collect(),
+                    ),
+                ),
+            ]),
+        )
+    }
+
+    pub fn from_json(j: &Json) -> Result<CommitEvent, RequestError> {
+        let writes = j
+            .get("writes")
+            .and_then(|v| v.as_arr())
+            .ok_or(RequestError::MissingField("writes"))?
+            .iter()
+            .map(|w| {
+                let t = w.as_arr().unwrap_or(&[]);
+                (
+                    t.first().and_then(|x| x.as_usize()).unwrap_or(0),
+                    t.get(1).and_then(|x| x.as_i64()).unwrap_or(0) as i32,
+                    t.get(2).and_then(|x| x.as_f64()).unwrap_or(0.0) as f32,
+                )
+            })
+            .collect();
+        Ok(CommitEvent {
+            id: j.get("id").and_then(|v| v.as_i64()).ok_or(RequestError::MissingField("id"))?
+                as u64,
+            seq: j.get("seq").and_then(|v| v.as_i64()).ok_or(RequestError::MissingField("seq"))?
+                as u64,
+            block: j.get("block").and_then(|v| v.as_usize()).unwrap_or(0),
+            writes,
+        })
+    }
+}
+
+// ---------------------------------------------------------------------
+// Client-line parsing (both generations) and server frame builders
+// ---------------------------------------------------------------------
+
+/// A parsed client line. `v` records which generation the line spoke so
+/// the reply can match it.
+#[derive(Debug)]
+pub enum ClientFrame {
+    Generate { v: u64, request: Request },
+    /// v1-only: generate with a streaming commit-event subscription.
+    Subscribe { request: Request },
+    Stats { v: u64 },
+    Ping { v: u64 },
+}
+
+/// A protocol-level error plus the generation (and, for v1, the request
+/// id when one was parseable) to shape the error frame with.
+#[derive(Debug, Clone)]
+pub struct WireError {
+    pub v: u64,
+    pub id: Option<u64>,
+    pub msg: String,
+}
+
+/// Parse one client line: a `"v"` key selects the v1 envelope, a
+/// `"cmd"` key the legacy control lines, anything else a legacy bare
+/// request.
+pub fn parse_client_line(line: &str) -> Result<ClientFrame, WireError> {
+    let j = Json::parse(line).map_err(|e| WireError { v: 0, id: None, msg: format!("{e}") })?;
+    if let Some(v) = j.get("v").and_then(|v| v.as_i64()) {
+        let id = j.get("id").and_then(|x| x.as_i64()).map(|x| x as u64);
+        if v != PROTOCOL_VERSION as i64 {
+            return Err(WireError { v: 1, id, msg: format!("unsupported protocol version {v}") });
+        }
+        let ty = j.get("type").and_then(|t| t.as_str()).unwrap_or("");
+        match ty {
+            "generate" => Request::from_json(&j)
+                .map(|request| ClientFrame::Generate { v: 1, request })
+                .map_err(|e| WireError { v: 1, id, msg: e.to_string() }),
+            "subscribe" => Request::from_json(&j)
+                .map(|request| ClientFrame::Subscribe { request })
+                .map_err(|e| WireError { v: 1, id, msg: e.to_string() }),
+            "stats" => Ok(ClientFrame::Stats { v: 1 }),
+            "ping" => Ok(ClientFrame::Ping { v: 1 }),
+            other => Err(WireError { v: 1, id, msg: format!("unknown type '{other}'") }),
+        }
+    } else if let Some(cmd) = j.get("cmd").and_then(|c| c.as_str()) {
+        match cmd {
+            "stats" => Ok(ClientFrame::Stats { v: 0 }),
+            "ping" => Ok(ClientFrame::Ping { v: 0 }),
+            other => Err(WireError { v: 0, id: None, msg: format!("unknown cmd '{other}'") }),
+        }
+    } else {
+        Request::from_json(&j)
+            .map(|request| ClientFrame::Generate { v: 0, request })
+            .map_err(|e| WireError { v: 0, id: None, msg: e.to_string() })
+    }
+}
+
+/// Health-check reply in the requested generation.
+pub fn pong_frame(v: u64) -> Json {
+    let body = Json::obj(vec![("pong", Json::Bool(true))]);
+    if v == 0 {
+        body
+    } else {
+        with_envelope("pong", body)
+    }
+}
+
+/// Metrics snapshot: raw in v0 (legacy bytes), wrapped under `"stats"`
+/// in the v1 envelope.
+pub fn stats_frame(v: u64, snapshot: Json) -> Json {
+    if v == 0 {
+        snapshot
+    } else {
+        with_envelope("stats", Json::obj(vec![("stats", snapshot)]))
+    }
+}
+
+/// Terminal response: the flat v0 object, or a v1 `done` envelope.
+pub fn response_frame(v: u64, resp: &Response) -> Json {
+    if v == 0 {
+        resp.to_json()
+    } else {
+        with_envelope("done", resp.to_json())
+    }
+}
+
+/// Error frame. v0 is exactly `{"error":msg}` with **no id** — legacy
+/// clients distinguish protocol errors from failed requests by the
+/// missing id, so that shape is load-bearing. v1 carries the id when
+/// one was parsed.
+pub fn error_frame(v: u64, id: Option<u64>, msg: &str) -> Json {
+    if v == 0 {
+        return Json::obj(vec![("error", Json::Str(msg.to_string()))]);
+    }
+    let mut fields = vec![("error", Json::Str(msg.to_string()))];
+    if let Some(id) = id {
+        fields.push(("id", Json::Num(id as f64)));
+    }
+    with_envelope("error", Json::obj(fields))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::Method;
+
+    #[test]
+    fn request_roundtrip_v0() {
+        let r = Request::builder()
+            .id(7)
+            .prompt(vec![2, 10, 11])
+            .method(Method::Streaming)
+            .gen_len(64)
+            .build()
+            .unwrap();
+        let j = Json::parse(&r.to_json().to_string()).unwrap();
+        let r2 = Request::from_json(&j).unwrap();
+        assert_eq!(r2.id, 7);
+        assert_eq!(r2.prompt, vec![2, 10, 11]);
+        assert_eq!(r2.method, Method::Streaming);
+        assert_eq!(r2.gen_len, 64);
+        assert_eq!(r2.deadline_ms, None);
+        assert!(!r2.park_on_miss);
+    }
+
+    #[test]
+    fn request_roundtrip_v1_envelope() {
+        let r = Request::builder()
+            .id(9)
+            .prompt(vec![2, 5])
+            .method(Method::Vanilla)
+            .gen_len(32)
+            .deadline_ms(250)
+            .park_on_miss(true)
+            .build()
+            .unwrap();
+        let line = r.to_frame("generate").to_string();
+        let j = Json::parse(&line).unwrap();
+        assert_eq!(j.get("v").unwrap().as_i64(), Some(1));
+        assert_eq!(j.get("type").unwrap().as_str(), Some("generate"));
+        let r2 = Request::from_json(&j).unwrap();
+        assert_eq!(r2.id, 9);
+        assert_eq!(r2.method, Method::Vanilla);
+        assert_eq!(r2.deadline_ms, Some(250));
+        assert!(r2.park_on_miss);
+    }
+
+    #[test]
+    fn deadline_roundtrip_and_default() {
+        let j = Json::parse("{\"id\":1,\"prompt\":[2]}").unwrap();
+        assert_eq!(Request::from_json(&j).unwrap().deadline_ms, None);
+        // negative values clamp to zero
+        let j = Json::parse("{\"id\":1,\"prompt\":[2],\"deadline_ms\":-5}").unwrap();
+        assert_eq!(Request::from_json(&j).unwrap().deadline_ms, Some(0));
+    }
+
+    #[test]
+    fn response_roundtrip_with_error_and_parked() {
+        let r = Response {
+            id: 1,
+            text: "a9;81".into(),
+            non_eos_tokens: 5,
+            latency_s: 0.25,
+            queue_s: 0.01,
+            parked: false,
+            error: Some("boom".into()),
+        };
+        let j = Json::parse(&r.to_json().to_string()).unwrap();
+        let r2 = Response::from_json(&j).unwrap();
+        assert_eq!(r2.error.as_deref(), Some("boom"));
+        assert_eq!(r2.text, "a9;81");
+        assert!(!r2.parked);
+
+        let parked = Response { parked: true, error: None, ..r };
+        let j = Json::parse(&parked.to_json().to_string()).unwrap();
+        assert_eq!(j.get("state").unwrap().as_str(), Some("parked"));
+        assert!(Response::from_json(&j).unwrap().parked);
+    }
+
+    #[test]
+    fn rejects_bad_requests_with_typed_errors() {
+        let e = Request::from_json(&Json::parse("{\"id\":1}").unwrap()).unwrap_err();
+        assert_eq!(e, RequestError::MissingField("prompt"));
+        let e = Request::from_json(&Json::parse("{\"id\":1,\"prompt\":[]}").unwrap()).unwrap_err();
+        assert_eq!(e, RequestError::EmptyPrompt);
+        let e = Request::from_json(
+            &Json::parse("{\"id\":1,\"prompt\":[2],\"method\":\"bogus\"}").unwrap(),
+        )
+        .unwrap_err();
+        assert_eq!(e, RequestError::UnknownMethod("bogus".into()));
+        let e = Request::from_json(&Json::parse("{\"id\":1,\"prompt\":[2],\"gen_len\":9}").unwrap())
+            .unwrap_err();
+        assert!(matches!(e, RequestError::MisalignedGenLen { gen_len: 9, .. }));
+    }
+
+    #[test]
+    fn commit_event_roundtrips() {
+        let ev = CommitEvent {
+            id: 3,
+            seq: 12,
+            block: 2,
+            writes: vec![(0, 17, 0.75), (5, 4, 0.0), (19, 123, 1.0)],
+        };
+        let line = ev.to_json().to_string();
+        let j = Json::parse(&line).unwrap();
+        assert_eq!(j.get("type").unwrap().as_str(), Some("commit"));
+        assert_eq!(CommitEvent::from_json(&j).unwrap(), ev);
+    }
+
+    #[test]
+    fn parse_client_line_both_generations() {
+        // legacy bare request
+        match parse_client_line("{\"id\":1,\"prompt\":[2]}").unwrap() {
+            ClientFrame::Generate { v: 0, request } => assert_eq!(request.id, 1),
+            f => panic!("wrong frame: {f:?}"),
+        }
+        // legacy control lines
+        assert!(matches!(
+            parse_client_line("{\"cmd\":\"stats\"}").unwrap(),
+            ClientFrame::Stats { v: 0 }
+        ));
+        assert!(matches!(
+            parse_client_line("{\"cmd\":\"ping\"}").unwrap(),
+            ClientFrame::Ping { v: 0 }
+        ));
+        // v1 envelope
+        match parse_client_line("{\"v\":1,\"type\":\"generate\",\"id\":4,\"prompt\":[2]}").unwrap()
+        {
+            ClientFrame::Generate { v: 1, request } => assert_eq!(request.id, 4),
+            f => panic!("wrong frame: {f:?}"),
+        }
+        assert!(matches!(
+            parse_client_line("{\"v\":1,\"type\":\"subscribe\",\"id\":5,\"prompt\":[2]}").unwrap(),
+            ClientFrame::Subscribe { .. }
+        ));
+        assert!(matches!(
+            parse_client_line("{\"v\":1,\"type\":\"ping\"}").unwrap(),
+            ClientFrame::Ping { v: 1 }
+        ));
+    }
+
+    #[test]
+    fn parse_client_line_errors_carry_generation() {
+        let e = parse_client_line("{\"cmd\":\"nope\"}").unwrap_err();
+        assert_eq!(e.v, 0);
+        assert!(e.msg.contains("unknown cmd 'nope'"));
+        let e = parse_client_line("{\"v\":2,\"type\":\"generate\"}").unwrap_err();
+        assert_eq!(e.v, 1);
+        assert!(e.msg.contains("unsupported protocol version 2"));
+        let e = parse_client_line("{\"v\":1,\"type\":\"frob\",\"id\":8}").unwrap_err();
+        assert_eq!((e.v, e.id), (1, Some(8)));
+        let e = parse_client_line("not json").unwrap_err();
+        assert_eq!(e.v, 0);
+    }
+
+    #[test]
+    fn v0_error_frame_has_no_id() {
+        // legacy clients detect protocol errors by error-without-id
+        assert_eq!(error_frame(0, Some(7), "boom").to_string(), "{\"error\":\"boom\"}");
+        let v1 = error_frame(1, Some(7), "boom");
+        assert_eq!(v1.get("id").unwrap().as_i64(), Some(7));
+        assert_eq!(v1.get("type").unwrap().as_str(), Some("error"));
+    }
+
+    #[test]
+    fn stats_and_pong_frames_match_generation() {
+        let snap = Json::obj(vec![("requests_ok", Json::Num(3.0))]);
+        assert_eq!(stats_frame(0, snap.clone()).to_string(), snap.to_string());
+        let v1 = stats_frame(1, snap);
+        assert_eq!(v1.get("type").unwrap().as_str(), Some("stats"));
+        assert_eq!(
+            v1.get("stats").unwrap().get("requests_ok").unwrap().as_usize(),
+            Some(3)
+        );
+        assert_eq!(pong_frame(0).to_string(), "{\"pong\":true}");
+        assert_eq!(pong_frame(1).get("type").unwrap().as_str(), Some("pong"));
+    }
+}

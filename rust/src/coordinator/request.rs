@@ -1,9 +1,14 @@
-//! Request/response types and their wire encoding (line-delimited JSON
-//! over TCP — the offline toolchain has no HTTP stack, and a line
-//! protocol keeps the client trivially scriptable).
+//! Request/response types, the validating [`Request::builder`] and the
+//! typed [`RequestError`] it returns. Wire encoding (v0 line JSON and
+//! the v1 envelope) lives in [`super::protocol`] — this module is pure
+//! data so every layer (batcher, router, workers, tests) shares one
+//! validated shape.
 
-use crate::engine::Method;
-use crate::util::json::Json;
+use std::fmt;
+
+use crate::engine::{GenConfig, Method};
+
+use super::batcher::MAX_DEADLINE_MS;
 
 #[derive(Debug, Clone)]
 pub struct Request {
@@ -16,8 +21,15 @@ pub struct Request {
     /// (`arrival + deadline_ms`, or a default SLA when `None`), so
     /// tighter-deadline requests claim freed slots first. Purely a
     /// scheduling priority — a missed deadline is still answered, and
-    /// counted in the `deadline_misses` metric.
+    /// counted in the `deadline_misses` metric — unless
+    /// [`Request::park_on_miss`] opts into eviction.
     pub deadline_ms: Option<u64>,
+    /// SLA-aware eviction opt-in: when the effective deadline passes
+    /// while the row is mid-decode, the router evicts it from its
+    /// engine and answers immediately with whatever the canvas holds,
+    /// marked with the `parked` terminal state. Off by default — the
+    /// classic behavior is to finish late and count a deadline miss.
+    pub park_on_miss: bool,
 }
 
 #[derive(Debug, Clone)]
@@ -27,66 +39,159 @@ pub struct Response {
     pub non_eos_tokens: usize,
     pub latency_s: f64,
     pub queue_s: f64,
+    /// Terminal state for SLA-evicted rows: the decode was cut short at
+    /// a block boundary because the deadline budget was blown and the
+    /// request opted into `park_on_miss`. `text` holds the partial
+    /// canvas; `error` stays `None` (parking is an answered outcome,
+    /// not a failure).
+    pub parked: bool,
     pub error: Option<String>,
 }
 
-impl Request {
-    pub fn to_json(&self) -> Json {
-        let mut fields = vec![
-            ("id", Json::Num(self.id as f64)),
-            ("prompt", Json::Arr(self.prompt.iter().map(|&t| Json::Num(t as f64)).collect())),
-            ("method", Json::Str(self.method.name().to_string())),
-            ("gen_len", Json::Num(self.gen_len as f64)),
-        ];
-        if let Some(d) = self.deadline_ms {
-            fields.push(("deadline_ms", Json::Num(d as f64)));
+impl Response {
+    /// An error response for `id` — the single construction point for
+    /// failure replies, so the shape can't drift between the router's
+    /// admission errors and the server's protocol errors.
+    pub fn failure(id: u64, msg: impl Into<String>) -> Response {
+        Response {
+            id,
+            text: String::new(),
+            non_eos_tokens: 0,
+            latency_s: 0.0,
+            queue_s: 0.0,
+            parked: false,
+            error: Some(msg.into()),
         }
-        Json::obj(fields)
-    }
-
-    pub fn from_json(j: &Json) -> Result<Request, String> {
-        let id = j.get("id").and_then(|v| v.as_i64()).ok_or("missing id")? as u64;
-        let prompt: Vec<i32> = j
-            .get("prompt")
-            .and_then(|v| v.as_arr())
-            .ok_or("missing prompt")?
-            .iter()
-            .map(|x| x.as_i64().unwrap_or(0) as i32)
-            .collect();
-        if prompt.is_empty() {
-            return Err("empty prompt".into());
-        }
-        let method = Method::parse(j.get("method").and_then(|v| v.as_str()).unwrap_or("streaming"))
-            .ok_or("unknown method")?;
-        let gen_len = j.get("gen_len").and_then(|v| v.as_usize()).unwrap_or(64);
-        let deadline_ms = j.get("deadline_ms").and_then(|v| v.as_i64()).map(|d| d.max(0) as u64);
-        Ok(Request { id, prompt, method, gen_len, deadline_ms })
     }
 }
 
-impl Response {
-    pub fn to_json(&self) -> Json {
-        let mut fields = vec![
-            ("id", Json::Num(self.id as f64)),
-            ("text", Json::Str(self.text.clone())),
-            ("non_eos_tokens", Json::Num(self.non_eos_tokens as f64)),
-            ("latency_s", Json::Num(self.latency_s)),
-            ("queue_s", Json::Num(self.queue_s)),
-        ];
-        if let Some(e) = &self.error {
-            fields.push(("error", Json::Str(e.clone())));
+/// Typed construction/validation errors, replacing the old stringly
+/// `Result<_, String>` from `Request::from_json`. `Display` renders the
+/// exact messages the wire protocol ships, so matching on the enum and
+/// matching on the text can't disagree.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum RequestError {
+    /// A required wire field was absent (`id`, `prompt`, ...).
+    MissingField(&'static str),
+    EmptyPrompt,
+    UnknownMethod(String),
+    /// `gen_len` must be a positive multiple of the method's block size
+    /// — checked at construction so misaligned requests never reach an
+    /// engine.
+    MisalignedGenLen { gen_len: usize, block_size: usize },
+}
+
+impl fmt::Display for RequestError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            RequestError::MissingField(name) => write!(f, "missing {name}"),
+            RequestError::EmptyPrompt => write!(f, "empty prompt"),
+            RequestError::UnknownMethod(m) => write!(f, "unknown method '{m}'"),
+            RequestError::MisalignedGenLen { gen_len, block_size } => {
+                write!(f, "gen_len {gen_len} is not a positive multiple of block size {block_size}")
+            }
         }
-        Json::obj(fields)
+    }
+}
+
+impl std::error::Error for RequestError {}
+
+impl Request {
+    /// Fluent builder with validation at construction: gen_len block
+    /// alignment, deadline clamping and method parsing all happen in
+    /// [`RequestBuilder::build`], so a `Request` that exists is a
+    /// `Request` an engine can admit (prompt length permitting).
+    pub fn builder() -> RequestBuilder {
+        RequestBuilder {
+            id: None,
+            prompt: Vec::new(),
+            method: Method::Streaming,
+            bad_method: None,
+            gen_len: 64,
+            deadline_ms: None,
+            park_on_miss: false,
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct RequestBuilder {
+    id: Option<u64>,
+    prompt: Vec<i32>,
+    method: Method,
+    /// an unparseable name passed to `method_name`, surfaced by `build`
+    bad_method: Option<String>,
+    gen_len: usize,
+    deadline_ms: Option<u64>,
+    park_on_miss: bool,
+}
+
+impl RequestBuilder {
+    pub fn id(mut self, id: u64) -> Self {
+        self.id = Some(id);
+        self
     }
 
-    pub fn from_json(j: &Json) -> Result<Response, String> {
-        Ok(Response {
-            id: j.get("id").and_then(|v| v.as_i64()).ok_or("missing id")? as u64,
-            text: j.get("text").and_then(|v| v.as_str()).unwrap_or("").to_string(),
-            non_eos_tokens: j.get("non_eos_tokens").and_then(|v| v.as_usize()).unwrap_or(0),
-            latency_s: j.get("latency_s").and_then(|v| v.as_f64()).unwrap_or(0.0),
-            queue_s: j.get("queue_s").and_then(|v| v.as_f64()).unwrap_or(0.0),
-            error: j.get("error").and_then(|v| v.as_str()).map(|s| s.to_string()),
+    pub fn prompt(mut self, prompt: Vec<i32>) -> Self {
+        self.prompt = prompt;
+        self
+    }
+
+    pub fn method(mut self, method: Method) -> Self {
+        self.method = method;
+        self.bad_method = None;
+        self
+    }
+
+    /// Parse a method from its wire name; an unknown name is recorded
+    /// and reported by `build` (the builder stays fluent either way).
+    pub fn method_name(mut self, name: &str) -> Self {
+        match Method::parse(name) {
+            Some(m) => {
+                self.method = m;
+                self.bad_method = None;
+            }
+            None => self.bad_method = Some(name.to_string()),
+        }
+        self
+    }
+
+    pub fn gen_len(mut self, gen_len: usize) -> Self {
+        self.gen_len = gen_len;
+        self
+    }
+
+    /// Deadline budget in ms, clamped to [`MAX_DEADLINE_MS`] — a bogus
+    /// client value must not overflow `Instant + Duration` downstream.
+    pub fn deadline_ms(mut self, ms: u64) -> Self {
+        self.deadline_ms = Some(ms.min(MAX_DEADLINE_MS));
+        self
+    }
+
+    pub fn park_on_miss(mut self, park: bool) -> Self {
+        self.park_on_miss = park;
+        self
+    }
+
+    pub fn build(self) -> Result<Request, RequestError> {
+        let id = self.id.ok_or(RequestError::MissingField("id"))?;
+        if let Some(name) = self.bad_method {
+            return Err(RequestError::UnknownMethod(name));
+        }
+        if self.prompt.is_empty() {
+            return Err(RequestError::EmptyPrompt);
+        }
+        let block_size = GenConfig::preset(self.method, self.gen_len.max(1)).block_size;
+        if self.gen_len == 0 || self.gen_len % block_size != 0 {
+            return Err(RequestError::MisalignedGenLen { gen_len: self.gen_len, block_size });
+        }
+        Ok(Request {
+            id,
+            prompt: self.prompt,
+            method: self.method,
+            gen_len: self.gen_len,
+            deadline_ms: self.deadline_ms,
+            park_on_miss: self.park_on_miss,
         })
     }
 }
@@ -96,64 +201,68 @@ mod tests {
     use super::*;
 
     #[test]
-    fn request_roundtrip() {
-        let r = Request {
-            id: 7,
-            prompt: vec![2, 10, 11],
-            method: Method::Streaming,
-            gen_len: 64,
-            deadline_ms: None,
-        };
-        let j = Json::parse(&r.to_json().to_string()).unwrap();
-        let r2 = Request::from_json(&j).unwrap();
-        assert_eq!(r2.id, 7);
-        assert_eq!(r2.prompt, vec![2, 10, 11]);
-        assert_eq!(r2.method, Method::Streaming);
-        assert_eq!(r2.gen_len, 64);
-        assert_eq!(r2.deadline_ms, None);
+    fn builder_builds_defaults() {
+        let r = Request::builder().id(7).prompt(vec![2, 10, 11]).build().unwrap();
+        assert_eq!(r.id, 7);
+        assert_eq!(r.method, Method::Streaming);
+        assert_eq!(r.gen_len, 64);
+        assert_eq!(r.deadline_ms, None);
+        assert!(!r.park_on_miss);
     }
 
     #[test]
-    fn deadline_roundtrip_and_default() {
-        let r = Request {
-            id: 8,
-            prompt: vec![2],
-            method: Method::Vanilla,
-            gen_len: 32,
-            deadline_ms: Some(250),
-        };
-        let j = Json::parse(&r.to_json().to_string()).unwrap();
-        assert_eq!(Request::from_json(&j).unwrap().deadline_ms, Some(250));
-        // absent on the wire → None; negative values clamp to zero
-        let j = Json::parse("{\"id\":1,\"prompt\":[2]}").unwrap();
-        assert_eq!(Request::from_json(&j).unwrap().deadline_ms, None);
-        let j = Json::parse("{\"id\":1,\"prompt\":[2],\"deadline_ms\":-5}").unwrap();
-        assert_eq!(Request::from_json(&j).unwrap().deadline_ms, Some(0));
+    fn builder_validates() {
+        assert_eq!(
+            Request::builder().prompt(vec![2]).build().unwrap_err(),
+            RequestError::MissingField("id")
+        );
+        assert_eq!(Request::builder().id(1).build().unwrap_err(), RequestError::EmptyPrompt);
+        assert_eq!(
+            Request::builder().id(1).prompt(vec![2]).method_name("bogus").build().unwrap_err(),
+            RequestError::UnknownMethod("bogus".into())
+        );
+        let err =
+            Request::builder().id(1).prompt(vec![2]).gen_len(13).build().unwrap_err();
+        assert_eq!(err, RequestError::MisalignedGenLen { gen_len: 13, block_size: 8 });
+        assert_eq!(err.to_string(), "gen_len 13 is not a positive multiple of block size 8");
+        assert!(matches!(
+            Request::builder().id(1).prompt(vec![2]).gen_len(0).build().unwrap_err(),
+            RequestError::MisalignedGenLen { gen_len: 0, .. }
+        ));
     }
 
     #[test]
-    fn response_roundtrip_with_error() {
-        let r = Response {
-            id: 1,
-            text: "a9;81".into(),
-            non_eos_tokens: 5,
-            latency_s: 0.25,
-            queue_s: 0.01,
-            error: Some("boom".into()),
-        };
-        let j = Json::parse(&r.to_json().to_string()).unwrap();
-        let r2 = Response::from_json(&j).unwrap();
-        assert_eq!(r2.error.as_deref(), Some("boom"));
-        assert_eq!(r2.text, "a9;81");
+    fn builder_clamps_absurd_deadline() {
+        let r = Request::builder()
+            .id(1)
+            .prompt(vec![2])
+            .deadline_ms(u64::MAX)
+            .build()
+            .unwrap();
+        assert_eq!(r.deadline_ms, Some(MAX_DEADLINE_MS));
+        let r = Request::builder().id(1).prompt(vec![2]).deadline_ms(250).build().unwrap();
+        assert_eq!(r.deadline_ms, Some(250));
     }
 
     #[test]
-    fn rejects_bad_requests() {
-        assert!(Request::from_json(&Json::parse("{\"id\":1}").unwrap()).is_err());
-        assert!(Request::from_json(&Json::parse("{\"id\":1,\"prompt\":[]}").unwrap()).is_err());
-        assert!(Request::from_json(
-            &Json::parse("{\"id\":1,\"prompt\":[2],\"method\":\"bogus\"}").unwrap()
-        )
-        .is_err());
+    fn method_name_parses_all_wire_names() {
+        for m in Method::all() {
+            let r = Request::builder()
+                .id(1)
+                .prompt(vec![2])
+                .method_name(m.name())
+                .build()
+                .unwrap();
+            assert_eq!(r.method, m);
+        }
+    }
+
+    #[test]
+    fn failure_helper_shapes_error_response() {
+        let r = Response::failure(9, "boom");
+        assert_eq!(r.id, 9);
+        assert_eq!(r.error.as_deref(), Some("boom"));
+        assert!(!r.parked);
+        assert_eq!(r.non_eos_tokens, 0);
     }
 }

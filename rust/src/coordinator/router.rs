@@ -1,25 +1,26 @@
-//! Router: the engine thread. Model backends are generally not `Send`
-//! (PJRT handles wrap raw pointers), so one dedicated thread *builds*
-//! and owns the backend; everything else talks to it through a channel
-//! of jobs.
+//! Router: a pure scheduler. It admits requests, routes them to
+//! per-engine worker threads (see [`super::worker`]), fans streamed
+//! commit events out to subscribers and aggregates metrics — it never
+//! touches a decode loop. Backends are `Send`, so each worker *builds
+//! and owns* its own backend instance; distinct methods decode on
+//! distinct OS threads and their wall-clocks genuinely overlap (the
+//! `engines_overlap` bench asserts busy-time sum > router elapsed).
 //!
-//! The admission loop is *continuous at block granularity* and
-//! **multi-engine**: every method group that becomes ready gets its own
-//! slot-based [`BatchEngine`], and each scheduling pass drives one
-//! block round per active engine — Streaming and Vanilla traffic decode
-//! concurrently instead of blocking each other, which also removes the
-//! old join-pause rule (a starving group now simply starts its own
-//! engine on the next pass). Between block rounds the loop admits
-//! queued same-method requests into slots freed by finished or
-//! early-exited rows, earliest effective deadline first; rows carry
-//! their own `gen_len`, so mixed-length requests share one engine and
-//! a short row's retirement frees its slot while long rows continue.
-//! Finished rows are answered the moment their own decode completes.
+//! Scheduling is continuous at block granularity: ready method groups
+//! start engines on idle workers (spawning lazily up to
+//! [`RouterOptions::max_engines`]); once every worker is live, further
+//! methods multiplex — their batches queue behind the least-loaded
+//! worker and run when its current engine retires. Between block
+//! rounds, freed slots are topped up with same-method waiters, earliest
+//! effective deadline first. SLA-aware eviction (`park_on_miss`) pulls
+//! rows whose deadline budget blew mid-decode out of their engine at
+//! the next block boundary and answers them with the `parked` terminal
+//! state.
 //!
-//! Construction is a factory closure executed on the engine thread
-//! (`spawn_with`), with two conveniences: `spawn_reference` (pure-Rust
-//! backend, always available) and `spawn` (PJRT artifacts, behind the
-//! `pjrt` feature).
+//! Construction is a factory closure executed on every worker thread
+//! (`spawn_with`/`spawn_opts`), with conveniences: `spawn_reference`
+//! (pure-Rust backend, always available) and `spawn` (PJRT artifacts,
+//! behind the `pjrt` feature).
 
 use std::collections::HashMap;
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender, TryRecvError};
@@ -29,25 +30,81 @@ use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
-use crate::engine::{
-    Backend, BatchEngine, GenConfig, Method, RefMode, ReferenceBackend, REFERENCE_SEED,
-};
+use crate::engine::{Backend, Method, RefMode, ReferenceBackend, REFERENCE_SEED};
 
 use super::batcher::Batcher;
 use super::metrics::Metrics;
+use super::protocol::CommitEvent;
 use super::request::{Request, Response};
+use super::worker::{spawn_worker, AdmitReq, RowDone, WorkerCmd, WorkerEvent};
+
+/// Default cap on concurrently live worker threads (= engines).
+pub const DEFAULT_MAX_ENGINES: usize = 4;
+
+/// Frames delivered to a streaming subscription (see
+/// [`RouterHandle::subscribe`]): out-of-order commit events as blocks
+/// retire, then exactly one terminal `Done`.
+#[derive(Debug)]
+pub enum StreamFrame {
+    Commit(CommitEvent),
+    Done(Response),
+}
+
+/// Reply channel for one request: classic one-shot, or a commit-event
+/// stream. Streamed rows are admitted traced so the engine produces
+/// per-round canvas diffs for them.
+pub enum ReplyTx {
+    Oneshot(Sender<Response>),
+    Stream(Sender<StreamFrame>),
+}
+
+impl ReplyTx {
+    fn send_done(&self, resp: Response) {
+        match self {
+            ReplyTx::Oneshot(tx) => {
+                let _ = tx.send(resp);
+            }
+            ReplyTx::Stream(tx) => {
+                let _ = tx.send(StreamFrame::Done(resp));
+            }
+        }
+    }
+}
 
 /// A submitted request plus its reply channel and arrival time.
 pub struct Job {
     pub request: Request,
-    pub reply: Sender<Response>,
+    pub reply: ReplyTx,
     pub arrived: Instant,
 }
 
-/// Control messages for the engine thread.
+/// The router's single inbox: submissions, shutdown, and every worker
+/// event (workers write through a clone of the router's own sender, so
+/// each worker's events arrive in the order it sent them).
 pub enum Msg {
     Submit(Job),
     Shutdown,
+    Worker(WorkerEvent),
+}
+
+/// Serving knobs consumed by `spawn_opts` (the `spawn_with` signature
+/// keeps the historical two-knob form).
+#[derive(Debug, Clone, Copy)]
+pub struct RouterOptions {
+    pub max_batch: usize,
+    pub max_wait: Duration,
+    /// cap on live worker threads; more methods than workers multiplex
+    pub max_engines: usize,
+}
+
+impl Default for RouterOptions {
+    fn default() -> RouterOptions {
+        RouterOptions {
+            max_batch: 4,
+            max_wait: Duration::from_millis(20),
+            max_engines: DEFAULT_MAX_ENGINES,
+        }
+    }
 }
 
 pub struct RouterHandle {
@@ -57,53 +114,72 @@ pub struct RouterHandle {
 }
 
 impl RouterHandle {
-    /// Spawn the engine thread around a backend built *on that thread*
-    /// by `factory` (backends need not be `Send`).
+    /// Spawn the scheduler around a backend factory executed on every
+    /// worker thread (each worker builds and owns its own instance —
+    /// backends must be `Send` but need not be `Sync`).
     pub fn spawn_with<B, F>(factory: F, max_batch: usize, max_wait: Duration) -> RouterHandle
     where
-        B: Backend,
-        F: FnOnce() -> Result<B> + Send + 'static,
+        B: Backend + 'static,
+        F: Fn() -> Result<B> + Send + Sync + 'static,
+    {
+        RouterHandle::spawn_opts(
+            factory,
+            RouterOptions { max_batch, max_wait, ..RouterOptions::default() },
+        )
+    }
+
+    /// Spawn with the full option set.
+    pub fn spawn_opts<B, F>(factory: F, opts: RouterOptions) -> RouterHandle
+    where
+        B: Backend + 'static,
+        F: Fn() -> Result<B> + Send + Sync + 'static,
     {
         let (tx, rx) = channel::<Msg>();
         let metrics = Arc::new(Metrics::new());
         let m2 = metrics.clone();
+        let events = tx.clone();
+        let factory = Arc::new(factory);
         let join = std::thread::Builder::new()
             .name("sdllm-router".into())
-            .spawn(move || {
-                let backend = factory()?;
-                engine_loop(&backend, max_batch, max_wait, rx, m2)
-            })
+            .spawn(move || scheduler_loop(factory, opts, rx, events, m2))
             .expect("spawn router thread");
         RouterHandle { tx, join: Some(join), metrics }
     }
 
-    /// Engine thread over the deterministic reference backend (toy
-    /// mode) — serves on a bare checkout, no artifacts or accelerator
-    /// required.
+    /// Scheduler over the deterministic reference backend (toy mode) —
+    /// serves on a bare checkout, no artifacts or accelerator required.
     pub fn spawn_reference(max_batch: usize, max_wait: Duration) -> RouterHandle {
         RouterHandle::spawn_reference_mode(RefMode::Toy, max_batch, max_wait)
     }
 
-    /// Engine thread over a reference backend in the given mode (the
+    /// Scheduler over a reference backend in the given mode (the
     /// serve-path analogue of `--ref-mode`; scripted maps to toy).
     pub fn spawn_reference_mode(
         mode: RefMode,
         max_batch: usize,
         max_wait: Duration,
     ) -> RouterHandle {
-        RouterHandle::spawn_with(
+        RouterHandle::spawn_reference_opts(
+            mode,
+            RouterOptions { max_batch, max_wait, ..RouterOptions::default() },
+        )
+    }
+
+    /// Reference backend with the full option set (the `ServeConfig`
+    /// entry point).
+    pub fn spawn_reference_opts(mode: RefMode, opts: RouterOptions) -> RouterHandle {
+        RouterHandle::spawn_opts(
             move || {
                 Ok(match mode {
                     RefMode::Causal => ReferenceBackend::causal(REFERENCE_SEED),
                     _ => ReferenceBackend::toy(REFERENCE_SEED),
                 })
             },
-            max_batch,
-            max_wait,
+            opts,
         )
     }
 
-    /// Engine thread serving `model` from `artifacts_root` on PJRT.
+    /// Scheduler serving `model` from `artifacts_root` on PJRT.
     #[cfg(feature = "pjrt")]
     pub fn spawn(
         artifacts_root: std::path::PathBuf,
@@ -111,8 +187,24 @@ impl RouterHandle {
         max_batch: usize,
         max_wait: Duration,
     ) -> RouterHandle {
+        RouterHandle::spawn_pjrt_opts(
+            artifacts_root,
+            model,
+            RouterOptions { max_batch, max_wait, ..RouterOptions::default() },
+        )
+    }
+
+    /// PJRT scheduler with the full option set (each worker thread
+    /// loads its own `ModelRuntime` from the shared artifacts).
+    #[cfg(feature = "pjrt")]
+    pub fn spawn_pjrt_opts(
+        artifacts_root: std::path::PathBuf,
+        model: String,
+        opts: RouterOptions,
+    ) -> RouterHandle {
         use crate::runtime::{warmup, ArtifactsIndex, ModelRuntime, Runtime};
-        RouterHandle::spawn_with(
+        let max_batch = opts.max_batch;
+        RouterHandle::spawn_opts(
             move || {
                 let rt = Runtime::cpu()?;
                 let index = ArtifactsIndex::load(&artifacts_root)?;
@@ -120,7 +212,8 @@ impl RouterHandle {
                 // Pre-warm the default serving path so first requests
                 // don't pay lazy executable compilation (best effort:
                 // unknown methods/lengths still compile on demand).
-                let warm_cfg = GenConfig::preset(crate::engine::Method::Streaming, 64);
+                let warm_cfg =
+                    crate::engine::GenConfig::preset(crate::engine::Method::Streaming, 64);
                 if let Ok(n) = warmup::warm_for(&model_rt, &warm_cfg, 224, max_batch) {
                     if n > 0 {
                         eprintln!("[router] pre-warmed {n} executables");
@@ -128,17 +221,26 @@ impl RouterHandle {
                 }
                 Ok(model_rt)
             },
-            max_batch,
-            max_wait,
+            opts,
         )
     }
 
     /// Submit a request; returns the channel the response arrives on.
     pub fn submit(&self, request: Request) -> Receiver<Response> {
         let (reply_tx, reply_rx) = channel();
-        let job = Job { request, reply: reply_tx, arrived: Instant::now() };
-        // If the engine thread died the reply channel is dropped and the
-        // caller sees a disconnect — no panic here.
+        let job = Job { request, reply: ReplyTx::Oneshot(reply_tx), arrived: Instant::now() };
+        // If the scheduler thread died the reply channel is dropped and
+        // the caller sees a disconnect — no panic here.
+        let _ = self.tx.send(Msg::Submit(job));
+        reply_rx
+    }
+
+    /// Submit with a streaming subscription: the row is traced, and the
+    /// receiver yields its commit events as blocks retire, terminated
+    /// by exactly one [`StreamFrame::Done`].
+    pub fn subscribe(&self, request: Request) -> Receiver<StreamFrame> {
+        let (reply_tx, reply_rx) = channel();
+        let job = Job { request, reply: ReplyTx::Stream(reply_tx), arrived: Instant::now() };
         let _ = self.tx.send(Msg::Submit(job));
         reply_rx
     }
@@ -171,276 +273,444 @@ impl Drop for RouterHandle {
     }
 }
 
-/// Placeholder gen length for the per-method engine config. Rows carry
-/// their own `gen_len` at admission — this only has to satisfy
-/// `GenConfig::validate` (positive, block-aligned).
-const ENGINE_CFG_GEN_LEN: usize = 64;
+/// How a row was admitted — picks the conservation counter its
+/// `Admitted` event bumps (`joins + batch_started == admissions`).
+#[derive(Debug, Clone, Copy)]
+enum AdmitKind {
+    BatchStart,
+    Join,
+}
 
-/// Per-request bookkeeping held until the reply is sent: the channel,
-/// arrival time, and the effective deadline — `arrival + deadline_ms`,
-/// or `arrival + default SLA` when none was given — for the miss
-/// metric, mirroring the batcher's ordering semantics.
-struct ReplySlot {
-    tx: Sender<Response>,
+/// Per-request scheduler state, held from submission to reply.
+struct RowState {
+    reply: ReplyTx,
     arrived: Instant,
+    /// effective deadline (batcher semantics) for the miss metric and
+    /// SLA eviction
     deadline: Instant,
+    park_on_miss: bool,
+    kind: AdmitKind,
+    /// set when the worker confirms the engine admission
+    admitted_at: Option<Instant>,
+    /// the worker this row was last routed to
+    worker: Option<usize>,
+    /// an eviction was already requested — never evict twice
+    evict_sent: bool,
 }
 
-/// One in-flight engine (there is at most one per method) plus
-/// per-request admission times for queue / latency accounting.
-struct EngineRun<'b, B: Backend> {
-    method: Method,
-    engine: BatchEngine<'b, B>,
-    admitted: HashMap<u64, Instant>,
+/// One worker thread as the scheduler sees it. Slots are never removed
+/// (worker indices are stable); dead ones are skipped.
+struct WorkerSlot {
+    tx: Sender<WorkerCmd>,
+    join: Option<JoinHandle<()>>,
+    /// the method whose engine the worker is currently running (None
+    /// between engines; multiplexed batches queue without setting it)
+    assigned: Option<Method>,
+    /// rows routed to this worker and not yet answered/bounced
+    outstanding: usize,
+    /// engine slot count; a guess (`opts.max_batch`) until `Ready`
+    capacity: usize,
+    ready: bool,
+    dead: bool,
 }
 
-/// Refresh the scheduling gauges: per-method (queued, active) depth
-/// and the engines-active gauge + high-water mark. Called right after
-/// engines start (so short-lived engines that drain within the same
-/// pass still count toward the peak) and again at the end of the pass
-/// (so the current-state gauges reflect retirements).
-fn refresh_gauges<B: Backend>(batcher: &Batcher, runs: &[EngineRun<'_, B>], metrics: &Metrics) {
-    let depths: Vec<(&'static str, usize, usize)> = Method::all()
-        .into_iter()
-        .filter_map(|m| {
-            let queued = batcher.depth(m);
-            let active =
-                runs.iter().find(|r| r.method == m).map(|r| r.engine.active()).unwrap_or(0);
-            (queued + active > 0).then_some((m.name(), queued, active))
-        })
-        .collect();
-    metrics.set_groups(depths, runs.len());
-}
-
-/// Answer a request with an error and account for it.
-fn fail(replies: &mut HashMap<u64, ReplySlot>, metrics: &Metrics, id: u64, err: &str) {
-    if let Some(slot) = replies.remove(&id) {
-        metrics.record_response(false, 0, 0.0, 0.0);
-        let _ = slot.tx.send(Response {
-            id,
-            text: String::new(),
-            non_eos_tokens: 0,
-            latency_s: 0.0,
-            queue_s: 0.0,
-            error: Some(err.to_string()),
-        });
-    }
-}
-
-/// Try to admit `req` into `run`'s engine; answers the request with an
-/// error (and returns false) when it can never decode there.
-fn admit_or_fail<B: Backend>(
-    run: &mut EngineRun<'_, B>,
-    req: &Request,
-    replies: &mut HashMap<u64, ReplySlot>,
-    metrics: &Metrics,
-) -> bool {
-    if !run.engine.valid_gen_len(req.gen_len) {
-        let k = run.engine.config().block_size;
-        fail(
-            replies,
-            metrics,
-            req.id,
-            &format!("gen_len {} is not a positive multiple of block size {k}", req.gen_len),
-        );
-        return false;
-    }
-    if !run.engine.fits(req.prompt.len(), req.gen_len) {
-        // fail the oversized request alone — it must not poison the
-        // rows already (or about to be) mid-decode
-        fail(replies, metrics, req.id, "prompt exceeds backend buckets");
-        return false;
-    }
-    if run.engine.admit(req.id, &req.prompt, req.gen_len) {
-        run.admitted.insert(req.id, Instant::now());
-        metrics.record_admission();
-        true
-    } else {
-        fail(replies, metrics, req.id, "engine slots exhausted");
-        false
-    }
-}
-
-fn engine_loop<B: Backend>(
-    backend: &B,
-    max_batch: usize,
-    max_wait: Duration,
-    rx: Receiver<Msg>,
+/// The scheduler's whole mutable state, grouped so the event handlers
+/// stay methods instead of 8-argument free functions.
+struct Sched<B, F> {
+    factory: Arc<F>,
+    opts: RouterOptions,
+    events: Sender<Msg>,
     metrics: Arc<Metrics>,
-) -> Result<()> {
+    batcher: Batcher,
+    rows: HashMap<u64, RowState>,
+    workers: Vec<WorkerSlot>,
+    shutdown: bool,
+    _backend: std::marker::PhantomData<fn() -> B>,
+}
+
+fn scheduler_loop<B, F>(
+    factory: Arc<F>,
+    opts: RouterOptions,
+    rx: Receiver<Msg>,
+    events: Sender<Msg>,
+    metrics: Arc<Metrics>,
+) -> Result<()>
+where
+    B: Backend + 'static,
+    F: Fn() -> Result<B> + Send + Sync + 'static,
+{
     metrics.start_clock();
-
-    // Clamp the serving batch to what the backend's batch buckets carry
-    // up front, so the batcher never hands an engine more rows than it
-    // has slots (keeps record_batch and the admission metrics honest).
-    let engine_cap = crate::engine::clamp_batch(backend, max_batch);
-    let mut batcher = Batcher::new(engine_cap, max_wait);
-    let mut replies: HashMap<u64, ReplySlot> = HashMap::new();
-    let mut shutdown = false;
-    let mut runs: Vec<EngineRun<'_, B>> = Vec::new();
-
-    let enqueue = |job: Job, batcher: &mut Batcher, replies: &mut HashMap<u64, ReplySlot>| {
-        let deadline = batcher.effective_deadline(&job.request, job.arrived);
-        let slot = ReplySlot { tx: job.reply, arrived: job.arrived, deadline };
-        replies.insert(job.request.id, slot);
-        batcher.push_at(job.request, job.arrived);
+    let mut s = Sched::<B, F> {
+        factory,
+        batcher: Batcher::new(opts.max_batch, opts.max_wait),
+        opts: RouterOptions { max_engines: opts.max_engines.max(1), ..opts },
+        events,
+        metrics,
+        rows: HashMap::new(),
+        workers: Vec::new(),
+        shutdown: false,
+        _backend: std::marker::PhantomData,
     };
-
     loop {
-        // Drain the inbox. With engines mid-flight we must not block —
-        // decode keeps moving and new arrivals join at the next block
-        // boundary; when idle, wait out the batcher's flush deadline.
-        if !runs.is_empty() {
-            loop {
-                match rx.try_recv() {
-                    Ok(Msg::Submit(job)) => enqueue(job, &mut batcher, &mut replies),
-                    Ok(Msg::Shutdown) => shutdown = true,
-                    Err(TryRecvError::Empty) => break,
-                    Err(TryRecvError::Disconnected) => {
-                        shutdown = true;
-                        break;
-                    }
-                }
-            }
-        } else {
-            // A group can already be runnable (full, or flushed by a
-            // deadline that passed while the engines were busy) — never
-            // sleep on the inbox in that case.
-            let now = Instant::now();
-            let timeout = if batcher.has_ready(now) {
-                Duration::ZERO
-            } else {
-                batcher.next_deadline(now).unwrap_or(Duration::from_millis(50))
-            };
-            match rx.recv_timeout(timeout) {
-                Ok(Msg::Submit(job)) => {
-                    enqueue(job, &mut batcher, &mut replies);
-                    // opportunistically drain whatever else is queued
-                    while let Ok(msg) = rx.try_recv() {
-                        match msg {
-                            Msg::Submit(j) => enqueue(j, &mut batcher, &mut replies),
-                            Msg::Shutdown => shutdown = true,
-                        }
-                    }
-                }
-                Ok(Msg::Shutdown) => shutdown = true,
-                Err(RecvTimeoutError::Timeout) => {}
-                Err(RecvTimeoutError::Disconnected) => shutdown = true,
-            }
+        // Block until something happens (a message, a batcher flush
+        // deadline, a park deadline), then drain the inbox. The timeout
+        // is never zero — progress while blocked on workers comes from
+        // their events, not from spinning.
+        match rx.recv_timeout(s.poll_timeout(Instant::now())) {
+            Ok(msg) => s.handle(msg),
+            Err(RecvTimeoutError::Timeout) => {}
+            Err(RecvTimeoutError::Disconnected) => s.shutdown = true,
         }
-
-        // Start an engine for every ready group that doesn't have one —
-        // distinct methods decode concurrently, so a ready group never
-        // waits behind another method's batch.
         loop {
-            let busy: Vec<Method> = runs.iter().map(|r| r.method).collect();
-            let Some((method, batch)) = batcher.pop_ready(Instant::now(), &busy) else { break };
-            metrics.record_batch(batch.len());
-            let cfg = GenConfig::preset(method, ENGINE_CFG_GEN_LEN);
-            match BatchEngine::new(backend, cfg, engine_cap) {
-                Ok(engine) => {
-                    let mut run = EngineRun { method, engine, admitted: HashMap::new() };
-                    for req in batch {
-                        if run.engine.has_free_slot() {
-                            if admit_or_fail(&mut run, &req, &mut replies, &metrics) {
-                                metrics.record_batch_admit();
-                            }
-                        } else {
-                            // defensive: the batcher flush size is
-                            // clamped to engine capacity, but if the two
-                            // ever drift, requeue (original arrival
-                            // preserved) — the overflow joins as rows
-                            // finish and free slots
-                            let arrived = replies
-                                .get(&req.id)
-                                .map(|s| s.arrived)
-                                .unwrap_or_else(Instant::now);
-                            batcher.push_at(req, arrived);
+            match rx.try_recv() {
+                Ok(msg) => s.handle(msg),
+                Err(TryRecvError::Empty) => break,
+                Err(TryRecvError::Disconnected) => {
+                    s.shutdown = true;
+                    break;
+                }
+            }
+        }
+        // One scheduling pass: evictions, engine starts, slot top-ups.
+        s.park_blown_rows();
+        s.start_engines();
+        s.top_up();
+        s.refresh_gauges();
+        if s.shutdown && s.batcher.pending() == 0 && s.rows.is_empty() {
+            return s.finish(&rx);
+        }
+    }
+}
+
+impl<B, F> Sched<B, F>
+where
+    B: Backend + 'static,
+    F: Fn() -> Result<B> + Send + Sync + 'static,
+{
+    /// Next wake-up: the batcher's flush deadline or the nearest park
+    /// deadline, clamped to [1ms, 50ms] so a ready-but-blocked queue
+    /// re-polls instead of spinning at zero.
+    fn poll_timeout(&self, now: Instant) -> Duration {
+        let mut t = self.batcher.next_deadline(now).unwrap_or(Duration::from_millis(50));
+        for r in self.rows.values() {
+            if r.park_on_miss && !r.evict_sent && r.worker.is_some() {
+                t = t.min(r.deadline.saturating_duration_since(now));
+            }
+        }
+        t.clamp(Duration::from_millis(1), Duration::from_millis(50))
+    }
+
+    fn handle(&mut self, msg: Msg) {
+        match msg {
+            Msg::Submit(job) => self.enqueue(job),
+            Msg::Shutdown => self.shutdown = true,
+            Msg::Worker(ev) => self.on_worker_event(ev),
+        }
+    }
+
+    fn enqueue(&mut self, job: Job) {
+        let deadline = self.batcher.effective_deadline(&job.request, job.arrived);
+        let row = RowState {
+            reply: job.reply,
+            arrived: job.arrived,
+            deadline,
+            park_on_miss: job.request.park_on_miss,
+            kind: AdmitKind::BatchStart,
+            admitted_at: None,
+            worker: None,
+            evict_sent: false,
+        };
+        self.rows.insert(job.request.id, row);
+        self.batcher.push_at(job.request, job.arrived);
+    }
+
+    fn on_worker_event(&mut self, ev: WorkerEvent) {
+        match ev {
+            WorkerEvent::Ready { worker, capacity } => {
+                self.workers[worker].ready = true;
+                self.workers[worker].capacity = capacity;
+                // the batcher's flush size must not exceed the smallest
+                // live worker's slot count, or batches would overflow
+                let min_cap = self
+                    .workers
+                    .iter()
+                    .filter(|w| !w.dead && w.ready)
+                    .map(|w| w.capacity)
+                    .min()
+                    .unwrap_or(self.opts.max_batch);
+                self.batcher.max_batch = min_cap.min(self.opts.max_batch).max(1);
+            }
+            WorkerEvent::Died { worker, error } => {
+                self.workers[worker].dead = true;
+                self.workers[worker].ready = false;
+                self.workers[worker].assigned = None;
+                let lost: Vec<u64> = self
+                    .rows
+                    .iter()
+                    .filter(|(_, r)| r.worker == Some(worker))
+                    .map(|(&id, _)| id)
+                    .collect();
+                for id in lost {
+                    self.fail(id, &error);
+                }
+            }
+            WorkerEvent::Admitted { worker: _, id } => {
+                if let Some(r) = self.rows.get_mut(&id) {
+                    r.admitted_at = Some(Instant::now());
+                    let kind = r.kind;
+                    self.metrics.record_admission();
+                    match kind {
+                        AdmitKind::BatchStart => self.metrics.record_batch_admit(),
+                        AdmitKind::Join => self.metrics.record_join(),
+                    }
+                }
+            }
+            WorkerEvent::AdmitFailed { worker, id, error } => {
+                self.workers[worker].outstanding =
+                    self.workers[worker].outstanding.saturating_sub(1);
+                self.fail(id, &error);
+            }
+            WorkerEvent::Overflow { worker, req } => {
+                self.workers[worker].outstanding =
+                    self.workers[worker].outstanding.saturating_sub(1);
+                let arrived = match self.rows.get_mut(&req.id) {
+                    Some(r) => {
+                        r.worker = None;
+                        r.arrived
+                    }
+                    None => return,
+                };
+                self.batcher.push_at(req, arrived);
+            }
+            WorkerEvent::Round { worker, method, commits, done, busy_secs } => {
+                if busy_secs > 0.0 {
+                    self.metrics.record_busy(method.name(), busy_secs);
+                }
+                // self-correct after multiplexing: the worker reports
+                // which method it is actually decoding
+                if self.workers[worker].assigned.is_none() {
+                    self.workers[worker].assigned = Some(method);
+                }
+                for c in commits {
+                    if let Some(r) = self.rows.get(&c.tag) {
+                        if let ReplyTx::Stream(tx) = &r.reply {
+                            let _ = tx.send(StreamFrame::Commit(CommitEvent {
+                                id: c.tag,
+                                seq: c.seq,
+                                block: c.block,
+                                writes: c.writes,
+                            }));
                         }
                     }
-                    if run.engine.active() > 0 {
-                        runs.push(run);
-                    }
                 }
-                Err(e) => {
-                    let msg = format!("{e:#}");
-                    for req in &batch {
-                        fail(&mut replies, &metrics, req.id, &msg);
-                    }
+                for d in done {
+                    self.complete(worker, d);
+                }
+            }
+            WorkerEvent::EngineFailed { worker, ids, error } => {
+                for id in ids {
+                    self.workers[worker].outstanding =
+                        self.workers[worker].outstanding.saturating_sub(1);
+                    self.fail(id, &error);
+                }
+            }
+            WorkerEvent::Retired { worker, method, report, rounds, mixed_rounds } => {
+                self.metrics.record_engine(&report, rounds, mixed_rounds);
+                if self.workers[worker].assigned == Some(method) {
+                    self.workers[worker].assigned = None;
                 }
             }
         }
+    }
 
-        // Peak sampled before any same-pass retirement, so an engine
-        // that starts and drains within one pass still registers in
-        // max_engines_active.
-        refresh_gauges(&batcher, &runs, &metrics);
-
-        // For each engine: admit same-method waiters (earliest deadline
-        // first) into free slots, run one block round, answer whoever
-        // finished; retire engines that drained.
-        let mut i = 0;
-        while i < runs.len() {
-            let run = &mut runs[i];
-            while run.engine.has_free_slot() {
-                let Some(req) = batcher.pop_compatible(run.method) else { break };
-                if admit_or_fail(run, &req, &mut replies, &metrics) {
-                    metrics.record_join();
+    /// Send eviction requests for admitted `park_on_miss` rows whose
+    /// effective deadline has passed. Queued-not-yet-admitted rows are
+    /// never parked — they decode normally (and count a miss) later.
+    fn park_blown_rows(&mut self) {
+        let now = Instant::now();
+        let mut evict: Vec<(u64, usize)> = Vec::new();
+        for (&id, r) in self.rows.iter_mut() {
+            if r.park_on_miss && !r.evict_sent && now > r.deadline && r.admitted_at.is_some() {
+                if let Some(w) = r.worker {
+                    r.evict_sent = true;
+                    evict.push((id, w));
                 }
-            }
-            let mut retire = false;
-            match run.engine.step_block() {
-                Ok(done) => {
-                    let now = Instant::now();
-                    for f in done {
-                        let started = run.admitted.remove(&f.tag);
-                        if let Some(slot) = replies.remove(&f.tag) {
-                            let started = started.unwrap_or(slot.arrived);
-                            let queue_s = started.duration_since(slot.arrived).as_secs_f64();
-                            let latency_s = now.duration_since(started).as_secs_f64();
-                            let resp = Response {
-                                id: f.tag,
-                                text: backend.detokenize(f.seq.generated()),
-                                non_eos_tokens: f.seq.non_eos_tokens(),
-                                latency_s,
-                                queue_s,
-                                error: None,
-                            };
-                            metrics.record_response(true, resp.non_eos_tokens, latency_s, queue_s);
-                            if now > slot.deadline {
-                                metrics.record_deadline_miss();
-                            }
-                            let _ = slot.tx.send(resp);
-                        }
-                    }
-                    retire = run.engine.active() == 0;
-                }
-                Err(e) => {
-                    // engine poisoned: fail every row still inside
-                    let msg = format!("{e:#}");
-                    for (id, _) in run.admitted.drain() {
-                        fail(&mut replies, &metrics, id, &msg);
-                    }
-                    retire = true;
-                }
-            }
-            if retire {
-                let run = runs.swap_remove(i);
-                metrics.record_engine(
-                    run.engine.report(),
-                    run.engine.rounds(),
-                    run.engine.mixed_rounds(),
-                );
-            } else {
-                i += 1;
             }
         }
-
-        // Refresh the current-state gauges after retirements.
-        refresh_gauges(&batcher, &runs, &metrics);
-
-        if shutdown && runs.is_empty() && batcher.pending() == 0 {
-            return Ok(());
+        for (id, w) in evict {
+            let _ = self.workers[w].tx.send(WorkerCmd::Evict { id });
         }
+    }
+
+    /// Start an engine for every ready method group without one:
+    /// idle worker first, then a fresh spawn under the `max_engines`
+    /// cap, then multiplexing onto the least-loaded live worker.
+    fn start_engines(&mut self) {
+        loop {
+            let now = Instant::now();
+            let busy: Vec<Method> =
+                self.workers.iter().filter(|w| !w.dead).filter_map(|w| w.assigned).collect();
+            let Some((method, batch)) = self.batcher.pop_ready(now, &busy) else { return };
+            self.metrics.record_batch(batch.len());
+            let Some(wix) = self.pick_worker() else {
+                // no routable worker (all dead at the cap): requeue with
+                // original arrivals and retry on a later pass
+                for req in batch {
+                    let arrived = self.rows.get(&req.id).map(|r| r.arrived).unwrap_or(now);
+                    self.batcher.push_at(req, arrived);
+                }
+                return;
+            };
+            if self.workers[wix].assigned.is_none() {
+                self.workers[wix].assigned = Some(method);
+            }
+            for req in batch {
+                self.send_admit(wix, req, AdmitKind::BatchStart);
+            }
+        }
+    }
+
+    fn pick_worker(&mut self) -> Option<usize> {
+        if let Some(i) = self.workers.iter().position(|w| !w.dead && w.assigned.is_none()) {
+            return Some(i);
+        }
+        let live = self.workers.iter().filter(|w| !w.dead).count();
+        if live < self.opts.max_engines {
+            let i = self.workers.len();
+            let (tx, join) =
+                spawn_worker(i, self.factory.clone(), self.opts.max_batch, self.events.clone());
+            self.workers.push(WorkerSlot {
+                tx,
+                join: Some(join),
+                assigned: None,
+                outstanding: 0,
+                capacity: self.opts.max_batch,
+                ready: false,
+                dead: false,
+            });
+            return Some(i);
+        }
+        self.workers
+            .iter()
+            .enumerate()
+            .filter(|(_, w)| !w.dead)
+            .min_by_key(|(_, w)| w.outstanding)
+            .map(|(i, _)| i)
+    }
+
+    fn send_admit(&mut self, wix: usize, req: Request, kind: AdmitKind) {
+        let id = req.id;
+        let traced = match self.rows.get_mut(&id) {
+            Some(row) => {
+                row.kind = kind;
+                row.worker = Some(wix);
+                matches!(row.reply, ReplyTx::Stream(_))
+            }
+            None => return,
+        };
+        self.workers[wix].outstanding += 1;
+        let cmd = WorkerCmd::Admit(AdmitReq { request: req, traced });
+        if self.workers[wix].tx.send(cmd).is_err() {
+            self.workers[wix].dead = true;
+            self.workers[wix].assigned = None;
+            self.workers[wix].outstanding = self.workers[wix].outstanding.saturating_sub(1);
+            self.fail(id, "worker thread died");
+        }
+    }
+
+    /// Fill freed slots on running engines with same-method waiters,
+    /// earliest effective deadline first (mid-flight joins).
+    fn top_up(&mut self) {
+        for i in 0..self.workers.len() {
+            if self.workers[i].dead || !self.workers[i].ready {
+                continue;
+            }
+            let Some(method) = self.workers[i].assigned else { continue };
+            while self.workers[i].outstanding < self.workers[i].capacity {
+                let Some(req) = self.batcher.pop_compatible(method) else { break };
+                self.send_admit(i, req, AdmitKind::Join);
+            }
+        }
+    }
+
+    /// Answer a retired (finished or parked) row.
+    fn complete(&mut self, worker: usize, d: RowDone) {
+        self.workers[worker].outstanding = self.workers[worker].outstanding.saturating_sub(1);
+        let Some(row) = self.rows.remove(&d.id) else { return };
+        let now = Instant::now();
+        let started = row.admitted_at.unwrap_or(row.arrived);
+        let queue_s = started.duration_since(row.arrived).as_secs_f64();
+        let latency_s = now.duration_since(started).as_secs_f64();
+        let resp = Response {
+            id: d.id,
+            text: d.text,
+            non_eos_tokens: d.non_eos_tokens,
+            latency_s,
+            queue_s,
+            parked: d.parked,
+            error: None,
+        };
+        self.metrics.record_response(true, resp.non_eos_tokens, latency_s, queue_s);
+        if d.parked {
+            self.metrics.record_parked();
+        } else if now > row.deadline {
+            self.metrics.record_deadline_miss();
+        }
+        row.reply.send_done(resp);
+    }
+
+    /// Answer a request with an error and account for it.
+    fn fail(&mut self, id: u64, err: &str) {
+        if let Some(row) = self.rows.remove(&id) {
+            self.metrics.record_response(false, 0, 0.0, 0.0);
+            row.reply.send_done(Response::failure(id, err));
+        }
+    }
+
+    /// Refresh the scheduling gauges: per-method (queued, routed) depth
+    /// and the engines-active gauge + high-water mark.
+    fn refresh_gauges(&self) {
+        let engines = self.workers.iter().filter(|w| !w.dead && w.assigned.is_some()).count();
+        let depths: Vec<(&'static str, usize, usize)> = Method::all()
+            .into_iter()
+            .filter_map(|m| {
+                let queued = self.batcher.depth(m);
+                let active: usize = self
+                    .workers
+                    .iter()
+                    .filter(|w| !w.dead && w.assigned == Some(m))
+                    .map(|w| w.outstanding)
+                    .sum();
+                (queued + active > 0).then_some((m.name(), queued, active))
+            })
+            .collect();
+        self.metrics.set_groups(depths, engines);
+    }
+
+    /// Orderly shutdown: stop every worker, join them, then drain the
+    /// inbox so final `Retired` totals land in the metrics.
+    fn finish(mut self, rx: &Receiver<Msg>) -> Result<()> {
+        for w in &self.workers {
+            if !w.dead {
+                let _ = w.tx.send(WorkerCmd::Shutdown);
+            }
+        }
+        for w in &mut self.workers {
+            if let Some(j) = w.join.take() {
+                let _ = j.join();
+            }
+        }
+        while let Ok(msg) = rx.try_recv() {
+            match msg {
+                Msg::Worker(ev) => self.on_worker_event(ev),
+                Msg::Submit(job) => {
+                    let id = job.request.id;
+                    job.reply.send_done(Response::failure(id, "router shut down"));
+                }
+                Msg::Shutdown => {}
+            }
+        }
+        self.refresh_gauges();
+        Ok(())
     }
 }

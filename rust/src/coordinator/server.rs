@@ -1,8 +1,11 @@
-//! TCP server: line-delimited JSON requests in, responses out.
-//! One thread per connection (request parsing is trivial; the heavy
-//! lifting serializes on the router's engine thread anyway). The special
-//! line `{"cmd":"stats"}` returns the metrics snapshot; `{"cmd":"ping"}`
-//! health-checks.
+//! TCP server: line-delimited JSON in, frames out. One thread per
+//! connection (request parsing is trivial; decode happens on the
+//! router's worker threads). All byte shapes live in
+//! [`super::protocol`] — both generations are served on the same port:
+//! legacy v0 lines (`{"id":..,"prompt":[..]}`, `{"cmd":"stats"}`,
+//! `{"cmd":"ping"}`) answer in legacy shapes, and v1 envelopes
+//! (`{"v":1,"type":...}`) unlock `subscribe`, which streams per-row
+//! commit frames as blocks retire before the terminal `done` frame.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
@@ -12,8 +15,9 @@ use anyhow::{Context, Result};
 
 use crate::util::json::Json;
 
-use super::request::Request;
-use super::router::RouterHandle;
+use super::protocol::{error_frame, parse_client_line, pong_frame, response_frame, stats_frame};
+use super::protocol::ClientFrame;
+use super::router::{RouterHandle, StreamFrame};
 
 pub struct Server {
     listener: TcpListener,
@@ -63,6 +67,13 @@ impl Server {
     }
 }
 
+fn write_frame(writer: &mut TcpStream, frame: &Json) -> Result<()> {
+    writer.write_all(frame.to_string().as_bytes())?;
+    writer.write_all(b"\n")?;
+    writer.flush()?;
+    Ok(())
+}
+
 fn handle_conn(stream: TcpStream, router: &RouterHandle) -> Result<()> {
     let mut writer = stream.try_clone()?;
     let reader = BufReader::new(stream);
@@ -71,32 +82,52 @@ fn handle_conn(stream: TcpStream, router: &RouterHandle) -> Result<()> {
         if line.trim().is_empty() {
             continue;
         }
-        let reply = match Json::parse(&line) {
-            Ok(j) => {
-                if let Some(cmd) = j.get("cmd").and_then(|c| c.as_str()) {
-                    match cmd {
-                        "stats" => router.metrics.snapshot(),
-                        "ping" => Json::obj(vec![("pong", Json::Bool(true))]),
-                        other => Json::obj(vec![(
-                            "error",
-                            Json::Str(format!("unknown cmd '{other}'")),
-                        )]),
-                    }
-                } else {
-                    match Request::from_json(&j) {
-                        Ok(req) => match router.call(req) {
-                            Ok(resp) => resp.to_json(),
-                            Err(e) => Json::obj(vec![("error", Json::Str(format!("{e:#}")))]),
-                        },
-                        Err(e) => Json::obj(vec![("error", Json::Str(e))]),
+        match parse_client_line(&line) {
+            Ok(ClientFrame::Stats { v }) => {
+                write_frame(&mut writer, &stats_frame(v, router.metrics.snapshot()))?;
+            }
+            Ok(ClientFrame::Ping { v }) => {
+                write_frame(&mut writer, &pong_frame(v))?;
+            }
+            Ok(ClientFrame::Generate { v, request }) => {
+                let id = request.id;
+                match router.call(request) {
+                    Ok(resp) => write_frame(&mut writer, &response_frame(v, &resp))?,
+                    Err(e) => {
+                        // router gone: v0 keeps the bare no-id error
+                        // shape, v1 attributes the failure to the id
+                        let id = (v > 0).then_some(id);
+                        write_frame(&mut writer, &error_frame(v, id, &format!("{e:#}")))?;
                     }
                 }
             }
-            Err(e) => Json::obj(vec![("error", Json::Str(format!("{e}")))]),
-        };
-        writer.write_all(reply.to_string().as_bytes())?;
-        writer.write_all(b"\n")?;
-        writer.flush()?;
+            Ok(ClientFrame::Subscribe { request }) => {
+                // v1-only: relay the row's commit stream as it arrives,
+                // then the terminal done frame; the connection then goes
+                // back to line dispatch.
+                let id = request.id;
+                let rx = router.subscribe(request);
+                loop {
+                    match rx.recv() {
+                        Ok(StreamFrame::Commit(ev)) => write_frame(&mut writer, &ev.to_json())?,
+                        Ok(StreamFrame::Done(resp)) => {
+                            write_frame(&mut writer, &response_frame(1, &resp))?;
+                            break;
+                        }
+                        Err(_) => {
+                            write_frame(
+                                &mut writer,
+                                &error_frame(1, Some(id), "router shut down"),
+                            )?;
+                            break;
+                        }
+                    }
+                }
+            }
+            Err(we) => {
+                write_frame(&mut writer, &error_frame(we.v, we.id, &we.msg))?;
+            }
+        }
     }
     Ok(())
 }

@@ -1,0 +1,319 @@
+//! Per-engine worker threads: each worker builds and owns its own
+//! [`Backend`] instance (hence `Backend: Send`, not `Sync`) and runs
+//! [`BatchEngine::step_block`] loops for one method at a time. The
+//! router never touches a decode loop — it feeds workers admissions
+//! over a command channel and hears back through [`WorkerEvent`]s
+//! merged into its own message inbox (a clone of the router's sender,
+//! so per-worker event order is the channel's FIFO order).
+//!
+//! Mid-flight joins land between block rounds: the worker drains its
+//! command channel without blocking after every round. A same-method
+//! admission with no free slot bounces back as [`WorkerEvent::Overflow`]
+//! (the router re-queues it — capacity is only known to the router
+//! after [`WorkerEvent::Ready`], so over-admission must be recoverable,
+//! never fatal). A cross-method admission parks in a local pending
+//! queue — method multiplexing under the router's `max_engines` cap —
+//! and starts its own engine once the current one retires.
+
+use std::collections::VecDeque;
+use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::engine::{clamp_batch, Backend, BatchEngine, GenConfig, GenReport, Method, RowCommit};
+
+use super::request::Request;
+use super::router::Msg;
+
+/// Placeholder gen length for the per-method engine config. Rows carry
+/// their own `gen_len` at admission — this only has to satisfy
+/// `GenConfig::validate` (positive, block-aligned).
+pub const ENGINE_CFG_GEN_LEN: usize = 64;
+
+/// An admission handed to a worker: the request plus whether the row
+/// has a streaming subscriber (traced rows pay the per-round canvas
+/// diff that produces commit events).
+#[derive(Debug)]
+pub struct AdmitReq {
+    pub request: Request,
+    pub traced: bool,
+}
+
+/// Commands a worker accepts on its channel.
+pub enum WorkerCmd {
+    Admit(AdmitReq),
+    /// SLA eviction: drop the row at the next block boundary and report
+    /// it as a parked [`RowDone`]. A stale id (row already finished) is
+    /// a benign no-op.
+    Evict { id: u64 },
+    Shutdown,
+}
+
+/// A row that left a worker's engine, already detokenized on the worker
+/// thread (the router must stay decode-free).
+#[derive(Debug)]
+pub struct RowDone {
+    pub id: u64,
+    pub text: String,
+    pub non_eos_tokens: usize,
+    /// true when the row was SLA-evicted rather than finished
+    pub parked: bool,
+}
+
+/// Everything a worker reports back to the router.
+pub enum WorkerEvent {
+    /// Backend built; `capacity` is the engine slot count after bucket
+    /// clamping. Until this arrives the router schedules on its
+    /// configured `max_batch` guess and relies on `Overflow` bounces.
+    Ready { worker: usize, capacity: usize },
+    /// Backend construction failed — the worker thread is gone.
+    Died { worker: usize, error: String },
+    Admitted { worker: usize, id: u64 },
+    AdmitFailed { worker: usize, id: u64, error: String },
+    /// Same-method admission with no free slot: bounced back for
+    /// re-queueing (original arrival preserved by the router).
+    Overflow { worker: usize, req: Request },
+    /// One block round (or an eviction, with `busy_secs` 0): commit
+    /// events for traced rows, retired rows, and the decode wall-clock
+    /// spent — the per-engine busy time the overlap bench sums.
+    Round {
+        worker: usize,
+        method: Method,
+        commits: Vec<RowCommit>,
+        done: Vec<RowDone>,
+        busy_secs: f64,
+    },
+    /// The engine poisoned mid-round; `ids` are the rows lost with it.
+    EngineFailed { worker: usize, ids: Vec<u64>, error: String },
+    /// The engine drained and its totals folded into the report.
+    Retired {
+        worker: usize,
+        method: Method,
+        report: GenReport,
+        rounds: u64,
+        mixed_rounds: u64,
+    },
+}
+
+/// Spawn worker thread `worker`: build a backend from `factory`, report
+/// `Ready`/`Died`, then serve admissions until `Shutdown`. Events flow
+/// into `events` (the router's own inbox sender).
+pub fn spawn_worker<B, F>(
+    worker: usize,
+    factory: Arc<F>,
+    max_batch: usize,
+    events: Sender<Msg>,
+) -> (Sender<WorkerCmd>, JoinHandle<()>)
+where
+    B: Backend + 'static,
+    F: Fn() -> Result<B> + Send + Sync + 'static,
+{
+    let (tx, rx) = channel::<WorkerCmd>();
+    let join = std::thread::Builder::new()
+        .name(format!("sdllm-worker-{worker}"))
+        .spawn(move || worker_loop(worker, factory, max_batch, rx, events))
+        .expect("spawn worker thread");
+    (tx, join)
+}
+
+fn worker_loop<B, F>(
+    worker: usize,
+    factory: Arc<F>,
+    max_batch: usize,
+    rx: Receiver<WorkerCmd>,
+    events: Sender<Msg>,
+) where
+    B: Backend + 'static,
+    F: Fn() -> Result<B> + Send + Sync + 'static,
+{
+    let backend = match factory() {
+        Ok(b) => b,
+        Err(e) => {
+            let _ = events
+                .send(Msg::Worker(WorkerEvent::Died { worker, error: format!("{e:#}") }));
+            return;
+        }
+    };
+    let capacity = clamp_batch(&backend, max_batch);
+    if events.send(Msg::Worker(WorkerEvent::Ready { worker, capacity })).is_err() {
+        return;
+    }
+    // Cross-method admissions parked while another method's engine ran.
+    let mut pending: VecDeque<AdmitReq> = VecDeque::new();
+    loop {
+        let first = if let Some(a) = pending.pop_front() {
+            a
+        } else {
+            match rx.recv() {
+                Ok(WorkerCmd::Admit(a)) => a,
+                // the row already left an engine — stale eviction
+                Ok(WorkerCmd::Evict { .. }) => continue,
+                Ok(WorkerCmd::Shutdown) | Err(_) => return,
+            }
+        };
+        if run_engine(worker, &backend, capacity, first, &mut pending, &rx, &events) {
+            return;
+        }
+    }
+}
+
+/// Try to admit one request; emits `Admitted` or `AdmitFailed`. The
+/// misfit checks mirror the engine's admission contract so an oversized
+/// or misaligned request fails alone without poisoning batchmates.
+fn admit_one<B: Backend>(
+    worker: usize,
+    engine: &mut BatchEngine<'_, B>,
+    a: AdmitReq,
+    events: &Sender<Msg>,
+) {
+    let req = a.request;
+    let ev = if !engine.valid_gen_len(req.gen_len) {
+        let k = engine.config().block_size;
+        WorkerEvent::AdmitFailed {
+            worker,
+            id: req.id,
+            error: format!("gen_len {} is not a positive multiple of block size {k}", req.gen_len),
+        }
+    } else if !engine.fits(req.prompt.len(), req.gen_len) {
+        WorkerEvent::AdmitFailed {
+            worker,
+            id: req.id,
+            error: "prompt exceeds backend buckets".to_string(),
+        }
+    } else if engine.admit_traced(req.id, &req.prompt, req.gen_len, a.traced) {
+        WorkerEvent::Admitted { worker, id: req.id }
+    } else {
+        WorkerEvent::AdmitFailed { worker, id: req.id, error: "engine slots exhausted".to_string() }
+    };
+    let _ = events.send(Msg::Worker(ev));
+}
+
+/// Drive one engine to retirement, starting from admission `first`.
+/// Returns true when shutdown was requested (or the router vanished).
+fn run_engine<B: Backend>(
+    worker: usize,
+    backend: &B,
+    capacity: usize,
+    first: AdmitReq,
+    pending: &mut VecDeque<AdmitReq>,
+    rx: &Receiver<WorkerCmd>,
+    events: &Sender<Msg>,
+) -> bool {
+    let method = first.request.method;
+    let cfg = GenConfig::preset(method, ENGINE_CFG_GEN_LEN);
+    let mut engine = match BatchEngine::new(backend, cfg, capacity) {
+        Ok(e) => e,
+        Err(e) => {
+            let _ = events.send(Msg::Worker(WorkerEvent::AdmitFailed {
+                worker,
+                id: first.request.id,
+                error: format!("{e:#}"),
+            }));
+            return false;
+        }
+    };
+    let mut shutdown = false;
+    admit_one(worker, &mut engine, first, events);
+    loop {
+        // Same-method admissions parked from an earlier run claim free
+        // slots first (they are older than anything in the channel).
+        while engine.has_free_slot() {
+            let Some(i) = pending.iter().position(|a| a.request.method == method) else { break };
+            let a = pending.remove(i).expect("position is in bounds");
+            admit_one(worker, &mut engine, a, events);
+        }
+        // Drain the command channel without blocking: joins and
+        // evictions land between block rounds, decode keeps moving.
+        loop {
+            match rx.try_recv() {
+                Ok(WorkerCmd::Admit(a)) => {
+                    if a.request.method != method {
+                        pending.push_back(a);
+                    } else if engine.has_free_slot() {
+                        admit_one(worker, &mut engine, a, events);
+                    } else {
+                        let _ = events.send(Msg::Worker(WorkerEvent::Overflow {
+                            worker,
+                            req: a.request,
+                        }));
+                    }
+                }
+                Ok(WorkerCmd::Evict { id }) => {
+                    if let Some(seq) = engine.evict(id) {
+                        let done = RowDone {
+                            id,
+                            text: backend.detokenize(seq.generated()),
+                            non_eos_tokens: seq.non_eos_tokens(),
+                            parked: true,
+                        };
+                        let _ = events.send(Msg::Worker(WorkerEvent::Round {
+                            worker,
+                            method,
+                            commits: engine.take_commits(),
+                            done: vec![done],
+                            busy_secs: 0.0,
+                        }));
+                    }
+                }
+                Ok(WorkerCmd::Shutdown) => shutdown = true,
+                Err(TryRecvError::Empty) => break,
+                Err(TryRecvError::Disconnected) => {
+                    shutdown = true;
+                    break;
+                }
+            }
+        }
+        if engine.active() == 0 {
+            let _ = events.send(Msg::Worker(WorkerEvent::Retired {
+                worker,
+                method,
+                report: engine.report().clone(),
+                rounds: engine.rounds(),
+                mixed_rounds: engine.mixed_rounds(),
+            }));
+            return shutdown;
+        }
+        let t0 = Instant::now();
+        match engine.step_block() {
+            Ok(finished) => {
+                let busy_secs = t0.elapsed().as_secs_f64();
+                let commits = engine.take_commits();
+                let done: Vec<RowDone> = finished
+                    .into_iter()
+                    .map(|f| RowDone {
+                        id: f.tag,
+                        text: backend.detokenize(f.seq.generated()),
+                        non_eos_tokens: f.seq.non_eos_tokens(),
+                        parked: false,
+                    })
+                    .collect();
+                let ev = WorkerEvent::Round { worker, method, commits, done, busy_secs };
+                if events.send(Msg::Worker(ev)).is_err() {
+                    return true;
+                }
+            }
+            Err(e) => {
+                // engine poisoned: report every row lost with it, then
+                // retire so the totals (and the router's assignment)
+                // still settle
+                let ids = engine.live_tags();
+                let _ = events.send(Msg::Worker(WorkerEvent::EngineFailed {
+                    worker,
+                    ids,
+                    error: format!("{e:#}"),
+                }));
+                let _ = events.send(Msg::Worker(WorkerEvent::Retired {
+                    worker,
+                    method,
+                    report: engine.report().clone(),
+                    rounds: engine.rounds(),
+                    mixed_rounds: engine.mixed_rounds(),
+                }));
+                return shutdown;
+            }
+        }
+    }
+}

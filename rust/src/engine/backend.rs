@@ -10,12 +10,17 @@
 //! The trait is deliberately expressed over backend-neutral types
 //! (`engine::types`): nothing here references PJRT, so the default
 //! build carries no xla dependency.
+//!
+//! `Send` is a supertrait: the coordinator gives every `BatchEngine`
+//! its own worker thread, and a backend must be movable onto (and
+//! owned by) that thread. Backends need not be `Sync` — each worker
+//! builds and owns its own instance.
 
 use anyhow::Result;
 
 use super::types::{DecodeOut, SpecialTokens};
 
-pub trait Backend {
+pub trait Backend: Send {
     /// Backend-owned KV cache produced by `prefill`, consumed by
     /// `decode` (device-resident for PJRT, plain struct for reference).
     type Kv;

@@ -35,6 +35,37 @@ pub struct Finished {
     pub seq: SeqState,
 }
 
+/// Out-of-order commit record for one traced row over one block round:
+/// every generation-region position whose canvas token changed since
+/// the previous event (confidence-ordered commits, early-exit EOS
+/// fills, and — when remasking is on — retractions back to mask).
+/// Applying events in `seq` order rebuilds the canvas exactly, which is
+/// what the streaming wire protocol ships to subscribed clients.
+#[derive(Debug, Clone)]
+pub struct RowCommit {
+    /// the id the row was admitted under
+    pub tag: u64,
+    /// per-row event number, gapless from 0 — subscribers assert no
+    /// event was dropped or reordered
+    pub seq: u64,
+    /// the row's block cursor when the event was captured
+    pub block: usize,
+    /// (generation-region offset, new token, commit confidence);
+    /// retractions carry the mask token with confidence 0
+    pub writes: Vec<(usize, i32, f32)>,
+}
+
+/// Per-slot bookkeeping parallel to `rows`.
+struct RowMeta {
+    tag: u64,
+    /// next commit-event number for this row
+    events: u64,
+    /// canvas snapshot (generation region) at the last emitted event;
+    /// empty for untraced rows — tracing is per admission, so only
+    /// subscribed rows pay the per-round diff
+    shadow: Vec<i32>,
+}
+
 /// Largest concurrent batch the backend's bucket grid can carry, capped
 /// at `want` — shared by `BatchEngine::new` and the router so the
 /// batcher's flush size and the engine's slot count can't drift apart.
@@ -51,7 +82,8 @@ pub struct BatchEngine<'a, B: Backend> {
     cfg: GenConfig,
     capacity: usize,
     rows: Vec<SeqState>,
-    tags: Vec<u64>,
+    meta: Vec<RowMeta>,
+    commits: Vec<RowCommit>,
     ws: StepWorkspace,
     report: GenReport,
     rounds: u64,
@@ -74,7 +106,8 @@ impl<'a, B: Backend> BatchEngine<'a, B> {
             cfg,
             capacity: cap,
             rows: Vec::new(),
-            tags: Vec::new(),
+            meta: Vec::new(),
+            commits: Vec::new(),
             ws: StepWorkspace::new(),
             report: GenReport::default(),
             rounds: 0,
@@ -165,6 +198,14 @@ impl<'a, B: Backend> BatchEngine<'a, B> {
     /// the incumbent rows are, and retires when its *own* block budget
     /// runs out — rows of different lengths share the batch freely.
     pub fn admit(&mut self, tag: u64, prompt: &[i32], gen_len: usize) -> bool {
+        self.admit_traced(tag, prompt, gen_len, false)
+    }
+
+    /// [`BatchEngine::admit`] with per-row commit tracing: when `traced`
+    /// the engine diffs this row's canvas after every block round and
+    /// buffers a [`RowCommit`] event per change (drained with
+    /// [`BatchEngine::take_commits`]). Untraced rows pay nothing.
+    pub fn admit_traced(&mut self, tag: u64, prompt: &[i32], gen_len: usize, traced: bool) -> bool {
         if self.rows.len() >= self.capacity
             || !self.valid_gen_len(gen_len)
             || !self.fits(prompt.len(), gen_len)
@@ -175,8 +216,67 @@ impl<'a, B: Backend> BatchEngine<'a, B> {
         let mut s = SeqState::new(prompt, gen_len, &special);
         s.init_block_counts(self.cfg.block_size);
         self.rows.push(s);
-        self.tags.push(tag);
+        self.meta.push(RowMeta {
+            tag,
+            events: 0,
+            shadow: if traced { vec![special.mask; gen_len] } else { Vec::new() },
+        });
         true
+    }
+
+    /// Drain the commit events buffered since the last call (traced rows
+    /// only), in emission order.
+    pub fn take_commits(&mut self) -> Vec<RowCommit> {
+        std::mem::take(&mut self.commits)
+    }
+
+    /// Tags of the rows still decoding, slot order.
+    pub fn live_tags(&self) -> Vec<u64> {
+        self.meta.iter().map(|m| m.tag).collect()
+    }
+
+    /// Forcibly remove a live row (SLA eviction), freeing its slot for
+    /// the next admission. Returns the row's partial decode state, or
+    /// `None` if the tag is not live (already retired — the race is
+    /// benign, callers treat it as a no-op).
+    pub fn evict(&mut self, tag: u64) -> Option<SeqState> {
+        let i = self.meta.iter().position(|m| m.tag == tag)?;
+        self.meta.swap_remove(i);
+        Some(self.rows.swap_remove(i))
+    }
+
+    /// Diff every traced row's canvas against its shadow and buffer one
+    /// commit event per changed row. Confidence comes from the row's
+    /// commit bookkeeping; a retraction (token back to mask) reports 0.
+    fn capture_commits(&mut self) {
+        let mask = self.rt.special().mask;
+        for (row, meta) in self.rows.iter().zip(self.meta.iter_mut()) {
+            if meta.shadow.is_empty() {
+                continue;
+            }
+            let gen = row.generated();
+            let mut writes = Vec::new();
+            for (off, (&now, shadow)) in gen.iter().zip(meta.shadow.iter_mut()).enumerate() {
+                if now != *shadow {
+                    let conf = if now == mask {
+                        0.0
+                    } else {
+                        row.commit_conf.get(off).copied().unwrap_or(0.0)
+                    };
+                    writes.push((off, now, conf));
+                    *shadow = now;
+                }
+            }
+            if !writes.is_empty() {
+                self.commits.push(RowCommit {
+                    tag: meta.tag,
+                    seq: meta.events,
+                    block: row.block,
+                    writes,
+                });
+                meta.events += 1;
+            }
+        }
     }
 
     /// Run one block round for every live row and harvest the rows that
@@ -230,12 +330,13 @@ impl<'a, B: Backend> BatchEngine<'a, B> {
             }
         }
         self.rounds += 1;
+        self.capture_commits();
 
         let mut i = 0;
         while i < self.rows.len() {
             if self.rows[i].finished {
                 let seq = self.rows.swap_remove(i);
-                let tag = self.tags.swap_remove(i);
+                let tag = self.meta.swap_remove(i).tag;
                 self.report.non_eos_tokens += seq.non_eos_tokens() as u64;
                 done.push(Finished { tag, seq });
             } else {
@@ -420,6 +521,72 @@ mod tests {
                 "row {i} (gen {len}) diverged from its solo decode"
             );
         }
+    }
+
+    #[test]
+    fn traced_commits_reassemble_canvas_with_gapless_seqs() {
+        // replaying a traced row's commit events over a fresh all-mask
+        // canvas must rebuild exactly the finished canvas, and the
+        // per-row event numbers must count up from 0 with no gaps
+        let be = ReferenceBackend::toy(REFERENCE_SEED);
+        let mask = be.special().mask;
+        let cfg = GenConfig::preset(Method::Streaming, 64);
+        let mut engine = BatchEngine::new(&be, cfg, 4).unwrap();
+        assert!(engine.admit_traced(7, &prompt(0), 64, true));
+        assert!(engine.admit(8, &prompt(1), 64), "untraced row shares the batch");
+
+        let mut commits = Vec::new();
+        let mut finals = HashMap::new();
+        let mut guard = 0;
+        while engine.active() > 0 {
+            guard += 1;
+            assert!(guard < 1000, "engine failed to drain");
+            for f in engine.step_block().unwrap() {
+                finals.insert(f.tag, f.seq.generated().to_vec());
+            }
+            commits.extend(engine.take_commits());
+        }
+        assert!(commits.iter().all(|c| c.tag == 7), "untraced row must emit no events");
+        for (i, c) in commits.iter().enumerate() {
+            assert_eq!(c.seq, i as u64, "event numbers must be gapless from 0");
+            assert!(!c.writes.is_empty());
+        }
+
+        let mut canvas = vec![mask; 64];
+        for c in &commits {
+            for &(off, tok, _conf) in &c.writes {
+                canvas[off] = tok;
+            }
+        }
+        assert_eq!(canvas, finals[&7], "replayed commits must rebuild the canvas");
+        assert!(canvas.iter().all(|&t| t != mask), "finished canvas has no masks left");
+    }
+
+    #[test]
+    fn evict_frees_slot_and_returns_partial_state() {
+        let be = ReferenceBackend::toy(REFERENCE_SEED);
+        let cfg = GenConfig::preset(Method::PrefixCache, 64);
+        let mut engine = BatchEngine::new(&be, cfg, 2).unwrap();
+        assert!(engine.admit(1, &prompt(0), 64));
+        assert!(engine.admit(2, &prompt(1), 64));
+        engine.step_block().unwrap();
+        assert_eq!(engine.live_tags().len(), 2);
+
+        let seq = engine.evict(1).expect("live row must evict");
+        assert!(!seq.finished, "evicted mid-decode");
+        assert!(seq.steps > 0, "evicted row had made progress");
+        assert_eq!(engine.active(), 1);
+        assert_eq!(engine.live_tags(), vec![2]);
+        assert!(engine.evict(1).is_none(), "double-evict is a no-op");
+        assert!(engine.admit(3, &prompt(2), 64), "freed slot is reusable");
+
+        // the survivor must still converge to its solo text
+        let mut texts = drain(&mut engine);
+        let be2 = ReferenceBackend::toy(REFERENCE_SEED);
+        let mut generator = Generator::new(&be2, GenConfig::preset(Method::PrefixCache, 64)).unwrap();
+        let mut seqs = vec![SeqState::new(&prompt(1), 64, &be2.special)];
+        generator.generate(&mut seqs, None).unwrap();
+        assert_eq!(texts.remove(&2).unwrap(), be2.detokenize(seqs[0].generated()));
     }
 
     #[test]

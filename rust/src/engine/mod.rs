@@ -21,7 +21,7 @@ pub mod workspace;
 
 pub use any::{AnyBackend, AnyKv};
 pub use backend::Backend;
-pub use batch::{clamp_batch, BatchEngine, Finished};
+pub use batch::{clamp_batch, BatchEngine, Finished, RowCommit};
 pub use config::{table12_config, GenConfig, Method};
 pub use generator::{GenReport, Generator, StepEvent, WorkspaceStats};
 pub use policy::{select, select_into, Candidate, Selection};

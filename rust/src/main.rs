@@ -1,17 +1,21 @@
 //! `streaming-dllm` CLI: serve the TCP endpoint, run a one-shot
 //! generation, or evaluate a suite — the leader entrypoint.
 //!
+//! All serving knobs resolve through [`ServeConfig`] with one
+//! precedence rule — CLI flag > `SDLLM_*` environment variable >
+//! default — so `--ref-mode`/`SDLLM_REF_MODE`, `--max-engines`, and
+//! friends mean the same thing here, in the serve_batch example and in
+//! the stress harness.
+//!
 //! Backend selection (`--backend reference|pjrt|auto`): the default
 //! `auto` uses the PJRT runtime when this build carries it *and* AOT
 //! artifacts exist, and the deterministic pure-Rust reference model
 //! otherwise — so every subcommand works on a bare checkout.
 
-use std::time::Duration;
-
 use anyhow::{bail, Result};
 
-use streaming_dllm::coordinator::{RouterHandle, Server};
-use streaming_dllm::engine::{AnyBackend, Backend, GenConfig, Generator, Method, RefMode, SeqState};
+use streaming_dllm::coordinator::{RouterHandle, ServeConfig, Server, PROTOCOL_VERSION};
+use streaming_dllm::engine::{AnyBackend, Backend, GenConfig, Generator, Method, SeqState};
 use streaming_dllm::eval::{run_suite, suite_for};
 use streaming_dllm::util::cli::Args;
 
@@ -19,15 +23,17 @@ const ABOUT: &str = "Streaming-dLLM serving framework (suffix pruning + dynamic 
 
 fn main() -> Result<()> {
     let args = Args::parse_env()
-        .describe("backend", "model backend: reference|pjrt|auto", Some("auto"))
+        .describe("backend", "model backend: reference|pjrt|auto (env: SDLLM_BACKEND)", Some("auto"))
         .describe("ref-mode", "reference mode: toy|causal (env: SDLLM_REF_MODE)", Some("toy"))
-        .describe("artifacts", "artifacts directory", Some("artifacts"))
-        .describe("model", "backbone to serve", Some("llada15-mini"))
+        .describe("artifacts", "artifacts directory (env: SDLLM_ARTIFACTS)", Some("artifacts"))
+        .describe("model", "backbone to serve (env: SDLLM_MODEL)", Some("llada15-mini"))
         .describe("method", "vanilla|dkv-cache|prefix-cache|fast-dllm|streaming", Some("streaming"))
         .describe("gen-len", "generation length L", Some("64"))
-        .describe("addr", "serve: listen address", Some("127.0.0.1:7333"))
-        .describe("max-batch", "serve: dynamic batcher max batch", Some("4"))
-        .describe("max-wait-ms", "serve: batcher flush deadline", Some("20"))
+        .describe("addr", "serve: listen address (env: SDLLM_ADDR)", Some("127.0.0.1:7333"))
+        .describe("max-batch", "serve: dynamic batcher max batch (env: SDLLM_MAX_BATCH)", Some("4"))
+        .describe("max-wait-ms", "serve: batcher flush deadline (env: SDLLM_MAX_WAIT_MS)", Some("20"))
+        .describe("max-engines", "serve: worker-thread cap (env: SDLLM_MAX_ENGINES)", Some("4"))
+        .describe("deadline-ms", "serve: default SLA budget, 0 = none (env: SDLLM_DEADLINE_MS)", Some("0"))
         .describe("suite", "eval: suite jsonl name", Some("gsm-mini"))
         .describe("n", "eval: item count", Some("50"))
         .describe("remask", "flag: enable ReMDM-style remasking (extension)", None)
@@ -48,33 +54,13 @@ fn main() -> Result<()> {
     }
 }
 
-fn artifacts(args: &Args) -> std::path::PathBuf {
-    args.get("artifacts")
-        .map(std::path::PathBuf::from)
-        .unwrap_or_else(streaming_dllm::artifacts_root)
-}
-
-/// The reference mode for this invocation: `--ref-mode` wins, then
-/// `SDLLM_REF_MODE`, then toy — normalized exactly like
-/// `AnyBackend::env_ref_mode` (trimmed, lowercased, empty = toy) so the
-/// CLI and the benches can't drift on the same value.
-fn reference_mode(args: &Args) -> Result<RefMode> {
-    let raw = args.get_env_or("ref-mode", "SDLLM_REF_MODE", "toy");
-    let s = raw.trim().to_lowercase();
-    if s.is_empty() {
-        return Ok(RefMode::Toy);
-    }
-    RefMode::parse(&s).ok_or_else(|| anyhow::anyhow!("unknown --ref-mode '{raw}' (toy|causal)"))
-}
-
 /// Build the in-process backend for one-shot commands.
-fn backend_for(args: &Args) -> Result<AnyBackend> {
-    let root = artifacts(args);
-    let model = args.get_or("model", "llada15-mini");
-    match args.get_or("backend", "auto") {
-        "reference" => Ok(AnyBackend::reference_with(reference_mode(args)?)),
-        "pjrt" => pjrt_backend(&root, model),
-        "auto" => AnyBackend::auto_with(&root, model, reference_mode(args)?),
+fn backend_for(cfg: &ServeConfig) -> Result<AnyBackend> {
+    let root = cfg.artifacts_root();
+    match cfg.backend.as_str() {
+        "reference" => Ok(AnyBackend::reference_with(cfg.ref_mode)),
+        "pjrt" => pjrt_backend(&root, &cfg.model),
+        "auto" => AnyBackend::auto_with(&root, &cfg.model, cfg.ref_mode),
         other => bail!("unknown backend '{other}' (reference|pjrt|auto)"),
     }
 }
@@ -92,22 +78,19 @@ fn pjrt_backend(_root: &std::path::Path, _model: &str) -> Result<AnyBackend> {
     )
 }
 
-/// Build the serving router (the engine thread owns its backend).
-fn router_for(args: &Args) -> Result<RouterHandle> {
-    let root = artifacts(args);
-    let model = args.get_or("model", "llada15-mini").to_string();
-    let max_batch = args.get_usize("max-batch", 4);
-    let max_wait = Duration::from_millis(args.get_usize("max-wait-ms", 20) as u64);
-    match args.get_or("backend", "auto") {
+/// Build the serving router (every worker thread owns its own backend).
+fn router_for(cfg: &ServeConfig) -> Result<RouterHandle> {
+    let root = cfg.artifacts_root();
+    match cfg.backend.as_str() {
         "reference" => {
-            Ok(RouterHandle::spawn_reference_mode(reference_mode(args)?, max_batch, max_wait))
+            Ok(RouterHandle::spawn_reference_opts(cfg.ref_mode, cfg.router_options()))
         }
-        "pjrt" => pjrt_router(root, model, max_batch, max_wait),
+        "pjrt" => pjrt_router(cfg),
         "auto" => {
             if AnyBackend::pjrt_available(&root) {
-                pjrt_router(root, model, max_batch, max_wait)
+                pjrt_router(cfg)
             } else {
-                Ok(RouterHandle::spawn_reference_mode(reference_mode(args)?, max_batch, max_wait))
+                Ok(RouterHandle::spawn_reference_opts(cfg.ref_mode, cfg.router_options()))
             }
         }
         other => bail!("unknown backend '{other}' (reference|pjrt|auto)"),
@@ -115,22 +98,16 @@ fn router_for(args: &Args) -> Result<RouterHandle> {
 }
 
 #[cfg(feature = "pjrt")]
-fn pjrt_router(
-    root: std::path::PathBuf,
-    model: String,
-    max_batch: usize,
-    max_wait: Duration,
-) -> Result<RouterHandle> {
-    Ok(RouterHandle::spawn(root, model, max_batch, max_wait))
+fn pjrt_router(cfg: &ServeConfig) -> Result<RouterHandle> {
+    Ok(RouterHandle::spawn_pjrt_opts(
+        cfg.artifacts_root(),
+        cfg.model.clone(),
+        cfg.router_options(),
+    ))
 }
 
 #[cfg(not(feature = "pjrt"))]
-fn pjrt_router(
-    _root: std::path::PathBuf,
-    _model: String,
-    _max_batch: usize,
-    _max_wait: Duration,
-) -> Result<RouterHandle> {
+fn pjrt_router(_cfg: &ServeConfig) -> Result<RouterHandle> {
     bail!(
         "this binary was built without PJRT support; rebuild with `--features pjrt` \
          or use --backend reference"
@@ -138,33 +115,37 @@ fn pjrt_router(
 }
 
 fn serve(args: &Args) -> Result<()> {
-    let model = args.get_or("model", "llada15-mini").to_string();
-    let addr = args.get_or("addr", "127.0.0.1:7333");
-    let router = router_for(args)?;
-    let server = Server::bind(addr, router)?;
-    println!("serving {model} on {addr} (line-delimited JSON; {{\"cmd\":\"stats\"}} for metrics)");
+    let cfg = ServeConfig::from_env_and_args(args)?;
+    let router = router_for(&cfg)?;
+    let server = Server::bind(&cfg.addr, router)?;
+    println!(
+        "serving {} on {} (wire protocol v{PROTOCOL_VERSION}; line-delimited JSON; \
+         {{\"cmd\":\"stats\"}} for metrics)",
+        cfg.model, cfg.addr
+    );
     server.serve_forever()
 }
 
 fn eval(args: &Args) -> Result<()> {
-    let root = artifacts(args);
-    let backend = backend_for(args)?;
+    let cfg = ServeConfig::from_env_and_args(args)?;
+    let root = cfg.artifacts_root();
+    let backend = backend_for(&cfg)?;
     let method = Method::parse(args.get_or("method", "streaming"))
         .ok_or_else(|| anyhow::anyhow!("unknown method"))?;
-    let mut cfg = GenConfig::preset(method, args.get_usize("gen-len", 64));
+    let mut gen_cfg = GenConfig::preset(method, args.get_usize("gen-len", 64));
     if args.has_flag("remask") {
-        cfg.remask = true;
-        cfg.remask_tau = args.get_f32("remask-tau", 0.5);
+        gen_cfg.remask = true;
+        gen_cfg.remask_tau = args.get_f32("remask-tau", 0.5);
     }
     let suite = args.get_or("suite", "gsm-mini");
     let items = suite_for(&backend, &root, suite)?;
     let n = args.get_usize("n", 50).min(items.len());
-    let res = run_suite(&backend, &cfg, &items[..n], None)?;
+    let res = run_suite(&backend, &gen_cfg, &items[..n], None)?;
     println!(
         "[{}] {suite} method={} L={}: acc {:.1}% (cot {:.1}%) | {:.1} tok/s | {:.2}s | NFE {:.1}",
         backend.describe(),
         method.name(),
-        cfg.gen_len,
+        gen_cfg.gen_len,
         res.accuracy(),
         res.cot_similarity(),
         res.tokens_per_sec(),
@@ -175,11 +156,12 @@ fn eval(args: &Args) -> Result<()> {
 }
 
 fn generate(args: &Args) -> Result<()> {
-    let root = artifacts(args);
-    let backend = backend_for(args)?;
+    let cfg = ServeConfig::from_env_and_args(args)?;
+    let root = cfg.artifacts_root();
+    let backend = backend_for(&cfg)?;
     let method = Method::parse(args.get_or("method", "streaming"))
         .ok_or_else(|| anyhow::anyhow!("unknown method"))?;
-    let cfg = GenConfig::preset(method, args.get_usize("gen-len", 64));
+    let gen_cfg = GenConfig::preset(method, args.get_usize("gen-len", 64));
 
     // prompt: token ids as a comma list, or a sample from a suite
     let prompt: Vec<i32> = match args.get("prompt-ids") {
@@ -194,8 +176,8 @@ fn generate(args: &Args) -> Result<()> {
             items[0].prompt.clone()
         }
     };
-    let mut generator = Generator::new(&backend, cfg.clone())?;
-    let mut seqs = vec![SeqState::new(&prompt, cfg.gen_len, &backend.special())];
+    let mut generator = Generator::new(&backend, gen_cfg.clone())?;
+    let mut seqs = vec![SeqState::new(&prompt, gen_cfg.gen_len, &backend.special())];
     let report = generator.generate(&mut seqs, None)?;
     println!("generated: {:?}", backend.detokenize(seqs[0].generated()));
     println!(
@@ -209,7 +191,8 @@ fn generate(args: &Args) -> Result<()> {
 }
 
 fn list_models(args: &Args) -> Result<()> {
-    let root = artifacts(args);
+    let cfg = ServeConfig::from_env_and_args(args)?;
+    let root = cfg.artifacts_root();
     if root.join("index.json").exists() {
         let index = streaming_dllm::runtime::ArtifactsIndex::load(&root)?;
         for m in &index.models {

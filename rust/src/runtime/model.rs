@@ -1,13 +1,17 @@
 //! Per-model runtime: device-resident parameters + lazily compiled
 //! executable registry + typed prefill/decode/logits entrypoints.
 //!
-//! Threading model: the xla crate's handles wrap raw PJRT pointers, so a
-//! `ModelRuntime` lives on one engine thread; the coordinator funnels
-//! requests to it over channels (see `coordinator::router`).
+//! Threading model: a `ModelRuntime` is built on — and then owned by —
+//! exactly one coordinator worker thread (`engine::Backend: Send`, not
+//! `Sync`); the router funnels requests to the workers over channels
+//! (see `coordinator::router` / `coordinator::worker`). The executable
+//! registry is `Arc`-backed so the owning thread can move across spawn
+//! boundaries; interior mutability stays `RefCell` because no two
+//! threads ever share one instance.
 
 use std::cell::RefCell;
 use std::collections::HashMap;
-use std::rc::Rc;
+use std::sync::Arc;
 use std::time::Instant;
 
 use anyhow::{anyhow, bail, Context, Result};
@@ -66,7 +70,7 @@ pub struct ModelRuntime {
     rt: Runtime,
     pub manifest: Manifest,
     params: Vec<PjRtBuffer>,
-    exes: RefCell<HashMap<ExeKey, Rc<PjRtLoadedExecutable>>>,
+    exes: RefCell<HashMap<ExeKey, Arc<PjRtLoadedExecutable>>>,
     stats: RefCell<RuntimeStats>,
 }
 
@@ -124,7 +128,7 @@ impl ModelRuntime {
         Ok(())
     }
 
-    fn executable(&self, key: ExeKey) -> Result<Rc<PjRtLoadedExecutable>> {
+    fn executable(&self, key: ExeKey) -> Result<Arc<PjRtLoadedExecutable>> {
         if let Some(e) = self.exes.borrow().get(&key) {
             return Ok(e.clone());
         }
@@ -134,7 +138,7 @@ impl ModelRuntime {
             entry.file.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
         )?;
         let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = Rc::new(self.rt.client().compile(&comp)?);
+        let exe = Arc::new(self.rt.client().compile(&comp)?);
         let mut st = self.stats.borrow_mut();
         st.compile_count += 1;
         st.compile_secs += t0.elapsed().as_secs_f64();

@@ -163,6 +163,7 @@ fn causal_reference_server_serves_the_causal_oracle() {
                 method: Method::PrefixCache,
                 gen_len: 64,
                 deadline_ms: None,
+                park_on_miss: false,
             })
             .unwrap();
         assert!(resp.error.is_none(), "{:?}", resp.error);
@@ -208,6 +209,7 @@ fn reference_server_end_to_end_roundtrip() {
                 method: Method::Streaming,
                 gen_len: 64,
                 deadline_ms: None,
+                park_on_miss: false,
             })
             .unwrap();
         assert!(resp.error.is_none(), "{:?}", resp.error);
@@ -325,6 +327,7 @@ fn router_serves_mid_flight_join() {
         method: Method::Streaming,
         gen_len: 256,
         deadline_ms: None,
+        park_on_miss: false,
     });
     // wait (bounded) until A's engine has actually started
     let t0 = Instant::now();
@@ -342,6 +345,7 @@ fn router_serves_mid_flight_join() {
         method: Method::Streaming,
         gen_len: 256,
         deadline_ms: None,
+        park_on_miss: false,
     });
 
     let resp_b = rx_b.recv_timeout(Duration::from_secs(20)).expect("B never completed");
@@ -357,10 +361,12 @@ fn router_serves_mid_flight_join() {
     assert!(resp_a.error.is_none(), "{:?}", resp_a.error);
     assert!(resp_a.non_eos_tokens > 0);
 
+    // shutdown drains the worker's final events (Retired carries the
+    // engine-round totals) before the counters are inspected
+    router.shutdown().unwrap();
     let snap = metrics.snapshot();
     assert_eq!(snap.get("joins").unwrap().as_usize(), Some(1), "B must join mid-flight");
     assert!(snap.get("engine_rounds").unwrap().as_usize().unwrap() >= 32);
-    router.shutdown().unwrap();
 }
 
 #[test]
@@ -392,6 +398,7 @@ fn short_row_retirement_frees_slot_for_next_join() {
         method: Method::Streaming,
         gen_len: 256,
         deadline_ms: None,
+        park_on_miss: false,
     });
     let t0 = Instant::now();
     loop {
@@ -409,6 +416,7 @@ fn short_row_retirement_frees_slot_for_next_join() {
         method: Method::Streaming,
         gen_len: 16,
         deadline_ms: Some(5_000),
+        park_on_miss: false,
     });
     let resp_b = rx_b.recv_timeout(Duration::from_secs(20)).expect("B never completed");
     assert!(resp_b.error.is_none(), "{:?}", resp_b.error);
@@ -421,6 +429,7 @@ fn short_row_retirement_frees_slot_for_next_join() {
         method: Method::Streaming,
         gen_len: 16,
         deadline_ms: None,
+        park_on_miss: false,
     });
     let resp_c = rx_c.recv_timeout(Duration::from_secs(20)).expect("C never completed");
     assert!(resp_c.error.is_none(), "{:?}", resp_c.error);
@@ -666,6 +675,7 @@ mod pjrt_tier {
                     method: Method::Streaming,
                     gen_len: 64,
                     deadline_ms: None,
+                    park_on_miss: false,
                 })
                 .unwrap();
             assert!(resp.error.is_none(), "{:?}", resp.error);

@@ -1,0 +1,265 @@
+//! Streaming acceptance tests for the v1 wire protocol and the
+//! SLA-aware parking path:
+//!
+//! 1. An in-process subscriber reassembles the out-of-order commit
+//!    events into exactly the text the non-streaming oracle returns.
+//! 2. The same property holds over TCP: `Client::subscribe` frames
+//!    rebuild a canvas whose detokenization is bit-identical to a
+//!    `call_v1` one-shot response for the same prompt.
+//! 3. A `park_on_miss` request whose deadline blows mid-decode is
+//!    evicted at a block boundary and answered with the `parked`
+//!    terminal state — without disturbing its batch neighbors.
+
+use std::time::Duration;
+
+use streaming_dllm::coordinator::{
+    Client, Request, RouterHandle, Server, ServerFrame, StreamFrame,
+};
+use streaming_dllm::engine::{
+    Backend, DecodeOut, Method, RefKv, ReferenceBackend, SpecialTokens, REFERENCE_SEED,
+};
+use streaming_dllm::eval::{extract_final, synthetic_suite};
+
+/// Apply a gapless commit-event stream to a fresh all-mask canvas and
+/// detokenize the result (the subscriber-side reassembly rule).
+fn reassemble(
+    be: &ReferenceBackend,
+    gen_len: usize,
+    commits: &[(u64, u64, Vec<(usize, i32, f32)>)],
+    id: u64,
+) -> String {
+    let mut canvas = vec![be.special().mask; gen_len];
+    for (i, (cid, seq, writes)) in commits.iter().enumerate() {
+        assert_eq!(*cid, id, "commit for a foreign row leaked into the stream");
+        assert_eq!(*seq, i as u64, "commit seq must be gapless from 0");
+        for &(off, tok, _conf) in writes {
+            assert!(off < gen_len, "write offset {off} outside generation region");
+            canvas[off] = tok;
+        }
+    }
+    be.detokenize(&canvas)
+}
+
+#[test]
+fn subscriber_reassembles_to_oracle_text() {
+    let be = ReferenceBackend::toy(REFERENCE_SEED);
+    let items = synthetic_suite(&be, 2, 31);
+    let router = RouterHandle::spawn_reference(2, Duration::from_millis(2));
+
+    for (i, item) in items.iter().enumerate() {
+        let gen_len = 64usize;
+        let mk = |id: u64| Request {
+            id,
+            prompt: item.prompt.clone(),
+            method: Method::Streaming,
+            gen_len,
+            deadline_ms: None,
+            park_on_miss: false,
+        };
+        // non-streaming oracle for the same prompt
+        let oracle = router.call(mk(i as u64)).unwrap();
+        assert!(oracle.error.is_none(), "{:?}", oracle.error);
+        assert_eq!(extract_final(&oracle.text), item.answer);
+
+        // streamed run: commits then exactly one Done
+        let rx = router.subscribe(mk(100 + i as u64));
+        let mut commits = Vec::new();
+        let done = loop {
+            match rx.recv_timeout(Duration::from_secs(30)).expect("stream stalled") {
+                StreamFrame::Commit(c) => commits.push((c.id, c.seq, c.writes)),
+                StreamFrame::Done(resp) => break resp,
+            }
+        };
+        assert!(rx.try_recv().is_err(), "frames after Done");
+        assert!(done.error.is_none(), "{:?}", done.error);
+        assert!(!done.parked);
+        assert!(!commits.is_empty(), "streamed row produced no commit events");
+
+        let text = reassemble(&be, gen_len, &commits, 100 + i as u64);
+        assert_eq!(text, done.text, "reassembled canvas diverged from the Done frame");
+        assert_eq!(text, oracle.text, "streamed text diverged from the one-shot oracle");
+    }
+    router.shutdown().unwrap();
+}
+
+#[test]
+fn tcp_subscribe_matches_call_v1_bit_for_bit() {
+    let be = ReferenceBackend::toy(REFERENCE_SEED);
+    let items = synthetic_suite(&be, 1, 47);
+    let router = RouterHandle::spawn_reference(2, Duration::from_millis(2));
+    let server = Server::bind("127.0.0.1:0", router).unwrap();
+    let addr = server.local_addr().unwrap().to_string();
+    let handle = std::thread::spawn(move || server.serve_n(1));
+
+    let gen_len = 64usize;
+    let mk = |id: u64| Request {
+        id,
+        prompt: items[0].prompt.clone(),
+        method: Method::Streaming,
+        gen_len,
+        deadline_ms: None,
+        park_on_miss: false,
+    };
+    let mut client = Client::connect(&addr).unwrap();
+    let oneshot = client.call_v1(&mk(1)).unwrap();
+    assert!(oneshot.error.is_none(), "{:?}", oneshot.error);
+
+    let frames = client.subscribe(&mk(2)).unwrap();
+    let mut commits = Vec::new();
+    let mut done = None;
+    for f in frames {
+        match f {
+            ServerFrame::Commit(c) => {
+                assert!(done.is_none(), "commit after the terminal done frame");
+                commits.push((c.id, c.seq, c.writes));
+            }
+            ServerFrame::Done(resp) => done = Some(resp),
+        }
+    }
+    let done = done.expect("stream ended without a done frame");
+    assert!(done.error.is_none(), "{:?}", done.error);
+    assert!(!commits.is_empty());
+
+    let text = reassemble(&be, gen_len, &commits, 2);
+    assert_eq!(text, done.text, "wire reassembly diverged from the done frame");
+    assert_eq!(done.text, oneshot.text, "streamed text != one-shot v1 text");
+
+    drop(client);
+    handle.join().unwrap().unwrap();
+}
+
+/// Reference backend with an artificial per-decode delay, so a long row
+/// reliably outlives a small deadline budget (same device as the
+/// mid-flight-join integration tests).
+struct SlowBackend {
+    inner: ReferenceBackend,
+    delay: Duration,
+}
+
+impl Backend for SlowBackend {
+    type Kv = RefKv;
+
+    fn special(&self) -> SpecialTokens {
+        self.inner.special()
+    }
+
+    fn wants_p0(&self) -> bool {
+        self.inner.wants_p0()
+    }
+
+    fn pick_batch(&self, need: usize) -> Option<usize> {
+        self.inner.pick_batch(need)
+    }
+
+    fn pick_prefix(&self, need: usize) -> Option<usize> {
+        self.inner.pick_prefix(need)
+    }
+
+    fn pick_query(&self, need: usize) -> Option<usize> {
+        self.inner.pick_query(need)
+    }
+
+    fn pick_seq(&self, need: usize) -> Option<usize> {
+        self.inner.pick_seq(need)
+    }
+
+    fn prefill(
+        &self,
+        batch: usize,
+        p_bucket: usize,
+        tokens: &[i32],
+        pos: &[i32],
+        valid: &[i32],
+        p0: Option<&[i32]>,
+    ) -> anyhow::Result<RefKv> {
+        self.inner.prefill(batch, p_bucket, tokens, pos, valid, p0)
+    }
+
+    fn decode(
+        &self,
+        kv: &RefKv,
+        q_bucket: usize,
+        q_tok: &[i32],
+        q_pos: &[i32],
+        q_valid: &[i32],
+    ) -> anyhow::Result<DecodeOut> {
+        std::thread::sleep(self.delay);
+        self.inner.decode(kv, q_bucket, q_tok, q_pos, q_valid)
+    }
+
+    fn logits(
+        &self,
+        batch: usize,
+        s_bucket: usize,
+        tokens: &[i32],
+        pos: &[i32],
+        valid: &[i32],
+        p0: Option<&[i32]>,
+    ) -> anyhow::Result<DecodeOut> {
+        self.inner.logits(batch, s_bucket, tokens, pos, valid, p0)
+    }
+
+    fn detokenize(&self, ids: &[i32]) -> String {
+        self.inner.detokenize(ids)
+    }
+}
+
+#[test]
+fn blown_deadline_parks_row_without_disturbing_neighbors() {
+    // A and B decode long answers (content past the whole generation
+    // region → 32 slow block rounds each). A opts into parking with a
+    // 50ms budget it cannot meet; B rides with a generous budget and no
+    // parking opt-in. A must come back
+    // `parked` long before a full decode could finish, and B must still
+    // drain to a complete, unparked answer.
+    let boundary = 300usize;
+    let router = RouterHandle::spawn_with(
+        move || {
+            Ok(SlowBackend {
+                inner: ReferenceBackend::scripted(boundary),
+                delay: Duration::from_millis(2),
+            })
+        },
+        2,
+        Duration::from_millis(1),
+    );
+    let metrics = router.metrics.clone();
+
+    let rx_a = router.submit(Request {
+        id: 1,
+        prompt: vec![2; 4],
+        method: Method::Streaming,
+        gen_len: 256,
+        deadline_ms: Some(50),
+        park_on_miss: true,
+    });
+    // B's budget is generous (10 min) so the miss counter stays a pure
+    // function of A's behavior even on a heavily loaded test machine
+    let rx_b = router.submit(Request {
+        id: 2,
+        prompt: vec![2; 4],
+        method: Method::Streaming,
+        gen_len: 256,
+        deadline_ms: Some(600_000),
+        park_on_miss: false,
+    });
+
+    let resp_a = rx_a.recv_timeout(Duration::from_secs(30)).expect("A never answered");
+    assert!(resp_a.error.is_none(), "{:?}", resp_a.error);
+    assert!(resp_a.parked, "A blew its 50ms budget and must be parked");
+
+    let resp_b = rx_b.recv_timeout(Duration::from_secs(120)).expect("B never completed");
+    assert!(resp_b.error.is_none(), "{:?}", resp_b.error);
+    assert!(!resp_b.parked, "B never opted into parking and must not be parked");
+    assert!(resp_b.non_eos_tokens > 0);
+
+    router.shutdown().unwrap();
+    let snap = metrics.snapshot();
+    assert_eq!(snap.get("parked").unwrap().as_usize(), Some(1));
+    assert_eq!(
+        snap.get("deadline_misses").unwrap().as_usize(),
+        Some(0),
+        "a parked row is answered on time by definition — it is not a miss"
+    );
+    assert_eq!(snap.get("requests_ok").unwrap().as_usize(), Some(2));
+}

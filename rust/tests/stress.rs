@@ -10,25 +10,29 @@
 //!    takes the earliest effective deadline first
 //! 4. metrics conservation: `joins + batch_started == admissions`, and
 //!    every admission is answered ok
+//! 5. streaming: a subscribed row's commit events carry gapless
+//!    per-row sequence numbers from 0, and replaying their writes onto
+//!    an all-mask canvas reassembles exactly the terminal text
 //!
 //! Seeds are printed per schedule and embedded in every assertion, so a
 //! CI flake bisects to a single reproducible seed:
 //! `SDLLM_STRESS_SEED_BASE=<seed> SDLLM_STRESS_SCHEDULES=1 cargo test --test stress`.
+//! (Both knobs resolve through [`ServeConfig`], so `--schedules` /
+//! `--seed-base` mean the same thing everywhere.)
 
+use std::sync::mpsc::Receiver;
 use std::time::{Duration, Instant};
 
-use streaming_dllm::coordinator::{Batcher, Request, RouterHandle};
+use streaming_dllm::coordinator::{
+    Batcher, Request, Response, RouterHandle, ServeConfig, StreamFrame,
+};
 use streaming_dllm::engine::{
-    GenConfig, Generator, Method, ReferenceBackend, SeqState, REFERENCE_SEED,
+    Backend, GenConfig, Generator, Method, ReferenceBackend, SeqState, REFERENCE_SEED,
 };
 use streaming_dllm::util::rng::Rng;
 
-fn schedules() -> u64 {
-    std::env::var("SDLLM_STRESS_SCHEDULES").ok().and_then(|s| s.parse().ok()).unwrap_or(20)
-}
-
-fn seed_base() -> u64 {
-    std::env::var("SDLLM_STRESS_SEED_BASE").ok().and_then(|s| s.parse().ok()).unwrap_or(0)
+fn stress_cfg() -> ServeConfig {
+    ServeConfig::from_env().expect("invalid SDLLM_* stress configuration")
 }
 
 /// Solo decode of one request on a fresh toy backend — the oracle every
@@ -67,16 +71,70 @@ fn plan_schedule(rng: &mut Rng) -> Vec<Planned> {
                 method: methods[rng.below(methods.len())],
                 gen_len: *rng.choose(&[16usize, 32, 64]),
                 deadline_ms: rng.bool(0.5).then(|| rng.range(0, 80) as u64),
+                park_on_miss: false,
             };
             Planned { req, oversized }
         })
         .collect()
 }
 
+/// A planned request's reply channel: classic one-shot or a commit
+/// stream (the randomized subset that exercises `subscribe`).
+enum Rx {
+    One(Receiver<Response>),
+    Stream(Receiver<StreamFrame>),
+}
+
+/// Drain one subscription: collect commits until the terminal `Done`,
+/// assert gapless per-row sequence numbers, and — for ok rows — that
+/// replaying the writes onto an all-mask canvas reassembles exactly the
+/// terminal text (out-of-order commits, retractions and all).
+fn drain_stream(seed: u64, req: &Request, rx: &Receiver<StreamFrame>) -> Response {
+    let mut commits = vec![];
+    let resp = loop {
+        match rx.recv_timeout(Duration::from_secs(60)) {
+            Ok(StreamFrame::Commit(c)) => commits.push(c),
+            Ok(StreamFrame::Done(r)) => break r,
+            Err(e) => panic!("seed {seed}: stream for request {} stalled: {e}", req.id),
+        }
+    };
+    assert!(
+        rx.try_recv().is_err(),
+        "seed {seed}: request {} streamed frames after Done",
+        req.id
+    );
+    for (i, c) in commits.iter().enumerate() {
+        assert_eq!(c.id, req.id, "seed {seed}: commit for the wrong row on request {}", req.id);
+        assert_eq!(
+            c.seq, i as u64,
+            "seed {seed}: commit seq gap on request {} (got {}, want {i})",
+            req.id, c.seq
+        );
+    }
+    if resp.error.is_none() {
+        let be = ReferenceBackend::toy(REFERENCE_SEED);
+        let mut canvas = vec![be.special.mask; req.gen_len];
+        for c in &commits {
+            for &(off, tok, _conf) in &c.writes {
+                assert!(off < canvas.len(), "seed {seed}: commit write out of range");
+                canvas[off] = tok;
+            }
+        }
+        assert_eq!(
+            be.detokenize(&canvas),
+            resp.text,
+            "seed {seed}: reassembled stream diverged from terminal text on request {}",
+            req.id
+        );
+    }
+    resp
+}
+
 #[test]
 fn randomized_schedules_answer_every_request_exactly_once() {
-    let base = seed_base();
-    for s in 0..schedules() {
+    let cfg = stress_cfg();
+    let base = cfg.stress_seed_base;
+    for s in 0..cfg.stress_schedules {
         let seed = base.wrapping_add(s);
         eprintln!("[stress] schedule seed {seed}");
         let mut rng = Rng::new(seed ^ 0x5DCE_DDE5);
@@ -87,7 +145,13 @@ fn randomized_schedules_answer_every_request_exactly_once() {
         let planned = plan_schedule(&mut rng);
         let mut receivers = vec![];
         for p in &planned {
-            receivers.push(router.submit(p.req.clone()));
+            // a random subset subscribes to the commit stream instead of
+            // a one-shot reply; both paths must answer exactly once
+            if rng.bool(0.35) {
+                receivers.push(Rx::Stream(router.subscribe(p.req.clone())));
+            } else {
+                receivers.push(Rx::One(router.submit(p.req.clone())));
+            }
             if rng.bool(0.35) {
                 // stagger arrivals so some requests start batches and
                 // others join mid-flight
@@ -98,9 +162,22 @@ fn randomized_schedules_answer_every_request_exactly_once() {
         let mut ok = 0usize;
         let mut err = 0usize;
         for (p, rx) in planned.iter().zip(&receivers) {
-            let resp = rx
-                .recv_timeout(Duration::from_secs(60))
-                .unwrap_or_else(|e| panic!("seed {seed}: request {} unanswered: {e}", p.req.id));
+            let resp = match rx {
+                Rx::One(rx) => {
+                    let resp = rx.recv_timeout(Duration::from_secs(60)).unwrap_or_else(|e| {
+                        panic!("seed {seed}: request {} unanswered: {e}", p.req.id)
+                    });
+                    // exactly once: the reply channel must never carry a
+                    // second message for the same request
+                    assert!(
+                        rx.try_recv().is_err(),
+                        "seed {seed}: request {} answered more than once",
+                        p.req.id
+                    );
+                    resp
+                }
+                Rx::Stream(rx) => drain_stream(seed, &p.req, rx),
+            };
             assert_eq!(resp.id, p.req.id, "seed {seed}: reply routed to the wrong request");
             if p.oversized {
                 err += 1;
@@ -128,13 +205,6 @@ fn randomized_schedules_answer_every_request_exactly_once() {
                     p.req.gen_len
                 );
             }
-            // exactly once: the reply channel must never carry a second
-            // message for the same request
-            assert!(
-                rx.try_recv().is_err(),
-                "seed {seed}: request {} answered more than once",
-                p.req.id
-            );
         }
 
         router.shutdown().unwrap_or_else(|e| panic!("seed {seed}: router died: {e:#}"));
@@ -177,8 +247,9 @@ impl Shadow {
 
 #[test]
 fn randomized_batcher_respects_deadline_order_and_conserves_requests() {
-    let base = seed_base();
-    for s in 0..schedules() {
+    let cfg = stress_cfg();
+    let base = cfg.stress_seed_base;
+    for s in 0..cfg.stress_schedules {
         let seed = base.wrapping_add(s);
         let mut rng = Rng::new(seed ^ 0xBA7C_4E12);
         let max_batch = rng.range(1, 6);
@@ -204,6 +275,7 @@ fn randomized_batcher_respects_deadline_order_and_conserves_requests() {
                         method: methods[method_ix],
                         gen_len: *rng.choose(&[16usize, 64]),
                         deadline_ms,
+                        park_on_miss: false,
                     };
                     let deadline =
                         now + deadline_ms.map(Duration::from_millis).unwrap_or(b.default_sla);
