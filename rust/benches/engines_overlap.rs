@@ -106,6 +106,7 @@ fn main() {
             max_batch: 2,
             max_wait: Duration::from_millis(1),
             max_engines: 2,
+            ..RouterOptions::default()
         },
     );
     let metrics = router.metrics.clone();

@@ -61,12 +61,23 @@ pub struct Batcher {
     pub max_batch: usize,
     pub max_wait: Duration,
     pub default_sla: Duration,
+    /// Admission bound per method queue. The router checks
+    /// [`Batcher::is_full`] *before* pushing and answers a reject
+    /// instead; internal requeues (worker overflow bounces) bypass the
+    /// cap so in-flight work is never dropped by backpressure.
+    pub max_depth: usize,
 }
 
 impl Batcher {
     pub fn new(max_batch: usize, max_wait: Duration) -> Batcher {
         assert!(max_batch >= 1);
-        Batcher { queues: vec![], max_batch, max_wait, default_sla: DEFAULT_SLA }
+        Batcher {
+            queues: vec![],
+            max_batch,
+            max_wait,
+            default_sla: DEFAULT_SLA,
+            max_depth: usize::MAX,
+        }
     }
 
     pub fn push(&mut self, req: Request) {
@@ -109,6 +120,53 @@ impl Batcher {
     /// Queued depth of one method group (the router's per-group gauge).
     pub fn depth(&self, method: Method) -> usize {
         self.queues.iter().find(|(m, _)| *m == method).map(|(_, q)| q.len()).unwrap_or(0)
+    }
+
+    /// Whether the method's queue is at the admission bound — the
+    /// router's backpressure predicate, checked before every external
+    /// push.
+    pub fn is_full(&self, method: Method) -> bool {
+        self.depth(method) >= self.max_depth
+    }
+
+    /// Remove one queued request by id (cancelled subscriber whose row
+    /// never reached a worker). Returns it so the router can account
+    /// for the removal.
+    pub fn remove(&mut self, id: u64) -> Option<Request> {
+        for i in 0..self.queues.len() {
+            let q = &mut self.queues[i].1;
+            if let Some(at) = q.iter().position(|p| p.req.id == id) {
+                let req = q.remove(at).map(|p| p.req);
+                if q.is_empty() {
+                    self.queues.remove(i);
+                }
+                return req;
+            }
+        }
+        None
+    }
+
+    /// Deadline-aware shedding: drain queued `park_on_miss` requests
+    /// whose effective deadline has already passed — running them could
+    /// only produce an instantly-evicted empty park, so they are
+    /// answered as shed without ever costing an engine slot. Requests
+    /// without the opt-in decode normally and count a miss, exactly as
+    /// before.
+    pub fn drain_blown(&mut self, now: Instant) -> Vec<Request> {
+        let mut shed = Vec::new();
+        for (_, q) in self.queues.iter_mut() {
+            let mut keep = VecDeque::with_capacity(q.len());
+            for p in q.drain(..) {
+                if p.req.park_on_miss && now > p.deadline {
+                    shed.push(p.req);
+                } else {
+                    keep.push_back(p);
+                }
+            }
+            *q = keep;
+        }
+        self.queues.retain(|(_, q)| !q.is_empty());
+        shed
     }
 
     /// Oldest arrival in a queue — readiness and starvation age are
@@ -423,6 +481,59 @@ mod tests {
         b.push_at(req_sla(2, Method::Streaming, 1), t + Duration::from_millis(20));
         let d = b.next_deadline(t + Duration::from_millis(30)).unwrap();
         assert!(d <= Duration::from_millis(70));
+    }
+
+    #[test]
+    fn bounded_depth_reports_full_per_method() {
+        let mut b = Batcher::new(4, Duration::from_secs(60));
+        b.max_depth = 2;
+        let t = Instant::now();
+        assert!(!b.is_full(Method::Streaming));
+        b.push_at(req(1, Method::Streaming, 64), t);
+        b.push_at(req(2, Method::Streaming, 64), t);
+        assert!(b.is_full(Method::Streaming));
+        // bounds are per method queue, not global
+        assert!(!b.is_full(Method::Vanilla));
+        b.pop_compatible(Method::Streaming);
+        assert!(!b.is_full(Method::Streaming));
+    }
+
+    #[test]
+    fn remove_pulls_one_queued_request() {
+        let mut b = Batcher::new(4, Duration::from_secs(60));
+        let t = Instant::now();
+        b.push_at(req(1, Method::Streaming, 64), t);
+        b.push_at(req(2, Method::Streaming, 64), t);
+        assert_eq!(b.remove(1).unwrap().id, 1);
+        assert!(b.remove(1).is_none());
+        assert_eq!(b.pending(), 1);
+        assert_eq!(b.remove(2).unwrap().id, 2);
+        assert_eq!(b.pending(), 0);
+        assert!(b.remove(3).is_none());
+    }
+
+    #[test]
+    fn drain_blown_sheds_only_parkable_expired_rows() {
+        let mut b = Batcher::new(8, Duration::from_millis(0));
+        let t = Instant::now();
+        // expired + park_on_miss → shed
+        let mut a = req_sla(1, Method::Streaming, 10);
+        a.park_on_miss = true;
+        b.push_at(a, t);
+        // expired but no opt-in → stays queued (decodes late, counts a miss)
+        b.push_at(req_sla(2, Method::Streaming, 10), t);
+        // park_on_miss but still within budget → stays queued
+        let mut c = req_sla(3, Method::Vanilla, 60_000);
+        c.park_on_miss = true;
+        b.push_at(c, t);
+        let shed = b.drain_blown(t + Duration::from_millis(20));
+        assert_eq!(shed.len(), 1);
+        assert_eq!(shed[0].id, 1);
+        assert_eq!(b.pending(), 2);
+        assert_eq!(b.depth(Method::Streaming), 1);
+        assert_eq!(b.depth(Method::Vanilla), 1);
+        // nothing newly blown → no-op
+        assert!(b.drain_blown(t + Duration::from_millis(21)).is_empty());
     }
 
     #[test]

@@ -58,7 +58,11 @@ impl Client {
         self.stream.flush()?;
         let j = self.read_json()?;
         match j.get("type").and_then(|t| t.as_str()) {
-            Some("done") => Response::from_json(&j).map_err(|e| anyhow!("bad response: {e}")),
+            // a backpressure reject is a terminal answer, not an error:
+            // the Response carries rejected=true and retry_after_ms
+            Some("done") | Some("reject") => {
+                Response::from_json(&j).map_err(|e| anyhow!("bad response: {e}"))
+            }
             Some("error") => {
                 let msg = j.get("error").and_then(|e| e.as_str()).unwrap_or("unknown");
                 anyhow::bail!("server error: {msg}")
@@ -82,7 +86,7 @@ impl Client {
                 Some("commit") => frames.push(ServerFrame::Commit(
                     CommitEvent::from_json(&j).map_err(|e| anyhow!("bad commit: {e}"))?,
                 )),
-                Some("done") => {
+                Some("done") | Some("reject") => {
                     let resp =
                         Response::from_json(&j).map_err(|e| anyhow!("bad response: {e}"))?;
                     frames.push(ServerFrame::Done(resp));
@@ -109,6 +113,26 @@ impl Client {
         self.stream.write_all(b"{\"cmd\":\"stats\"}\n")?;
         self.stream.flush()?;
         self.read_json()
+    }
+
+    /// Prometheus-style stats: the server answers a multi-line text
+    /// body terminated by a literal `# EOF` line (read up to and
+    /// including it, since the connection stays open for more frames).
+    pub fn stats_text(&mut self) -> Result<String> {
+        self.stream.write_all(b"{\"cmd\":\"stats\",\"format\":\"prometheus\"}\n")?;
+        self.stream.flush()?;
+        let mut body = String::new();
+        loop {
+            let mut line = String::new();
+            if self.reader.read_line(&mut line)? == 0 {
+                anyhow::bail!("connection closed mid-stats");
+            }
+            let done = line.trim_end() == "# EOF";
+            body.push_str(&line);
+            if done {
+                return Ok(body);
+            }
+        }
     }
 }
 

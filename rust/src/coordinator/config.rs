@@ -17,7 +17,8 @@ use anyhow::{anyhow, bail, Result};
 use crate::engine::RefMode;
 use crate::util::cli::Args;
 
-use super::router::{RouterOptions, DEFAULT_MAX_ENGINES};
+use super::router::{RouterOptions, DEFAULT_MAX_ENGINES, DEFAULT_MAX_QUEUE_DEPTH};
+use super::server::DEFAULT_MAX_CONNECTIONS;
 
 /// Typed serving configuration. Construct with
 /// [`ServeConfig::from_env_and_args`] (binaries) or
@@ -40,6 +41,14 @@ pub struct ServeConfig {
     pub max_wait: Duration,
     /// worker-thread cap (`--max-engines` / `SDLLM_MAX_ENGINES`)
     pub max_engines: usize,
+    /// bounded-admission cap per method queue; a full queue answers a
+    /// typed reject with a retry hint
+    /// (`--max-queue-depth` / `SDLLM_MAX_QUEUE_DEPTH`)
+    pub max_queue_depth: usize,
+    /// concurrent-connection cap; over the cap the server answers one
+    /// `busy` error frame and closes
+    /// (`--max-connections` / `SDLLM_MAX_CONNECTIONS`)
+    pub max_connections: usize,
     /// generation lengths driven by harnesses (`--gen-lens` / `SDLLM_GEN_LENS`)
     pub gen_lens: Vec<usize>,
     /// default SLA budget; 0/absent means none (`--deadline-ms` / `SDLLM_DEADLINE_MS`)
@@ -61,6 +70,8 @@ impl Default for ServeConfig {
             max_batch: 4,
             max_wait: Duration::from_millis(20),
             max_engines: DEFAULT_MAX_ENGINES,
+            max_queue_depth: DEFAULT_MAX_QUEUE_DEPTH,
+            max_connections: DEFAULT_MAX_CONNECTIONS,
             gen_lens: vec![64],
             deadline_ms: None,
             stress_schedules: 20,
@@ -141,6 +152,18 @@ impl ServeConfig {
         if max_engines == 0 {
             bail!("max-engines must be >= 1");
         }
+        let max_queue_depth =
+            parse_num(pick(args, "max-queue-depth", "SDLLM_MAX_QUEUE_DEPTH"), "max-queue-depth")?
+                .unwrap_or(d.max_queue_depth);
+        if max_queue_depth == 0 {
+            bail!("max-queue-depth must be >= 1");
+        }
+        let max_connections =
+            parse_num(pick(args, "max-connections", "SDLLM_MAX_CONNECTIONS"), "max-connections")?
+                .unwrap_or(d.max_connections);
+        if max_connections == 0 {
+            bail!("max-connections must be >= 1");
+        }
         let max_wait_ms: u64 =
             parse_num(pick(args, "max-wait-ms", "SDLLM_MAX_WAIT_MS"), "max-wait-ms")?
                 .unwrap_or(d.max_wait.as_millis() as u64);
@@ -157,6 +180,8 @@ impl ServeConfig {
             max_batch,
             max_wait: Duration::from_millis(max_wait_ms),
             max_engines,
+            max_queue_depth,
+            max_connections,
             gen_lens,
             deadline_ms,
             stress_schedules: parse_num(
@@ -178,6 +203,7 @@ impl ServeConfig {
             max_batch: self.max_batch,
             max_wait: self.max_wait,
             max_engines: self.max_engines,
+            max_queue_depth: self.max_queue_depth,
         }
     }
 
@@ -209,6 +235,10 @@ mod tests {
             "2",
             "--max-batch",
             "8",
+            "--max-queue-depth",
+            "16",
+            "--max-connections",
+            "5",
         ]))
         .unwrap();
         assert_eq!(c.ref_mode, RefMode::Causal);
@@ -216,11 +246,15 @@ mod tests {
         assert_eq!(c.deadline_ms, Some(250));
         assert_eq!(c.router_options().max_engines, 2);
         assert_eq!(c.router_options().max_batch, 8);
+        assert_eq!(c.router_options().max_queue_depth, 16);
+        assert_eq!(c.max_connections, 5);
 
         assert!(ServeConfig::from_env_and_args(&parse(&["--ref-mode", "bogus"])).is_err());
         assert!(ServeConfig::from_env_and_args(&parse(&["--gen-lens", "64,x"])).is_err());
         assert!(ServeConfig::from_env_and_args(&parse(&["--max-batch", "0"])).is_err());
         assert!(ServeConfig::from_env_and_args(&parse(&["--max-engines", "nope"])).is_err());
+        assert!(ServeConfig::from_env_and_args(&parse(&["--max-queue-depth", "0"])).is_err());
+        assert!(ServeConfig::from_env_and_args(&parse(&["--max-connections", "0"])).is_err());
         // deadline 0 means "no deadline", not an error
         let c = ServeConfig::from_env_and_args(&parse(&["--deadline-ms", "0"])).unwrap();
         assert_eq!(c.deadline_ms, None);
@@ -243,6 +277,8 @@ mod tests {
             "SDLLM_MAX_BATCH",
             "SDLLM_MAX_WAIT_MS",
             "SDLLM_MAX_ENGINES",
+            "SDLLM_MAX_QUEUE_DEPTH",
+            "SDLLM_MAX_CONNECTIONS",
             "SDLLM_GEN_LENS",
             "SDLLM_DEADLINE_MS",
             "SDLLM_STRESS_SCHEDULES",
@@ -257,6 +293,8 @@ mod tests {
         assert_eq!(c.max_batch, 4);
         assert_eq!(c.max_wait, Duration::from_millis(20));
         assert_eq!(c.max_engines, DEFAULT_MAX_ENGINES);
+        assert_eq!(c.max_queue_depth, DEFAULT_MAX_QUEUE_DEPTH);
+        assert_eq!(c.max_connections, DEFAULT_MAX_CONNECTIONS);
         assert_eq!(c.gen_lens, vec![64]);
         assert_eq!(c.deadline_ms, None);
         assert_eq!(c.stress_schedules, 20);
@@ -264,16 +302,24 @@ mod tests {
         std::env::set_var("SDLLM_GEN_LENS", "16,32");
         std::env::set_var("SDLLM_STRESS_SEED_BASE", "77");
         std::env::set_var("SDLLM_DEADLINE_MS", "  ");
+        std::env::set_var("SDLLM_MAX_QUEUE_DEPTH", "9");
+        std::env::set_var("SDLLM_MAX_CONNECTIONS", "3");
         let c = ServeConfig::from_env_and_args(&parse(&[])).unwrap();
         assert_eq!(c.gen_lens, vec![16, 32]);
         assert_eq!(c.stress_seed_base, 77);
+        assert_eq!(c.max_queue_depth, 9);
+        assert_eq!(c.max_connections, 3);
         // whitespace-only env value counts as unset
         assert_eq!(c.deadline_ms, None);
         // CLI wins over env
         let c = ServeConfig::from_env_and_args(&parse(&["--gen-lens", "64"])).unwrap();
         assert_eq!(c.gen_lens, vec![64]);
+        let c = ServeConfig::from_env_and_args(&parse(&["--max-queue-depth", "40"])).unwrap();
+        assert_eq!(c.max_queue_depth, 40);
         std::env::remove_var("SDLLM_GEN_LENS");
         std::env::remove_var("SDLLM_STRESS_SEED_BASE");
         std::env::remove_var("SDLLM_DEADLINE_MS");
+        std::env::remove_var("SDLLM_MAX_QUEUE_DEPTH");
+        std::env::remove_var("SDLLM_MAX_CONNECTIONS");
     }
 }

@@ -10,6 +10,20 @@ use crate::engine::GenReport;
 use crate::util::json::Json;
 use crate::util::stats::Samples;
 
+/// One worker thread's capacity picture as the router last saw it —
+/// refreshed every scheduling pass alongside the group-depth gauges.
+#[derive(Debug, Clone, Default)]
+pub struct WorkerGauge {
+    /// rows routed to this worker and not yet answered/bounced
+    pub outstanding: usize,
+    /// engine slot count
+    pub capacity: usize,
+    /// the method whose engine the worker is currently running
+    pub assigned: Option<&'static str>,
+    pub ready: bool,
+    pub dead: bool,
+}
+
 #[derive(Debug, Default)]
 struct Inner {
     requests_ok: u64,
@@ -57,6 +71,30 @@ struct Inner {
     /// rows SLA-evicted into the `parked` terminal state (counted as ok
     /// responses, never as deadline misses)
     parked: u64,
+    /// every request the router's inbox accepted — the left side of the
+    /// conservation identity
+    /// `submitted == answered + rejected + shed + parked + cancelled`
+    /// (the overload suite asserts it per seed)
+    submitted: u64,
+    /// normally-answered terminal responses (ok or error) — excludes
+    /// parked/rejected/shed/cancelled, which have their own counters
+    answered: u64,
+    /// backpressure rejects: the method queue was at `max_queue_depth`
+    /// at submission, so the request was answered with `retry_after_ms`
+    /// and never queued
+    rejected: u64,
+    /// load sheds: queued `park_on_miss` requests whose effective
+    /// deadline passed before an engine slot opened (counted separately
+    /// from `deadline_misses`, which are late *completions*)
+    shed: u64,
+    /// rows detached because their subscriber disconnected mid-stream —
+    /// the worker slot is reclaimed instead of decoding into the void
+    cancelled: u64,
+    /// high-water mark of total queued depth across method queues
+    queue_depth_peak: usize,
+    /// gauge: per-worker outstanding/capacity/assignment, refreshed by
+    /// the router every scheduling pass
+    workers: Vec<WorkerGauge>,
 }
 
 #[derive(Debug, Default)]
@@ -151,6 +189,52 @@ impl Metrics {
         m.parked += 1;
     }
 
+    /// A request reached the router's inbox (before any admission
+    /// decision) — the left side of the conservation identity.
+    pub fn record_submitted(&self) {
+        let mut m = self.inner.lock().unwrap();
+        m.submitted += 1;
+    }
+
+    /// A request was answered through the normal terminal path (ok or
+    /// error; not parked/rejected/shed/cancelled).
+    pub fn record_answered(&self) {
+        let mut m = self.inner.lock().unwrap();
+        m.answered += 1;
+    }
+
+    /// A request was rejected at admission (queue full) with a
+    /// `retry_after_ms` hint.
+    pub fn record_rejected(&self) {
+        let mut m = self.inner.lock().unwrap();
+        m.rejected += 1;
+    }
+
+    /// A queued request was shed because its deadline became unmeetable.
+    pub fn record_shed(&self) {
+        let mut m = self.inner.lock().unwrap();
+        m.shed += 1;
+    }
+
+    /// A row was detached because its subscriber disconnected.
+    pub fn record_cancelled(&self) {
+        let mut m = self.inner.lock().unwrap();
+        m.cancelled += 1;
+    }
+
+    /// Fold the current total queued depth into the high-water mark
+    /// (called on every external push).
+    pub fn note_queue_depth(&self, depth: usize) {
+        let mut m = self.inner.lock().unwrap();
+        m.queue_depth_peak = m.queue_depth_peak.max(depth);
+    }
+
+    /// Refresh the per-worker capacity gauges.
+    pub fn set_workers(&self, workers: Vec<WorkerGauge>) {
+        let mut m = self.inner.lock().unwrap();
+        m.workers = workers;
+    }
+
     pub fn record_response(&self, ok: bool, tokens: usize, latency_s: f64, queue_s: f64) {
         let mut m = self.inner.lock().unwrap();
         if ok {
@@ -193,6 +277,34 @@ impl Metrics {
             ("admissions", Json::Num(m.admissions as f64)),
             ("deadline_misses", Json::Num(m.deadline_misses as f64)),
             ("parked", Json::Num(m.parked as f64)),
+            ("submitted", Json::Num(m.submitted as f64)),
+            ("answered", Json::Num(m.answered as f64)),
+            ("rejected", Json::Num(m.rejected as f64)),
+            ("shed", Json::Num(m.shed as f64)),
+            ("cancelled", Json::Num(m.cancelled as f64)),
+            ("queue_depth_peak", Json::Num(m.queue_depth_peak as f64)),
+            (
+                "workers",
+                Json::Arr(
+                    m.workers
+                        .iter()
+                        .map(|w| {
+                            Json::obj(vec![
+                                ("outstanding", Json::Num(w.outstanding as f64)),
+                                ("capacity", Json::Num(w.capacity as f64)),
+                                (
+                                    "assigned",
+                                    w.assigned
+                                        .map(|m| Json::Str(m.to_string()))
+                                        .unwrap_or(Json::Null),
+                                ),
+                                ("ready", Json::Bool(w.ready)),
+                                ("dead", Json::Bool(w.dead)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
             ("busy_s", Json::Num(m.busy_secs)),
             (
                 "busy_by_method",
@@ -231,6 +343,76 @@ impl Metrics {
             ("decode_s", Json::Num(m.decode_secs)),
             ("host_s", Json::Num(m.host_secs)),
         ])
+    }
+
+    /// Scrapeable Prometheus-style text rendering of the capacity
+    /// picture. Every metric is prefixed `sdllm_` and preceded by a
+    /// `# TYPE` line; per-method and per-worker series carry labels.
+    /// The body ends with a literal `# EOF` line — the on-wire
+    /// terminator clients read up to (JSON stats are one line; the text
+    /// format is the only multi-line server payload).
+    pub fn prometheus(&self) -> String {
+        use std::fmt::Write as _;
+        let m = self.inner.lock().unwrap();
+        let mut out = String::new();
+        let counter = |out: &mut String, name: &str, v: u64| {
+            let _ = writeln!(out, "# TYPE sdllm_{name} counter\nsdllm_{name} {v}");
+        };
+        counter(&mut out, "submitted", m.submitted);
+        counter(&mut out, "answered", m.answered);
+        counter(&mut out, "rejected", m.rejected);
+        counter(&mut out, "shed", m.shed);
+        counter(&mut out, "cancelled", m.cancelled);
+        counter(&mut out, "parked", m.parked);
+        counter(&mut out, "deadline_misses", m.deadline_misses);
+        counter(&mut out, "requests_ok", m.requests_ok);
+        counter(&mut out, "requests_err", m.requests_err);
+        counter(&mut out, "admissions", m.admissions);
+        counter(&mut out, "joins", m.joins);
+        counter(&mut out, "batch_started", m.batch_started);
+        counter(&mut out, "non_eos_tokens", m.non_eos_tokens);
+
+        let gauge = |out: &mut String, name: &str, v: f64| {
+            let _ = writeln!(out, "# TYPE sdllm_{name} gauge\nsdllm_{name} {v}");
+        };
+        gauge(&mut out, "queue_depth_peak", m.queue_depth_peak as f64);
+        gauge(&mut out, "engines_active", m.engines_active as f64);
+        gauge(&mut out, "max_engines_active", m.max_engines_active as f64);
+        gauge(&mut out, "latency_p50_seconds", m.latency.percentile(50.0));
+        gauge(&mut out, "latency_p95_seconds", m.latency.percentile(95.0));
+        gauge(&mut out, "latency_p99_seconds", m.latency.percentile(99.0));
+        gauge(&mut out, "busy_seconds", m.busy_secs);
+
+        let _ = writeln!(out, "# TYPE sdllm_queue_depth gauge");
+        for &(name, queued, _) in &m.group_depth {
+            let _ = writeln!(out, "sdllm_queue_depth{{method=\"{name}\"}} {queued}");
+        }
+        let _ = writeln!(out, "# TYPE sdllm_active_rows gauge");
+        for &(name, _, active) in &m.group_depth {
+            let _ = writeln!(out, "sdllm_active_rows{{method=\"{name}\"}} {active}");
+        }
+        let _ = writeln!(out, "# TYPE sdllm_worker_outstanding gauge");
+        for (i, w) in m.workers.iter().enumerate() {
+            let _ = writeln!(out, "sdllm_worker_outstanding{{worker=\"{i}\"}} {}", w.outstanding);
+        }
+        let _ = writeln!(out, "# TYPE sdllm_worker_capacity gauge");
+        for (i, w) in m.workers.iter().enumerate() {
+            let _ = writeln!(out, "sdllm_worker_capacity{{worker=\"{i}\"}} {}", w.capacity);
+        }
+        let _ = writeln!(out, "# TYPE sdllm_worker_up gauge");
+        for (i, w) in m.workers.iter().enumerate() {
+            let state = if w.dead {
+                "dead"
+            } else if w.ready {
+                "ready"
+            } else {
+                "starting"
+            };
+            let up = u8::from(!w.dead);
+            let _ = writeln!(out, "sdllm_worker_up{{worker=\"{i}\",state=\"{state}\"}} {up}");
+        }
+        out.push_str("# EOF\n");
+        out
     }
 }
 
@@ -301,6 +483,77 @@ mod tests {
         let depth = s.get("group_depth").unwrap();
         assert_eq!(depth.get("streaming").unwrap().get("queued").unwrap().as_usize(), Some(0));
         assert_eq!(depth.get("streaming").unwrap().get("active").unwrap().as_usize(), Some(1));
+    }
+
+    #[test]
+    fn overload_counters_and_worker_gauges() {
+        let m = Metrics::new();
+        for _ in 0..5 {
+            m.record_submitted();
+        }
+        m.record_answered();
+        m.record_answered();
+        m.record_rejected();
+        m.record_shed();
+        m.record_cancelled();
+        m.note_queue_depth(3);
+        m.note_queue_depth(7);
+        m.note_queue_depth(2); // peak is a high-water mark
+        m.set_workers(vec![
+            WorkerGauge {
+                outstanding: 2,
+                capacity: 4,
+                assigned: Some("streaming"),
+                ready: true,
+                dead: false,
+            },
+            WorkerGauge::default(),
+        ]);
+        let s = m.snapshot();
+        assert_eq!(s.get("submitted").unwrap().as_usize(), Some(5));
+        assert_eq!(s.get("answered").unwrap().as_usize(), Some(2));
+        assert_eq!(s.get("rejected").unwrap().as_usize(), Some(1));
+        assert_eq!(s.get("shed").unwrap().as_usize(), Some(1));
+        assert_eq!(s.get("cancelled").unwrap().as_usize(), Some(1));
+        assert_eq!(s.get("queue_depth_peak").unwrap().as_usize(), Some(7));
+        let workers = s.get("workers").unwrap().as_arr().unwrap();
+        assert_eq!(workers.len(), 2);
+        assert_eq!(workers[0].get("outstanding").unwrap().as_usize(), Some(2));
+        assert_eq!(workers[0].get("capacity").unwrap().as_usize(), Some(4));
+        assert_eq!(workers[0].get("assigned").unwrap().as_str(), Some("streaming"));
+        assert_eq!(workers[0].get("ready").unwrap().as_bool(), Some(true));
+        assert!(matches!(workers[1].get("assigned"), Some(Json::Null)));
+    }
+
+    #[test]
+    fn prometheus_text_is_typed_labeled_and_terminated() {
+        let m = Metrics::new();
+        m.record_submitted();
+        m.record_rejected();
+        m.set_groups(vec![("streaming", 3, 2)], 1);
+        m.set_workers(vec![WorkerGauge {
+            outstanding: 2,
+            capacity: 4,
+            assigned: Some("streaming"),
+            ready: true,
+            dead: false,
+        }]);
+        let text = m.prometheus();
+        assert!(text.contains("# TYPE sdllm_submitted counter\nsdllm_submitted 1\n"));
+        assert!(text.contains("# TYPE sdllm_rejected counter\nsdllm_rejected 1\n"));
+        assert!(text.contains("sdllm_queue_depth{method=\"streaming\"} 3\n"));
+        assert!(text.contains("sdllm_active_rows{method=\"streaming\"} 2\n"));
+        assert!(text.contains("sdllm_worker_outstanding{worker=\"0\"} 2\n"));
+        assert!(text.contains("sdllm_worker_capacity{worker=\"0\"} 4\n"));
+        assert!(text.contains("sdllm_worker_up{worker=\"0\",state=\"ready\"} 1\n"));
+        assert!(
+            text.ends_with("# EOF\n"),
+            "the text body must end with the on-wire terminator"
+        );
+        // every non-comment line belongs to a preceding # TYPE family
+        for line in text.lines().filter(|l| !l.starts_with('#')) {
+            assert!(line.starts_with("sdllm_"), "unprefixed line: {line}");
+        }
     }
 
     #[test]

@@ -16,11 +16,14 @@ pub mod worker;
 pub use batcher::{Batcher, DEFAULT_SLA};
 pub use client::{run_load, Client, LoadReport, ServerFrame};
 pub use config::ServeConfig;
-pub use metrics::Metrics;
-pub use protocol::{parse_client_line, ClientFrame, CommitEvent, WireError, PROTOCOL_VERSION};
+pub use metrics::{Metrics, WorkerGauge};
+pub use protocol::{
+    parse_client_line, ClientFrame, CommitEvent, StatsFormat, WireError, PROTOCOL_VERSION,
+};
 pub use request::{Request, RequestError, Response};
 pub use router::{
     Job, Msg, ReplyTx, RouterHandle, RouterOptions, StreamFrame, DEFAULT_MAX_ENGINES,
+    DEFAULT_MAX_QUEUE_DEPTH,
 };
-pub use server::Server;
+pub use server::{Server, DEFAULT_MAX_CONNECTIONS, MAX_LINE_BYTES};
 pub use worker::{AdmitReq, RowDone, WorkerCmd, WorkerEvent};

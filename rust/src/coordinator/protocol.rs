@@ -105,9 +105,10 @@ impl Request {
 }
 
 impl Response {
-    /// v0 flat object. The parked terminal state rides as
-    /// `"state":"parked"` and is omitted otherwise, so non-parked
-    /// legacy responses are byte-identical to the pre-v1 wire.
+    /// v0 flat object. Terminal states ride as `"state":"parked"` /
+    /// `"rejected"` / `"shed"` and are omitted otherwise, so ordinary
+    /// legacy responses are byte-identical to the pre-v1 wire; rejects
+    /// additionally carry `retry_after_ms`.
     pub fn to_json(&self) -> Json {
         let mut fields = vec![
             ("id", Json::Num(self.id as f64)),
@@ -118,6 +119,13 @@ impl Response {
         ];
         if self.parked {
             fields.push(("state", Json::Str("parked".to_string())));
+        } else if self.rejected {
+            fields.push(("state", Json::Str("rejected".to_string())));
+        } else if self.shed {
+            fields.push(("state", Json::Str("shed".to_string())));
+        }
+        if let Some(ms) = self.retry_after_ms {
+            fields.push(("retry_after_ms", Json::Num(ms as f64)));
         }
         if let Some(e) = &self.error {
             fields.push(("error", Json::Str(e.clone())));
@@ -128,6 +136,7 @@ impl Response {
     /// Parse the flat fields of either generation (extra envelope keys
     /// are ignored).
     pub fn from_json(j: &Json) -> Result<Response, RequestError> {
+        let state = j.get("state").and_then(|v| v.as_str());
         Ok(Response {
             id: j.get("id").and_then(|v| v.as_i64()).ok_or(RequestError::MissingField("id"))?
                 as u64,
@@ -135,7 +144,13 @@ impl Response {
             non_eos_tokens: j.get("non_eos_tokens").and_then(|v| v.as_usize()).unwrap_or(0),
             latency_s: j.get("latency_s").and_then(|v| v.as_f64()).unwrap_or(0.0),
             queue_s: j.get("queue_s").and_then(|v| v.as_f64()).unwrap_or(0.0),
-            parked: j.get("state").and_then(|v| v.as_str()) == Some("parked"),
+            parked: state == Some("parked"),
+            rejected: state == Some("rejected"),
+            shed: state == Some("shed"),
+            retry_after_ms: j
+                .get("retry_after_ms")
+                .and_then(|v| v.as_i64())
+                .map(|v| v.max(0) as u64),
             error: j.get("error").and_then(|v| v.as_str()).map(|s| s.to_string()),
         })
     }
@@ -218,6 +233,28 @@ impl CommitEvent {
 // Client-line parsing (both generations) and server frame builders
 // ---------------------------------------------------------------------
 
+/// Requested rendering of the `stats` endpoint: the JSON snapshot
+/// (default, both generations) or the scrapeable Prometheus-style text
+/// body terminated by a literal `# EOF` line.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StatsFormat {
+    Json,
+    Prometheus,
+}
+
+impl StatsFormat {
+    /// Parse the optional `"format"` key of a stats line. Absent →
+    /// JSON; `"prometheus"`/`"text"` → the text rendering; anything
+    /// else is a protocol error.
+    fn parse(j: &Json) -> Result<StatsFormat, String> {
+        match j.get("format").and_then(|f| f.as_str()) {
+            None | Some("json") => Ok(StatsFormat::Json),
+            Some("prometheus") | Some("text") => Ok(StatsFormat::Prometheus),
+            Some(other) => Err(format!("unknown stats format '{other}'")),
+        }
+    }
+}
+
 /// A parsed client line. `v` records which generation the line spoke so
 /// the reply can match it.
 #[derive(Debug)]
@@ -225,7 +262,7 @@ pub enum ClientFrame {
     Generate { v: u64, request: Request },
     /// v1-only: generate with a streaming commit-event subscription.
     Subscribe { request: Request },
-    Stats { v: u64 },
+    Stats { v: u64, format: StatsFormat },
     Ping { v: u64 },
 }
 
@@ -256,13 +293,17 @@ pub fn parse_client_line(line: &str) -> Result<ClientFrame, WireError> {
             "subscribe" => Request::from_json(&j)
                 .map(|request| ClientFrame::Subscribe { request })
                 .map_err(|e| WireError { v: 1, id, msg: e.to_string() }),
-            "stats" => Ok(ClientFrame::Stats { v: 1 }),
+            "stats" => StatsFormat::parse(&j)
+                .map(|format| ClientFrame::Stats { v: 1, format })
+                .map_err(|msg| WireError { v: 1, id, msg }),
             "ping" => Ok(ClientFrame::Ping { v: 1 }),
             other => Err(WireError { v: 1, id, msg: format!("unknown type '{other}'") }),
         }
     } else if let Some(cmd) = j.get("cmd").and_then(|c| c.as_str()) {
         match cmd {
-            "stats" => Ok(ClientFrame::Stats { v: 0 }),
+            "stats" => StatsFormat::parse(&j)
+                .map(|format| ClientFrame::Stats { v: 0, format })
+                .map_err(|msg| WireError { v: 0, id: None, msg }),
             "ping" => Ok(ClientFrame::Ping { v: 0 }),
             other => Err(WireError { v: 0, id: None, msg: format!("unknown cmd '{other}'") }),
         }
@@ -300,6 +341,25 @@ pub fn response_frame(v: u64, resp: &Response) -> Json {
     } else {
         with_envelope("done", resp.to_json())
     }
+}
+
+/// Backpressure reject: the flat response (with `"state":"rejected"`
+/// and `retry_after_ms`) in v0 — legacy clients see it as an answered
+/// request — or a dedicated v1 `reject` envelope.
+pub fn reject_frame(v: u64, resp: &Response) -> Json {
+    if v == 0 {
+        resp.to_json()
+    } else {
+        with_envelope("reject", resp.to_json())
+    }
+}
+
+/// Connection-level busy error, sent (and the socket closed) when the
+/// server is at `max_connections`. Always the v1 error envelope — the
+/// connection never got to speak a generation, and the `busy:` prefix
+/// is the machine-matchable discriminator.
+pub fn busy_frame(max_connections: usize) -> Json {
+    error_frame(1, None, &format!("busy: connection limit {max_connections} reached"))
 }
 
 /// Error frame. v0 is exactly `{"error":msg}` with **no id** — legacy
@@ -381,6 +441,9 @@ mod tests {
             latency_s: 0.25,
             queue_s: 0.01,
             parked: false,
+            rejected: false,
+            shed: false,
+            retry_after_ms: None,
             error: Some("boom".into()),
         };
         let j = Json::parse(&r.to_json().to_string()).unwrap();
@@ -435,7 +498,7 @@ mod tests {
         // legacy control lines
         assert!(matches!(
             parse_client_line("{\"cmd\":\"stats\"}").unwrap(),
-            ClientFrame::Stats { v: 0 }
+            ClientFrame::Stats { v: 0, format: StatsFormat::Json }
         ));
         assert!(matches!(
             parse_client_line("{\"cmd\":\"ping\"}").unwrap(),
@@ -469,6 +532,68 @@ mod tests {
         assert_eq!((e.v, e.id), (1, Some(8)));
         let e = parse_client_line("not json").unwrap_err();
         assert_eq!(e.v, 0);
+    }
+
+    #[test]
+    fn reject_and_shed_states_roundtrip() {
+        let r = Response::rejected(11, 240);
+        let j = Json::parse(&r.to_json().to_string()).unwrap();
+        assert_eq!(j.get("state").unwrap().as_str(), Some("rejected"));
+        assert_eq!(j.get("retry_after_ms").unwrap().as_i64(), Some(240));
+        let r2 = Response::from_json(&j).unwrap();
+        assert!(r2.rejected && !r2.shed && !r2.parked);
+        assert_eq!(r2.retry_after_ms, Some(240));
+        assert!(r2.error.is_none());
+
+        let s = Response::shed(12, 0.5);
+        let j = Json::parse(&s.to_json().to_string()).unwrap();
+        assert_eq!(j.get("state").unwrap().as_str(), Some("shed"));
+        assert!(j.get("retry_after_ms").is_none());
+        let s2 = Response::from_json(&j).unwrap();
+        assert!(s2.shed && !s2.rejected && !s2.parked);
+    }
+
+    #[test]
+    fn reject_frame_matches_generation() {
+        let r = Response::rejected(7, 90);
+        // v0: flat response bytes — legacy clients see an answered request
+        let v0 = reject_frame(0, &r);
+        assert!(v0.get("v").is_none());
+        assert_eq!(v0.get("state").unwrap().as_str(), Some("rejected"));
+        // v1: a dedicated reject envelope with the retry hint
+        let v1 = reject_frame(1, &r);
+        assert_eq!(v1.get("type").unwrap().as_str(), Some("reject"));
+        assert_eq!(v1.get("v").unwrap().as_i64(), Some(1));
+        assert_eq!(v1.get("id").unwrap().as_i64(), Some(7));
+        assert_eq!(v1.get("retry_after_ms").unwrap().as_i64(), Some(90));
+    }
+
+    #[test]
+    fn busy_frame_is_v1_error_with_prefix() {
+        let f = busy_frame(64);
+        assert_eq!(f.get("type").unwrap().as_str(), Some("error"));
+        let msg = f.get("error").unwrap().as_str().unwrap();
+        assert!(msg.starts_with("busy: "), "machine-matchable prefix, got '{msg}'");
+        assert!(msg.contains("64"));
+    }
+
+    #[test]
+    fn stats_format_parses_both_generations() {
+        assert!(matches!(
+            parse_client_line("{\"cmd\":\"stats\",\"format\":\"prometheus\"}").unwrap(),
+            ClientFrame::Stats { v: 0, format: StatsFormat::Prometheus }
+        ));
+        assert!(matches!(
+            parse_client_line("{\"v\":1,\"type\":\"stats\",\"format\":\"text\"}").unwrap(),
+            ClientFrame::Stats { v: 1, format: StatsFormat::Prometheus }
+        ));
+        assert!(matches!(
+            parse_client_line("{\"v\":1,\"type\":\"stats\",\"format\":\"json\"}").unwrap(),
+            ClientFrame::Stats { v: 1, format: StatsFormat::Json }
+        ));
+        let e = parse_client_line("{\"v\":1,\"type\":\"stats\",\"format\":\"xml\"}").unwrap_err();
+        assert_eq!(e.v, 1);
+        assert!(e.msg.contains("unknown stats format 'xml'"));
     }
 
     #[test]

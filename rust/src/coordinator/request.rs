@@ -45,6 +45,19 @@ pub struct Response {
     /// canvas; `error` stays `None` (parking is an answered outcome,
     /// not a failure).
     pub parked: bool,
+    /// Terminal state for backpressure: the method queue was at
+    /// `max_queue_depth`, so the request was never admitted.
+    /// [`Response::retry_after_ms`] tells the client when capacity is
+    /// plausibly back.
+    pub rejected: bool,
+    /// Terminal state for load shedding: the request was queued but its
+    /// effective deadline passed before an engine slot opened, and it
+    /// opted into `park_on_miss` — decoding it could only produce an
+    /// instantly-evicted empty park.
+    pub shed: bool,
+    /// Backoff hint accompanying `rejected`: current queue depth ×
+    /// observed per-block service time, always finite and ≥ 1.
+    pub retry_after_ms: Option<u64>,
     pub error: Option<String>,
 }
 
@@ -60,7 +73,46 @@ impl Response {
             latency_s: 0.0,
             queue_s: 0.0,
             parked: false,
+            rejected: false,
+            shed: false,
+            retry_after_ms: None,
             error: Some(msg.into()),
+        }
+    }
+
+    /// A backpressure reject for `id`: never admitted, answered
+    /// immediately with a finite retry hint. Not an error — the client
+    /// should back off `retry_after_ms` and resubmit.
+    pub fn rejected(id: u64, retry_after_ms: u64) -> Response {
+        Response {
+            id,
+            text: String::new(),
+            non_eos_tokens: 0,
+            latency_s: 0.0,
+            queue_s: 0.0,
+            parked: false,
+            rejected: true,
+            shed: false,
+            retry_after_ms: Some(retry_after_ms.max(1)),
+            error: None,
+        }
+    }
+
+    /// A shed response for `id`: queued, but its deadline became
+    /// unmeetable before an engine slot opened. `queue_s` records how
+    /// long it waited before being dropped.
+    pub fn shed(id: u64, queue_s: f64) -> Response {
+        Response {
+            id,
+            text: String::new(),
+            non_eos_tokens: 0,
+            latency_s: 0.0,
+            queue_s,
+            parked: false,
+            rejected: false,
+            shed: true,
+            retry_after_ms: None,
+            error: None,
         }
     }
 }
@@ -263,6 +315,24 @@ mod tests {
         assert_eq!(r.id, 9);
         assert_eq!(r.error.as_deref(), Some("boom"));
         assert!(!r.parked);
+        assert!(!r.rejected && !r.shed);
+        assert_eq!(r.retry_after_ms, None);
         assert_eq!(r.non_eos_tokens, 0);
+    }
+
+    #[test]
+    fn reject_and_shed_helpers_shape_terminal_states() {
+        let r = Response::rejected(4, 120);
+        assert!(r.rejected && !r.shed && !r.parked);
+        assert_eq!(r.retry_after_ms, Some(120));
+        assert!(r.error.is_none(), "reject is backpressure, not failure");
+        // the hint is clamped to ≥ 1 so clients never busy-loop on 0
+        assert_eq!(Response::rejected(4, 0).retry_after_ms, Some(1));
+
+        let s = Response::shed(5, 0.25);
+        assert!(s.shed && !s.rejected && !s.parked);
+        assert_eq!(s.retry_after_ms, None);
+        assert!(s.error.is_none());
+        assert!((s.queue_s - 0.25).abs() < 1e-12);
     }
 }

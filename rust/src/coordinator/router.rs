@@ -33,13 +33,17 @@ use anyhow::Result;
 use crate::engine::{Backend, Method, RefMode, ReferenceBackend, REFERENCE_SEED};
 
 use super::batcher::Batcher;
-use super::metrics::Metrics;
+use super::metrics::{Metrics, WorkerGauge};
 use super::protocol::CommitEvent;
 use super::request::{Request, Response};
 use super::worker::{spawn_worker, AdmitReq, RowDone, WorkerCmd, WorkerEvent};
 
 /// Default cap on concurrently live worker threads (= engines).
 pub const DEFAULT_MAX_ENGINES: usize = 4;
+
+/// Default per-method queued-request bound. A full queue answers a
+/// typed reject with `retry_after_ms` instead of growing without limit.
+pub const DEFAULT_MAX_QUEUE_DEPTH: usize = 256;
 
 /// Frames delivered to a streaming subscription (see
 /// [`RouterHandle::subscribe`]): out-of-order commit events as blocks
@@ -83,6 +87,9 @@ pub struct Job {
 /// each worker's events arrive in the order it sent them).
 pub enum Msg {
     Submit(Job),
+    /// Detach request `id`: its client is gone, so free the engine slot
+    /// (or pull it out of the queue) without delivering a response.
+    Cancel { id: u64 },
     Shutdown,
     Worker(WorkerEvent),
 }
@@ -95,6 +102,9 @@ pub struct RouterOptions {
     pub max_wait: Duration,
     /// cap on live worker threads; more methods than workers multiplex
     pub max_engines: usize,
+    /// per-method queued-request bound; a full queue rejects with
+    /// `retry_after_ms` instead of enqueueing
+    pub max_queue_depth: usize,
 }
 
 impl Default for RouterOptions {
@@ -103,6 +113,7 @@ impl Default for RouterOptions {
             max_batch: 4,
             max_wait: Duration::from_millis(20),
             max_engines: DEFAULT_MAX_ENGINES,
+            max_queue_depth: DEFAULT_MAX_QUEUE_DEPTH,
         }
     }
 }
@@ -251,6 +262,15 @@ impl RouterHandle {
         Ok(rx.recv()?)
     }
 
+    /// Detach a request whose client is gone (a subscriber that
+    /// disconnected mid-stream): the row is pulled from the queue or
+    /// evicted from its engine, counted in the `cancelled` metric, and
+    /// no response is delivered. Benign no-op for unknown or
+    /// already-answered ids.
+    pub fn cancel(&self, id: u64) {
+        let _ = self.tx.send(Msg::Cancel { id });
+    }
+
     pub fn shutdown(mut self) -> Result<()> {
         let _ = self.tx.send(Msg::Shutdown);
         if let Some(j) = self.join.take() {
@@ -296,6 +316,9 @@ struct RowState {
     worker: Option<usize>,
     /// an eviction was already requested — never evict twice
     evict_sent: bool,
+    /// the subscriber disconnected: resolve the row silently into the
+    /// `cancelled` counter instead of answering it
+    detached: bool,
 }
 
 /// One worker thread as the scheduler sees it. Slots are never removed
@@ -325,6 +348,9 @@ struct Sched<B, F> {
     rows: HashMap<u64, RowState>,
     workers: Vec<WorkerSlot>,
     shutdown: bool,
+    /// EWMA of observed per-block decode seconds across all workers —
+    /// the service-time term in `retry_after_ms` (depth × per-block).
+    est_block_secs: Option<f64>,
     _backend: std::marker::PhantomData<fn() -> B>,
 }
 
@@ -340,15 +366,18 @@ where
     F: Fn() -> Result<B> + Send + Sync + 'static,
 {
     metrics.start_clock();
+    let mut batcher = Batcher::new(opts.max_batch, opts.max_wait);
+    batcher.max_depth = opts.max_queue_depth.max(1);
     let mut s = Sched::<B, F> {
         factory,
-        batcher: Batcher::new(opts.max_batch, opts.max_wait),
+        batcher,
         opts: RouterOptions { max_engines: opts.max_engines.max(1), ..opts },
         events,
         metrics,
         rows: HashMap::new(),
         workers: Vec::new(),
         shutdown: false,
+        est_block_secs: None,
         _backend: std::marker::PhantomData,
     };
     loop {
@@ -371,7 +400,8 @@ where
                 }
             }
         }
-        // One scheduling pass: evictions, engine starts, slot top-ups.
+        // One scheduling pass: sheds, evictions, engine starts, top-ups.
+        s.shed_blown();
         s.park_blown_rows();
         s.start_engines();
         s.top_up();
@@ -392,8 +422,10 @@ where
     /// re-polls instead of spinning at zero.
     fn poll_timeout(&self, now: Instant) -> Duration {
         let mut t = self.batcher.next_deadline(now).unwrap_or(Duration::from_millis(50));
+        // park_on_miss deadlines wake the scheduler whether the row is
+        // mid-decode (eviction) or still queued (shedding)
         for r in self.rows.values() {
-            if r.park_on_miss && !r.evict_sent && r.worker.is_some() {
+            if r.park_on_miss && !r.evict_sent {
                 t = t.min(r.deadline.saturating_duration_since(now));
             }
         }
@@ -403,12 +435,36 @@ where
     fn handle(&mut self, msg: Msg) {
         match msg {
             Msg::Submit(job) => self.enqueue(job),
+            Msg::Cancel { id } => self.cancel_row(id),
             Msg::Shutdown => self.shutdown = true,
             Msg::Worker(ev) => self.on_worker_event(ev),
         }
     }
 
+    /// Backoff hint for a reject: current queue depth × observed
+    /// per-block service time. Before the first observed block round
+    /// the batcher's flush window stands in, so the hint is always
+    /// finite (and clamped ≥ 1ms by [`Response::rejected`]).
+    fn retry_after_ms(&self, method: Method) -> u64 {
+        let per_block = self
+            .est_block_secs
+            .unwrap_or_else(|| self.opts.max_wait.as_secs_f64().max(0.001));
+        let depth = self.batcher.depth(method).max(1) as f64;
+        (depth * per_block * 1000.0).ceil().max(1.0) as u64
+    }
+
     fn enqueue(&mut self, job: Job) {
+        self.metrics.record_submitted();
+        // Bounded admission: a full method queue answers a typed reject
+        // with a retry hint instead of growing without limit. Checked
+        // only here — internal requeues (worker overflow bounces) are
+        // in-flight work and always re-enter the queue.
+        if self.batcher.is_full(job.request.method) {
+            self.metrics.record_rejected();
+            let hint = self.retry_after_ms(job.request.method);
+            job.reply.send_done(Response::rejected(job.request.id, hint));
+            return;
+        }
         let deadline = self.batcher.effective_deadline(&job.request, job.arrived);
         let row = RowState {
             reply: job.reply,
@@ -419,9 +475,52 @@ where
             admitted_at: None,
             worker: None,
             evict_sent: false,
+            detached: false,
         };
         self.rows.insert(job.request.id, row);
         self.batcher.push_at(job.request, job.arrived);
+        self.metrics.note_queue_depth(self.batcher.pending());
+    }
+
+    /// Resolve a cancel: a still-queued row leaves the batcher now; an
+    /// admitted row is evicted at the next block boundary; a row in
+    /// flight to a worker (admit sent, not yet confirmed) is only
+    /// flagged and resolves silently when it completes. All three paths
+    /// land in the `cancelled` counter exactly once.
+    fn cancel_row(&mut self, id: u64) {
+        let Some(r) = self.rows.get(&id) else { return };
+        if r.admitted_at.is_none() && r.worker.is_none() && self.batcher.remove(id).is_some() {
+            self.rows.remove(&id);
+            self.metrics.record_cancelled();
+            return;
+        }
+        let Some(r) = self.rows.get_mut(&id) else { return };
+        r.detached = true;
+        // only a confirmed engine admission can be evicted — the worker
+        // treats Evict for unknown ids as a no-op, so a row parked in a
+        // worker's cross-method pending queue must resolve at completion
+        if r.admitted_at.is_some() && !r.evict_sent {
+            if let Some(w) = r.worker {
+                r.evict_sent = true;
+                let _ = self.workers[w].tx.send(WorkerCmd::Evict { id });
+            }
+        }
+    }
+
+    /// Load shedding: queued `park_on_miss` rows whose effective
+    /// deadline already passed are answered as shed — decoding them
+    /// could only produce an instantly-evicted empty park, so the slot
+    /// goes to a request that can still meet its deadline. Counted
+    /// separately from `deadline_misses` (late completions).
+    fn shed_blown(&mut self) {
+        let now = Instant::now();
+        for req in self.batcher.drain_blown(now) {
+            if let Some(row) = self.rows.remove(&req.id) {
+                self.metrics.record_shed();
+                let queue_s = now.duration_since(row.arrived).as_secs_f64();
+                row.reply.send_done(Response::shed(req.id, queue_s));
+            }
+        }
     }
 
     fn on_worker_event(&mut self, ev: WorkerEvent) {
@@ -485,6 +584,12 @@ where
             WorkerEvent::Round { worker, method, commits, done, busy_secs } => {
                 if busy_secs > 0.0 {
                     self.metrics.record_busy(method.name(), busy_secs);
+                    // smooth the per-block service time the reject
+                    // hint is derived from (EWMA, α = 0.2)
+                    self.est_block_secs = Some(match self.est_block_secs {
+                        Some(est) => 0.8 * est + 0.2 * busy_secs,
+                        None => busy_secs,
+                    });
                 }
                 // self-correct after multiplexing: the worker reports
                 // which method it is actually decoding
@@ -637,6 +742,12 @@ where
     fn complete(&mut self, worker: usize, d: RowDone) {
         self.workers[worker].outstanding = self.workers[worker].outstanding.saturating_sub(1);
         let Some(row) = self.rows.remove(&d.id) else { return };
+        if row.detached {
+            // the subscriber is gone: resolve silently; dropping the
+            // reply sender is what disconnects the relay loop
+            self.metrics.record_cancelled();
+            return;
+        }
         let now = Instant::now();
         let started = row.admitted_at.unwrap_or(row.arrived);
         let queue_s = started.duration_since(row.arrived).as_secs_f64();
@@ -648,13 +759,19 @@ where
             latency_s,
             queue_s,
             parked: d.parked,
+            rejected: false,
+            shed: false,
+            retry_after_ms: None,
             error: None,
         };
         self.metrics.record_response(true, resp.non_eos_tokens, latency_s, queue_s);
         if d.parked {
             self.metrics.record_parked();
-        } else if now > row.deadline {
-            self.metrics.record_deadline_miss();
+        } else {
+            self.metrics.record_answered();
+            if now > row.deadline {
+                self.metrics.record_deadline_miss();
+            }
         }
         row.reply.send_done(resp);
     }
@@ -662,7 +779,12 @@ where
     /// Answer a request with an error and account for it.
     fn fail(&mut self, id: u64, err: &str) {
         if let Some(row) = self.rows.remove(&id) {
+            if row.detached {
+                self.metrics.record_cancelled();
+                return;
+            }
             self.metrics.record_response(false, 0, 0.0, 0.0);
+            self.metrics.record_answered();
             row.reply.send_done(Response::failure(id, err));
         }
     }
@@ -685,6 +807,18 @@ where
             })
             .collect();
         self.metrics.set_groups(depths, engines);
+        let workers: Vec<WorkerGauge> = self
+            .workers
+            .iter()
+            .map(|w| WorkerGauge {
+                outstanding: w.outstanding,
+                capacity: w.capacity,
+                assigned: w.assigned.map(|m| m.name()),
+                ready: w.ready,
+                dead: w.dead,
+            })
+            .collect();
+        self.metrics.set_workers(workers);
     }
 
     /// Orderly shutdown: stop every worker, join them, then drain the
@@ -707,6 +841,7 @@ where
                     let id = job.request.id;
                     job.reply.send_done(Response::failure(id, "router shut down"));
                 }
+                Msg::Cancel { .. } => {}
                 Msg::Shutdown => {}
             }
         }

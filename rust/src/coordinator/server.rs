@@ -1,45 +1,118 @@
 //! TCP server: line-delimited JSON in, frames out. One thread per
 //! connection (request parsing is trivial; decode happens on the
-//! router's worker threads). All byte shapes live in
-//! [`super::protocol`] — both generations are served on the same port:
-//! legacy v0 lines (`{"id":..,"prompt":[..]}`, `{"cmd":"stats"}`,
-//! `{"cmd":"ping"}`) answer in legacy shapes, and v1 envelopes
-//! (`{"v":1,"type":...}`) unlock `subscribe`, which streams per-row
-//! commit frames as blocks retire before the terminal `done` frame.
+//! router's worker threads), capped at
+//! [`Server::with_max_connections`] — connections over the cap are
+//! answered with one `busy` error frame and closed, so a connection
+//! flood degrades into fast refusals instead of unbounded threads.
+//! All byte shapes live in [`super::protocol`] — both generations are
+//! served on the same port: legacy v0 lines
+//! (`{"id":..,"prompt":[..]}`, `{"cmd":"stats"}`, `{"cmd":"ping"}`)
+//! answer in legacy shapes, and v1 envelopes (`{"v":1,"type":...}`)
+//! unlock `subscribe`, which streams per-row commit frames as blocks
+//! retire before the terminal `done` frame.
+//!
+//! Connection lifecycle is overload-safe: lines are read through a
+//! bounded reader ([`MAX_LINE_BYTES`]) so an oversized or non-UTF-8
+//! line answers a typed error frame and the connection lives on (only
+//! hard IO errors close it), and a subscriber that disconnects
+//! mid-stream cancels its row on the router so no engine slot keeps
+//! decoding into the void.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
 
 use anyhow::{Context, Result};
 
 use crate::util::json::Json;
 
-use super::protocol::{error_frame, parse_client_line, pong_frame, response_frame, stats_frame};
-use super::protocol::ClientFrame;
+use super::metrics::Metrics;
+use super::protocol::{
+    busy_frame, error_frame, parse_client_line, pong_frame, reject_frame, response_frame,
+    stats_frame,
+};
+use super::protocol::{ClientFrame, StatsFormat};
 use super::router::{RouterHandle, StreamFrame};
+
+/// Hard cap on one protocol line. A line that exceeds it is discarded
+/// (never buffered whole) and answered with a typed error frame — the
+/// connection survives.
+pub const MAX_LINE_BYTES: usize = 1 << 20;
+
+/// Default cap on concurrently served connections.
+pub const DEFAULT_MAX_CONNECTIONS: usize = 64;
 
 pub struct Server {
     listener: TcpListener,
     router: Arc<RouterHandle>,
+    max_connections: usize,
+    active: Arc<AtomicUsize>,
+}
+
+/// Releases one connection slot when the handler thread finishes, on
+/// every exit path (normal close, protocol error, panic unwind).
+struct ConnGuard {
+    active: Arc<AtomicUsize>,
+}
+
+impl Drop for ConnGuard {
+    fn drop(&mut self) {
+        self.active.fetch_sub(1, Ordering::SeqCst);
+    }
 }
 
 impl Server {
     pub fn bind(addr: &str, router: RouterHandle) -> Result<Server> {
         let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
-        Ok(Server { listener, router: Arc::new(router) })
+        Ok(Server {
+            listener,
+            router: Arc::new(router),
+            max_connections: DEFAULT_MAX_CONNECTIONS,
+            active: Arc::new(AtomicUsize::new(0)),
+        })
+    }
+
+    /// Cap concurrently served connections (min 1). Connections over
+    /// the cap get one `busy` error frame and are closed immediately.
+    pub fn with_max_connections(mut self, max: usize) -> Server {
+        self.max_connections = max.max(1);
+        self
     }
 
     pub fn local_addr(&self) -> Result<std::net::SocketAddr> {
         Ok(self.listener.local_addr()?)
     }
 
-    /// Serve until the process exits (each connection on its own thread).
+    /// The router's shared metrics — lets tests and operators poll the
+    /// capacity picture through the serving surface without holding a
+    /// router handle.
+    pub fn metrics(&self) -> Arc<Metrics> {
+        self.router.metrics.clone()
+    }
+
+    /// Claim a connection slot, or `None` at the cap.
+    fn try_admit(&self) -> Option<ConnGuard> {
+        let prev = self.active.fetch_add(1, Ordering::SeqCst);
+        if prev >= self.max_connections {
+            self.active.fetch_sub(1, Ordering::SeqCst);
+            return None;
+        }
+        Some(ConnGuard { active: self.active.clone() })
+    }
+
+    /// Serve until the process exits (each connection on its own
+    /// thread, at most `max_connections` concurrently).
     pub fn serve_forever(&self) -> Result<()> {
         for stream in self.listener.incoming() {
-            let stream = stream?;
+            let mut stream = stream?;
+            let Some(guard) = self.try_admit() else {
+                let _ = write_frame(&mut stream, &busy_frame(self.max_connections));
+                continue; // dropping the stream closes the refused socket
+            };
             let router = self.router.clone();
             std::thread::spawn(move || {
+                let _guard = guard;
                 let peer = stream.peer_addr().ok();
                 if let Err(e) = handle_conn(stream, &router) {
                     eprintln!("[server] connection {peer:?} error: {e:#}");
@@ -49,14 +122,20 @@ impl Server {
         Ok(())
     }
 
-    /// Serve exactly `n` connections then return (used by tests and the
-    /// serve_batch example to terminate cleanly).
+    /// Serve exactly `n` accepted connections then return (used by
+    /// tests and the serve_batch example to terminate cleanly). A
+    /// connection refused at the cap still counts toward `n`.
     pub fn serve_n(&self, n: usize) -> Result<()> {
         let mut handles = vec![];
         for stream in self.listener.incoming().take(n) {
-            let stream = stream?;
+            let mut stream = stream?;
+            let Some(guard) = self.try_admit() else {
+                let _ = write_frame(&mut stream, &busy_frame(self.max_connections));
+                continue;
+            };
             let router = self.router.clone();
             handles.push(std::thread::spawn(move || {
+                let _guard = guard;
                 let _ = handle_conn(stream, &router);
             }));
         }
@@ -74,24 +153,124 @@ fn write_frame(writer: &mut TcpStream, frame: &Json) -> Result<()> {
     Ok(())
 }
 
+/// Multi-line payload (the Prometheus-style stats body, already
+/// terminated by its `# EOF` line).
+fn write_text(writer: &mut TcpStream, body: &str) -> Result<()> {
+    writer.write_all(body.as_bytes())?;
+    writer.flush()?;
+    Ok(())
+}
+
+/// One logical read off the socket. Recoverable problems (oversized
+/// line, invalid UTF-8) are *values*, not errors — the caller answers
+/// a typed error frame and keeps the connection; only hard IO errors
+/// propagate.
+enum LineRead {
+    Line(String),
+    /// total byte length of a line that exceeded [`MAX_LINE_BYTES`]
+    /// (the payload itself was discarded, never buffered whole)
+    TooLong(usize),
+    BadUtf8,
+    Eof,
+}
+
+/// Read one `\n`-terminated line without ever buffering more than
+/// [`MAX_LINE_BYTES`] of it. Mirrors `BufRead::lines` semantics
+/// otherwise: a trailing `\r` is stripped, and a final unterminated
+/// line at EOF is still dispatched.
+fn read_line_capped<R: BufRead>(reader: &mut R) -> std::io::Result<LineRead> {
+    let mut buf: Vec<u8> = Vec::new();
+    let mut dropped = 0usize;
+    loop {
+        let (done, used) = {
+            let available = reader.fill_buf()?;
+            if available.is_empty() {
+                if buf.is_empty() && dropped == 0 {
+                    return Ok(LineRead::Eof);
+                }
+                (true, 0)
+            } else {
+                match available.iter().position(|&b| b == b'\n') {
+                    Some(i) => {
+                        if dropped == 0 && buf.len() + i <= MAX_LINE_BYTES {
+                            buf.extend_from_slice(&available[..i]);
+                        } else {
+                            dropped += i;
+                        }
+                        (true, i + 1)
+                    }
+                    None => {
+                        let n = available.len();
+                        if dropped == 0 && buf.len() + n <= MAX_LINE_BYTES {
+                            buf.extend_from_slice(available);
+                        } else {
+                            dropped += n;
+                        }
+                        (false, n)
+                    }
+                }
+            }
+        };
+        reader.consume(used);
+        if done {
+            if dropped > 0 {
+                return Ok(LineRead::TooLong(buf.len() + dropped));
+            }
+            if buf.last() == Some(&b'\r') {
+                buf.pop();
+            }
+            return Ok(match String::from_utf8(buf) {
+                Ok(s) => LineRead::Line(s),
+                Err(_) => LineRead::BadUtf8,
+            });
+        }
+    }
+}
+
 fn handle_conn(stream: TcpStream, router: &RouterHandle) -> Result<()> {
     let mut writer = stream.try_clone()?;
-    let reader = BufReader::new(stream);
-    for line in reader.lines() {
-        let line = line?;
+    let mut reader = BufReader::new(stream);
+    loop {
+        let line = match read_line_capped(&mut reader)? {
+            LineRead::Eof => return Ok(()),
+            LineRead::TooLong(n) => {
+                write_frame(
+                    &mut writer,
+                    &error_frame(
+                        1,
+                        None,
+                        &format!("line too long ({n} bytes > {MAX_LINE_BYTES} max)"),
+                    ),
+                )?;
+                continue;
+            }
+            LineRead::BadUtf8 => {
+                write_frame(&mut writer, &error_frame(1, None, "invalid utf-8"))?;
+                continue;
+            }
+            LineRead::Line(line) => line,
+        };
         if line.trim().is_empty() {
             continue;
         }
         match parse_client_line(&line) {
-            Ok(ClientFrame::Stats { v }) => {
-                write_frame(&mut writer, &stats_frame(v, router.metrics.snapshot()))?;
-            }
+            Ok(ClientFrame::Stats { v, format }) => match format {
+                StatsFormat::Json => {
+                    write_frame(&mut writer, &stats_frame(v, router.metrics.snapshot()))?;
+                }
+                StatsFormat::Prometheus => {
+                    write_text(&mut writer, &router.metrics.prometheus())?;
+                }
+            },
             Ok(ClientFrame::Ping { v }) => {
                 write_frame(&mut writer, &pong_frame(v))?;
             }
             Ok(ClientFrame::Generate { v, request }) => {
                 let id = request.id;
                 match router.call(request) {
+                    Ok(resp) if resp.rejected => {
+                        write_frame(&mut writer, &reject_frame(v, &resp))?;
+                    }
                     Ok(resp) => write_frame(&mut writer, &response_frame(v, &resp))?,
                     Err(e) => {
                         // router gone: v0 keeps the bare no-id error
@@ -103,25 +282,51 @@ fn handle_conn(stream: TcpStream, router: &RouterHandle) -> Result<()> {
             }
             Ok(ClientFrame::Subscribe { request }) => {
                 // v1-only: relay the row's commit stream as it arrives,
-                // then the terminal done frame; the connection then goes
-                // back to line dispatch.
+                // then the terminal frame; the connection then goes
+                // back to line dispatch. A write failure means the
+                // subscriber is gone: cancel the row on the router so
+                // its engine slot is reclaimed, keep draining the
+                // channel (writes suppressed) until it closes, then
+                // surface the IO error to end the connection.
                 let id = request.id;
                 let rx = router.subscribe(request);
+                let mut dead: Option<anyhow::Error> = None;
                 loop {
                     match rx.recv() {
-                        Ok(StreamFrame::Commit(ev)) => write_frame(&mut writer, &ev.to_json())?,
+                        Ok(StreamFrame::Commit(ev)) => {
+                            if dead.is_none() {
+                                if let Err(e) = write_frame(&mut writer, &ev.to_json()) {
+                                    router.cancel(id);
+                                    dead = Some(e);
+                                }
+                            }
+                        }
                         Ok(StreamFrame::Done(resp)) => {
-                            write_frame(&mut writer, &response_frame(1, &resp))?;
+                            if dead.is_none() {
+                                let frame = if resp.rejected {
+                                    reject_frame(1, &resp)
+                                } else {
+                                    response_frame(1, &resp)
+                                };
+                                write_frame(&mut writer, &frame)?;
+                            }
                             break;
                         }
                         Err(_) => {
-                            write_frame(
-                                &mut writer,
-                                &error_frame(1, Some(id), "router shut down"),
-                            )?;
+                            // channel closed with no terminal frame:
+                            // the row was cancelled or the router died
+                            if dead.is_none() {
+                                write_frame(
+                                    &mut writer,
+                                    &error_frame(1, Some(id), "router shut down"),
+                                )?;
+                            }
                             break;
                         }
                     }
+                }
+                if let Some(e) = dead {
+                    return Err(e);
                 }
             }
             Err(we) => {
@@ -129,5 +334,52 @@ fn handle_conn(stream: TcpStream, router: &RouterHandle) -> Result<()> {
             }
         }
     }
-    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    fn read(bytes: &[u8]) -> LineRead {
+        read_line_capped(&mut Cursor::new(bytes.to_vec())).unwrap()
+    }
+
+    #[test]
+    fn capped_reader_mirrors_lines_semantics() {
+        assert!(matches!(read(b""), LineRead::Eof));
+        match read(b"hello\nworld\n") {
+            LineRead::Line(s) => assert_eq!(s, "hello"),
+            _ => panic!("expected a line"),
+        }
+        // trailing \r is stripped, like BufRead::lines
+        match read(b"hello\r\n") {
+            LineRead::Line(s) => assert_eq!(s, "hello"),
+            _ => panic!("expected a line"),
+        }
+        // a final unterminated line is still dispatched
+        match read(b"partial") {
+            LineRead::Line(s) => assert_eq!(s, "partial"),
+            _ => panic!("expected a line"),
+        }
+    }
+
+    #[test]
+    fn capped_reader_flags_bad_utf8_and_oversize() {
+        assert!(matches!(read(&[0xff, 0xfe, b'\n']), LineRead::BadUtf8));
+        let huge = vec![b'x'; MAX_LINE_BYTES + 5];
+        let mut input = huge.clone();
+        input.push(b'\n');
+        input.extend_from_slice(b"next\n");
+        let mut cur = Cursor::new(input);
+        match read_line_capped(&mut cur).unwrap() {
+            LineRead::TooLong(n) => assert_eq!(n, MAX_LINE_BYTES + 5),
+            _ => panic!("expected TooLong"),
+        }
+        // the reader resynchronizes on the next line
+        match read_line_capped(&mut cur).unwrap() {
+            LineRead::Line(s) => assert_eq!(s, "next"),
+            _ => panic!("expected the next line"),
+        }
+    }
 }

@@ -33,6 +33,8 @@ fn main() -> Result<()> {
         .describe("max-batch", "serve: dynamic batcher max batch (env: SDLLM_MAX_BATCH)", Some("4"))
         .describe("max-wait-ms", "serve: batcher flush deadline (env: SDLLM_MAX_WAIT_MS)", Some("20"))
         .describe("max-engines", "serve: worker-thread cap (env: SDLLM_MAX_ENGINES)", Some("4"))
+        .describe("max-queue-depth", "serve: per-method admission cap (env: SDLLM_MAX_QUEUE_DEPTH)", Some("256"))
+        .describe("max-connections", "serve: concurrent-connection cap (env: SDLLM_MAX_CONNECTIONS)", Some("64"))
         .describe("deadline-ms", "serve: default SLA budget, 0 = none (env: SDLLM_DEADLINE_MS)", Some("0"))
         .describe("suite", "eval: suite jsonl name", Some("gsm-mini"))
         .describe("n", "eval: item count", Some("50"))
@@ -117,7 +119,7 @@ fn pjrt_router(_cfg: &ServeConfig) -> Result<RouterHandle> {
 fn serve(args: &Args) -> Result<()> {
     let cfg = ServeConfig::from_env_and_args(args)?;
     let router = router_for(&cfg)?;
-    let server = Server::bind(&cfg.addr, router)?;
+    let server = Server::bind(&cfg.addr, router)?.with_max_connections(cfg.max_connections);
     println!(
         "serving {} on {} (wire protocol v{PROTOCOL_VERSION}; line-delimited JSON; \
          {{\"cmd\":\"stats\"}} for metrics)",

@@ -223,6 +223,130 @@ fn reference_server_end_to_end_roundtrip() {
     assert!(snap.get("tokens_per_s").unwrap().as_f64().unwrap() > 0.0);
 }
 
+#[test]
+fn connection_survives_unreadable_lines() {
+    use std::io::{BufRead, BufReader, Write};
+    // recoverable read problems (bad UTF-8, oversized line) answer a
+    // typed error frame and the connection keeps serving; only hard IO
+    // errors close it
+    let router = RouterHandle::spawn_reference(2, Duration::from_millis(5));
+    let server = Server::bind("127.0.0.1:0", router).unwrap();
+    let addr = server.local_addr().unwrap().to_string();
+    let handle = std::thread::spawn(move || server.serve_n(1));
+
+    let mut stream = std::net::TcpStream::connect(&addr).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut read_line = |reader: &mut BufReader<std::net::TcpStream>| {
+        let mut line = String::new();
+        assert!(reader.read_line(&mut line).unwrap() > 0, "server closed the connection");
+        line
+    };
+
+    stream.write_all(&[0xff, 0xfe, 0x80, b'\n']).unwrap();
+    let frame = read_line(&mut reader);
+    assert!(frame.contains("invalid utf-8"), "expected a utf-8 error frame, got {frame}");
+
+    let mut huge = vec![b'{'; streaming_dllm::coordinator::MAX_LINE_BYTES + 2];
+    huge.push(b'\n');
+    stream.write_all(&huge).unwrap();
+    let frame = read_line(&mut reader);
+    assert!(frame.contains("line too long"), "expected an oversize error frame, got {frame}");
+
+    // the same connection still serves real traffic afterwards
+    stream.write_all(b"{\"cmd\":\"ping\"}\n").unwrap();
+    let frame = read_line(&mut reader);
+    assert!(frame.contains("pong"), "expected a pong after recovery, got {frame}");
+    let oracle = ReferenceBackend::toy(REFERENCE_SEED);
+    let items = synthetic_suite(&oracle, 1, 77);
+    let req = Request {
+        id: 9,
+        prompt: items[0].prompt.clone(),
+        method: Method::Streaming,
+        gen_len: 64,
+        deadline_ms: None,
+        park_on_miss: false,
+    };
+    let mut line = req.to_json().to_string();
+    line.push('\n');
+    stream.write_all(line.as_bytes()).unwrap();
+    let frame = read_line(&mut reader);
+    assert!(
+        frame.contains("\"text\""),
+        "expected a served response after recovery, got {frame}"
+    );
+
+    drop(reader);
+    drop(stream);
+    handle.join().unwrap().unwrap();
+}
+
+#[test]
+fn connection_cap_answers_busy_and_closes() {
+    use std::io::{BufRead, BufReader};
+    // over max_connections the server answers one v1 busy error frame
+    // and closes instead of spawning an unbounded handler thread
+    let router = RouterHandle::spawn_reference(2, Duration::from_millis(5));
+    let server = Server::bind("127.0.0.1:0", router).unwrap().with_max_connections(1);
+    let addr = server.local_addr().unwrap().to_string();
+    let handle = std::thread::spawn(move || server.serve_n(2));
+
+    // the first connection occupies the only slot (roundtrip proves the
+    // handler is live before the second connection races it)
+    let mut first = Client::connect(&addr).unwrap();
+    assert!(first.stats().unwrap().get("requests_ok").is_some());
+
+    let second = std::net::TcpStream::connect(&addr).unwrap();
+    let mut reader = BufReader::new(second);
+    let mut line = String::new();
+    assert!(reader.read_line(&mut line).unwrap() > 0, "no busy frame on the refused socket");
+    assert!(
+        line.contains("busy: connection limit 1"),
+        "expected a busy error frame, got {line}"
+    );
+    line.clear();
+    assert_eq!(reader.read_line(&mut line).unwrap(), 0, "refused socket must be closed");
+
+    // the occupied slot keeps working, then frees cleanly
+    assert!(first.stats().unwrap().get("requests_ok").is_some());
+    drop(first);
+    handle.join().unwrap().unwrap();
+}
+
+#[test]
+fn stats_prometheus_text_over_tcp() {
+    let oracle = ReferenceBackend::toy(REFERENCE_SEED);
+    let items = synthetic_suite(&oracle, 1, 31);
+    let router = RouterHandle::spawn_reference(2, Duration::from_millis(5));
+    let server = Server::bind("127.0.0.1:0", router).unwrap();
+    let addr = server.local_addr().unwrap().to_string();
+    let handle = std::thread::spawn(move || server.serve_n(1));
+
+    let mut client = Client::connect(&addr).unwrap();
+    let resp = client
+        .call(&Request {
+            id: 1,
+            prompt: items[0].prompt.clone(),
+            method: Method::Streaming,
+            gen_len: 64,
+            deadline_ms: None,
+            park_on_miss: false,
+        })
+        .unwrap();
+    assert!(resp.error.is_none(), "{:?}", resp.error);
+
+    let body = client.stats_text().unwrap();
+    assert!(body.ends_with("# EOF\n"), "text stats must end with the terminator");
+    assert!(body.contains("# TYPE sdllm_submitted counter\nsdllm_submitted 1\n"), "{body}");
+    assert!(body.contains("sdllm_answered 1\n"), "{body}");
+    assert!(body.contains("sdllm_rejected 0\n"), "{body}");
+
+    // line framing is intact: the same connection still answers JSON
+    let stats = client.stats().unwrap();
+    assert_eq!(stats.get("requests_ok").unwrap().as_usize(), Some(1));
+    drop(client);
+    handle.join().unwrap().unwrap();
+}
+
 /// Reference backend with an artificial per-decode delay — makes batch
 /// runs take long enough that mid-flight admission is deterministic to
 /// observe, without depending on wall-clock luck.

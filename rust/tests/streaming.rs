@@ -9,6 +9,9 @@
 //! 3. A `park_on_miss` request whose deadline blows mid-decode is
 //!    evicted at a block boundary and answered with the `parked`
 //!    terminal state — without disturbing its batch neighbors.
+//! 4. A subscriber that disconnects mid-stream gets its row cancelled:
+//!    the server detects the dead connection on the failed relay write
+//!    and the worker evicts the row instead of decoding into the void.
 
 use std::time::Duration;
 
@@ -262,4 +265,71 @@ fn blown_deadline_parks_row_without_disturbing_neighbors() {
         "a parked row is answered on time by definition — it is not a miss"
     );
     assert_eq!(snap.get("requests_ok").unwrap().as_usize(), Some(2));
+}
+
+#[test]
+fn tcp_subscriber_disconnect_cancels_row_and_frees_worker() {
+    use std::io::{BufRead, BufReader, Write};
+
+    // 32 slow block rounds (~200ms): the subscriber walks away after
+    // two commits, so the worker must NOT decode the remaining ~30
+    // rounds into the void — the server cancels the row on the first
+    // failed relay write and the router evicts it at a block boundary.
+    let boundary = 300usize;
+    let router = RouterHandle::spawn_with(
+        move || {
+            Ok(SlowBackend {
+                inner: ReferenceBackend::scripted(boundary),
+                delay: Duration::from_millis(6),
+            })
+        },
+        2,
+        Duration::from_millis(1),
+    );
+    let server = Server::bind("127.0.0.1:0", router).unwrap();
+    let metrics = server.metrics();
+    let addr = server.local_addr().unwrap().to_string();
+    let handle = std::thread::spawn(move || server.serve_n(1));
+
+    let req = Request {
+        id: 7,
+        prompt: vec![2; 4],
+        method: Method::Streaming,
+        gen_len: 256,
+        deadline_ms: None,
+        park_on_miss: false,
+    };
+    let mut stream = std::net::TcpStream::connect(&addr).unwrap();
+    let mut line = req.to_frame("subscribe").to_string();
+    line.push('\n');
+    stream.write_all(line.as_bytes()).unwrap();
+    stream.flush().unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    for _ in 0..2 {
+        let mut frame = String::new();
+        assert!(reader.read_line(&mut frame).unwrap() > 0, "stream ended before any commit");
+        assert!(frame.contains("\"commit\""), "expected a commit frame, got {frame}");
+    }
+    drop(reader);
+    drop(stream); // mid-stream disconnect
+
+    let t0 = std::time::Instant::now();
+    loop {
+        if metrics.snapshot().get("cancelled").unwrap().as_usize() == Some(1) {
+            break;
+        }
+        assert!(
+            t0.elapsed() < Duration::from_secs(30),
+            "row was never cancelled after the subscriber disconnected"
+        );
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    handle.join().unwrap().unwrap();
+    let snap = metrics.snapshot();
+    assert_eq!(
+        snap.get("answered").unwrap().as_usize(),
+        Some(0),
+        "a cancelled subscription must not count as answered"
+    );
+    assert_eq!(snap.get("requests_ok").unwrap().as_usize(), Some(0));
 }

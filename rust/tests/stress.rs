@@ -13,6 +13,11 @@
 //! 5. streaming: a subscribed row's commit events carry gapless
 //!    per-row sequence numbers from 0, and replaying their writes onto
 //!    an all-mask canvas reassembles exactly the terminal text
+//! 6. overload: bounded admission rejects exactly the overflow past
+//!    `max_queue_depth` (with a finite `retry_after_ms`), queued
+//!    parkable rows with blown deadlines are shed, and the conservation
+//!    identity `submitted == answered + rejected + shed + parked +
+//!    cancelled` holds through burst, saturation and drain-to-idle
 //!
 //! Seeds are printed per schedule and embedded in every assertion, so a
 //! CI flake bisects to a single reproducible seed:
@@ -24,10 +29,11 @@ use std::sync::mpsc::Receiver;
 use std::time::{Duration, Instant};
 
 use streaming_dllm::coordinator::{
-    Batcher, Request, Response, RouterHandle, ServeConfig, StreamFrame,
+    Batcher, Metrics, Request, Response, RouterHandle, RouterOptions, ServeConfig, StreamFrame,
 };
 use streaming_dllm::engine::{
-    Backend, GenConfig, Generator, Method, ReferenceBackend, SeqState, REFERENCE_SEED,
+    Backend, DecodeOut, GenConfig, Generator, Method, RefKv, ReferenceBackend, SeqState,
+    SpecialTokens, REFERENCE_SEED,
 };
 use streaming_dllm::util::rng::Rng;
 
@@ -222,7 +228,379 @@ fn randomized_schedules_answer_every_request_exactly_once() {
             ok,
             "seed {seed}: every admission must be answered ok (toy backend never poisons)"
         );
+        // overload accounting stays inert on an in-capacity schedule:
+        // nothing rejected/shed/cancelled, and the conservation identity
+        // submitted == answered + rejected + shed + parked + cancelled
+        // degenerates to submitted == answered
+        assert_eq!(get("submitted"), planned.len(), "seed {seed}: submitted != planned");
+        assert_eq!(get("rejected"), 0, "seed {seed}: in-capacity schedule rejected requests");
+        assert_eq!(get("shed"), 0, "seed {seed}: in-capacity schedule shed requests");
+        assert_eq!(get("cancelled"), 0, "seed {seed}: no subscriber disconnected");
+        assert_eq!(get("parked"), 0, "seed {seed}: no park_on_miss requests planned");
+        assert_eq!(get("answered"), ok + err, "seed {seed}: answered != ok + err");
+        assert_eq!(
+            get("submitted"),
+            get("answered") + get("rejected") + get("shed") + get("parked") + get("cancelled"),
+            "seed {seed}: request conservation identity violated"
+        );
     }
+}
+
+// ---------------------------------------------------------------------
+// Overload suite: burst above capacity, sustained saturation with
+// unmeetable deadlines, and drain-to-idle recovery. Built on a slowed
+// reference backend so in-flight batches hold their engine slots long
+// enough for admission decisions to be structural, not racy.
+// ---------------------------------------------------------------------
+
+/// Reference backend whose decode costs a fixed wall-clock delay per
+/// block round — keeps the single worker saturated while the tests
+/// flood the queue.
+struct SlowBackend {
+    inner: ReferenceBackend,
+    delay: Duration,
+}
+
+impl Backend for SlowBackend {
+    type Kv = RefKv;
+
+    fn special(&self) -> SpecialTokens {
+        self.inner.special()
+    }
+
+    fn wants_p0(&self) -> bool {
+        self.inner.wants_p0()
+    }
+
+    fn pick_batch(&self, need: usize) -> Option<usize> {
+        self.inner.pick_batch(need)
+    }
+
+    fn pick_prefix(&self, need: usize) -> Option<usize> {
+        self.inner.pick_prefix(need)
+    }
+
+    fn pick_query(&self, need: usize) -> Option<usize> {
+        self.inner.pick_query(need)
+    }
+
+    fn pick_seq(&self, need: usize) -> Option<usize> {
+        self.inner.pick_seq(need)
+    }
+
+    fn prefill(
+        &self,
+        batch: usize,
+        p_bucket: usize,
+        tokens: &[i32],
+        pos: &[i32],
+        valid: &[i32],
+        p0: Option<&[i32]>,
+    ) -> anyhow::Result<RefKv> {
+        self.inner.prefill(batch, p_bucket, tokens, pos, valid, p0)
+    }
+
+    fn decode(
+        &self,
+        kv: &RefKv,
+        q_bucket: usize,
+        q_tok: &[i32],
+        q_pos: &[i32],
+        q_valid: &[i32],
+    ) -> anyhow::Result<DecodeOut> {
+        std::thread::sleep(self.delay);
+        self.inner.decode(kv, q_bucket, q_tok, q_pos, q_valid)
+    }
+
+    fn logits(
+        &self,
+        batch: usize,
+        s_bucket: usize,
+        tokens: &[i32],
+        pos: &[i32],
+        valid: &[i32],
+        p0: Option<&[i32]>,
+    ) -> anyhow::Result<DecodeOut> {
+        std::thread::sleep(self.delay);
+        self.inner.logits(batch, s_bucket, tokens, pos, valid, p0)
+    }
+
+    fn detokenize(&self, ids: &[i32]) -> String {
+        self.inner.detokenize(ids)
+    }
+}
+
+/// One slow worker, two engine slots, a bounded queue of `depth`.
+fn slow_router(depth: usize) -> RouterHandle {
+    RouterHandle::spawn_opts(
+        move || {
+            Ok(SlowBackend {
+                // content past the generation region → no early exit
+                inner: ReferenceBackend::scripted(300),
+                delay: Duration::from_millis(6),
+            })
+        },
+        RouterOptions {
+            max_batch: 2,
+            max_wait: Duration::from_millis(1),
+            max_engines: 1,
+            max_queue_depth: depth,
+        },
+    )
+}
+
+/// A long-running streaming request: 256 tokens = 32 block rounds at
+/// 6ms each, so the worker stays busy for ~200ms of wall clock.
+fn long_req(id: u64) -> Request {
+    Request {
+        id,
+        prompt: vec![2; 4],
+        method: Method::Streaming,
+        gen_len: 256,
+        deadline_ms: None,
+        park_on_miss: false,
+    }
+}
+
+/// Poll a snapshot counter until it reaches `want` (the router runs on
+/// its own threads; admission is observable, not synchronous).
+fn wait_counter(metrics: &Metrics, key: &str, want: usize) {
+    let t0 = Instant::now();
+    loop {
+        let got = metrics.snapshot().get(key).unwrap().as_usize().unwrap();
+        if got >= want {
+            return;
+        }
+        assert!(t0.elapsed() < Duration::from_secs(30), "{key} stuck at {got}, want {want}");
+        std::thread::sleep(Duration::from_millis(2));
+    }
+}
+
+/// Poll until the capacity gauges report a fully drained router: every
+/// method queue empty, no active rows, every worker at 0 outstanding.
+fn wait_idle(seed: u64, metrics: &Metrics) {
+    let t0 = Instant::now();
+    loop {
+        let snap = metrics.snapshot();
+        let queued: usize = snap
+            .get("group_depth")
+            .and_then(|g| g.as_obj())
+            .map(|g| {
+                g.values()
+                    .map(|v| {
+                        v.get("queued").unwrap().as_usize().unwrap()
+                            + v.get("active").unwrap().as_usize().unwrap()
+                    })
+                    .sum()
+            })
+            .unwrap_or(0);
+        let outstanding: usize = snap
+            .get("workers")
+            .and_then(|w| w.as_arr())
+            .map(|ws| {
+                ws.iter().map(|w| w.get("outstanding").unwrap().as_usize().unwrap()).sum()
+            })
+            .unwrap_or(0);
+        if queued == 0 && outstanding == 0 {
+            return;
+        }
+        assert!(
+            t0.elapsed() < Duration::from_secs(30),
+            "seed {seed}: router never drained to idle \
+             (queued+active {queued}, outstanding {outstanding})"
+        );
+        std::thread::sleep(Duration::from_millis(2));
+    }
+}
+
+#[test]
+fn overload_burst_bounds_queue_rejects_with_hints_and_drains() {
+    let cfg = stress_cfg();
+    let seed = cfg.stress_seed_base.wrapping_add(0xB00);
+    let mut rng = Rng::new(seed);
+    let depth = rng.range(3, 6);
+    let router = slow_router(depth);
+    let metrics = router.metrics.clone();
+
+    // saturate both engine slots with long decodes, observably admitted
+    let mut rxs = vec![router.submit(long_req(0)), router.submit(long_req(1))];
+    wait_counter(&metrics, "admissions", 2);
+
+    // burst at 4× the queue capacity while no slot can free for ~200ms:
+    // exactly `depth` enqueue, the rest must reject with a retry hint
+    let flood = 4 * depth;
+    for id in 2..(2 + flood) as u64 {
+        rxs.push(router.submit(long_req(id)));
+    }
+
+    let mut answered_ok = 0usize;
+    let mut rejected = 0usize;
+    for rx in &rxs {
+        let resp = rx
+            .recv_timeout(Duration::from_secs(120))
+            .unwrap_or_else(|e| panic!("seed {seed}: burst response lost: {e}"));
+        if resp.rejected {
+            rejected += 1;
+            let hint = resp.retry_after_ms.unwrap_or_else(|| {
+                panic!("seed {seed}: reject for {} carried no retry_after_ms", resp.id)
+            });
+            assert!(hint >= 1, "seed {seed}: retry_after_ms must be >= 1, got {hint}");
+            assert!(resp.error.is_none(), "seed {seed}: reject is backpressure, not failure");
+        } else {
+            assert!(
+                resp.error.is_none(),
+                "seed {seed}: admitted request {} failed: {:?}",
+                resp.id,
+                resp.error
+            );
+            answered_ok += 1;
+        }
+    }
+    assert_eq!(
+        rejected,
+        flood - depth,
+        "seed {seed}: burst must reject exactly the overflow past max_queue_depth {depth}"
+    );
+    assert_eq!(answered_ok, 2 + depth, "seed {seed}: everything admitted must answer ok");
+
+    // drain to idle, then the router must accept fresh work again
+    wait_idle(seed, &metrics);
+    let resp = router
+        .submit(long_req(999))
+        .recv_timeout(Duration::from_secs(120))
+        .unwrap_or_else(|e| panic!("seed {seed}: post-drain request lost: {e}"));
+    assert!(
+        !resp.rejected && resp.error.is_none(),
+        "seed {seed}: post-drain request must be admitted and answered"
+    );
+
+    router.shutdown().unwrap_or_else(|e| panic!("seed {seed}: router died: {e:#}"));
+    let snap = metrics.snapshot();
+    let get = |k: &str| snap.get(k).unwrap().as_usize().unwrap();
+    assert_eq!(get("submitted"), 2 + flood + 1, "seed {seed}: submitted miscount");
+    assert_eq!(get("rejected"), rejected, "seed {seed}: rejected miscount");
+    assert_eq!(get("answered"), answered_ok + 1, "seed {seed}: answered miscount");
+    assert_eq!(
+        get("submitted"),
+        get("answered") + get("rejected") + get("shed") + get("parked") + get("cancelled"),
+        "seed {seed}: request conservation identity violated under burst"
+    );
+    assert!(
+        get("queue_depth_peak") <= depth,
+        "seed {seed}: queue depth peak {} exceeded max_queue_depth {depth}",
+        get("queue_depth_peak")
+    );
+}
+
+#[test]
+fn sustained_saturation_sheds_unmeetable_parkable_rows() {
+    let cfg = stress_cfg();
+    let seed = cfg.stress_seed_base.wrapping_add(0x5ED);
+    let router = slow_router(64);
+    let metrics = router.metrics.clone();
+
+    // both slots busy for ~200ms before the doomed rows arrive
+    let long_rxs = vec![router.submit(long_req(0)), router.submit(long_req(1))];
+    wait_counter(&metrics, "admissions", 2);
+
+    // parkable rows whose 1ms budget blows while queued: decoding them
+    // could only produce an instantly-evicted empty park, so the
+    // deadline-aware shedder must answer them as shed — counted apart
+    // from deadline_misses (late completions)
+    let doomed = 6usize;
+    let shed_rxs: Vec<_> = (10..10 + doomed as u64)
+        .map(|id| {
+            router.submit(Request {
+                id,
+                prompt: vec![2; 4],
+                method: Method::Streaming,
+                gen_len: 16,
+                deadline_ms: Some(1),
+                park_on_miss: true,
+            })
+        })
+        .collect();
+    for rx in &shed_rxs {
+        let resp = rx
+            .recv_timeout(Duration::from_secs(60))
+            .unwrap_or_else(|e| panic!("seed {seed}: shed response lost: {e}"));
+        assert!(
+            resp.shed,
+            "seed {seed}: queued parkable row {} with a blown deadline must shed, \
+             got parked={} rejected={} err={:?}",
+            resp.id, resp.parked, resp.rejected, resp.error
+        );
+        assert!(resp.error.is_none(), "seed {seed}: shed is load management, not failure");
+    }
+    for rx in &long_rxs {
+        let resp = rx
+            .recv_timeout(Duration::from_secs(120))
+            .unwrap_or_else(|e| panic!("seed {seed}: saturating response lost: {e}"));
+        assert!(resp.error.is_none(), "seed {seed}: saturating row failed: {:?}", resp.error);
+    }
+
+    wait_idle(seed, &metrics);
+    router.shutdown().unwrap_or_else(|e| panic!("seed {seed}: router died: {e:#}"));
+    let snap = metrics.snapshot();
+    let get = |k: &str| snap.get(k).unwrap().as_usize().unwrap();
+    assert_eq!(get("shed"), doomed, "seed {seed}: every doomed row must be shed exactly once");
+    assert_eq!(get("rejected"), 0, "seed {seed}: queue depth 64 must not reject");
+    assert_eq!(get("answered"), 2, "seed {seed}: only the saturating rows answer normally");
+    assert_eq!(
+        get("submitted"),
+        get("answered") + get("rejected") + get("shed") + get("parked") + get("cancelled"),
+        "seed {seed}: request conservation identity violated under saturation"
+    );
+}
+
+#[test]
+fn cancelled_subscriber_is_detached_and_conserved() {
+    let cfg = stress_cfg();
+    let seed = cfg.stress_seed_base.wrapping_add(0xCA2);
+    let router = slow_router(64);
+    let metrics = router.metrics.clone();
+
+    // a subscribed long row, admitted, then cancelled mid-decode: the
+    // stream must close without a Done frame and the row must be
+    // accounted as cancelled, not answered
+    let rx = router.subscribe(long_req(0));
+    wait_counter(&metrics, "admissions", 1);
+    router.cancel(0);
+    let t0 = Instant::now();
+    loop {
+        match rx.recv_timeout(Duration::from_secs(60)) {
+            Ok(StreamFrame::Commit(_)) => {
+                assert!(
+                    t0.elapsed() < Duration::from_secs(60),
+                    "seed {seed}: cancelled stream kept committing"
+                );
+            }
+            Ok(StreamFrame::Done(resp)) => {
+                panic!("seed {seed}: cancelled row must not answer, got {resp:?}")
+            }
+            Err(_) => break, // sender dropped: the row was detached
+        }
+    }
+
+    // a queued (never admitted) subscription cancels synchronously too
+    let rx2 = router.subscribe(long_req(1));
+    let rx3 = router.subscribe(long_req(2));
+    wait_counter(&metrics, "submitted", 3);
+    router.cancel(2);
+    wait_counter(&metrics, "cancelled", 1); // at least the queued one
+
+    drop(rx2);
+    wait_idle(seed, &metrics);
+    router.shutdown().unwrap_or_else(|e| panic!("seed {seed}: router died: {e:#}"));
+    drop(rx3);
+    let snap = metrics.snapshot();
+    let get = |k: &str| snap.get(k).unwrap().as_usize().unwrap();
+    assert_eq!(get("cancelled"), 2, "seed {seed}: both cancelled rows must be counted");
+    assert_eq!(
+        get("submitted"),
+        get("answered") + get("rejected") + get("shed") + get("parked") + get("cancelled"),
+        "seed {seed}: request conservation identity violated under cancellation"
+    );
 }
 
 // ---------------------------------------------------------------------
@@ -237,6 +615,7 @@ struct Shadow {
     method_ix: usize,
     deadline: Instant,
     arrived: Instant,
+    park: bool,
 }
 
 impl Shadow {
@@ -254,33 +633,55 @@ fn randomized_batcher_respects_deadline_order_and_conserves_requests() {
         let mut rng = Rng::new(seed ^ 0xBA7C_4E12);
         let max_batch = rng.range(1, 6);
         let mut b = Batcher::new(max_batch, Duration::from_millis(5));
+        b.max_depth = rng.range(2, 6);
         let methods = Method::all();
         let t0 = Instant::now();
         let mut clock_ms = 0u64;
         let mut next_id = 0u64;
         let mut model: Vec<Shadow> = vec![];
+        // every id that left the batcher, by any exit: popped, removed
+        // (cancel) or shed (drain_blown) — conservation is checked over
+        // the union
         let mut popped_ids: Vec<u64> = vec![];
         let mut pushed = 0usize;
 
         for _ in 0..rng.range(30, 80) {
             clock_ms += 1; // distinct arrivals → total order, no ties
             let now = t0 + Duration::from_millis(clock_ms);
-            match rng.below(3) {
+            match rng.below(5) {
                 0 => {
                     let method_ix = rng.below(methods.len());
-                    let deadline_ms = rng.bool(0.6).then(|| rng.range(0, 40) as u64);
+                    // is_full must agree with the shadow queue depth —
+                    // the router's backpressure predicate rides on it
+                    let queued = model.iter().filter(|e| e.method_ix == method_ix).count();
+                    assert_eq!(
+                        b.is_full(methods[method_ix]),
+                        queued >= b.max_depth,
+                        "seed {seed}: is_full disagreed with model depth {queued}"
+                    );
+                    if queued >= b.max_depth {
+                        continue; // the router would reject here
+                    }
+                    let park = rng.bool(0.3);
+                    let deadline_ms = if park {
+                        // tight enough that the advancing clock blows
+                        // some of them before a drain_blown op
+                        Some(rng.range(0, 30) as u64)
+                    } else {
+                        rng.bool(0.6).then(|| rng.range(0, 40) as u64)
+                    };
                     let req = Request {
                         id: next_id,
                         prompt: vec![2],
                         method: methods[method_ix],
                         gen_len: *rng.choose(&[16usize, 64]),
                         deadline_ms,
-                        park_on_miss: false,
+                        park_on_miss: park,
                     };
                     let deadline =
                         now + deadline_ms.map(Duration::from_millis).unwrap_or(b.default_sla);
                     b.push_at(req, now);
-                    model.push(Shadow { id: next_id, method_ix, deadline, arrived: now });
+                    model.push(Shadow { id: next_id, method_ix, deadline, arrived: now, park });
                     next_id += 1;
                     pushed += 1;
                 }
@@ -309,7 +710,7 @@ fn randomized_batcher_respects_deadline_order_and_conserves_requests() {
                         ),
                     }
                 }
-                _ => {
+                2 => {
                     if let Some((method, batch)) = b.pop_ready(now, &[]) {
                         assert!(
                             !batch.is_empty() && batch.len() <= max_batch,
@@ -338,6 +739,38 @@ fn randomized_batcher_respects_deadline_order_and_conserves_requests() {
                             popped_ids.push(r.id);
                         }
                     }
+                }
+                3 => {
+                    // cancel: remove one known queued id; an unknown id
+                    // must be a no-op
+                    assert!(b.remove(u64::MAX).is_none(), "seed {seed}: removed a ghost");
+                    if !model.is_empty() {
+                        let pick = model[rng.below(model.len())];
+                        let got = b.remove(pick.id).unwrap_or_else(|| {
+                            panic!("seed {seed}: remove lost queued id {}", pick.id)
+                        });
+                        assert_eq!(got.id, pick.id, "seed {seed}: remove pulled the wrong row");
+                        model.retain(|e| e.id != pick.id);
+                        popped_ids.push(pick.id);
+                    }
+                }
+                _ => {
+                    // shed: drain_blown must take exactly the parkable
+                    // rows whose effective deadline has passed
+                    let mut want: Vec<u64> = model
+                        .iter()
+                        .filter(|e| e.park && now > e.deadline)
+                        .map(|e| e.id)
+                        .collect();
+                    want.sort_unstable();
+                    let mut got: Vec<u64> = b.drain_blown(now).iter().map(|r| r.id).collect();
+                    got.sort_unstable();
+                    assert_eq!(
+                        got, want,
+                        "seed {seed}: drain_blown disagreed with the shadow model"
+                    );
+                    model.retain(|e| !(e.park && now > e.deadline));
+                    popped_ids.extend(got);
                 }
             }
         }
