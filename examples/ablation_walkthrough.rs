@@ -37,8 +37,8 @@ fn main() -> Result<()> {
         [(false, false, false), (true, false, false), (true, true, false), (true, true, true)];
     for (suf, dynamic, exit) in rows {
         let mut cfg = GenConfig::preset(Method::Streaming, gen_len);
-        cfg.suffix_pruning = suf;
-        cfg.dynamic_threshold = dynamic;
+        cfg.set_suffix_pruning(suf);
+        cfg.set_dynamic_threshold(dynamic);
         cfg.early_exit = exit;
         let res = run_suite(&backend, &cfg, items, None)?;
         println!(

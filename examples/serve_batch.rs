@@ -90,6 +90,7 @@ fn main() -> Result<()> {
                 id: i as u64,
                 prompt: item.prompt.clone(),
                 method,
+                policy: None,
                 gen_len: cfg.gen_lens[i % cfg.gen_lens.len()],
                 deadline_ms: cfg.deadline_ms,
                 park_on_miss: false,

@@ -15,7 +15,7 @@
 
 #![allow(dead_code)]
 
-use streaming_dllm::engine::{table12_config, AnyBackend, GenConfig, Method};
+use streaming_dllm::engine::{table12_config, AnyBackend, DecodePolicy, GenConfig, Method};
 use streaming_dllm::eval::{load_suite, run_suite, suite_for, EvalItem, SuiteResult};
 use streaming_dllm::runtime::ArtifactsIndex;
 use streaming_dllm::util::bench::{print_latency_table, print_table, save_rows, Cell, Row};
@@ -107,6 +107,21 @@ pub fn run_cell(
     items: &[EvalItem],
 ) -> SuiteResult {
     let cfg = cell_config(method, model, suite, gen_len);
+    run_suite(be, &cfg, items, None).expect("run_suite")
+}
+
+/// A policy-swept cell: the Streaming method decoding under a named
+/// decode policy preset instead of its tuned per-benchmark schedule.
+pub fn run_policy_cell(
+    be: &AnyBackend,
+    policy: &str,
+    model: &str,
+    suite: &str,
+    gen_len: usize,
+    items: &[EvalItem],
+) -> SuiteResult {
+    let mut cfg = cell_config(Method::Streaming, model, suite, gen_len);
+    cfg.policy = DecodePolicy::parse(policy).expect("known policy preset");
     run_suite(be, &cfg, items, None).expect("run_suite")
 }
 

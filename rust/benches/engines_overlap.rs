@@ -126,6 +126,7 @@ fn main() {
                 id,
                 prompt: vec![2; 4],
                 method,
+                policy: None,
                 gen_len: 256,
                 deadline_ms: None,
                 park_on_miss: false,

@@ -47,6 +47,19 @@ fn main() {
         );
         cells.push((method.name().to_string(), cell));
     }
+    // composable-policy sweep: the same Streaming engine decoding under
+    // the new spatial×temporal presets — the extra frontier points the
+    // per-request policy API adds beyond the five named methods
+    for policy in ["attenuating", "extrapolating"] {
+        let mrt = setup.model(model);
+        let res = common::run_policy_cell(&mrt, policy, model, suite, gen_len, items);
+        let cell = res.to_cell();
+        println!(
+            "{:<16}{:>10.1}{:>10.1}{:>14.1}{:>10.1}",
+            policy, cell.accuracy, cell.cot_sim, cell.tokens_per_s, cell.nfe
+        );
+        cells.push((policy.to_string(), cell));
+    }
     save_rows("fig1_scatter", &[Row { label, cells }]);
     println!("(expected: ours sits on the top-right frontier of accuracy vs throughput)");
 }

@@ -48,7 +48,7 @@ fn main() {
     println!(
         "=== Figure 3 / 7-14 — confidence evolution (gsm-mini, {} samples, tau0={}) ===",
         items.len(),
-        cfg.tau0
+        cfg.tau0()
     );
     println!("{:<8}{:<8}{:>8}{:>10}{:>10}{:>10}", "block", "step", "n", "mean", "q25", "q75");
     let mut csv = String::from("block,step,n,mean,q25,q75\n");
@@ -83,7 +83,7 @@ fn main() {
         // fresh backend per point: call-counter state stays comparable
         let be = setup.model(model);
         let mut cfg = GenConfig::preset(Method::FastDllm, gen_len);
-        cfg.tau0 = tau;
+        cfg.set_tau0(tau);
         let res = run_suite(&be, &cfg, items, None).expect("suite");
         let cell = res.to_cell();
         println!(

@@ -27,9 +27,9 @@ fn main() {
     // full window = whole suffix (120) — the paper's "no suffix windows, mean size=512" anchor
     for w in [4usize, 8, 16, 32, 64, 120] {
         let mut cfg = GenConfig::preset(Method::Streaming, gen_len);
-        cfg.window = w;
+        cfg.set_window(w);
         cfg.early_exit = false; // isolate the spatial axis like the paper
-        cfg.dynamic_threshold = false;
+        cfg.set_dynamic_threshold(false);
         let res = run_suite(&mrt, &cfg, items, None).expect("suite");
         println!(
             "{:<10}{:>10.1}{:>14.1}{:>10.1}",

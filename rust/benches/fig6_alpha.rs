@@ -24,7 +24,7 @@ fn main() {
     let mut rows = vec![];
     for alpha in [0.0f32, 0.1, 0.2, 0.3, 0.4, 0.6, 0.8, 0.9] {
         let mut cfg = GenConfig::preset(Method::Streaming, gen_len);
-        cfg.alpha = alpha;
+        cfg.set_alpha(alpha);
         cfg.early_exit = false; // isolate the temporal-threshold axis
         let res = run_suite(&mrt, &cfg, items, None).expect("suite");
         println!(

@@ -132,6 +132,7 @@ fn main() {
                 id: i as u64,
                 prompt: vec![2; 4],
                 method: Method::Streaming,
+                policy: None,
                 gen_len: 128,
                 deadline_ms: None,
                 park_on_miss: false,

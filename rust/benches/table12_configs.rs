@@ -18,7 +18,13 @@ fn main() {
                 let c = table12_config(model, suite, gen_len);
                 println!(
                     "{:<16}{:<22}{:>8}{:>9}{:>7.1}{:>7.1}{:>12}",
-                    model, suite, gen_len, c.window, c.tau0, c.alpha, c.block_size
+                    model,
+                    suite,
+                    gen_len,
+                    c.window(),
+                    c.tau0(),
+                    c.alpha(),
+                    c.block_size
                 );
             }
         }

@@ -36,8 +36,8 @@ fn main() {
         let mut cells: Vec<(String, Cell)> = vec![];
         for (suf, dynamic, exit) in toggles {
             let mut cfg = GenConfig::preset(Method::Streaming, gen_len);
-            cfg.suffix_pruning = suf;
-            cfg.dynamic_threshold = dynamic;
+            cfg.set_suffix_pruning(suf);
+            cfg.set_dynamic_threshold(dynamic);
             cfg.early_exit = exit;
             let res = run_suite(&be, &cfg, items, None).expect("suite");
             println!(

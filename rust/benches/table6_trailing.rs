@@ -19,7 +19,7 @@ fn main() {
         let items = &items[..n.min(items.len())];
         for trailing in [false, true] {
             let mut cfg = GenConfig::preset(Method::Streaming, gen_len);
-            cfg.trailing_position = trailing;
+            cfg.set_trailing(trailing);
             let res = run_suite(&mrt, &cfg, items, None).expect("suite");
             println!(
                 "{:<16}{:<20}{:>12.1}{:>14.1}",

@@ -28,16 +28,16 @@ fn main() {
         // baseline: static threshold, no early exit (Fast-dLLM-style
         // commits adapted to the topology)
         let mut base = GenConfig::preset(Method::Streaming, gen_len);
-        base.suffix_pruning = true;
-        base.window = 0;
-        base.trailing_position = false;
-        base.dynamic_threshold = false;
+        base.set_suffix_pruning(true);
+        base.set_window(0);
+        base.set_trailing(false);
+        base.set_dynamic_threshold(false);
         base.early_exit = false;
 
         // ours: the temporal modules (dynamic threshold + early exit)
         let mut ours = GenConfig::preset(Method::Streaming, gen_len);
-        ours.window = 0;
-        ours.trailing_position = false;
+        ours.set_window(0);
+        ours.set_trailing(false);
 
         let res_b = run_suite(&mrt, &base, items, None).expect("base");
         let res_o = run_suite(&mrt, &ours, items, None).expect("ours");

@@ -1,0 +1,141 @@
+//! Bench-history drift check: compares the fresh
+//! `target/bench-results/BENCH_*.json` dumps against the committed
+//! baselines in `bench/history/` field by field and prints every
+//! numeric drift beyond the tolerance. **Loud but green**: the process
+//! always exits 0 — CI uses it to annotate the bench-smoke log, not to
+//! gate merges, because reference-backend timings are machine-dependent.
+//! Structural changes are reported too (fields or whole files appearing
+//! or disappearing), so a bench that silently stops writing a series
+//! shows up in the log instead of vanishing from the trajectory.
+//!
+//! Knobs (env): `SDLLM_BENCH_HISTORY` (baseline dir, default
+//! `bench/history`), `SDLLM_BENCH_RESULTS` (fresh dir, default
+//! `target/bench-results`), `SDLLM_BENCH_DIFF_TOL` (relative tolerance,
+//! default 0.25).
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use streaming_dllm::util::json::Json;
+
+/// Flatten every numeric leaf to a dotted path. Array elements that
+/// carry a `label` or `method` string use it as the path segment, so
+/// reordering rows or cells is not reported as drift.
+fn flatten(j: &Json, path: &str, out: &mut BTreeMap<String, f64>) {
+    match j {
+        Json::Num(n) => {
+            out.insert(path.to_string(), *n);
+        }
+        Json::Obj(m) => {
+            for (k, v) in m {
+                let p = if path.is_empty() { k.clone() } else { format!("{path}.{k}") };
+                flatten(v, &p, out);
+            }
+        }
+        Json::Arr(items) => {
+            for (i, v) in items.iter().enumerate() {
+                let seg = v
+                    .get("label")
+                    .or_else(|| v.get("method"))
+                    .and_then(|s| s.as_str())
+                    .map(|s| s.to_string())
+                    .unwrap_or_else(|| i.to_string());
+                let p = if path.is_empty() { seg } else { format!("{path}.{seg}") };
+                flatten(v, &p, out);
+            }
+        }
+        _ => {}
+    }
+}
+
+fn load(path: &Path) -> Option<Json> {
+    let text = std::fs::read_to_string(path).ok()?;
+    Json::parse(&text).ok()
+}
+
+/// `BENCH_*.json` file names under `dir`, sorted (empty if unreadable).
+fn bench_files(dir: &Path) -> Vec<String> {
+    let mut names = vec![];
+    if let Ok(rd) = std::fs::read_dir(dir) {
+        for e in rd.flatten() {
+            let name = e.file_name().to_string_lossy().into_owned();
+            if name.starts_with("BENCH_") && name.ends_with(".json") {
+                names.push(name);
+            }
+        }
+    }
+    names.sort();
+    names
+}
+
+fn env_or(key: &str, default: &str) -> String {
+    std::env::var(key).unwrap_or_else(|_| default.to_string())
+}
+
+fn main() {
+    let history = PathBuf::from(env_or("SDLLM_BENCH_HISTORY", "bench/history"));
+    let results = PathBuf::from(env_or("SDLLM_BENCH_RESULTS", "target/bench-results"));
+    let tol = std::env::var("SDLLM_BENCH_DIFF_TOL")
+        .ok()
+        .and_then(|s| s.parse::<f64>().ok())
+        .unwrap_or(0.25);
+    println!("=== bench drift vs {} (tolerance ±{:.0}%) ===", history.display(), tol * 100.0);
+
+    let baselines = bench_files(&history);
+    if baselines.is_empty() {
+        println!("no baselines under {} — nothing to compare", history.display());
+        return;
+    }
+    let mut checked = 0usize;
+    let mut drifts = 0usize;
+    for name in &baselines {
+        let Some(base) = load(&history.join(name)) else {
+            println!("[{name}] unreadable baseline — skipped");
+            continue;
+        };
+        let cur_path = results.join(name);
+        let Some(cur) = load(&cur_path) else {
+            println!("[{name}] MISSING fresh result at {} (bench not run?)", cur_path.display());
+            continue;
+        };
+        let mut b = BTreeMap::new();
+        let mut c = BTreeMap::new();
+        flatten(&base, "", &mut b);
+        flatten(&cur, "", &mut c);
+        let mut file_drifts = 0usize;
+        for (key, bv) in &b {
+            match c.get(key) {
+                None => {
+                    println!("[{name}] GONE   {key} (in baseline, absent from fresh result)");
+                    file_drifts += 1;
+                }
+                Some(cv) => {
+                    checked += 1;
+                    let rel = (*cv - *bv) / bv.abs().max(1e-9);
+                    if rel.abs() > tol {
+                        println!(
+                            "[{name}] DRIFT  {key}: {bv:.3} -> {cv:.3} ({:+.1}%)",
+                            rel * 100.0
+                        );
+                        file_drifts += 1;
+                    }
+                }
+            }
+        }
+        for key in c.keys() {
+            if !b.contains_key(key) {
+                println!("[{name}] NEW    {key} (not in baseline — refresh bench/history)");
+            }
+        }
+        if file_drifts == 0 {
+            println!("[{name}] ok ({} fields within tolerance)", b.len());
+        }
+        drifts += file_drifts;
+    }
+    for name in bench_files(&results) {
+        if !baselines.contains(&name) {
+            println!("[{name}] UNTRACKED (fresh result with no committed baseline)");
+        }
+    }
+    println!("=== {checked} fields compared, {drifts} drift(s); informational only — exit 0 ===");
+}

@@ -1,8 +1,10 @@
 //! Dynamic batcher: groups admitted requests into executable-compatible
-//! batches. Compatibility = same method — methods determine the decode
-//! *schedule shape*; gen lengths and prompt lengths may both differ per
-//! row (each row carries its own block budget in the engine, buffers
-//! are bucketed to the max in-flight length).
+//! batches. Compatibility = same [`GroupKey`], i.e. same (method,
+//! resolved decode policy) — the pair determines the decode *schedule
+//! shape*, so rows with different policies never share an engine round;
+//! gen lengths and prompt lengths may both differ per row (each row
+//! carries its own block budget in the engine, buffers are bucketed to
+//! the max in-flight length).
 //!
 //! Queues are kept ordered by **effective deadline**: every request is
 //! assigned `arrived + deadline_ms` (or `arrived + default_sla` when
@@ -27,7 +29,7 @@ use std::time::{Duration, Instant};
 
 use crate::engine::Method;
 
-use super::request::Request;
+use super::request::{GroupKey, Request};
 
 /// Fallback SLA assigned to requests that carry no `deadline_ms`: late
 /// enough that explicit deadlines win while fresh, finite so an aged
@@ -57,11 +59,11 @@ impl Pending {
 
 #[derive(Debug)]
 pub struct Batcher {
-    queues: Vec<(Method, VecDeque<Pending>)>,
+    queues: Vec<(GroupKey, VecDeque<Pending>)>,
     pub max_batch: usize,
     pub max_wait: Duration,
     pub default_sla: Duration,
-    /// Admission bound per method queue. The router checks
+    /// Admission bound per group queue. The router checks
     /// [`Batcher::is_full`] *before* pushing and answers a reject
     /// instead; internal requeues (worker overflow bounces) bypass the
     /// cap so in-flight work is never dropped by backpressure.
@@ -101,10 +103,11 @@ impl Batcher {
     pub fn push_at(&mut self, req: Request, now: Instant) {
         let deadline = self.effective_deadline(&req, now);
         let p = Pending { req, arrived: now, deadline };
-        let q = match self.queues.iter_mut().find(|(m, _)| *m == p.req.method) {
+        let key = p.req.group_key();
+        let q = match self.queues.iter_mut().find(|(k, _)| *k == key) {
             Some((_, q)) => q,
             None => {
-                self.queues.push((p.req.method, VecDeque::new()));
+                self.queues.push((key, VecDeque::new()));
                 &mut self.queues.last_mut().unwrap().1
             }
         };
@@ -117,16 +120,22 @@ impl Batcher {
         self.queues.iter().map(|(_, q)| q.len()).sum()
     }
 
-    /// Queued depth of one method group (the router's per-group gauge).
-    pub fn depth(&self, method: Method) -> usize {
-        self.queues.iter().find(|(m, _)| *m == method).map(|(_, q)| q.len()).unwrap_or(0)
+    /// Queued depth of one (method, policy) group.
+    pub fn depth(&self, key: GroupKey) -> usize {
+        self.queues.iter().find(|(k, _)| *k == key).map(|(_, q)| q.len()).unwrap_or(0)
     }
 
-    /// Whether the method's queue is at the admission bound — the
+    /// Queued depth across every policy group of one method (the
+    /// router's per-method gauge keeps its legacy meaning).
+    pub fn method_depth(&self, method: Method) -> usize {
+        self.queues.iter().filter(|(k, _)| k.method == method).map(|(_, q)| q.len()).sum()
+    }
+
+    /// Whether the group's queue is at the admission bound — the
     /// router's backpressure predicate, checked before every external
     /// push.
-    pub fn is_full(&self, method: Method) -> bool {
-        self.depth(method) >= self.max_depth
+    pub fn is_full(&self, key: GroupKey) -> bool {
+        self.depth(key) >= self.max_depth
     }
 
     /// Remove one queued request by id (cancelled subscriber whose row
@@ -206,20 +215,24 @@ impl Batcher {
     /// Pop the next batch to run, if any group not in `busy` is ready.
     /// Ready = full batch available (immediately), or oldest member
     /// exceeded max_wait (then take whatever the group has, up to
-    /// max_batch). `busy` lists methods that already have a running
+    /// max_batch). `busy` lists group keys that already have a running
     /// engine — their waiters join that engine through
     /// [`Batcher::pop_compatible`] instead of starting a second one.
     ///
     /// Among ready groups the earliest front deadline wins (ties by
     /// arrival). The router calls this in a loop until `None`, so every
     /// ready group gets its own engine in the same scheduling pass —
-    /// cross-method blocking is structural, not ordering-dependent.
+    /// cross-group blocking is structural, not ordering-dependent.
     /// Within the popped batch, requests come out oldest-deadline
     /// first.
-    pub fn pop_ready(&mut self, now: Instant, busy: &[Method]) -> Option<(Method, Vec<Request>)> {
+    pub fn pop_ready(
+        &mut self,
+        now: Instant,
+        busy: &[GroupKey],
+    ) -> Option<(GroupKey, Vec<Request>)> {
         let mut best: Option<(usize, (Instant, Instant))> = None;
-        for (i, (m, q)) in self.queues.iter().enumerate() {
-            if busy.contains(m) || !self.is_ready(q, now) {
+        for (i, (k, q)) in self.queues.iter().enumerate() {
+            if busy.contains(k) || !self.is_ready(q, now) {
                 continue;
             }
             let front = q.front().expect("ready queue has a front").urgency();
@@ -228,22 +241,22 @@ impl Batcher {
             }
         }
         let i = best.map(|(i, _)| i)?;
-        let (method, q) = &mut self.queues[i];
-        let method = *method;
+        let (key, q) = &mut self.queues[i];
+        let key = *key;
         let n = q.len().min(self.max_batch);
         let batch: Vec<Request> = q.drain(..n).map(|p| p.req).collect();
         if q.is_empty() {
             self.queues.remove(i);
         }
-        Some((method, batch))
+        Some((key, batch))
     }
 
-    /// Pop the most urgent waiting request of exactly this method — the
+    /// Pop the most urgent waiting request of exactly this group — the
     /// router uses this to fill freed engine slots mid-flight (joining
     /// a running batch is always better than waiting, so readiness
     /// rules don't apply; deadline order does).
-    pub fn pop_compatible(&mut self, method: Method) -> Option<Request> {
-        let i = self.queues.iter().position(|(m, _)| *m == method)?;
+    pub fn pop_compatible(&mut self, key: GroupKey) -> Option<Request> {
+        let i = self.queues.iter().position(|(k, _)| *k == key)?;
         let req = self.queues[i].1.pop_front().map(|p| p.req);
         if self.queues[i].1.is_empty() {
             self.queues.remove(i);
@@ -276,10 +289,19 @@ impl Batcher {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::engine::DecodePolicy;
     use crate::util::prop;
 
     fn req(id: u64, method: Method, gen_len: usize) -> Request {
-        Request { id, prompt: vec![2], method, gen_len, deadline_ms: None, park_on_miss: false }
+        Request {
+            id,
+            prompt: vec![2],
+            method,
+            policy: None,
+            gen_len,
+            deadline_ms: None,
+            park_on_miss: false,
+        }
     }
 
     fn req_sla(id: u64, method: Method, deadline_ms: u64) -> Request {
@@ -287,6 +309,7 @@ mod tests {
             id,
             prompt: vec![2],
             method,
+            policy: None,
             gen_len: 64,
             deadline_ms: Some(deadline_ms),
             park_on_miss: false,
@@ -300,9 +323,9 @@ mod tests {
         b.push_at(req(1, Method::Streaming, 64), t);
         assert!(b.pop_ready(t, &[]).is_none());
         b.push_at(req(2, Method::Streaming, 64), t);
-        let (method, batch) = b.pop_ready(t, &[]).unwrap();
+        let (key, batch) = b.pop_ready(t, &[]).unwrap();
         assert_eq!(batch.len(), 2);
-        assert_eq!(method, Method::Streaming);
+        assert_eq!(key, GroupKey::from(Method::Streaming));
         assert_eq!(b.pending(), 0);
     }
 
@@ -314,8 +337,8 @@ mod tests {
         let t = Instant::now();
         b.push_at(req(1, Method::Streaming, 64), t);
         b.push_at(req(2, Method::Streaming, 128), t);
-        let (method, batch) = b.pop_ready(t, &[]).unwrap();
-        assert_eq!(method, Method::Streaming);
+        let (key, batch) = b.pop_ready(t, &[]).unwrap();
+        assert_eq!(key.method, Method::Streaming);
         assert_eq!(batch.len(), 2);
         assert_eq!(batch[0].gen_len, 64);
         assert_eq!(batch[1].gen_len, 128);
@@ -329,9 +352,9 @@ mod tests {
         b.push_at(req(2, Method::Vanilla, 64), t);
         assert!(b.pop_ready(t, &[]).is_none()); // two singleton groups
         assert_eq!(b.pending(), 2);
-        assert_eq!(b.depth(Method::Streaming), 1);
-        assert_eq!(b.depth(Method::Vanilla), 1);
-        assert_eq!(b.depth(Method::FastDllm), 0);
+        assert_eq!(b.depth(Method::Streaming.into()), 1);
+        assert_eq!(b.depth(Method::Vanilla.into()), 1);
+        assert_eq!(b.depth(Method::FastDllm.into()), 0);
     }
 
     #[test]
@@ -353,11 +376,12 @@ mod tests {
         b.push_at(req(2, Method::Vanilla, 64), t);
         let later = t + Duration::from_millis(1);
         // streaming has a running engine: only vanilla may start one
-        let (m, _) = b.pop_ready(later, &[Method::Streaming]).unwrap();
-        assert_eq!(m, Method::Vanilla);
-        assert!(b.pop_ready(later, &[Method::Streaming]).is_none());
+        let busy = [GroupKey::from(Method::Streaming)];
+        let (k, _) = b.pop_ready(later, &busy).unwrap();
+        assert_eq!(k, GroupKey::from(Method::Vanilla));
+        assert!(b.pop_ready(later, &busy).is_none());
         // the streaming waiter is still there for mid-flight joining
-        assert_eq!(b.pop_compatible(Method::Streaming).unwrap().id, 1);
+        assert_eq!(b.pop_compatible(Method::Streaming.into()).unwrap().id, 1);
     }
 
     #[test]
@@ -367,10 +391,10 @@ mod tests {
         b.push_at(req(1, Method::Streaming, 64), t); // default SLA (30s)
         b.push_at(req_sla(2, Method::Streaming, 50), t + Duration::from_millis(1));
         b.push_at(req_sla(3, Method::Streaming, 10), t + Duration::from_millis(2));
-        assert_eq!(b.pop_compatible(Method::Streaming).unwrap().id, 3);
-        assert_eq!(b.pop_compatible(Method::Streaming).unwrap().id, 2);
-        assert_eq!(b.pop_compatible(Method::Streaming).unwrap().id, 1);
-        assert!(b.pop_compatible(Method::Streaming).is_none());
+        assert_eq!(b.pop_compatible(Method::Streaming.into()).unwrap().id, 3);
+        assert_eq!(b.pop_compatible(Method::Streaming.into()).unwrap().id, 2);
+        assert_eq!(b.pop_compatible(Method::Streaming.into()).unwrap().id, 1);
+        assert!(b.pop_compatible(Method::Streaming.into()).is_none());
     }
 
     #[test]
@@ -383,8 +407,8 @@ mod tests {
         b.push_at(req(1, Method::Streaming, 64), t); // deadline t+30s
         let late = t + DEFAULT_SLA; // 30s later
         b.push_at(req_sla(2, Method::Streaming, 100), late); // deadline t+30.1s
-        assert_eq!(b.pop_compatible(Method::Streaming).unwrap().id, 1);
-        assert_eq!(b.pop_compatible(Method::Streaming).unwrap().id, 2);
+        assert_eq!(b.pop_compatible(Method::Streaming.into()).unwrap().id, 1);
+        assert_eq!(b.pop_compatible(Method::Streaming.into()).unwrap().id, 2);
     }
 
     #[test]
@@ -397,11 +421,11 @@ mod tests {
         b.push_at(req_sla(2, Method::Vanilla, 5), t + Duration::from_millis(1));
         b.push_at(req(3, Method::Streaming, 64), t + Duration::from_millis(2));
         b.push_at(req(4, Method::Vanilla, 64), t + Duration::from_millis(3));
-        let (m1, batch) = b.pop_ready(t + Duration::from_millis(4), &[]).unwrap();
-        assert_eq!(m1, Method::Vanilla, "urgent-front group must flush first");
+        let (k1, batch) = b.pop_ready(t + Duration::from_millis(4), &[]).unwrap();
+        assert_eq!(k1.method, Method::Vanilla, "urgent-front group must flush first");
         assert_eq!(batch[0].id, 2);
-        let (m2, _) = b.pop_ready(t + Duration::from_millis(4), &[]).unwrap();
-        assert_eq!(m2, Method::Streaming);
+        let (k2, _) = b.pop_ready(t + Duration::from_millis(4), &[]).unwrap();
+        assert_eq!(k2.method, Method::Streaming);
     }
 
     #[test]
@@ -411,10 +435,10 @@ mod tests {
         b.push_at(req(1, Method::Streaming, 64), t);
         b.push_at(req(2, Method::Vanilla, 64), t);
         b.push_at(req(3, Method::Streaming, 128), t + Duration::from_millis(1));
-        assert_eq!(b.pop_compatible(Method::Streaming).unwrap().id, 1);
+        assert_eq!(b.pop_compatible(Method::Streaming.into()).unwrap().id, 1);
         // mixed gen_len joins the same method group
-        assert_eq!(b.pop_compatible(Method::Streaming).unwrap().id, 3);
-        assert!(b.pop_compatible(Method::Streaming).is_none());
+        assert_eq!(b.pop_compatible(Method::Streaming.into()).unwrap().id, 3);
+        assert!(b.pop_compatible(Method::Streaming.into()).is_none());
         assert_eq!(b.pending(), 1); // the vanilla request stays queued
     }
 
@@ -427,8 +451,8 @@ mod tests {
         let later = t + Duration::from_millis(20);
         // equal default SLAs: vanilla's front deadline (t+30s) is
         // earlier than streaming's (t+2ms+30s)
-        let (m, _) = b.pop_ready(later, &[]).unwrap();
-        assert_eq!(m, Method::Vanilla);
+        let (k, _) = b.pop_ready(later, &[]).unwrap();
+        assert_eq!(k.method, Method::Vanilla);
     }
 
     #[test]
@@ -440,8 +464,8 @@ mod tests {
         let t = Instant::now();
         b.push_at(req_sla(1, Method::Streaming, u64::MAX), t);
         b.push_at(req(2, Method::Streaming, 64), t + Duration::from_millis(1));
-        assert_eq!(b.pop_compatible(Method::Streaming).unwrap().id, 2);
-        assert_eq!(b.pop_compatible(Method::Streaming).unwrap().id, 1);
+        assert_eq!(b.pop_compatible(Method::Streaming.into()).unwrap().id, 2);
+        assert_eq!(b.pop_compatible(Method::Streaming.into()).unwrap().id, 1);
     }
 
     #[test]
@@ -488,14 +512,14 @@ mod tests {
         let mut b = Batcher::new(4, Duration::from_secs(60));
         b.max_depth = 2;
         let t = Instant::now();
-        assert!(!b.is_full(Method::Streaming));
+        assert!(!b.is_full(Method::Streaming.into()));
         b.push_at(req(1, Method::Streaming, 64), t);
         b.push_at(req(2, Method::Streaming, 64), t);
-        assert!(b.is_full(Method::Streaming));
+        assert!(b.is_full(Method::Streaming.into()));
         // bounds are per method queue, not global
-        assert!(!b.is_full(Method::Vanilla));
-        b.pop_compatible(Method::Streaming);
-        assert!(!b.is_full(Method::Streaming));
+        assert!(!b.is_full(Method::Vanilla.into()));
+        b.pop_compatible(Method::Streaming.into());
+        assert!(!b.is_full(Method::Streaming.into()));
     }
 
     #[test]
@@ -530,10 +554,51 @@ mod tests {
         assert_eq!(shed.len(), 1);
         assert_eq!(shed[0].id, 1);
         assert_eq!(b.pending(), 2);
-        assert_eq!(b.depth(Method::Streaming), 1);
-        assert_eq!(b.depth(Method::Vanilla), 1);
+        assert_eq!(b.depth(Method::Streaming.into()), 1);
+        assert_eq!(b.depth(Method::Vanilla.into()), 1);
         // nothing newly blown → no-op
         assert!(b.drain_blown(t + Duration::from_millis(21)).is_empty());
+    }
+
+    #[test]
+    fn mixed_policies_never_share_a_batch() {
+        // satellite regression: same method, different decode policies →
+        // distinct groups that never flush together; identical policies
+        // still batch
+        let mut b = Batcher::new(2, Duration::from_secs(60));
+        let t = Instant::now();
+        let att = DecodePolicy::parse("attenuating").unwrap();
+        let mut r1 = req(1, Method::Streaming, 64);
+        r1.policy = Some(att);
+        let mut r2 = req(2, Method::Streaming, 64);
+        r2.policy = Some(att);
+        b.push_at(req(3, Method::Streaming, 64), t);
+        b.push_at(r1, t + Duration::from_millis(1));
+        b.push_at(r2, t + Duration::from_millis(2));
+        let (key, batch) = b.pop_ready(t + Duration::from_millis(3), &[]).unwrap();
+        assert_eq!(key.method, Method::Streaming);
+        assert_eq!(key.policy, att);
+        assert_eq!(batch.len(), 2, "identical-policy requests must batch");
+        // the default-policy request sits alone in its own group
+        assert!(b.pop_ready(t + Duration::from_millis(3), &[]).is_none());
+        assert_eq!(b.depth(Method::Streaming.into()), 1);
+        assert_eq!(b.method_depth(Method::Streaming), 1);
+        assert_eq!(b.pop_compatible(Method::Streaming.into()).unwrap().id, 3);
+    }
+
+    #[test]
+    fn explicit_preset_policy_batches_with_default() {
+        // naming the method's own preset resolves to the same group key
+        // as leaving the policy unset — the two must batch together
+        let mut b = Batcher::new(2, Duration::from_secs(60));
+        let t = Instant::now();
+        let mut named = req(1, Method::Streaming, 64);
+        named.policy = DecodePolicy::parse("streaming");
+        b.push_at(named, t);
+        b.push_at(req(2, Method::Streaming, 64), t);
+        let (key, batch) = b.pop_ready(t, &[]).unwrap();
+        assert_eq!(key, GroupKey::from(Method::Streaming));
+        assert_eq!(batch.len(), 2);
     }
 
     #[test]
@@ -552,16 +617,20 @@ mod tests {
                 if g.bool(0.5) {
                     r.deadline_ms = Some(g.usize(0, 500) as u64);
                 }
+                if g.bool(0.3) {
+                    let names = ["attenuating", "dropout", "extrapolating"];
+                    r.policy = DecodePolicy::parse(names[g.usize(0, 2)]);
+                }
                 b.push_at(r, t + Duration::from_millis(g.usize(0, 5) as u64));
                 pushed += 1;
             }
             let mut popped = 0usize;
-            while let Some((method, batch)) = b.pop_ready(t + Duration::from_millis(6), &[]) {
+            while let Some((key, batch)) = b.pop_ready(t + Duration::from_millis(6), &[]) {
                 if batch.is_empty() || batch.len() > max_batch {
                     return Err(format!("bad batch size {}", batch.len()));
                 }
-                if !batch.iter().all(|r| r.method == method) {
-                    return Err("mixed-method batch".into());
+                if !batch.iter().all(|r| r.group_key() == key) {
+                    return Err("mixed-group batch".into());
                 }
                 popped += batch.len();
             }

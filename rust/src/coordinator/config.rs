@@ -14,7 +14,7 @@ use std::time::Duration;
 
 use anyhow::{anyhow, bail, Result};
 
-use crate::engine::RefMode;
+use crate::engine::{DecodePolicy, RefMode};
 use crate::util::cli::Args;
 
 use super::router::{RouterOptions, DEFAULT_MAX_ENGINES, DEFAULT_MAX_QUEUE_DEPTH};
@@ -49,6 +49,10 @@ pub struct ServeConfig {
     /// `busy` error frame and closes
     /// (`--max-connections` / `SDLLM_MAX_CONNECTIONS`)
     pub max_connections: usize,
+    /// default decode policy applied to requests that don't name one;
+    /// absent means each request's method preset
+    /// (`--policy` / `SDLLM_POLICY`)
+    pub policy: Option<DecodePolicy>,
     /// generation lengths driven by harnesses (`--gen-lens` / `SDLLM_GEN_LENS`)
     pub gen_lens: Vec<usize>,
     /// default SLA budget; 0/absent means none (`--deadline-ms` / `SDLLM_DEADLINE_MS`)
@@ -72,6 +76,7 @@ impl Default for ServeConfig {
             max_engines: DEFAULT_MAX_ENGINES,
             max_queue_depth: DEFAULT_MAX_QUEUE_DEPTH,
             max_connections: DEFAULT_MAX_CONNECTIONS,
+            policy: None,
             gen_lens: vec![64],
             deadline_ms: None,
             stress_schedules: 20,
@@ -164,6 +169,15 @@ impl ServeConfig {
         if max_connections == 0 {
             bail!("max-connections must be >= 1");
         }
+        let policy = match pick(args, "policy", "SDLLM_POLICY") {
+            Some(s) => Some(DecodePolicy::parse(s.trim()).ok_or_else(|| {
+                anyhow!(
+                    "unknown --policy '{s}' ({})",
+                    DecodePolicy::preset_names().join("|")
+                )
+            })?),
+            None => None,
+        };
         let max_wait_ms: u64 =
             parse_num(pick(args, "max-wait-ms", "SDLLM_MAX_WAIT_MS"), "max-wait-ms")?
                 .unwrap_or(d.max_wait.as_millis() as u64);
@@ -182,6 +196,7 @@ impl ServeConfig {
             max_engines,
             max_queue_depth,
             max_connections,
+            policy,
             gen_lens,
             deadline_ms,
             stress_schedules: parse_num(
@@ -239,9 +254,12 @@ mod tests {
             "16",
             "--max-connections",
             "5",
+            "--policy",
+            "attenuating",
         ]))
         .unwrap();
         assert_eq!(c.ref_mode, RefMode::Causal);
+        assert_eq!(c.policy, DecodePolicy::parse("attenuating"));
         assert_eq!(c.gen_lens, vec![32, 64, 128]);
         assert_eq!(c.deadline_ms, Some(250));
         assert_eq!(c.router_options().max_engines, 2);
@@ -255,6 +273,7 @@ mod tests {
         assert!(ServeConfig::from_env_and_args(&parse(&["--max-engines", "nope"])).is_err());
         assert!(ServeConfig::from_env_and_args(&parse(&["--max-queue-depth", "0"])).is_err());
         assert!(ServeConfig::from_env_and_args(&parse(&["--max-connections", "0"])).is_err());
+        assert!(ServeConfig::from_env_and_args(&parse(&["--policy", "bogus"])).is_err());
         // deadline 0 means "no deadline", not an error
         let c = ServeConfig::from_env_and_args(&parse(&["--deadline-ms", "0"])).unwrap();
         assert_eq!(c.deadline_ms, None);
@@ -279,6 +298,7 @@ mod tests {
             "SDLLM_MAX_ENGINES",
             "SDLLM_MAX_QUEUE_DEPTH",
             "SDLLM_MAX_CONNECTIONS",
+            "SDLLM_POLICY",
             "SDLLM_GEN_LENS",
             "SDLLM_DEADLINE_MS",
             "SDLLM_STRESS_SCHEDULES",
@@ -297,8 +317,10 @@ mod tests {
         assert_eq!(c.max_connections, DEFAULT_MAX_CONNECTIONS);
         assert_eq!(c.gen_lens, vec![64]);
         assert_eq!(c.deadline_ms, None);
+        assert_eq!(c.policy, None);
         assert_eq!(c.stress_schedules, 20);
 
+        std::env::set_var("SDLLM_POLICY", "dropout");
         std::env::set_var("SDLLM_GEN_LENS", "16,32");
         std::env::set_var("SDLLM_STRESS_SEED_BASE", "77");
         std::env::set_var("SDLLM_DEADLINE_MS", "  ");
@@ -306,6 +328,7 @@ mod tests {
         std::env::set_var("SDLLM_MAX_CONNECTIONS", "3");
         let c = ServeConfig::from_env_and_args(&parse(&[])).unwrap();
         assert_eq!(c.gen_lens, vec![16, 32]);
+        assert_eq!(c.policy, DecodePolicy::parse("dropout"));
         assert_eq!(c.stress_seed_base, 77);
         assert_eq!(c.max_queue_depth, 9);
         assert_eq!(c.max_connections, 3);
@@ -316,6 +339,9 @@ mod tests {
         assert_eq!(c.gen_lens, vec![64]);
         let c = ServeConfig::from_env_and_args(&parse(&["--max-queue-depth", "40"])).unwrap();
         assert_eq!(c.max_queue_depth, 40);
+        let c = ServeConfig::from_env_and_args(&parse(&["--policy", "streaming"])).unwrap();
+        assert_eq!(c.policy, DecodePolicy::parse("streaming"));
+        std::env::remove_var("SDLLM_POLICY");
         std::env::remove_var("SDLLM_GEN_LENS");
         std::env::remove_var("SDLLM_STRESS_SEED_BASE");
         std::env::remove_var("SDLLM_DEADLINE_MS");

@@ -19,6 +19,7 @@
 use std::collections::BTreeMap;
 use std::fmt;
 
+use crate::engine::{DecodePolicy, SpatialPolicy, TemporalPolicy};
 use crate::util::json::Json;
 
 use super::request::{Request, RequestError, Response};
@@ -43,6 +44,141 @@ fn with_envelope(ty: &str, body: Json) -> Json {
 }
 
 // ---------------------------------------------------------------------
+// Decode-policy wire form
+// ---------------------------------------------------------------------
+
+/// Wire form of a decode policy: the canonical preset name when the
+/// policy is one (`"streaming"`, `"attenuating"`, …), otherwise the
+/// explicit two-axis object
+/// `{"spatial":{"kind":…},"temporal":{"kind":…}}`.
+pub fn policy_to_json(p: &DecodePolicy) -> Json {
+    if let Some(name) = p.name() {
+        return Json::Str(name.to_string());
+    }
+    let spatial = match p.spatial {
+        SpatialPolicy::FullSuffix => Json::obj(vec![("kind", Json::Str("full".to_string()))]),
+        SpatialPolicy::Window { window, trailing } => Json::obj(vec![
+            ("kind", Json::Str("window".to_string())),
+            ("window", Json::Num(window as f64)),
+            ("trailing", Json::Bool(trailing)),
+        ]),
+        SpatialPolicy::Attenuating { window, min_window, trailing } => Json::obj(vec![
+            ("kind", Json::Str("attenuating".to_string())),
+            ("window", Json::Num(window as f64)),
+            ("min_window", Json::Num(min_window as f64)),
+            ("trailing", Json::Bool(trailing)),
+        ]),
+        SpatialPolicy::Dropout { window, stride, seed, trailing } => Json::obj(vec![
+            ("kind", Json::Str("dropout".to_string())),
+            ("window", Json::Num(window as f64)),
+            ("stride", Json::Num(stride as f64)),
+            // seeds round-trip exactly up to 2^53 (JSON numbers)
+            ("seed", Json::Num(seed as f64)),
+            ("trailing", Json::Bool(trailing)),
+        ]),
+    };
+    let temporal = match p.temporal {
+        TemporalPolicy::OnePerStep => {
+            Json::obj(vec![("kind", Json::Str("one-per-step".to_string()))])
+        }
+        TemporalPolicy::FixedTau { tau } => Json::obj(vec![
+            ("kind", Json::Str("fixed".to_string())),
+            ("tau", Json::Num(tau as f64)),
+        ]),
+        TemporalPolicy::DynamicTau { tau0, alpha } => Json::obj(vec![
+            ("kind", Json::Str("dynamic".to_string())),
+            ("tau0", Json::Num(tau0 as f64)),
+            ("alpha", Json::Num(alpha as f64)),
+        ]),
+        TemporalPolicy::Extrapolating { tau0, alpha, gain, floor, min_streak } => Json::obj(vec![
+            ("kind", Json::Str("extrapolating".to_string())),
+            ("tau0", Json::Num(tau0 as f64)),
+            ("alpha", Json::Num(alpha as f64)),
+            ("gain", Json::Num(gain as f64)),
+            ("floor", Json::Num(floor as f64)),
+            ("min_streak", Json::Num(min_streak as f64)),
+        ]),
+    };
+    Json::obj(vec![("spatial", spatial), ("temporal", temporal)])
+}
+
+fn bad_policy(msg: impl Into<String>) -> RequestError {
+    RequestError::InvalidPolicy(msg.into())
+}
+
+fn policy_usize(o: &Json, key: &'static str) -> Result<usize, RequestError> {
+    o.get(key)
+        .and_then(|v| v.as_usize())
+        .ok_or_else(|| bad_policy(format!("{key} must be a non-negative integer")))
+}
+
+fn policy_f32(o: &Json, key: &'static str) -> Result<f32, RequestError> {
+    o.get(key)
+        .and_then(|v| v.as_f64())
+        .map(|v| v as f32)
+        .ok_or_else(|| bad_policy(format!("{key} must be a number")))
+}
+
+fn policy_trailing(o: &Json) -> bool {
+    o.get("trailing").and_then(|v| v.as_bool()).unwrap_or(true)
+}
+
+/// Parse a wire policy: a string names a preset
+/// ([`RequestError::UnknownPolicy`] otherwise); an object selects the
+/// two axes explicitly and is validated before acceptance
+/// ([`RequestError::InvalidPolicy`] on shape or range problems).
+pub fn policy_from_json(j: &Json) -> Result<DecodePolicy, RequestError> {
+    if let Some(name) = j.as_str() {
+        return DecodePolicy::parse(name)
+            .ok_or_else(|| RequestError::UnknownPolicy(name.to_string()));
+    }
+    let (sj, tj) = match (j.get("spatial"), j.get("temporal")) {
+        (Some(s), Some(t)) => (s, t),
+        _ => return Err(bad_policy("expected a preset name or {spatial, temporal} object")),
+    };
+    let spatial = match sj.get("kind").and_then(|k| k.as_str()) {
+        Some("full") => SpatialPolicy::FullSuffix,
+        Some("window") => SpatialPolicy::Window {
+            window: policy_usize(sj, "window")?,
+            trailing: policy_trailing(sj),
+        },
+        Some("attenuating") => SpatialPolicy::Attenuating {
+            window: policy_usize(sj, "window")?,
+            min_window: policy_usize(sj, "min_window")?,
+            trailing: policy_trailing(sj),
+        },
+        Some("dropout") => SpatialPolicy::Dropout {
+            window: policy_usize(sj, "window")?,
+            stride: policy_usize(sj, "stride")?,
+            seed: sj.get("seed").and_then(|v| v.as_i64()).unwrap_or(0).max(0) as u64,
+            trailing: policy_trailing(sj),
+        },
+        Some(other) => return Err(bad_policy(format!("unknown spatial kind '{other}'"))),
+        None => return Err(bad_policy("spatial kind missing")),
+    };
+    let temporal = match tj.get("kind").and_then(|k| k.as_str()) {
+        Some("one-per-step") => TemporalPolicy::OnePerStep,
+        Some("fixed") => TemporalPolicy::FixedTau { tau: policy_f32(tj, "tau")? },
+        Some("dynamic") => TemporalPolicy::DynamicTau {
+            tau0: policy_f32(tj, "tau0")?,
+            alpha: policy_f32(tj, "alpha")?,
+        },
+        Some("extrapolating") => TemporalPolicy::Extrapolating {
+            tau0: policy_f32(tj, "tau0")?,
+            alpha: policy_f32(tj, "alpha")?,
+            gain: policy_f32(tj, "gain")?,
+            floor: policy_f32(tj, "floor")?,
+            min_streak: policy_usize(tj, "min_streak")? as u32,
+        },
+        Some(other) => return Err(bad_policy(format!("unknown temporal kind '{other}'"))),
+        None => return Err(bad_policy("temporal kind missing")),
+    };
+    let p = DecodePolicy { spatial, temporal };
+    p.validate().map_err(RequestError::InvalidPolicy)?;
+    Ok(p)
+}
+
+// ---------------------------------------------------------------------
 // Request / Response wire forms (v0 flat objects; v1 adds the envelope)
 // ---------------------------------------------------------------------
 
@@ -56,6 +192,9 @@ impl Request {
             ("method", Json::Str(self.method.name().to_string())),
             ("gen_len", Json::Num(self.gen_len as f64)),
         ];
+        if let Some(p) = &self.policy {
+            fields.push(("policy", policy_to_json(p)));
+        }
         if let Some(d) = self.deadline_ms {
             fields.push(("deadline_ms", Json::Num(d as f64)));
         }
@@ -83,6 +222,9 @@ impl Request {
         b = b.prompt(prompt);
         if let Some(m) = j.get("method").and_then(|v| v.as_str()) {
             b = b.method_name(m);
+        }
+        if let Some(pj) = j.get("policy") {
+            b = b.policy(policy_from_json(pj)?);
         }
         if let Some(g) = j.get("gen_len").and_then(|v| v.as_usize()) {
             b = b.gen_len(g);
@@ -472,6 +614,78 @@ mod tests {
         let e = Request::from_json(&Json::parse("{\"id\":1,\"prompt\":[2],\"gen_len\":9}").unwrap())
             .unwrap_err();
         assert!(matches!(e, RequestError::MisalignedGenLen { gen_len: 9, .. }));
+    }
+
+    #[test]
+    fn policy_field_roundtrips_as_preset_name() {
+        let r = Request::builder()
+            .id(4)
+            .prompt(vec![2])
+            .policy_name("attenuating")
+            .build()
+            .unwrap();
+        let line = r.to_json().to_string();
+        assert!(line.contains("\"policy\":\"attenuating\""), "{line}");
+        let r2 = Request::from_json(&Json::parse(&line).unwrap()).unwrap();
+        assert_eq!(r2.policy, Some(DecodePolicy::parse("attenuating").unwrap()));
+        assert_eq!(r2.group_key(), r.group_key());
+    }
+
+    #[test]
+    fn policy_field_roundtrips_as_object() {
+        // a non-preset combination encodes as the explicit two-axis
+        // object and survives the round trip bit-for-bit
+        let p = DecodePolicy {
+            spatial: crate::engine::SpatialPolicy::Dropout {
+                window: 12,
+                stride: 3,
+                seed: 77,
+                trailing: false,
+            },
+            temporal: crate::engine::TemporalPolicy::Extrapolating {
+                tau0: 0.85,
+                alpha: 0.25,
+                gain: 2.0,
+                floor: 0.75,
+                min_streak: 3,
+            },
+        };
+        assert_eq!(p.name(), None);
+        let j = policy_to_json(&p);
+        assert_eq!(policy_from_json(&j).unwrap(), p);
+        let r = Request::builder().id(5).prompt(vec![2]).policy(p).build().unwrap();
+        let j = Json::parse(&r.to_json().to_string()).unwrap();
+        assert_eq!(Request::from_json(&j).unwrap().policy, Some(p));
+    }
+
+    #[test]
+    fn legacy_request_bytes_unchanged_without_policy() {
+        let r = Request::builder().id(7).prompt(vec![2, 10]).build().unwrap();
+        let line = r.to_json().to_string();
+        assert!(!line.contains("policy"), "legacy bytes must not grow a policy field: {line}");
+    }
+
+    #[test]
+    fn malformed_policies_are_typed_errors() {
+        let j = Json::parse("{\"id\":1,\"prompt\":[2],\"policy\":\"bogus\"}").unwrap();
+        assert_eq!(
+            Request::from_json(&j).unwrap_err(),
+            RequestError::UnknownPolicy("bogus".into())
+        );
+        let j = Json::parse("{\"id\":1,\"prompt\":[2],\"policy\":42}").unwrap();
+        assert!(matches!(Request::from_json(&j).unwrap_err(), RequestError::InvalidPolicy(_)));
+        let j = Json::parse(
+            "{\"policy\":{\"spatial\":{\"kind\":\"warp\"},\"temporal\":{\"kind\":\"fixed\",\"tau\":0.9}}}",
+        )
+        .unwrap();
+        let e = policy_from_json(j.get("policy").unwrap()).unwrap_err();
+        assert_eq!(e.to_string(), "invalid policy: unknown spatial kind 'warp'");
+        // shape is right but the parameters are out of range
+        let j = Json::parse(
+            "{\"spatial\":{\"kind\":\"full\"},\"temporal\":{\"kind\":\"fixed\",\"tau\":1.5}}",
+        )
+        .unwrap();
+        assert!(matches!(policy_from_json(&j).unwrap_err(), RequestError::InvalidPolicy(_)));
     }
 
     #[test]

@@ -6,7 +6,7 @@
 
 use std::fmt;
 
-use crate::engine::{GenConfig, Method};
+use crate::engine::{DecodePolicy, GenConfig, Method};
 
 use super::batcher::MAX_DEADLINE_MS;
 
@@ -15,6 +15,12 @@ pub struct Request {
     pub id: u64,
     pub prompt: Vec<i32>,
     pub method: Method,
+    /// Decode-policy override (v1 wire `policy` field / served default).
+    /// `None` means the method's preset policy; `Some` selects any
+    /// spatial × temporal combination. Engine sharing keys on
+    /// [`Request::group_key`], so rows with different policies never
+    /// land in the same batch round.
+    pub policy: Option<DecodePolicy>,
     pub gen_len: usize,
     /// SLA budget in milliseconds from submission. Drives slot
     /// claiming: the batcher orders every queue by effective deadline
@@ -30,6 +36,36 @@ pub struct Request {
     /// marked with the `parked` terminal state. Off by default — the
     /// classic behavior is to finish late and count a deadline miss.
     pub park_on_miss: bool,
+}
+
+/// Engine-compatibility key: requests may share a `BatchEngine` round
+/// iff their keys are equal. Keying on (method, resolved policy) — not
+/// the bare method — is what lets one served fleet decode different
+/// policies concurrently without ever mixing them inside a batch.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct GroupKey {
+    pub method: Method,
+    pub policy: DecodePolicy,
+}
+
+impl From<Method> for GroupKey {
+    /// The key a bare method resolves to: its preset policy.
+    fn from(method: Method) -> GroupKey {
+        GroupKey { method, policy: DecodePolicy::for_method(method) }
+    }
+}
+
+impl Request {
+    /// The policy this request decodes under: its explicit override, or
+    /// the method's preset.
+    pub fn effective_policy(&self) -> DecodePolicy {
+        self.policy.unwrap_or_else(|| DecodePolicy::for_method(self.method))
+    }
+
+    /// The engine-compatibility key (see [`GroupKey`]).
+    pub fn group_key(&self) -> GroupKey {
+        GroupKey { method: self.method, policy: self.effective_policy() }
+    }
 }
 
 #[derive(Debug, Clone)]
@@ -127,6 +163,12 @@ pub enum RequestError {
     MissingField(&'static str),
     EmptyPrompt,
     UnknownMethod(String),
+    /// The wire `policy` field named a preset that doesn't exist.
+    UnknownPolicy(String),
+    /// The wire `policy` field parsed structurally but failed
+    /// [`DecodePolicy::validate`] (parameter out of range), or was the
+    /// wrong JSON shape. Carries the validator's message.
+    InvalidPolicy(String),
     /// `gen_len` must be a positive multiple of the method's block size
     /// — checked at construction so misaligned requests never reach an
     /// engine.
@@ -139,6 +181,8 @@ impl fmt::Display for RequestError {
             RequestError::MissingField(name) => write!(f, "missing {name}"),
             RequestError::EmptyPrompt => write!(f, "empty prompt"),
             RequestError::UnknownMethod(m) => write!(f, "unknown method '{m}'"),
+            RequestError::UnknownPolicy(p) => write!(f, "unknown policy '{p}'"),
+            RequestError::InvalidPolicy(msg) => write!(f, "invalid policy: {msg}"),
             RequestError::MisalignedGenLen { gen_len, block_size } => {
                 write!(f, "gen_len {gen_len} is not a positive multiple of block size {block_size}")
             }
@@ -159,6 +203,8 @@ impl Request {
             prompt: Vec::new(),
             method: Method::Streaming,
             bad_method: None,
+            policy: None,
+            bad_policy: None,
             gen_len: 64,
             deadline_ms: None,
             park_on_miss: false,
@@ -173,6 +219,9 @@ pub struct RequestBuilder {
     method: Method,
     /// an unparseable name passed to `method_name`, surfaced by `build`
     bad_method: Option<String>,
+    policy: Option<DecodePolicy>,
+    /// an unparseable name passed to `policy_name`, surfaced by `build`
+    bad_policy: Option<String>,
     gen_len: usize,
     deadline_ms: Option<u64>,
     park_on_miss: bool,
@@ -208,6 +257,26 @@ impl RequestBuilder {
         self
     }
 
+    /// Select an explicit decode policy (validated by `build`).
+    pub fn policy(mut self, policy: DecodePolicy) -> Self {
+        self.policy = Some(policy);
+        self.bad_policy = None;
+        self
+    }
+
+    /// Parse a policy preset from its wire name; an unknown name is
+    /// recorded and reported by `build` (the builder stays fluent).
+    pub fn policy_name(mut self, name: &str) -> Self {
+        match DecodePolicy::parse(name) {
+            Some(p) => {
+                self.policy = Some(p);
+                self.bad_policy = None;
+            }
+            None => self.bad_policy = Some(name.to_string()),
+        }
+        self
+    }
+
     pub fn gen_len(mut self, gen_len: usize) -> Self {
         self.gen_len = gen_len;
         self
@@ -230,6 +299,12 @@ impl RequestBuilder {
         if let Some(name) = self.bad_method {
             return Err(RequestError::UnknownMethod(name));
         }
+        if let Some(name) = self.bad_policy {
+            return Err(RequestError::UnknownPolicy(name));
+        }
+        if let Some(p) = &self.policy {
+            p.validate().map_err(RequestError::InvalidPolicy)?;
+        }
         if self.prompt.is_empty() {
             return Err(RequestError::EmptyPrompt);
         }
@@ -241,6 +316,7 @@ impl RequestBuilder {
             id,
             prompt: self.prompt,
             method: self.method,
+            policy: self.policy,
             gen_len: self.gen_len,
             deadline_ms: self.deadline_ms,
             park_on_miss: self.park_on_miss,
@@ -260,6 +336,61 @@ mod tests {
         assert_eq!(r.gen_len, 64);
         assert_eq!(r.deadline_ms, None);
         assert!(!r.park_on_miss);
+        assert_eq!(r.policy, None);
+        assert_eq!(r.group_key(), GroupKey::from(Method::Streaming));
+    }
+
+    #[test]
+    fn policy_selection_shapes_the_group_key() {
+        let default = Request::builder().id(1).prompt(vec![2]).build().unwrap();
+        assert_eq!(default.effective_policy(), DecodePolicy::for_method(Method::Streaming));
+
+        let att = Request::builder()
+            .id(2)
+            .prompt(vec![2])
+            .policy_name("attenuating")
+            .build()
+            .unwrap();
+        assert_eq!(att.policy, Some(DecodePolicy::parse("attenuating").unwrap()));
+        // a policy override must key a different engine group...
+        assert_ne!(att.group_key(), default.group_key());
+        // ...while naming the method's own preset keys the same group
+        let named = Request::builder()
+            .id(3)
+            .prompt(vec![2])
+            .policy_name("streaming")
+            .build()
+            .unwrap();
+        assert_eq!(named.group_key(), default.group_key());
+    }
+
+    #[test]
+    fn bad_policies_are_typed_errors() {
+        let e = Request::builder()
+            .id(1)
+            .prompt(vec![2])
+            .policy_name("bogus")
+            .build()
+            .unwrap_err();
+        assert_eq!(e, RequestError::UnknownPolicy("bogus".into()));
+        assert_eq!(e.to_string(), "unknown policy 'bogus'");
+
+        // structurally valid but out of range → rejected at build time
+        let mut p = DecodePolicy::parse("fast-dllm").unwrap();
+        p.temporal = crate::engine::TemporalPolicy::FixedTau { tau: 1.5 };
+        let e = Request::builder().id(1).prompt(vec![2]).policy(p).build().unwrap_err();
+        assert!(matches!(e, RequestError::InvalidPolicy(_)));
+        assert!(e.to_string().starts_with("invalid policy: "));
+
+        // a later valid selection clears an earlier bad name
+        let r = Request::builder()
+            .id(1)
+            .prompt(vec![2])
+            .policy_name("bogus")
+            .policy_name("dropout")
+            .build()
+            .unwrap();
+        assert_eq!(r.policy, Some(DecodePolicy::parse("dropout").unwrap()));
     }
 
     #[test]

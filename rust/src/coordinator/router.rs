@@ -6,13 +6,14 @@
 //! distinct OS threads and their wall-clocks genuinely overlap (the
 //! `engines_overlap` bench asserts busy-time sum > router elapsed).
 //!
-//! Scheduling is continuous at block granularity: ready method groups
-//! start engines on idle workers (spawning lazily up to
-//! [`RouterOptions::max_engines`]); once every worker is live, further
-//! methods multiplex — their batches queue behind the least-loaded
-//! worker and run when its current engine retires. Between block
-//! rounds, freed slots are topped up with same-method waiters, earliest
-//! effective deadline first. SLA-aware eviction (`park_on_miss`) pulls
+//! Scheduling is continuous at block granularity: ready policy groups
+//! (keyed by [`GroupKey`] — method × decode policy, so requests naming
+//! different policies never share an engine) start engines on idle
+//! workers (spawning lazily up to [`RouterOptions::max_engines`]); once
+//! every worker is live, further groups multiplex — their batches queue
+//! behind the least-loaded worker and run when its current engine
+//! retires. Between block rounds, freed slots are topped up with
+//! same-group waiters, earliest effective deadline first. SLA-aware eviction (`park_on_miss`) pulls
 //! rows whose deadline budget blew mid-decode out of their engine at
 //! the next block boundary and answers them with the `parked` terminal
 //! state.
@@ -35,7 +36,7 @@ use crate::engine::{Backend, Method, RefMode, ReferenceBackend, REFERENCE_SEED};
 use super::batcher::Batcher;
 use super::metrics::{Metrics, WorkerGauge};
 use super::protocol::CommitEvent;
-use super::request::{Request, Response};
+use super::request::{GroupKey, Request, Response};
 use super::worker::{spawn_worker, AdmitReq, RowDone, WorkerCmd, WorkerEvent};
 
 /// Default cap on concurrently live worker threads (= engines).
@@ -326,9 +327,10 @@ struct RowState {
 struct WorkerSlot {
     tx: Sender<WorkerCmd>,
     join: Option<JoinHandle<()>>,
-    /// the method whose engine the worker is currently running (None
-    /// between engines; multiplexed batches queue without setting it)
-    assigned: Option<Method>,
+    /// the policy group whose engine the worker is currently running
+    /// (None between engines; multiplexed batches queue without
+    /// setting it)
+    assigned: Option<GroupKey>,
     /// rows routed to this worker and not yet answered/bounced
     outstanding: usize,
     /// engine slot count; a guess (`opts.max_batch`) until `Ready`
@@ -445,23 +447,23 @@ where
     /// per-block service time. Before the first observed block round
     /// the batcher's flush window stands in, so the hint is always
     /// finite (and clamped ≥ 1ms by [`Response::rejected`]).
-    fn retry_after_ms(&self, method: Method) -> u64 {
+    fn retry_after_ms(&self, key: GroupKey) -> u64 {
         let per_block = self
             .est_block_secs
             .unwrap_or_else(|| self.opts.max_wait.as_secs_f64().max(0.001));
-        let depth = self.batcher.depth(method).max(1) as f64;
+        let depth = self.batcher.depth(key).max(1) as f64;
         (depth * per_block * 1000.0).ceil().max(1.0) as u64
     }
 
     fn enqueue(&mut self, job: Job) {
         self.metrics.record_submitted();
-        // Bounded admission: a full method queue answers a typed reject
+        // Bounded admission: a full group queue answers a typed reject
         // with a retry hint instead of growing without limit. Checked
         // only here — internal requeues (worker overflow bounces) are
         // in-flight work and always re-enter the queue.
-        if self.batcher.is_full(job.request.method) {
+        if self.batcher.is_full(job.request.group_key()) {
             self.metrics.record_rejected();
-            let hint = self.retry_after_ms(job.request.method);
+            let hint = self.retry_after_ms(job.request.group_key());
             job.reply.send_done(Response::rejected(job.request.id, hint));
             return;
         }
@@ -581,9 +583,9 @@ where
                 };
                 self.batcher.push_at(req, arrived);
             }
-            WorkerEvent::Round { worker, method, commits, done, busy_secs } => {
+            WorkerEvent::Round { worker, key, commits, done, busy_secs } => {
                 if busy_secs > 0.0 {
-                    self.metrics.record_busy(method.name(), busy_secs);
+                    self.metrics.record_busy(key.method.name(), busy_secs);
                     // smooth the per-block service time the reject
                     // hint is derived from (EWMA, α = 0.2)
                     self.est_block_secs = Some(match self.est_block_secs {
@@ -592,9 +594,9 @@ where
                     });
                 }
                 // self-correct after multiplexing: the worker reports
-                // which method it is actually decoding
+                // which policy group it is actually decoding
                 if self.workers[worker].assigned.is_none() {
-                    self.workers[worker].assigned = Some(method);
+                    self.workers[worker].assigned = Some(key);
                 }
                 for c in commits {
                     if let Some(r) = self.rows.get(&c.tag) {
@@ -619,9 +621,9 @@ where
                     self.fail(id, &error);
                 }
             }
-            WorkerEvent::Retired { worker, method, report, rounds, mixed_rounds } => {
+            WorkerEvent::Retired { worker, key, report, rounds, mixed_rounds } => {
                 self.metrics.record_engine(&report, rounds, mixed_rounds);
-                if self.workers[worker].assigned == Some(method) {
+                if self.workers[worker].assigned == Some(key) {
                     self.workers[worker].assigned = None;
                 }
             }
@@ -647,15 +649,15 @@ where
         }
     }
 
-    /// Start an engine for every ready method group without one:
+    /// Start an engine for every ready policy group without one:
     /// idle worker first, then a fresh spawn under the `max_engines`
     /// cap, then multiplexing onto the least-loaded live worker.
     fn start_engines(&mut self) {
         loop {
             let now = Instant::now();
-            let busy: Vec<Method> =
+            let busy: Vec<GroupKey> =
                 self.workers.iter().filter(|w| !w.dead).filter_map(|w| w.assigned).collect();
-            let Some((method, batch)) = self.batcher.pop_ready(now, &busy) else { return };
+            let Some((key, batch)) = self.batcher.pop_ready(now, &busy) else { return };
             self.metrics.record_batch(batch.len());
             let Some(wix) = self.pick_worker() else {
                 // no routable worker (all dead at the cap): requeue with
@@ -667,7 +669,7 @@ where
                 return;
             };
             if self.workers[wix].assigned.is_none() {
-                self.workers[wix].assigned = Some(method);
+                self.workers[wix].assigned = Some(key);
             }
             for req in batch {
                 self.send_admit(wix, req, AdmitKind::BatchStart);
@@ -723,16 +725,16 @@ where
         }
     }
 
-    /// Fill freed slots on running engines with same-method waiters,
+    /// Fill freed slots on running engines with same-group waiters,
     /// earliest effective deadline first (mid-flight joins).
     fn top_up(&mut self) {
         for i in 0..self.workers.len() {
             if self.workers[i].dead || !self.workers[i].ready {
                 continue;
             }
-            let Some(method) = self.workers[i].assigned else { continue };
+            let Some(key) = self.workers[i].assigned else { continue };
             while self.workers[i].outstanding < self.workers[i].capacity {
-                let Some(req) = self.batcher.pop_compatible(method) else { break };
+                let Some(req) = self.batcher.pop_compatible(key) else { break };
                 self.send_admit(i, req, AdmitKind::Join);
             }
         }
@@ -790,17 +792,19 @@ where
     }
 
     /// Refresh the scheduling gauges: per-method (queued, routed) depth
-    /// and the engines-active gauge + high-water mark.
+    /// and the engines-active gauge + high-water mark. Gauges stay
+    /// method-labeled (their historical meaning): policy groups within
+    /// a method fold into one row via [`Batcher::method_depth`].
     fn refresh_gauges(&self) {
         let engines = self.workers.iter().filter(|w| !w.dead && w.assigned.is_some()).count();
         let depths: Vec<(&'static str, usize, usize)> = Method::all()
             .into_iter()
             .filter_map(|m| {
-                let queued = self.batcher.depth(m);
+                let queued = self.batcher.method_depth(m);
                 let active: usize = self
                     .workers
                     .iter()
-                    .filter(|w| !w.dead && w.assigned == Some(m))
+                    .filter(|w| !w.dead && w.assigned.map(|k| k.method) == Some(m))
                     .map(|w| w.outstanding)
                     .sum();
                 (queued + active > 0).then_some((m.name(), queued, active))
@@ -813,7 +817,7 @@ where
             .map(|w| WorkerGauge {
                 outstanding: w.outstanding,
                 capacity: w.capacity,
-                assigned: w.assigned.map(|m| m.name()),
+                assigned: w.assigned.map(|k| k.method.name()),
                 ready: w.ready,
                 dead: w.dead,
             })

@@ -25,6 +25,7 @@ use std::sync::Arc;
 
 use anyhow::{Context, Result};
 
+use crate::engine::DecodePolicy;
 use crate::util::json::Json;
 
 use super::metrics::Metrics;
@@ -47,6 +48,9 @@ pub struct Server {
     listener: TcpListener,
     router: Arc<RouterHandle>,
     max_connections: usize,
+    /// served default decode policy, applied to generate/subscribe
+    /// requests that don't name one (requests that do always win)
+    default_policy: Option<DecodePolicy>,
     active: Arc<AtomicUsize>,
 }
 
@@ -69,6 +73,7 @@ impl Server {
             listener,
             router: Arc::new(router),
             max_connections: DEFAULT_MAX_CONNECTIONS,
+            default_policy: None,
             active: Arc::new(AtomicUsize::new(0)),
         })
     }
@@ -77,6 +82,14 @@ impl Server {
     /// the cap get one `busy` error frame and are closed immediately.
     pub fn with_max_connections(mut self, max: usize) -> Server {
         self.max_connections = max.max(1);
+        self
+    }
+
+    /// Serve `policy` as the default decode policy: requests that don't
+    /// carry a `policy` field decode with it (`--policy`/`SDLLM_POLICY`
+    /// on the CLI). Explicit per-request policies always win.
+    pub fn with_default_policy(mut self, policy: Option<DecodePolicy>) -> Server {
+        self.default_policy = policy;
         self
     }
 
@@ -111,10 +124,11 @@ impl Server {
                 continue; // dropping the stream closes the refused socket
             };
             let router = self.router.clone();
+            let default_policy = self.default_policy;
             std::thread::spawn(move || {
                 let _guard = guard;
                 let peer = stream.peer_addr().ok();
-                if let Err(e) = handle_conn(stream, &router) {
+                if let Err(e) = handle_conn(stream, &router, default_policy) {
                     eprintln!("[server] connection {peer:?} error: {e:#}");
                 }
             });
@@ -134,9 +148,10 @@ impl Server {
                 continue;
             };
             let router = self.router.clone();
+            let default_policy = self.default_policy;
             handles.push(std::thread::spawn(move || {
                 let _guard = guard;
-                let _ = handle_conn(stream, &router);
+                let _ = handle_conn(stream, &router, default_policy);
             }));
         }
         for h in handles {
@@ -227,7 +242,11 @@ fn read_line_capped<R: BufRead>(reader: &mut R) -> std::io::Result<LineRead> {
     }
 }
 
-fn handle_conn(stream: TcpStream, router: &RouterHandle) -> Result<()> {
+fn handle_conn(
+    stream: TcpStream,
+    router: &RouterHandle,
+    default_policy: Option<DecodePolicy>,
+) -> Result<()> {
     let mut writer = stream.try_clone()?;
     let mut reader = BufReader::new(stream);
     loop {
@@ -265,7 +284,10 @@ fn handle_conn(stream: TcpStream, router: &RouterHandle) -> Result<()> {
             Ok(ClientFrame::Ping { v }) => {
                 write_frame(&mut writer, &pong_frame(v))?;
             }
-            Ok(ClientFrame::Generate { v, request }) => {
+            Ok(ClientFrame::Generate { v, mut request }) => {
+                if let Some(p) = default_policy {
+                    request.policy.get_or_insert(p);
+                }
                 let id = request.id;
                 match router.call(request) {
                     Ok(resp) if resp.rejected => {
@@ -280,7 +302,10 @@ fn handle_conn(stream: TcpStream, router: &RouterHandle) -> Result<()> {
                     }
                 }
             }
-            Ok(ClientFrame::Subscribe { request }) => {
+            Ok(ClientFrame::Subscribe { mut request }) => {
+                if let Some(p) = default_policy {
+                    request.policy.get_or_insert(p);
+                }
                 // v1-only: relay the row's commit stream as it arrives,
                 // then the terminal frame; the connection then goes
                 // back to line dispatch. A write failure means the

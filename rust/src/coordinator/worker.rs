@@ -1,18 +1,19 @@
 //! Per-engine worker threads: each worker builds and owns its own
 //! [`Backend`] instance (hence `Backend: Send`, not `Sync`) and runs
-//! [`BatchEngine::step_block`] loops for one method at a time. The
-//! router never touches a decode loop — it feeds workers admissions
-//! over a command channel and hears back through [`WorkerEvent`]s
-//! merged into its own message inbox (a clone of the router's sender,
-//! so per-worker event order is the channel's FIFO order).
+//! [`BatchEngine::step_block`] loops for one policy group — a
+//! [`GroupKey`] of (method, decode policy) — at a time. The router
+//! never touches a decode loop — it feeds workers admissions over a
+//! command channel and hears back through [`WorkerEvent`]s merged into
+//! its own message inbox (a clone of the router's sender, so
+//! per-worker event order is the channel's FIFO order).
 //!
 //! Mid-flight joins land between block rounds: the worker drains its
-//! command channel without blocking after every round. A same-method
+//! command channel without blocking after every round. A same-group
 //! admission with no free slot bounces back as [`WorkerEvent::Overflow`]
 //! (the router re-queues it — capacity is only known to the router
 //! after [`WorkerEvent::Ready`], so over-admission must be recoverable,
-//! never fatal). A cross-method admission parks in a local pending
-//! queue — method multiplexing under the router's `max_engines` cap —
+//! never fatal). A cross-group admission parks in a local pending
+//! queue — group multiplexing under the router's `max_engines` cap —
 //! and starts its own engine once the current one retires.
 
 use std::collections::VecDeque;
@@ -23,12 +24,12 @@ use std::time::Instant;
 
 use anyhow::Result;
 
-use crate::engine::{clamp_batch, Backend, BatchEngine, GenConfig, GenReport, Method, RowCommit};
+use crate::engine::{clamp_batch, Backend, BatchEngine, GenConfig, GenReport, RowCommit};
 
-use super::request::Request;
+use super::request::{GroupKey, Request};
 use super::router::Msg;
 
-/// Placeholder gen length for the per-method engine config. Rows carry
+/// Placeholder gen length for the per-group engine config. Rows carry
 /// their own `gen_len` at admission — this only has to satisfy
 /// `GenConfig::validate` (positive, block-aligned).
 pub const ENGINE_CFG_GEN_LEN: usize = 64;
@@ -73,7 +74,7 @@ pub enum WorkerEvent {
     Died { worker: usize, error: String },
     Admitted { worker: usize, id: u64 },
     AdmitFailed { worker: usize, id: u64, error: String },
-    /// Same-method admission with no free slot: bounced back for
+    /// Same-group admission with no free slot: bounced back for
     /// re-queueing (original arrival preserved by the router).
     Overflow { worker: usize, req: Request },
     /// One block round (or an eviction, with `busy_secs` 0): commit
@@ -81,7 +82,7 @@ pub enum WorkerEvent {
     /// spent — the per-engine busy time the overlap bench sums.
     Round {
         worker: usize,
-        method: Method,
+        key: GroupKey,
         commits: Vec<RowCommit>,
         done: Vec<RowDone>,
         busy_secs: f64,
@@ -91,7 +92,7 @@ pub enum WorkerEvent {
     /// The engine drained and its totals folded into the report.
     Retired {
         worker: usize,
-        method: Method,
+        key: GroupKey,
         report: GenReport,
         rounds: u64,
         mixed_rounds: u64,
@@ -141,7 +142,7 @@ fn worker_loop<B, F>(
     if events.send(Msg::Worker(WorkerEvent::Ready { worker, capacity })).is_err() {
         return;
     }
-    // Cross-method admissions parked while another method's engine ran.
+    // Cross-group admissions parked while another group's engine ran.
     let mut pending: VecDeque<AdmitReq> = VecDeque::new();
     loop {
         let first = if let Some(a) = pending.pop_front() {
@@ -202,8 +203,12 @@ fn run_engine<B: Backend>(
     rx: &Receiver<WorkerCmd>,
     events: &Sender<Msg>,
 ) -> bool {
-    let method = first.request.method;
-    let cfg = GenConfig::preset(method, ENGINE_CFG_GEN_LEN);
+    let key = first.request.group_key();
+    // The engine config is the method preset with the group's decode
+    // policy swapped in — every row in this engine shares it, so one
+    // served fleet can decode different policies concurrently.
+    let mut cfg = GenConfig::preset(key.method, ENGINE_CFG_GEN_LEN);
+    cfg.policy = key.policy;
     let mut engine = match BatchEngine::new(backend, cfg, capacity) {
         Ok(e) => e,
         Err(e) => {
@@ -218,10 +223,12 @@ fn run_engine<B: Backend>(
     let mut shutdown = false;
     admit_one(worker, &mut engine, first, events);
     loop {
-        // Same-method admissions parked from an earlier run claim free
+        // Same-group admissions parked from an earlier run claim free
         // slots first (they are older than anything in the channel).
         while engine.has_free_slot() {
-            let Some(i) = pending.iter().position(|a| a.request.method == method) else { break };
+            let Some(i) = pending.iter().position(|a| a.request.group_key() == key) else {
+                break;
+            };
             let a = pending.remove(i).expect("position is in bounds");
             admit_one(worker, &mut engine, a, events);
         }
@@ -230,7 +237,7 @@ fn run_engine<B: Backend>(
         loop {
             match rx.try_recv() {
                 Ok(WorkerCmd::Admit(a)) => {
-                    if a.request.method != method {
+                    if a.request.group_key() != key {
                         pending.push_back(a);
                     } else if engine.has_free_slot() {
                         admit_one(worker, &mut engine, a, events);
@@ -251,7 +258,7 @@ fn run_engine<B: Backend>(
                         };
                         let _ = events.send(Msg::Worker(WorkerEvent::Round {
                             worker,
-                            method,
+                            key,
                             commits: engine.take_commits(),
                             done: vec![done],
                             busy_secs: 0.0,
@@ -269,7 +276,7 @@ fn run_engine<B: Backend>(
         if engine.active() == 0 {
             let _ = events.send(Msg::Worker(WorkerEvent::Retired {
                 worker,
-                method,
+                key,
                 report: engine.report().clone(),
                 rounds: engine.rounds(),
                 mixed_rounds: engine.mixed_rounds(),
@@ -290,7 +297,7 @@ fn run_engine<B: Backend>(
                         parked: false,
                     })
                     .collect();
-                let ev = WorkerEvent::Round { worker, method, commits, done, busy_secs };
+                let ev = WorkerEvent::Round { worker, key, commits, done, busy_secs };
                 if events.send(Msg::Worker(ev)).is_err() {
                     return true;
                 }
@@ -307,7 +314,7 @@ fn run_engine<B: Backend>(
                 }));
                 let _ = events.send(Msg::Worker(WorkerEvent::Retired {
                     worker,
-                    method,
+                    key,
                     report: engine.report().clone(),
                     rounds: engine.rounds(),
                     mixed_rounds: engine.mixed_rounds(),

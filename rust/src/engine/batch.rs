@@ -181,12 +181,11 @@ impl<'a, B: Backend> BatchEngine<'a, B> {
         if self.cfg.method == Method::Vanilla {
             return self.rt.pick_seq(prompt_len + gen_len).is_some();
         }
-        let q_worst = if self.cfg.suffix_pruning {
-            (k + self.cfg.window + 1).min(gen_len)
-        } else {
-            // block 0's bundle is the entire generation region
-            gen_len
-        };
+        // worst-case bundle per the spatial policy: the entire
+        // generation region for the full suffix, block + window +
+        // trailing for the windowed variants (dropout adds its thinned
+        // far-suffix survivors)
+        let q_worst = self.cfg.policy.spatial.max_bundle_len(k, gen_len);
         self.rt.pick_query(q_worst.max(1)).is_some()
     }
 

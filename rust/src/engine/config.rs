@@ -1,6 +1,15 @@
 //! Generation configuration: method presets (the paper's baselines and
 //! Streaming-dLLM itself) plus every ablation toggle Tables 3–6 and
 //! Figures 5/6 sweep.
+//!
+//! Since the decode-policy redesign the spatial/temporal knobs live in
+//! one composable [`DecodePolicy`] (see `engine::policy`); `GenConfig`
+//! carries it alongside the scheduling knobs that are not policy
+//! (block size, dKV refresh, early exit, remasking). The legacy
+//! booleans (`suffix_pruning`, `dynamic_threshold`, …) survive as
+//! variant-preserving setters so ablation sweeps read the same.
+
+use super::policy::{DecodePolicy, SpatialPolicy, TemporalPolicy, PRESET_ALPHA};
 
 /// The five methods every main table compares (paper Tables 1/2/8).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -57,20 +66,10 @@ pub struct GenConfig {
     pub gen_len: usize,
     /// block size K (paper: 32; scaled: 8)
     pub block_size: usize,
-    /// sliding-window size w in tokens (suffix pruning)
-    pub window: usize,
-    /// base confidence threshold τ0 (Eq. 10)
-    pub tau0: f32,
-    /// adaptation strength α (Eq. 10)
-    pub alpha: f32,
-    /// keep the trailing position id in the pruned suffix (Table 6)
-    pub trailing_position: bool,
+    /// composable spatial × temporal decode policy (Eq. 7–10)
+    pub policy: DecodePolicy,
     /// EOS early exit (Table 3 "Exit.")
     pub early_exit: bool,
-    /// Table 3 "Suf.": suffix pruning on/off within Streaming
-    pub suffix_pruning: bool,
-    /// Table 3 "Dyn.": dynamic threshold on/off within Streaming
-    pub dynamic_threshold: bool,
     /// dKV-Cache refresh interval (steps between prefix recomputes)
     pub dkv_refresh: usize,
     /// ReMDM-style inference-time remasking (extension; Wang et al.
@@ -85,29 +84,15 @@ impl GenConfig {
     /// Paper-faithful preset per method. `gen_len` in *scaled* tokens
     /// (64 ↔ paper 256, 128 ↔ paper 512).
     pub fn preset(method: Method, gen_len: usize) -> GenConfig {
-        let base = GenConfig {
+        GenConfig {
             method,
             gen_len,
             block_size: 8,
-            window: 24, // paper w=96 scaled ÷4
-            tau0: 0.9,
-            alpha: 0.3,
-            trailing_position: true,
-            early_exit: false,
-            suffix_pruning: false,
-            dynamic_threshold: false,
+            policy: DecodePolicy::for_method(method),
+            early_exit: matches!(method, Method::Streaming),
             dkv_refresh: 2,
             remask: false,
             remask_tau: 0.5,
-        };
-        match method {
-            Method::Vanilla | Method::DkvCache | Method::PrefixCache | Method::FastDllm => base,
-            Method::Streaming => GenConfig {
-                early_exit: true,
-                suffix_pruning: true,
-                dynamic_threshold: true,
-                ..base
-            },
         }
     }
 
@@ -122,18 +107,113 @@ impl GenConfig {
     }
 
     /// Whether decoding commits multiple tokens per step by confidence
-    /// threshold (Fast-dLLM and Streaming).
+    /// threshold (any temporal policy beyond one-per-step).
     pub fn parallel_decoding(&self) -> bool {
-        matches!(self.method, Method::FastDllm | Method::Streaming)
+        self.policy.temporal.is_parallel()
     }
 
-    /// Effective threshold at a step (Eq. 10):
-    /// τ(t) = τ0 · (1 − α · (1 − r_mask)).
-    pub fn threshold(&self, r_mask: f32) -> f32 {
-        if self.method == Method::Streaming && self.dynamic_threshold {
-            self.tau0 * (1.0 - self.alpha * (1.0 - r_mask))
-        } else {
-            self.tau0
+    /// The spatial window size, reading the full suffix as a window
+    /// spanning the whole generation (display/sweep convenience).
+    pub fn window(&self) -> usize {
+        match self.policy.spatial {
+            SpatialPolicy::FullSuffix => self.gen_len,
+            SpatialPolicy::Window { window, .. }
+            | SpatialPolicy::Attenuating { window, .. }
+            | SpatialPolicy::Dropout { window, .. } => window,
+        }
+    }
+
+    /// Base confidence threshold τ0 of the temporal policy (1.0 for
+    /// one-per-step: only fully-determined predictions clear it).
+    pub fn tau0(&self) -> f32 {
+        match self.policy.temporal {
+            TemporalPolicy::OnePerStep => 1.0,
+            TemporalPolicy::FixedTau { tau } => tau,
+            TemporalPolicy::DynamicTau { tau0, .. }
+            | TemporalPolicy::Extrapolating { tau0, .. } => tau0,
+        }
+    }
+
+    /// Adaptation strength α (0.0 when the temporal policy is static).
+    pub fn alpha(&self) -> f32 {
+        match self.policy.temporal {
+            TemporalPolicy::DynamicTau { alpha, .. }
+            | TemporalPolicy::Extrapolating { alpha, .. } => alpha,
+            _ => 0.0,
+        }
+    }
+
+    /// Set the spatial window, preserving the policy variant (no-op on
+    /// the unpruned full suffix). Attenuating floors clamp to the new
+    /// window so the config stays valid.
+    pub fn set_window(&mut self, w: usize) {
+        match &mut self.policy.spatial {
+            SpatialPolicy::FullSuffix => {}
+            SpatialPolicy::Window { window, .. } | SpatialPolicy::Dropout { window, .. } => {
+                *window = w;
+            }
+            SpatialPolicy::Attenuating { window, min_window, .. } => {
+                *window = w;
+                *min_window = (*min_window).min(w);
+            }
+        }
+    }
+
+    /// Toggle the trailing position id (Table 6); no-op on full suffix.
+    pub fn set_trailing(&mut self, on: bool) {
+        match &mut self.policy.spatial {
+            SpatialPolicy::FullSuffix => {}
+            SpatialPolicy::Window { trailing, .. }
+            | SpatialPolicy::Attenuating { trailing, .. }
+            | SpatialPolicy::Dropout { trailing, .. } => *trailing = on,
+        }
+    }
+
+    /// Set τ0, preserving the temporal variant (no-op on one-per-step,
+    /// matching the legacy field's dead-knob behaviour there).
+    pub fn set_tau0(&mut self, t: f32) {
+        match &mut self.policy.temporal {
+            TemporalPolicy::OnePerStep => {}
+            TemporalPolicy::FixedTau { tau } => *tau = t,
+            TemporalPolicy::DynamicTau { tau0, .. }
+            | TemporalPolicy::Extrapolating { tau0, .. } => *tau0 = t,
+        }
+    }
+
+    /// Set α, preserving the temporal variant (no-op when static).
+    pub fn set_alpha(&mut self, a: f32) {
+        match &mut self.policy.temporal {
+            TemporalPolicy::DynamicTau { alpha, .. }
+            | TemporalPolicy::Extrapolating { alpha, .. } => *alpha = a,
+            _ => {}
+        }
+    }
+
+    /// Table 3 "Suf.": toggle suffix pruning. Off replaces the spatial
+    /// policy with the full suffix; on restores the preset window when
+    /// coming from the full suffix (windowed variants are kept as-is).
+    pub fn set_suffix_pruning(&mut self, on: bool) {
+        if !on {
+            self.policy.spatial = SpatialPolicy::FullSuffix;
+        } else if self.policy.spatial == SpatialPolicy::FullSuffix {
+            self.policy.spatial = SpatialPolicy::preset_window();
+        }
+    }
+
+    /// Table 3 "Dyn.": toggle the dynamic threshold. Off freezes the
+    /// current τ0 as a static threshold; on lifts a static τ into the
+    /// Eq. 10 schedule with the preset α.
+    pub fn set_dynamic_threshold(&mut self, on: bool) {
+        match (on, self.policy.temporal) {
+            (false, TemporalPolicy::DynamicTau { tau0, .. })
+            | (false, TemporalPolicy::Extrapolating { tau0, .. }) => {
+                self.policy.temporal = TemporalPolicy::FixedTau { tau: tau0 };
+            }
+            (true, TemporalPolicy::FixedTau { tau }) => {
+                self.policy.temporal =
+                    TemporalPolicy::DynamicTau { tau0: tau, alpha: PRESET_ALPHA };
+            }
+            _ => {}
         }
     }
 
@@ -151,12 +231,7 @@ impl GenConfig {
                 self.gen_len, self.block_size
             ));
         }
-        if !(0.0..=1.0).contains(&self.tau0) {
-            return Err(format!("tau0 {} outside [0,1]", self.tau0));
-        }
-        if !(0.0..=1.0).contains(&self.alpha) {
-            return Err(format!("alpha {} outside [0,1]", self.alpha));
-        }
+        self.policy.validate()?;
         if self.dkv_refresh == 0 && self.method == Method::DkvCache {
             return Err("dkv_refresh must be > 0".into());
         }
@@ -200,10 +275,10 @@ pub fn table12_config(model: &str, suite: &str, gen_len: usize) -> GenConfig {
         ("llada15-mini", "math-mini", 64) => 0.4,
         _ => 0.3,
     };
-    c.window = (w_paper / 4).max(c.block_size);
+    let w = (w_paper / 4).max(c.block_size);
     // windows can't exceed the suffix itself
-    c.window = c.window.min(gen_len.saturating_sub(c.block_size));
-    c.alpha = a_paper;
+    c.set_window(w.min(gen_len.saturating_sub(c.block_size)));
+    c.set_alpha(a_paper);
     c
 }
 
@@ -223,26 +298,44 @@ mod tests {
     #[test]
     fn streaming_enables_all_modules() {
         let c = GenConfig::preset(Method::Streaming, 64);
-        assert!(c.suffix_pruning && c.dynamic_threshold && c.early_exit);
+        assert!(c.policy.spatial.is_pruning() && c.parallel_decoding() && c.early_exit);
+        assert_eq!(c.policy, DecodePolicy::parse("streaming").unwrap());
         let f = GenConfig::preset(Method::FastDllm, 64);
-        assert!(!f.suffix_pruning && !f.dynamic_threshold && !f.early_exit);
+        assert!(!f.policy.spatial.is_pruning() && !f.early_exit);
+        assert_eq!(f.policy.temporal, TemporalPolicy::FixedTau { tau: 0.9 });
     }
 
     #[test]
-    fn dynamic_threshold_decays_with_commits() {
-        let c = GenConfig::preset(Method::Streaming, 64);
-        // fully masked block → τ = τ0
-        assert!((c.threshold(1.0) - c.tau0).abs() < 1e-6);
-        // mostly committed block → lower threshold
-        assert!(c.threshold(0.25) < c.tau0);
-        // monotone in r_mask
-        assert!(c.threshold(0.5) <= c.threshold(0.9));
+    fn method_presets_resolve_to_policies() {
+        for m in Method::all() {
+            let c = GenConfig::preset(m, 64);
+            assert_eq!(c.policy, DecodePolicy::for_method(m), "{}", m.name());
+            assert_eq!(c.policy, DecodePolicy::parse(m.name()).unwrap(), "{}", m.name());
+        }
     }
 
     #[test]
-    fn fixed_threshold_for_fast_dllm() {
-        let c = GenConfig::preset(Method::FastDllm, 64);
-        assert_eq!(c.threshold(1.0), c.threshold(0.1));
+    fn setters_preserve_policy_variants() {
+        let mut s = GenConfig::preset(Method::Streaming, 64);
+        s.set_tau0(0.7);
+        s.set_alpha(0.5);
+        s.set_window(16);
+        assert_eq!(s.policy.temporal, TemporalPolicy::DynamicTau { tau0: 0.7, alpha: 0.5 });
+        assert_eq!(s.window(), 16);
+        s.set_dynamic_threshold(false);
+        assert_eq!(s.policy.temporal, TemporalPolicy::FixedTau { tau: 0.7 });
+        s.set_dynamic_threshold(true);
+        assert_eq!(s.policy.temporal, TemporalPolicy::DynamicTau { tau0: 0.7, alpha: 0.3 });
+        s.set_suffix_pruning(false);
+        assert_eq!(s.policy.spatial, SpatialPolicy::FullSuffix);
+        s.set_suffix_pruning(true);
+        assert_eq!(s.policy.spatial, SpatialPolicy::preset_window());
+
+        // legacy dead-knob behaviour: τ0 is a no-op on one-per-step
+        let mut v = GenConfig::preset(Method::PrefixCache, 64);
+        v.set_tau0(0.5);
+        assert_eq!(v.policy.temporal, TemporalPolicy::OnePerStep);
+        assert_eq!(v.tau0(), 1.0);
     }
 
     #[test]
@@ -251,14 +344,14 @@ mod tests {
         c.gen_len = 63;
         assert!(c.validate().is_err());
         let mut c2 = GenConfig::preset(Method::Streaming, 64);
-        c2.tau0 = 1.5;
+        c2.set_tau0(1.5);
         assert!(c2.validate().is_err());
     }
 
     #[test]
     fn table12_window_bounded_by_suffix() {
         let c = table12_config("llada15-mini", "gsm-mini", 64);
-        assert!(c.window <= 64 - c.block_size);
+        assert!(c.window() <= 64 - c.block_size);
         c.validate().unwrap();
     }
 

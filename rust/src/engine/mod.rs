@@ -24,7 +24,9 @@ pub use backend::Backend;
 pub use batch::{clamp_batch, BatchEngine, Finished, RowCommit};
 pub use config::{table12_config, GenConfig, Method};
 pub use generator::{GenReport, Generator, StepEvent, WorkspaceStats};
-pub use policy::{select, select_into, Candidate, Selection};
+pub use policy::{
+    select, select_into, Candidate, DecodePolicy, SpatialPolicy, TemporalPolicy, Trend,
+};
 pub use reference::{RefKv, RefMode, RefStats, ReferenceBackend, REFERENCE_SEED};
 pub use sequence::SeqState;
 pub use suffix::{build_bundle, build_bundle_into, bundle_tokens, Bundle};

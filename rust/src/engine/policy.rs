@@ -1,17 +1,26 @@
-//! Token-selection policies — the S(·) of paper Eq. 5/9.
+//! First-class decode policies — the composable spatial × temporal
+//! strategy space the paper's two mechanisms live in.
 //!
-//! Given the (token, confidence) predictions at the masked positions of
-//! the current block, decide which to commit this step:
+//! A [`DecodePolicy`] is a pair of independent axes:
 //!
-//! - `OnePerStep`: vanilla LLaDA remasking schedule — commit exactly the
-//!   highest-confidence prediction (K steps per block).
-//! - `Threshold`: Fast-dLLM — commit everything ≥ τ; if nothing clears
-//!   the bar, fall back to the single best (Eq. 9 second case), which
-//!   guarantees progress/termination.
+//! - [`SpatialPolicy`] — *which masked positions ride in the query
+//!   bundle* (paper §3.3, Eq. 7–8). Full suffix, a fixed sliding window
+//!   plus trailing position id, an attenuating window that shrinks as
+//!   decoding converges, or DPad-style seeded suffix dropout.
+//! - [`TemporalPolicy`] — *which predictions commit each step*, the
+//!   S(·) of Eq. 5/9/10. One-per-step (LLaDA), a static threshold τ
+//!   (Fast-dLLM), the dynamic τ(r_mask) of Eq. 10, or an extrapolating
+//!   rule that also commits tokens whose confidence trend predicts
+//!   convergence.
 //!
-//! The *dynamic* part of "dynamic confidence-aware parallel decoding"
-//! lives in `GenConfig::threshold(r_mask)` (Eq. 10); this module is pure
-//! selection and is what the property tests hammer.
+//! The three legacy [`Method`]s resolve to named presets
+//! ([`DecodePolicy::for_method`]) with bit-identical schedules, so the
+//! golden/parity/trade-off oracles are unchanged. Policies implement
+//! `Eq + Hash` (confidence params compared/hashed by bit pattern) so
+//! the batcher and router can key engine compatibility on them.
+
+use super::config::Method;
+use std::hash::{Hash, Hasher};
 
 /// One masked position's prediction.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -22,28 +31,409 @@ pub struct Candidate {
     pub conf: f32,
 }
 
+/// Confidence-trend observation for one candidate, fed to the
+/// extrapolating temporal policy (ignored by every other variant). The
+/// decode loop tracks this per masked position across steps.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct Trend {
+    /// confidence this position's prediction carried last step
+    pub prev_conf: f32,
+    /// consecutive *prior* steps that predicted the same token as now
+    pub streak: u32,
+}
+
+/// Spatial axis: what the query bundle contains besides the current
+/// block. Integer/bool parameters only, so `Eq`/`Hash` derive cleanly.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum SpatialPolicy {
+    /// The entire remaining suffix rides along (vanilla / Fast-dLLM).
+    FullSuffix,
+    /// Fixed sliding window of `window` suffix tokens after the block,
+    /// plus (optionally) the trailing position id (Eq. 7).
+    Window { window: usize, trailing: bool },
+    /// Window that attenuates from `window` down to `min_window` as
+    /// decoding progresses through the blocks — the suffix has converged
+    /// by the time the tail blocks decode, so less of it is kept.
+    Attenuating { window: usize, min_window: usize, trailing: bool },
+    /// DPad-style seeded suffix dropout: the near `window` tokens are
+    /// kept densely, and the far suffix is thinned to one deterministic
+    /// survivor per `stride`-sized chunk (seeded, schedule-independent).
+    Dropout { window: usize, stride: usize, seed: u64, trailing: bool },
+}
+
+/// Temporal axis: the commit rule S(·). Confidence parameters are
+/// `f32`; equality/hashing use the bit pattern (policies are validated
+/// finite, see [`DecodePolicy::validate`]).
 #[derive(Debug, Clone, Copy, PartialEq)]
-pub enum Selection {
+pub enum TemporalPolicy {
+    /// Commit exactly the highest-confidence prediction (K steps/block).
     OnePerStep,
-    Threshold(f32),
+    /// Fast-dLLM: commit everything ≥ τ; argmax fallback (Eq. 9).
+    FixedTau { tau: f32 },
+    /// Eq. 10: τ(r_mask) = τ0 · (1 − α · (1 − r_mask)); argmax fallback.
+    DynamicTau { tau0: f32, alpha: f32 },
+    /// DynamicTau plus an extrapolating early-commit: a prediction that
+    /// has been stable for `min_streak` prior steps, sits at or above
+    /// `floor`, and whose linear confidence trend reaches 1.0 within one
+    /// more step (conf + gain·Δconf ≥ 1) commits even below τ.
+    Extrapolating { tau0: f32, alpha: f32, gain: f32, floor: f32, min_streak: u32 },
+}
+
+// `PartialEq` on the f32 payloads is total over the validated parameter
+// space (no NaN survives `validate`), so the `Eq` marker is sound.
+impl Eq for TemporalPolicy {}
+
+impl Hash for TemporalPolicy {
+    fn hash<H: Hasher>(&self, state: &mut H) {
+        fn f(x: f32, state: &mut impl Hasher) {
+            // +0.0 collapses -0.0 onto +0.0 so a == b ⇒ hash(a) == hash(b)
+            (x + 0.0).to_bits().hash(state);
+        }
+        std::mem::discriminant(self).hash(state);
+        match *self {
+            TemporalPolicy::OnePerStep => {}
+            TemporalPolicy::FixedTau { tau } => f(tau, state),
+            TemporalPolicy::DynamicTau { tau0, alpha } => {
+                f(tau0, state);
+                f(alpha, state);
+            }
+            TemporalPolicy::Extrapolating { tau0, alpha, gain, floor, min_streak } => {
+                f(tau0, state);
+                f(alpha, state);
+                f(gain, state);
+                f(floor, state);
+                min_streak.hash(state);
+            }
+        }
+    }
+}
+
+/// The composable decode policy: one spatial choice × one temporal
+/// choice. This is what `GenConfig` carries, what the batcher keys
+/// engine compatibility on, and what a v1 wire request may select.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct DecodePolicy {
+    pub spatial: SpatialPolicy,
+    pub temporal: TemporalPolicy,
+}
+
+/// Preset window (paper w = 96 scaled ÷4) shared by every named preset.
+pub const PRESET_WINDOW: usize = 24;
+/// Preset base threshold τ0 (Eq. 10).
+pub const PRESET_TAU0: f32 = 0.9;
+/// Preset adaptation strength α (Eq. 10).
+pub const PRESET_ALPHA: f32 = 0.3;
+
+impl SpatialPolicy {
+    /// Streaming-dLLM's fixed window + trailing position id.
+    pub fn preset_window() -> SpatialPolicy {
+        SpatialPolicy::Window { window: PRESET_WINDOW, trailing: true }
+    }
+
+    /// Whether this policy prunes the suffix at all (anything but
+    /// [`SpatialPolicy::FullSuffix`]).
+    pub fn is_pruning(&self) -> bool {
+        !matches!(self, SpatialPolicy::FullSuffix)
+    }
+
+    /// The window in effect while decoding block `block` of `n_blocks`
+    /// (`None` for the unpruned full suffix).
+    pub fn window_at(&self, block: usize, n_blocks: usize) -> Option<usize> {
+        match *self {
+            SpatialPolicy::FullSuffix => None,
+            SpatialPolicy::Window { window, .. } | SpatialPolicy::Dropout { window, .. } => {
+                Some(window)
+            }
+            SpatialPolicy::Attenuating { window, min_window, .. } => {
+                Some(attenuated_window(window, min_window, block, n_blocks))
+            }
+        }
+    }
+
+    /// Whether the trailing position id rides along when the window
+    /// falls short of the suffix end.
+    pub fn trailing(&self) -> bool {
+        match *self {
+            SpatialPolicy::FullSuffix => false,
+            SpatialPolicy::Window { trailing, .. }
+            | SpatialPolicy::Attenuating { trailing, .. }
+            | SpatialPolicy::Dropout { trailing, .. } => trailing,
+        }
+    }
+
+    /// Worst-case bundle length over every block of a generation — the
+    /// admission/warm-up bound (`block + window + trailing`, clipped to
+    /// the generation length; dropout adds its far-suffix survivors).
+    pub fn max_bundle_len(&self, block_size: usize, gen_len: usize) -> usize {
+        match *self {
+            SpatialPolicy::FullSuffix => gen_len,
+            SpatialPolicy::Window { window, .. }
+            | SpatialPolicy::Attenuating { window, .. } => {
+                (block_size + window + 1).min(gen_len)
+            }
+            SpatialPolicy::Dropout { window, stride, .. } => {
+                let far = gen_len.saturating_sub(block_size + window);
+                (block_size + window + far.div_ceil(stride.max(1)) + 1).min(gen_len)
+            }
+        }
+    }
+
+    /// Exact bundle length for block `block` when `suffix_len` masked
+    /// tokens remain after it. Mirrors `suffix::build_bundle_into`
+    /// (pinned against it by a property test there); the warm-up planner
+    /// uses this to pre-compile exactly the query buckets a generation
+    /// will touch.
+    pub fn bundle_len_at(
+        &self,
+        block: usize,
+        n_blocks: usize,
+        block_size: usize,
+        suffix_len: usize,
+    ) -> usize {
+        fn windowed(k: usize, suffix_len: usize, window: usize, trailing: bool) -> usize {
+            let win = window.min(suffix_len);
+            k + win + usize::from(trailing && win < suffix_len)
+        }
+        match *self {
+            SpatialPolicy::FullSuffix => block_size + suffix_len,
+            SpatialPolicy::Window { window, trailing } => {
+                windowed(block_size, suffix_len, window, trailing)
+            }
+            SpatialPolicy::Attenuating { window, min_window, trailing } => {
+                let w = attenuated_window(window, min_window, block, n_blocks);
+                windowed(block_size, suffix_len, w, trailing)
+            }
+            SpatialPolicy::Dropout { window, stride, trailing, .. } => {
+                let near = window.min(suffix_len);
+                let far = suffix_len.saturating_sub(usize::from(trailing)).saturating_sub(near);
+                let trail = usize::from(trailing && near < suffix_len);
+                block_size + near + far.div_ceil(stride.max(1)) + trail
+            }
+        }
+    }
+}
+
+/// Linear attenuation from `window` (first block) down to `min_window`
+/// (last block), in integer arithmetic.
+pub fn attenuated_window(window: usize, min_window: usize, block: usize, n_blocks: usize) -> usize {
+    let lo = min_window.min(window);
+    let span = window - lo;
+    let denom = n_blocks.saturating_sub(1).max(1);
+    window - span * block.min(denom) / denom
+}
+
+/// Deterministic survivor offset for one far-suffix chunk of the
+/// dropout policy: chunk `chunk` keeps exactly one position, chosen by
+/// the seed (independent of decode schedule or prompt placement).
+pub fn dropout_survivor(seed: u64, chunk: usize, chunk_len: usize) -> usize {
+    debug_assert!(chunk_len > 0);
+    mix64(seed ^ (chunk as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15)) as usize % chunk_len
+}
+
+fn mix64(mut x: u64) -> u64 {
+    x = (x ^ (x >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    x ^ (x >> 31)
+}
+
+impl TemporalPolicy {
+    /// Effective threshold at a step (Eq. 10 for the dynamic variants):
+    /// τ(t) = τ0 · (1 − α · (1 − r_mask)). One-per-step reports 1.0 —
+    /// only fully-determined predictions would clear it.
+    pub fn threshold(&self, r_mask: f32) -> f32 {
+        match *self {
+            TemporalPolicy::OnePerStep => 1.0,
+            TemporalPolicy::FixedTau { tau } => tau,
+            TemporalPolicy::DynamicTau { tau0, alpha }
+            | TemporalPolicy::Extrapolating { tau0, alpha, .. } => {
+                tau0 * (1.0 - alpha * (1.0 - r_mask))
+            }
+        }
+    }
+
+    /// Whether multiple tokens may commit per step.
+    pub fn is_parallel(&self) -> bool {
+        !matches!(self, TemporalPolicy::OnePerStep)
+    }
+
+    /// Whether the decode loop must track confidence trends for this
+    /// policy (only the extrapolating rule reads them).
+    pub fn uses_trend(&self) -> bool {
+        matches!(self, TemporalPolicy::Extrapolating { .. })
+    }
+}
+
+impl DecodePolicy {
+    /// The preset a legacy [`Method`] resolves to — bit-identical to the
+    /// pre-policy hard-wired schedules (pinned by golden/parity tests).
+    pub fn for_method(method: Method) -> DecodePolicy {
+        match method {
+            Method::Vanilla | Method::DkvCache | Method::PrefixCache => DecodePolicy {
+                spatial: SpatialPolicy::FullSuffix,
+                temporal: TemporalPolicy::OnePerStep,
+            },
+            Method::FastDllm => DecodePolicy {
+                spatial: SpatialPolicy::FullSuffix,
+                temporal: TemporalPolicy::FixedTau { tau: PRESET_TAU0 },
+            },
+            Method::Streaming => DecodePolicy {
+                spatial: SpatialPolicy::preset_window(),
+                temporal: TemporalPolicy::DynamicTau { tau0: PRESET_TAU0, alpha: PRESET_ALPHA },
+            },
+        }
+    }
+
+    /// Every named preset, in canonical order: the five method presets
+    /// followed by the new composable strategies.
+    pub fn presets() -> [(&'static str, DecodePolicy); 8] {
+        let dynamic = TemporalPolicy::DynamicTau { tau0: PRESET_TAU0, alpha: PRESET_ALPHA };
+        [
+            ("vanilla", DecodePolicy::for_method(Method::Vanilla)),
+            ("dkv-cache", DecodePolicy::for_method(Method::DkvCache)),
+            ("prefix-cache", DecodePolicy::for_method(Method::PrefixCache)),
+            ("fast-dllm", DecodePolicy::for_method(Method::FastDllm)),
+            ("streaming", DecodePolicy::for_method(Method::Streaming)),
+            (
+                "attenuating",
+                DecodePolicy {
+                    spatial: SpatialPolicy::Attenuating {
+                        window: PRESET_WINDOW,
+                        min_window: 8,
+                        trailing: true,
+                    },
+                    temporal: dynamic,
+                },
+            ),
+            (
+                "extrapolating",
+                DecodePolicy {
+                    spatial: SpatialPolicy::preset_window(),
+                    temporal: TemporalPolicy::Extrapolating {
+                        tau0: PRESET_TAU0,
+                        alpha: PRESET_ALPHA,
+                        gain: 1.0,
+                        floor: 1.0,
+                        min_streak: 2,
+                    },
+                },
+            ),
+            (
+                "dropout",
+                DecodePolicy {
+                    spatial: SpatialPolicy::Dropout {
+                        window: PRESET_WINDOW,
+                        stride: 4,
+                        seed: 0xD9AD,
+                        trailing: true,
+                    },
+                    temporal: dynamic,
+                },
+            ),
+        ]
+    }
+
+    /// The canonical preset names, parseable by [`DecodePolicy::parse`].
+    pub fn preset_names() -> [&'static str; 8] {
+        DecodePolicy::presets().map(|(name, _)| name)
+    }
+
+    /// Look up a named preset.
+    pub fn parse(name: &str) -> Option<DecodePolicy> {
+        DecodePolicy::presets().into_iter().find(|(n, _)| *n == name).map(|(_, p)| p)
+    }
+
+    /// The first preset name this policy is structurally equal to, if
+    /// any (several methods share the one-per-step full-suffix policy,
+    /// so the mapping is canonical, not injective).
+    pub fn name(&self) -> Option<&'static str> {
+        DecodePolicy::presets().into_iter().find(|(_, p)| p == self).map(|(n, _)| n)
+    }
+
+    /// Parameter sanity — every confidence knob finite and in range, so
+    /// the `Eq`/`Hash` impls are total over accepted policies.
+    pub fn validate(&self) -> Result<(), String> {
+        match self.spatial {
+            SpatialPolicy::FullSuffix | SpatialPolicy::Window { .. } => {}
+            SpatialPolicy::Attenuating { window, min_window, .. } => {
+                if min_window > window {
+                    return Err(format!(
+                        "attenuating min_window {min_window} exceeds window {window}"
+                    ));
+                }
+            }
+            SpatialPolicy::Dropout { stride, .. } => {
+                if stride == 0 {
+                    return Err("dropout stride must be > 0".into());
+                }
+            }
+        }
+        let unit = |name: &str, v: f32| -> Result<(), String> {
+            if !(0.0..=1.0).contains(&v) || v.is_nan() {
+                return Err(format!("{name} {v} outside [0,1]"));
+            }
+            Ok(())
+        };
+        match self.temporal {
+            TemporalPolicy::OnePerStep => {}
+            TemporalPolicy::FixedTau { tau } => unit("tau0", tau)?,
+            TemporalPolicy::DynamicTau { tau0, alpha } => {
+                unit("tau0", tau0)?;
+                unit("alpha", alpha)?;
+            }
+            TemporalPolicy::Extrapolating { tau0, alpha, gain, floor, .. } => {
+                unit("tau0", tau0)?;
+                unit("alpha", alpha)?;
+                unit("floor", floor)?;
+                if !gain.is_finite() || gain < 0.0 {
+                    return Err(format!("gain {gain} must be finite and >= 0"));
+                }
+            }
+        }
+        Ok(())
+    }
 }
 
 /// Writes the indices (into `cands`) to commit into `out`, reusing its
 /// allocation — the zero-allocation form the decode hot path uses.
+/// `trends` is a parallel slice of per-candidate confidence trends; it
+/// may be empty (or short) when the policy does not read trends.
 /// Invariants (pinned by property tests):
 /// - never empty when `cands` is non-empty (progress guarantee)
-/// - threshold mode: every candidate with conf ≥ τ is selected
+/// - threshold family: every candidate with conf ≥ τ(r_mask) is selected
 /// - one-per-step: exactly one, the argmax by confidence
-pub fn select_into(policy: Selection, cands: &[Candidate], out: &mut Vec<usize>) {
+pub fn select_into(
+    policy: &TemporalPolicy,
+    r_mask: f32,
+    cands: &[Candidate],
+    trends: &[Trend],
+    out: &mut Vec<usize>,
+) {
     out.clear();
     if cands.is_empty() {
         return;
     }
-    match policy {
-        Selection::OnePerStep => out.push(argmax(cands)),
-        Selection::Threshold(tau) => {
+    match *policy {
+        TemporalPolicy::OnePerStep => out.push(argmax(cands)),
+        TemporalPolicy::FixedTau { .. } | TemporalPolicy::DynamicTau { .. } => {
+            let tau = policy.threshold(r_mask);
             for (i, c) in cands.iter().enumerate() {
                 if c.conf >= tau {
+                    out.push(i);
+                }
+            }
+            if out.is_empty() {
+                out.push(argmax(cands));
+            }
+        }
+        TemporalPolicy::Extrapolating { gain, floor, min_streak, .. } => {
+            let tau = policy.threshold(r_mask);
+            for (i, c) in cands.iter().enumerate() {
+                let extrapolates = trends.get(i).is_some_and(|t| {
+                    t.streak >= min_streak
+                        && c.conf >= floor
+                        && c.conf + gain * (c.conf - t.prev_conf) >= 1.0
+                });
+                if c.conf >= tau || extrapolates {
                     out.push(i);
                 }
             }
@@ -55,9 +445,14 @@ pub fn select_into(policy: Selection, cands: &[Candidate], out: &mut Vec<usize>)
 }
 
 /// Allocating convenience wrapper over [`select_into`].
-pub fn select(policy: Selection, cands: &[Candidate]) -> Vec<usize> {
+pub fn select(
+    policy: &TemporalPolicy,
+    r_mask: f32,
+    cands: &[Candidate],
+    trends: &[Trend],
+) -> Vec<usize> {
     let mut out = Vec::new();
-    select_into(policy, cands, &mut out);
+    select_into(policy, r_mask, cands, trends, &mut out);
     out
 }
 
@@ -75,61 +470,160 @@ fn argmax(cands: &[Candidate]) -> usize {
 mod tests {
     use super::*;
     use crate::util::prop;
+    use std::collections::hash_map::DefaultHasher;
 
     fn cand(pos: usize, conf: f32) -> Candidate {
         Candidate { pos, token: 7, conf }
     }
 
+    fn fixed(tau: f32) -> TemporalPolicy {
+        TemporalPolicy::FixedTau { tau }
+    }
+
     #[test]
     fn one_per_step_picks_argmax() {
         let cands = [cand(0, 0.2), cand(1, 0.9), cand(2, 0.5)];
-        assert_eq!(select(Selection::OnePerStep, &cands), vec![1]);
+        assert_eq!(select(&TemporalPolicy::OnePerStep, 1.0, &cands, &[]), vec![1]);
     }
 
     #[test]
-    fn threshold_takes_all_above() {
+    fn fixed_tau_takes_all_above() {
         let cands = [cand(0, 0.95), cand(1, 0.5), cand(2, 0.92)];
-        assert_eq!(select(Selection::Threshold(0.9), &cands), vec![0, 2]);
+        assert_eq!(select(&fixed(0.9), 1.0, &cands, &[]), vec![0, 2]);
     }
 
     #[test]
-    fn threshold_fallback_to_best() {
+    fn fixed_tau_fallback_to_best() {
         let cands = [cand(0, 0.1), cand(1, 0.4), cand(2, 0.3)];
-        assert_eq!(select(Selection::Threshold(0.9), &cands), vec![1]);
+        assert_eq!(select(&fixed(0.9), 1.0, &cands, &[]), vec![1]);
     }
 
     #[test]
     fn select_into_clears_previous_contents() {
         let mut out = vec![99, 98, 97];
         let cands = [cand(0, 0.95), cand(1, 0.5)];
-        select_into(Selection::Threshold(0.9), &cands, &mut out);
+        select_into(&fixed(0.9), 1.0, &cands, &[], &mut out);
         assert_eq!(out, vec![0]);
-        select_into(Selection::OnePerStep, &[], &mut out);
+        select_into(&TemporalPolicy::OnePerStep, 1.0, &[], &[], &mut out);
         assert!(out.is_empty());
     }
 
     #[test]
     fn empty_input_empty_output() {
-        assert!(select(Selection::Threshold(0.5), &[]).is_empty());
-        assert!(select(Selection::OnePerStep, &[]).is_empty());
+        assert!(select(&fixed(0.5), 1.0, &[], &[]).is_empty());
+        assert!(select(&TemporalPolicy::OnePerStep, 1.0, &[], &[]).is_empty());
     }
 
     #[test]
-    fn prop_progress_guarantee() {
+    fn dynamic_tau_decays_with_commits() {
+        let p = TemporalPolicy::DynamicTau { tau0: 0.9, alpha: 0.3 };
+        // fully masked block → τ = τ0
+        assert!((p.threshold(1.0) - 0.9).abs() < 1e-6);
+        // mostly committed block → lower threshold
+        assert!(p.threshold(0.25) < 0.9);
+        // monotone in r_mask
+        assert!(p.threshold(0.5) <= p.threshold(0.9));
+    }
+
+    #[test]
+    fn fixed_tau_threshold_constant() {
+        let p = fixed(0.9);
+        assert_eq!(p.threshold(1.0), p.threshold(0.1));
+        assert_eq!(TemporalPolicy::OnePerStep.threshold(0.3), 1.0);
+    }
+
+    #[test]
+    fn extrapolating_commits_on_converging_trend() {
+        let p = TemporalPolicy::Extrapolating {
+            tau0: 0.9,
+            alpha: 0.0,
+            gain: 1.0,
+            floor: 0.7,
+            min_streak: 2,
+        };
+        // the decoy clears τ = 0.9 so the argmax fallback never masks a
+        // negative case below
+        let decoy = cand(0, 0.95);
+
+        // rising, stable, above floor: 0.8 + 1.0·(0.8 − 0.5) ≥ 1.0 → commits
+        let rising = [decoy, cand(1, 0.8)];
+        assert_eq!(select(&p, 1.0, &rising, &[Trend::default(), trend(0.5, 2)]), vec![0, 1]);
+        // streak too short → no extrapolation
+        assert_eq!(select(&p, 1.0, &rising, &[Trend::default(), trend(0.5, 1)]), vec![0]);
+        // falling confidence → trend never reaches 1.0
+        assert_eq!(select(&p, 1.0, &rising, &[Trend::default(), trend(0.9, 5)]), vec![0]);
+        // below the floor → rejected even with a steep trend
+        let low = [decoy, cand(1, 0.6)];
+        assert_eq!(select(&p, 1.0, &low, &[Trend::default(), trend(0.1, 5)]), vec![0]);
+        // no trend info at all → base threshold rule only
+        assert_eq!(select(&p, 1.0, &rising, &[]), vec![0]);
+    }
+
+    fn trend(prev_conf: f32, streak: u32) -> Trend {
+        Trend { prev_conf, streak }
+    }
+
+    #[test]
+    fn prop_extrapolating_floor_one_matches_dynamic_tau() {
+        // the "extrapolating" preset sets floor = 1.0: the extra clause
+        // needs conf ≥ 1.0, which the base rule already commits (τ ≤ τ0
+        // < 1 when τ0 < 1) — so the commit set equals DynamicTau's for
+        // every input. This is what makes the preset a provable tie.
         prop::check(300, |g| {
+            let tau0 = g.f32(0.3, 0.99);
+            let alpha = g.f32(0.0, 0.9);
+            let ext = TemporalPolicy::Extrapolating {
+                tau0,
+                alpha,
+                gain: g.f32(0.0, 4.0),
+                floor: 1.0,
+                min_streak: g.usize(0, 3) as u32,
+            };
+            let dyn_tau = TemporalPolicy::DynamicTau { tau0, alpha };
+            let n = g.usize(1, 16);
+            let cands: Vec<Candidate> = (0..n).map(|i| cand(i, g.f32(0.0, 1.0))).collect();
+            let trends: Vec<Trend> =
+                (0..n).map(|_| trend(g.f32(0.0, 1.0), g.usize(0, 5) as u32)).collect();
+            let r = g.f32(0.0, 1.0);
+            if select(&ext, r, &cands, &trends) != select(&dyn_tau, r, &cands, &[]) {
+                return Err("floor=1.0 extrapolation diverged from dynamic τ".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_progress_guarantee_every_temporal_policy() {
+        prop::check(400, |g| {
+            let tau0 = g.f32(0.0, 1.0);
+            let policy = match g.usize(0, 3) {
+                0 => TemporalPolicy::OnePerStep,
+                1 => TemporalPolicy::FixedTau { tau: tau0 },
+                2 => TemporalPolicy::DynamicTau { tau0, alpha: g.f32(0.0, 1.0) },
+                _ => TemporalPolicy::Extrapolating {
+                    tau0,
+                    alpha: g.f32(0.0, 1.0),
+                    gain: g.f32(0.0, 4.0),
+                    floor: g.f32(0.0, 1.0),
+                    min_streak: g.usize(0, 4) as u32,
+                },
+            };
             let n = g.usize(1, 20);
-            let confs: Vec<f32> = (0..n).map(|_| g.f32(0.0, 1.0)).collect();
-            let cands: Vec<Candidate> =
-                confs.iter().enumerate().map(|(i, &c)| cand(i, c)).collect();
-            let tau = g.f32(0.0, 1.0);
-            let sel = select(Selection::Threshold(tau), &cands);
+            let cands: Vec<Candidate> = (0..n).map(|i| cand(i, g.f32(0.0, 1.0))).collect();
+            let trends: Vec<Trend> =
+                (0..n).map(|_| trend(g.f32(0.0, 1.0), g.usize(0, 5) as u32)).collect();
+            let r = g.f32(0.0, 1.0);
+            let sel = select(&policy, r, &cands, &trends);
             if sel.is_empty() {
                 return Err("no progress".into());
             }
-            // all above-threshold candidates must be selected
-            for (i, c) in cands.iter().enumerate() {
-                if c.conf >= tau && !sel.contains(&i) {
-                    return Err(format!("candidate {i} above tau but unselected"));
+            // threshold family: everything ≥ τ(r) must be selected
+            if policy.is_parallel() {
+                let tau = policy.threshold(r);
+                for (i, c) in cands.iter().enumerate() {
+                    if c.conf >= tau && !sel.contains(&i) {
+                        return Err(format!("candidate {i} above tau but unselected"));
+                    }
                 }
             }
             // selection indices must be unique and in-range
@@ -147,9 +641,8 @@ mod tests {
     fn prop_one_per_step_always_single_max() {
         prop::check(300, |g| {
             let n = g.usize(1, 32);
-            let cands: Vec<Candidate> =
-                (0..n).map(|i| cand(i, g.f32(0.0, 1.0))).collect();
-            let sel = select(Selection::OnePerStep, &cands);
+            let cands: Vec<Candidate> = (0..n).map(|i| cand(i, g.f32(0.0, 1.0))).collect();
+            let sel = select(&TemporalPolicy::OnePerStep, g.f32(0.0, 1.0), &cands, &[]);
             if sel.len() != 1 {
                 return Err(format!("expected 1, got {}", sel.len()));
             }
@@ -159,5 +652,117 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn method_presets_match_legacy_schedules() {
+        for m in [Method::Vanilla, Method::DkvCache, Method::PrefixCache] {
+            let p = DecodePolicy::for_method(m);
+            assert_eq!(p.spatial, SpatialPolicy::FullSuffix);
+            assert_eq!(p.temporal, TemporalPolicy::OnePerStep);
+        }
+        let fast = DecodePolicy::for_method(Method::FastDllm);
+        assert_eq!(fast.temporal, TemporalPolicy::FixedTau { tau: 0.9 });
+        assert!(!fast.spatial.is_pruning());
+        let s = DecodePolicy::for_method(Method::Streaming);
+        assert_eq!(s.spatial, SpatialPolicy::Window { window: 24, trailing: true });
+        assert_eq!(s.temporal, TemporalPolicy::DynamicTau { tau0: 0.9, alpha: 0.3 });
+    }
+
+    #[test]
+    fn preset_parse_name_roundtrip() {
+        for name in DecodePolicy::preset_names() {
+            let p = DecodePolicy::parse(name).expect(name);
+            p.validate().unwrap();
+            let canon = p.name().expect("preset must resolve to a name");
+            assert_eq!(DecodePolicy::parse(canon), Some(p), "{name} → {canon}");
+        }
+        assert_eq!(DecodePolicy::parse("nope"), None);
+    }
+
+    #[test]
+    fn equal_policies_hash_equal() {
+        fn h(p: &DecodePolicy) -> u64 {
+            let mut s = DefaultHasher::new();
+            p.hash(&mut s);
+            s.finish()
+        }
+        for (_, p) in DecodePolicy::presets() {
+            let copy = p;
+            assert_eq!(h(&p), h(&copy));
+        }
+        let a = DecodePolicy::parse("streaming").unwrap();
+        let b = DecodePolicy::parse("attenuating").unwrap();
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn attenuated_window_shrinks_monotonically() {
+        let n_blocks = 8;
+        let mut prev = attenuated_window(24, 8, 0, n_blocks);
+        assert_eq!(prev, 24);
+        for b in 1..n_blocks {
+            let w = attenuated_window(24, 8, b, n_blocks);
+            assert!(w <= prev, "block {b}: {w} > {prev}");
+            assert!(w >= 8);
+            prev = w;
+        }
+        assert_eq!(prev, 8);
+        // degenerate shapes stay sane
+        assert_eq!(attenuated_window(24, 8, 0, 1), 24);
+        assert_eq!(attenuated_window(8, 8, 3, 8), 8);
+        assert_eq!(attenuated_window(8, 24, 7, 8), 8); // min > window clamps
+    }
+
+    #[test]
+    fn dropout_survivor_is_deterministic_and_bounded() {
+        for chunk in 0..32 {
+            let a = dropout_survivor(0xD9AD, chunk, 4);
+            assert_eq!(a, dropout_survivor(0xD9AD, chunk, 4));
+            assert!(a < 4);
+        }
+        assert_eq!(dropout_survivor(1, 0, 1), 0);
+    }
+
+    #[test]
+    fn max_bundle_len_bounds() {
+        assert_eq!(SpatialPolicy::FullSuffix.max_bundle_len(8, 64), 64);
+        assert_eq!(SpatialPolicy::preset_window().max_bundle_len(8, 64), 33);
+        assert_eq!(SpatialPolicy::preset_window().max_bundle_len(8, 16), 16);
+        let att = SpatialPolicy::Attenuating { window: 24, min_window: 8, trailing: true };
+        assert_eq!(att.max_bundle_len(8, 64), 33);
+        let drop = SpatialPolicy::Dropout { window: 8, stride: 4, seed: 1, trailing: true };
+        // 8 + 8 + ceil(48/4) + 1 = 29
+        assert_eq!(drop.max_bundle_len(8, 64), 29);
+    }
+
+    #[test]
+    fn invalid_policies_rejected() {
+        let bad_tau = DecodePolicy {
+            spatial: SpatialPolicy::FullSuffix,
+            temporal: TemporalPolicy::FixedTau { tau: 1.5 },
+        };
+        assert!(bad_tau.validate().is_err());
+        let bad_att = DecodePolicy {
+            spatial: SpatialPolicy::Attenuating { window: 4, min_window: 9, trailing: true },
+            temporal: TemporalPolicy::OnePerStep,
+        };
+        assert!(bad_att.validate().is_err());
+        let bad_stride = DecodePolicy {
+            spatial: SpatialPolicy::Dropout { window: 4, stride: 0, seed: 1, trailing: false },
+            temporal: TemporalPolicy::OnePerStep,
+        };
+        assert!(bad_stride.validate().is_err());
+        let bad_gain = DecodePolicy {
+            spatial: SpatialPolicy::FullSuffix,
+            temporal: TemporalPolicy::Extrapolating {
+                tau0: 0.9,
+                alpha: 0.3,
+                gain: -1.0,
+                floor: 0.5,
+                min_streak: 1,
+            },
+        };
+        assert!(bad_gain.validate().is_err());
     }
 }

@@ -2,6 +2,7 @@
 //! generation region), block cursor and commit bookkeeping — the x^(t)
 //! of paper Eq. 1, partitioned into blocks per Eq. 2.
 
+use super::policy::Trend;
 use super::types::SpecialTokens;
 
 #[derive(Debug, Clone)]
@@ -31,6 +32,14 @@ pub struct SeqState {
     /// O(1) backing for `block_done` / `mask_ratio` on the decode hot
     /// path (the scan fallback still covers ad-hoc block sizes)
     masked_counts: Vec<u32>,
+    /// confidence-trend tracking for the extrapolating temporal policy,
+    /// sized lazily on first observation (empty — zero cost — unless
+    /// the active policy reads trends): last predicted token, its
+    /// confidence, and the consecutive-same-prediction run length per
+    /// generation position
+    trend_token: Vec<i32>,
+    trend_conf: Vec<f32>,
+    trend_streak: Vec<u32>,
 }
 
 impl SeqState {
@@ -51,6 +60,9 @@ impl SeqState {
             eos_id: special.eos,
             counts_block: 0,
             masked_counts: Vec::new(),
+            trend_token: Vec::new(),
+            trend_conf: Vec::new(),
+            trend_streak: Vec::new(),
         }
     }
 
@@ -75,6 +87,32 @@ impl SeqState {
         self.eos_id = special.eos;
         self.counts_block = 0;
         self.masked_counts.clear();
+        self.trend_token.clear();
+        self.trend_conf.clear();
+        self.trend_streak.clear();
+    }
+
+    /// Record this step's prediction `(token, conf)` at masked position
+    /// `abs`, returning the trend the extrapolating temporal policy
+    /// should see: the *previous* step's confidence and how many
+    /// consecutive prior steps predicted the same token. First
+    /// observations report a flat trend (prev_conf = conf, streak 0).
+    pub fn observe_trend(&mut self, abs: usize, token: i32, conf: f32) -> Trend {
+        if self.trend_token.is_empty() {
+            // mask_id marks "never observed": sanitized predictions are
+            // never MASK, so the sentinel cannot collide
+            self.trend_token.resize(self.gen_len, self.mask_id);
+            self.trend_conf.resize(self.gen_len, 0.0);
+            self.trend_streak.resize(self.gen_len, 0);
+        }
+        let g = abs - self.p0;
+        let first = self.trend_token[g] == self.mask_id;
+        let streak = if !first && self.trend_token[g] == token { self.trend_streak[g] } else { 0 };
+        let out = Trend { prev_conf: if first { conf } else { self.trend_conf[g] }, streak };
+        self.trend_token[g] = token;
+        self.trend_conf[g] = conf;
+        self.trend_streak[g] = streak + 1;
+        out
     }
 
     /// Initialize (or re-key) the per-block masked-count cache for
@@ -411,6 +449,30 @@ mod tests {
         assert_eq!(s.commit_conf, fresh.commit_conf);
         assert_eq!(s.remasked, fresh.remasked);
         assert_eq!(s.masked_count_in(0, 8), 8);
+    }
+
+    #[test]
+    fn trend_tracks_streaks_and_previous_confidence() {
+        let mut s = seq(5, 16);
+        // first observation: flat trend
+        let t = s.observe_trend(5, 42, 0.6);
+        assert_eq!(t, Trend { prev_conf: 0.6, streak: 0 });
+        // same token again: streak counts the prior matching step
+        let t = s.observe_trend(5, 42, 0.7);
+        assert_eq!(t, Trend { prev_conf: 0.6, streak: 1 });
+        let t = s.observe_trend(5, 42, 0.8);
+        assert_eq!(t, Trend { prev_conf: 0.7, streak: 2 });
+        // prediction flips: streak resets, prev_conf still reported
+        let t = s.observe_trend(5, 43, 0.4);
+        assert_eq!(t, Trend { prev_conf: 0.8, streak: 0 });
+        // positions are independent
+        let t = s.observe_trend(6, 42, 0.5);
+        assert_eq!(t, Trend { prev_conf: 0.5, streak: 0 });
+        // reset clears trend history
+        let prompt: Vec<i32> = (10..15).collect();
+        s.reset(&prompt, 16, &special());
+        let t = s.observe_trend(5, 42, 0.9);
+        assert_eq!(t, Trend { prev_conf: 0.9, streak: 0 });
     }
 
     #[test]

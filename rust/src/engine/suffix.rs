@@ -1,14 +1,19 @@
-//! Attenuation-guided suffix modeling (paper §3.3, Eq. 7–8).
+//! Attenuation-guided suffix modeling (paper §3.3, Eq. 7–8), driven by
+//! the spatial axis of the decode policy.
 //!
 //! When decoding block c, the full masked suffix is replaced by the query
-//! bundle: the current block, a sliding window of `w` suffix tokens
-//! immediately after it, and the trailing position id (the final token of
-//! the generation region) as a coarse representation of overall length.
-//! Everything between window and trailing token is simply *absent* from
-//! the forward — that's the spatial saving: the bundle picks a smaller
-//! executable bucket.
+//! bundle the active [`SpatialPolicy`] selects: the current block always
+//! rides first, followed by (depending on the variant) the entire
+//! suffix, a sliding window of `w` suffix tokens, an attenuating window
+//! that shrinks block by block, or a DPad-style thinned suffix — plus
+//! optionally the trailing position id (the final token of the
+//! generation region) as a coarse representation of overall length.
+//! Everything the policy leaves out is simply *absent* from the forward
+//! — that's the spatial saving: the bundle picks a smaller executable
+//! bucket.
 
 use super::config::GenConfig;
+use super::policy::{attenuated_window, dropout_survivor, SpatialPolicy};
 use super::sequence::SeqState;
 
 /// The query bundle for one sequence at its current block: absolute
@@ -31,10 +36,11 @@ impl Bundle {
     }
 }
 
-/// Build the bundle per the active method, reusing `out`'s allocation
-/// (the decode hot path calls this every step for every row):
-/// - suffix pruning on  → current block + w-token window + trailing pos
-/// - suffix pruning off → current block + the entire remaining suffix
+/// Build the bundle per the active spatial policy, reusing `out`'s
+/// allocation (the decode hot path calls this every step for every
+/// row). Invariant (pinned by property tests): the bundle is always a
+/// subset of {current block ∪ suffix} and starts with the full current
+/// block.
 pub fn build_bundle_into(seq: &SeqState, cfg: &GenConfig, out: &mut Bundle) {
     let (bs, be) = seq.block_span(seq.block, cfg.block_size);
     let end = seq.total_len();
@@ -42,15 +48,44 @@ pub fn build_bundle_into(seq: &SeqState, cfg: &GenConfig, out: &mut Bundle) {
     out.positions.extend(bs..be);
     out.block_len = out.positions.len();
 
-    if cfg.suffix_pruning {
-        let win_end = (be + cfg.window).min(end);
-        out.positions.extend(be..win_end);
-        if cfg.trailing_position && win_end < end {
-            // Ĩ ∪ {p_L + L}: keep the final position id (Eq. 7)
-            out.positions.push(end - 1);
+    match cfg.policy.spatial {
+        SpatialPolicy::FullSuffix => out.positions.extend(be..end),
+        SpatialPolicy::Window { window, trailing } => {
+            extend_windowed(out, be, end, window, trailing);
         }
-    } else {
-        out.positions.extend(be..end);
+        SpatialPolicy::Attenuating { window, min_window, trailing } => {
+            let w = attenuated_window(window, min_window, seq.block, seq.n_blocks(cfg.block_size));
+            extend_windowed(out, be, end, w, trailing);
+        }
+        SpatialPolicy::Dropout { window, stride, seed, trailing } => {
+            let win_end = (be + window).min(end);
+            out.positions.extend(be..win_end);
+            // far suffix thinned to one deterministic survivor per
+            // stride-sized chunk (the trailing id is handled separately)
+            let far_end = if trailing { end - 1 } else { end };
+            if far_end > win_end {
+                let rest = far_end - win_end;
+                for chunk in 0..rest.div_ceil(stride) {
+                    let cs = win_end + chunk * stride;
+                    let clen = stride.min(far_end - cs);
+                    out.positions.push(cs + dropout_survivor(seed, chunk, clen));
+                }
+            }
+            if trailing && win_end < end {
+                out.positions.push(end - 1);
+            }
+        }
+    }
+}
+
+/// Window of `window` suffix tokens after the block, plus the trailing
+/// position id when the window falls short of the suffix end:
+/// Ĩ ∪ {p_L + L} — keep the final position id (Eq. 7).
+fn extend_windowed(out: &mut Bundle, be: usize, end: usize, window: usize, trailing: bool) {
+    let win_end = (be + window).min(end);
+    out.positions.extend(be..win_end);
+    if trailing && win_end < end {
+        out.positions.push(end - 1);
     }
 }
 
@@ -71,6 +106,7 @@ pub fn bundle_tokens(seq: &SeqState, bundle: &Bundle) -> Vec<i32> {
 mod tests {
     use super::*;
     use crate::engine::config::{GenConfig, Method};
+    use crate::engine::policy::DecodePolicy;
     use crate::engine::types::SpecialTokens;
 
     fn special() -> SpecialTokens {
@@ -84,7 +120,7 @@ mod tests {
 
     fn streaming(gen: usize, window: usize) -> GenConfig {
         let mut c = GenConfig::preset(Method::Streaming, gen);
-        c.window = window;
+        c.set_window(window);
         c
     }
 
@@ -129,7 +165,7 @@ mod tests {
     fn no_trailing_when_disabled() {
         let s = seq(10, 64);
         let mut c = streaming(64, 16);
-        c.trailing_position = false;
+        c.set_trailing(false);
         let b = build_bundle(&s, &c);
         assert_eq!(b.positions.len(), 8 + 16);
         assert_eq!(*b.positions.last().unwrap(), 33);
@@ -168,5 +204,100 @@ mod tests {
         let toks = bundle_tokens(&s, &b);
         assert_eq!(toks[0], 42);
         assert!(toks[1..].iter().all(|&t| t == 1)); // rest masked
+    }
+
+    #[test]
+    fn attenuating_matches_fixed_window_at_block_zero() {
+        // the attenuating schedule starts at its full window, so block 0
+        // is bit-identical to the fixed-window policy
+        let s = seq(10, 64);
+        let mut att = GenConfig::preset(Method::Streaming, 64);
+        att.policy = DecodePolicy::parse("attenuating").unwrap();
+        let fixed = streaming(64, 24);
+        assert_eq!(build_bundle(&s, &att), build_bundle(&s, &fixed));
+    }
+
+    #[test]
+    fn attenuating_window_shrinks_to_min_by_the_last_blocks() {
+        let mut att = GenConfig::preset(Method::Streaming, 64);
+        att.policy = DecodePolicy::parse("attenuating").unwrap(); // 24 → 8
+        let mut s = seq(10, 64);
+        // block 0: full window 24 → 8 + 24 + 1
+        let b0 = build_bundle(&s, &att);
+        assert_eq!(b0.positions.len(), 33);
+        // block 6: the attenuated window (11) exceeds the 8 remaining
+        // suffix tokens → it covers them all, so no trailing id
+        s.block = 6;
+        let b6 = build_bundle(&s, &att);
+        assert_eq!(b6.positions.len(), 16);
+        // the attenuating bundle never exceeds the fixed-window bundle
+        let fixed = streaming(64, 24);
+        for blk in 0..8 {
+            s.block = blk;
+            let a = build_bundle(&s, &att);
+            let f = build_bundle(&s, &fixed);
+            assert!(a.positions.len() <= f.positions.len(), "block {blk}");
+            assert!(a.positions.iter().all(|p| f.positions.contains(p)), "block {blk}");
+        }
+    }
+
+    #[test]
+    fn dropout_thins_the_far_suffix_deterministically() {
+        let mut c = GenConfig::preset(Method::Streaming, 64);
+        c.policy = DecodePolicy::parse("dropout").unwrap();
+        c.set_window(8);
+        let s = seq(10, 64);
+        let b = build_bundle(&s, &c);
+        // block [10,18) + near window [18,26) + ceil(47/4)=12 survivors
+        // from [26,73) + trailing 73
+        assert_eq!(b.block_len, 8);
+        assert_eq!(b.positions.len(), 8 + 8 + 12 + 1);
+        assert_eq!(b.positions.len(), c.policy.spatial.max_bundle_len(8, 64));
+        assert_eq!(*b.positions.last().unwrap(), 73);
+        // strictly increasing (no duplicates, canvas order)
+        assert!(b.positions.windows(2).all(|w| w[0] < w[1]));
+        // survivors live strictly inside the far region
+        for &p in &b.positions[16..b.positions.len() - 1] {
+            assert!((26..73).contains(&p));
+        }
+        // deterministic: the same seed rebuilds the same bundle
+        assert_eq!(b, build_bundle(&s, &c));
+    }
+
+    #[test]
+    fn bundle_len_at_matches_built_bundles_for_every_spatial_variant() {
+        // the warm-up planner relies on bundle_len_at being the *exact*
+        // per-block bundle length — pin it against the real builder for
+        // all four spatial variants across every block
+        let variants = ["streaming", "fast-dllm", "attenuating", "dropout"];
+        for name in variants {
+            let mut c = GenConfig::preset(Method::Streaming, 64);
+            c.policy = DecodePolicy::parse(name).unwrap();
+            let n_blocks = c.n_blocks();
+            let mut s = seq(10, 64);
+            for blk in 0..n_blocks {
+                s.block = blk;
+                let b = build_bundle(&s, &c);
+                let suffix_len = 64 - (blk + 1) * c.block_size;
+                let want =
+                    c.policy.spatial.bundle_len_at(blk, n_blocks, c.block_size, suffix_len);
+                assert_eq!(b.positions.len(), want, "{name} block {blk}");
+                assert!(want <= c.policy.spatial.max_bundle_len(c.block_size, 64));
+            }
+        }
+    }
+
+    #[test]
+    fn dropout_without_trailing_covers_to_the_end() {
+        let mut c = GenConfig::preset(Method::Streaming, 64);
+        c.policy = DecodePolicy::parse("dropout").unwrap();
+        c.set_window(8);
+        c.set_trailing(false);
+        let s = seq(10, 64);
+        let b = build_bundle(&s, &c);
+        // far region is [26,74): ceil(48/4) = 12 survivors, no trailing
+        assert_eq!(b.positions.len(), 8 + 8 + 12);
+        assert!(b.positions.windows(2).all(|w| w[0] < w[1]));
+        assert!(*b.positions.last().unwrap() < 74);
     }
 }

@@ -25,7 +25,7 @@ use anyhow::{bail, Result};
 use super::backend::Backend;
 use super::config::{GenConfig, Method};
 use super::generator::{GenReport, StepEvent};
-use super::policy::{select_into, Candidate, Selection};
+use super::policy::{select_into, Candidate, TemporalPolicy, Trend};
 use super::sequence::SeqState;
 use super::suffix::{build_bundle_into, Bundle};
 
@@ -46,8 +46,10 @@ pub struct StepWorkspace {
     q_valid: Vec<i32>,
     // per-row query bundles (position vecs reused across steps)
     bundles: Vec<Bundle>,
-    // candidate + selection scratch
+    // candidate + selection scratch (trends parallel to cands, filled
+    // only when the temporal policy reads confidence trends)
     cands: Vec<Candidate>,
+    trends: Vec<Trend>,
     picked: Vec<usize>,
     /// buffer-growth events (capacity misses) since construction
     pub grows: u64,
@@ -195,7 +197,8 @@ pub(crate) fn decode_step<B: Backend>(
 ) -> Result<()> {
     let k = cfg.block_size;
     let special = rt.special();
-    let StepWorkspace { q_tok, q_pos, q_valid, bundles, cands, picked, grows, steps, .. } = ws;
+    let StepWorkspace { q_tok, q_pos, q_valid, bundles, cands, trends, picked, grows, steps, .. } =
+        ws;
 
     // Bundles for live rows; finished / block-complete / padding rows
     // get an inert bundle (q_valid 0), so dead rows stop inflating the
@@ -254,37 +257,34 @@ pub(crate) fn decode_step<B: Backend>(
         let bun = &bundles[b];
         let r_mask = s.mask_ratio(k);
         // candidates: masked positions within the current block, which
-        // occupy the first `block_len` bundle slots.
+        // occupy the first `block_len` bundle slots. Confidence trends
+        // are tracked only for policies that read them.
+        let temporal = &cfg.policy.temporal;
+        let track_trend = temporal.uses_trend();
         cands.clear();
+        trends.clear();
         for j in 0..bun.block_len {
             let abs = bun.positions[j];
             if s.is_masked(abs) {
-                cands.push(Candidate {
-                    pos: abs,
-                    token: sanitize(out.token(b, j), special.mask, special.pad, special.eos),
-                    conf: out.conf(b, j),
-                });
+                let token = sanitize(out.token(b, j), special.mask, special.pad, special.eos);
+                let conf = out.conf(b, j);
+                if track_trend {
+                    trends.push(s.observe_trend(abs, token, conf));
+                }
+                cands.push(Candidate { pos: abs, token, conf });
             }
         }
         if cands.is_empty() {
             continue;
         }
-        let policy = if cfg.parallel_decoding() {
-            Selection::Threshold(cfg.threshold(r_mask))
-        } else {
-            Selection::OnePerStep
-        };
-        select_into(policy, cands, picked);
+        select_into(temporal, r_mask, cands, trends, picked);
         if b == 0 {
             if let Some(cb) = on_step.as_mut() {
                 cb(StepEvent {
                     block: s.block,
                     step_in_block,
                     masked_confs: cands.iter().map(|c| c.conf).collect(),
-                    threshold: match policy {
-                        Selection::Threshold(t) => t,
-                        Selection::OnePerStep => 1.0,
-                    },
+                    threshold: temporal.threshold(r_mask),
                     committed: picked.len(),
                 });
             }
@@ -503,7 +503,7 @@ pub(crate) fn run_vanilla<B: Backend>(
                     });
                 }
             }
-            select_into(Selection::OnePerStep, &ws.cands, &mut ws.picked);
+            select_into(&TemporalPolicy::OnePerStep, 1.0, &ws.cands, &[], &mut ws.picked);
             for &i in ws.picked.iter() {
                 s.commit_with_conf(ws.cands[i].pos, ws.cands[i].token, ws.cands[i].conf);
             }

@@ -28,6 +28,7 @@ fn main() -> Result<()> {
         .describe("artifacts", "artifacts directory (env: SDLLM_ARTIFACTS)", Some("artifacts"))
         .describe("model", "backbone to serve (env: SDLLM_MODEL)", Some("llada15-mini"))
         .describe("method", "vanilla|dkv-cache|prefix-cache|fast-dllm|streaming", Some("streaming"))
+        .describe("policy", "decode policy preset; default = the method's own (env: SDLLM_POLICY)", None)
         .describe("gen-len", "generation length L", Some("64"))
         .describe("addr", "serve: listen address (env: SDLLM_ADDR)", Some("127.0.0.1:7333"))
         .describe("max-batch", "serve: dynamic batcher max batch (env: SDLLM_MAX_BATCH)", Some("4"))
@@ -119,7 +120,9 @@ fn pjrt_router(_cfg: &ServeConfig) -> Result<RouterHandle> {
 fn serve(args: &Args) -> Result<()> {
     let cfg = ServeConfig::from_env_and_args(args)?;
     let router = router_for(&cfg)?;
-    let server = Server::bind(&cfg.addr, router)?.with_max_connections(cfg.max_connections);
+    let server = Server::bind(&cfg.addr, router)?
+        .with_max_connections(cfg.max_connections)
+        .with_default_policy(cfg.policy);
     println!(
         "serving {} on {} (wire protocol v{PROTOCOL_VERSION}; line-delimited JSON; \
          {{\"cmd\":\"stats\"}} for metrics)",
@@ -135,6 +138,9 @@ fn eval(args: &Args) -> Result<()> {
     let method = Method::parse(args.get_or("method", "streaming"))
         .ok_or_else(|| anyhow::anyhow!("unknown method"))?;
     let mut gen_cfg = GenConfig::preset(method, args.get_usize("gen-len", 64));
+    if let Some(p) = cfg.policy {
+        gen_cfg.policy = p;
+    }
     if args.has_flag("remask") {
         gen_cfg.remask = true;
         gen_cfg.remask_tau = args.get_f32("remask-tau", 0.5);
@@ -163,7 +169,10 @@ fn generate(args: &Args) -> Result<()> {
     let backend = backend_for(&cfg)?;
     let method = Method::parse(args.get_or("method", "streaming"))
         .ok_or_else(|| anyhow::anyhow!("unknown method"))?;
-    let gen_cfg = GenConfig::preset(method, args.get_usize("gen-len", 64));
+    let mut gen_cfg = GenConfig::preset(method, args.get_usize("gen-len", 64));
+    if let Some(p) = cfg.policy {
+        gen_cfg.policy = p;
+    }
 
     // prompt: token ids as a comma list, or a sample from a suite
     let prompt: Vec<i32> = match args.get("prompt-ids") {

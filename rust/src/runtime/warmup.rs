@@ -39,16 +39,10 @@ pub fn plan_keys(
                 .pick_prefix(p_need)
                 .ok_or_else(|| anyhow::anyhow!("prefix {p_need} exceeds buckets"))?;
             keys.insert(ExeKey { kind: ExeKind::Prefill, batch, len: p, query: 0 });
-            // query-bundle sizes this block can produce
+            // query-bundle size this block produces under the spatial
+            // policy (exact per-block length, not the worst case)
             let suffix_len = cfg.gen_len - (blk + 1) * k;
-            let q_need = if cfg.suffix_pruning {
-                let win = suffix_len.min(cfg.window);
-                let trailing = usize::from(cfg.trailing_position && win < suffix_len);
-                k + win + trailing
-            } else {
-                k + suffix_len
-            }
-            .max(1);
+            let q_need = cfg.policy.spatial.bundle_len_at(blk, n_blocks, k, suffix_len).max(1);
             let q = man
                 .pick_query(q_need)
                 .ok_or_else(|| anyhow::anyhow!("query {q_need} exceeds buckets"))?;

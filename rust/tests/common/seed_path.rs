@@ -13,7 +13,7 @@
 use anyhow::{bail, Result};
 use streaming_dllm::engine::{
     build_bundle, bundle_tokens, select, Backend, Candidate, GenConfig, Method, SeqState,
-    Selection,
+    TemporalPolicy,
 };
 
 pub struct SeedReport {
@@ -125,7 +125,7 @@ fn run_vanilla<B: Backend>(
                     conf: out.conf(b, p),
                 })
                 .collect();
-            for i in select(Selection::OnePerStep, &cands) {
+            for i in select(&TemporalPolicy::OnePerStep, 1.0, &cands, &[]) {
                 s.commit_with_conf(cands[i].pos, cands[i].token, cands[i].conf);
             }
             s.steps += 1;
@@ -284,12 +284,7 @@ fn decode_step<B: Backend>(
         if cands.is_empty() {
             continue;
         }
-        let policy = if cfg.parallel_decoding() {
-            Selection::Threshold(cfg.threshold(r_mask))
-        } else {
-            Selection::OnePerStep
-        };
-        let picked = select(policy, &cands);
+        let picked = select(&cfg.policy.temporal, r_mask, &cands, &[]);
         for &i in &picked {
             s.commit_with_conf(cands[i].pos, cands[i].token, cands[i].conf);
         }

@@ -13,8 +13,8 @@ use std::time::{Duration, Instant};
 
 use streaming_dllm::coordinator::{Client, Request, RouterHandle, Server};
 use streaming_dllm::engine::{
-    Backend, DecodeOut, GenConfig, Generator, Method, RefKv, RefMode, ReferenceBackend, SeqState,
-    SpecialTokens, REFERENCE_SEED,
+    Backend, DecodeOut, DecodePolicy, GenConfig, Generator, Method, RefKv, RefMode,
+    ReferenceBackend, SeqState, SpecialTokens, REFERENCE_SEED,
 };
 use streaming_dllm::eval::{extract_final, run_suite, synthetic_suite};
 use streaming_dllm::runtime::{ArtifactsIndex, ExeKey, ExeKind, Manifest};
@@ -134,7 +134,7 @@ fn causal_reference_aggressive_decoding_trades_accuracy_for_steps() {
     let oracle = ReferenceBackend::causal(REFERENCE_SEED);
     let items = synthetic_suite(&oracle, 6, 17);
     let mut lo_cfg = GenConfig::preset(Method::FastDllm, 64);
-    lo_cfg.tau0 = 0.5;
+    lo_cfg.set_tau0(0.5);
     let lo = run_suite(&ReferenceBackend::causal(REFERENCE_SEED), &lo_cfg, &items, None).unwrap();
     let hi_cfg = GenConfig::preset(Method::PrefixCache, 64);
     let hi = run_suite(&ReferenceBackend::causal(REFERENCE_SEED), &hi_cfg, &items, None).unwrap();
@@ -161,6 +161,7 @@ fn causal_reference_server_serves_the_causal_oracle() {
                 id: i as u64,
                 prompt: item.prompt.clone(),
                 method: Method::PrefixCache,
+                policy: None,
                 gen_len: 64,
                 deadline_ms: None,
                 park_on_miss: false,
@@ -207,6 +208,7 @@ fn reference_server_end_to_end_roundtrip() {
                 id: i as u64,
                 prompt: item.prompt.clone(),
                 method: Method::Streaming,
+                policy: None,
                 gen_len: 64,
                 deadline_ms: None,
                 park_on_miss: false,
@@ -262,6 +264,7 @@ fn connection_survives_unreadable_lines() {
         id: 9,
         prompt: items[0].prompt.clone(),
         method: Method::Streaming,
+        policy: None,
         gen_len: 64,
         deadline_ms: None,
         park_on_miss: false,
@@ -277,6 +280,100 @@ fn connection_survives_unreadable_lines() {
 
     drop(reader);
     drop(stream);
+    handle.join().unwrap().unwrap();
+}
+
+#[test]
+fn malformed_wire_policy_answers_typed_v1_error_and_connection_survives() {
+    use std::io::{BufRead, BufReader, Write};
+    // a bad policy field is a protocol-level error, not a served
+    // failure: the server answers a v1 error frame attributed to the
+    // request id and the connection keeps serving
+    let router = RouterHandle::spawn_reference(2, Duration::from_millis(5));
+    let server = Server::bind("127.0.0.1:0", router).unwrap();
+    let addr = server.local_addr().unwrap().to_string();
+    let handle = std::thread::spawn(move || server.serve_n(1));
+
+    let mut stream = std::net::TcpStream::connect(&addr).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut read_line = |reader: &mut BufReader<std::net::TcpStream>| {
+        let mut line = String::new();
+        assert!(reader.read_line(&mut line).unwrap() > 0, "server closed the connection");
+        line
+    };
+
+    // a policy naming no preset → typed unknown-policy error with the id
+    stream
+        .write_all(
+            b"{\"v\":1,\"type\":\"generate\",\"id\":9,\"prompt\":[2],\
+               \"policy\":\"bogus\"}\n",
+        )
+        .unwrap();
+    let frame = read_line(&mut reader);
+    assert!(frame.contains("\"type\":\"error\""), "expected a v1 error frame, got {frame}");
+    assert!(frame.contains("\"id\":9"), "v1 errors carry the parsed request id: {frame}");
+    assert!(frame.contains("unknown policy 'bogus'"), "typed message missing: {frame}");
+
+    // a policy object missing its temporal axis → invalid-policy error
+    stream
+        .write_all(
+            b"{\"v\":1,\"type\":\"generate\",\"id\":10,\"prompt\":[2],\
+               \"policy\":{\"spatial\":{\"kind\":\"full\"}}}\n",
+        )
+        .unwrap();
+    let frame = read_line(&mut reader);
+    assert!(frame.contains("\"type\":\"error\""), "expected a v1 error frame, got {frame}");
+    assert!(frame.contains("\"id\":10"), "v1 errors carry the parsed request id: {frame}");
+    assert!(frame.contains("invalid policy"), "typed message missing: {frame}");
+
+    // the same connection then serves a well-formed policy request
+    stream
+        .write_all(
+            b"{\"v\":1,\"type\":\"generate\",\"id\":11,\"prompt\":[2,10,11],\
+               \"gen_len\":64,\"policy\":\"attenuating\"}\n",
+        )
+        .unwrap();
+    let frame = read_line(&mut reader);
+    assert!(frame.contains("\"type\":\"done\""), "expected a served answer, got {frame}");
+    assert!(!frame.contains("\"error\""), "served answer must carry no error: {frame}");
+
+    drop(reader);
+    drop(stream);
+    handle.join().unwrap().unwrap();
+}
+
+#[test]
+fn v0_lines_decode_with_the_servers_default_policy() {
+    // a legacy v0 line (which cannot spell a policy field) served by a
+    // fleet configured with `--policy` still parses and answers the
+    // oracle text: the server fills its default policy into the request
+    // and the decode runs under it
+    let oracle = ReferenceBackend::toy(REFERENCE_SEED);
+    let items = synthetic_suite(&oracle, 2, 67);
+    let router = RouterHandle::spawn_reference(2, Duration::from_millis(5));
+    let server = Server::bind("127.0.0.1:0", router)
+        .unwrap()
+        .with_default_policy(DecodePolicy::parse("dropout"));
+    let addr = server.local_addr().unwrap().to_string();
+    let handle = std::thread::spawn(move || server.serve_n(1));
+
+    let mut client = Client::connect(&addr).unwrap();
+    for (i, item) in items.iter().enumerate() {
+        let resp = client
+            .call(&Request {
+                id: i as u64,
+                prompt: item.prompt.clone(),
+                method: Method::Streaming,
+                policy: None,
+                gen_len: 64,
+                deadline_ms: None,
+                park_on_miss: false,
+            })
+            .unwrap();
+        assert!(resp.error.is_none(), "{:?}", resp.error);
+        assert_eq!(extract_final(&resp.text), item.answer, "v0 answer under the default policy");
+    }
+    drop(client);
     handle.join().unwrap().unwrap();
 }
 
@@ -327,6 +424,7 @@ fn stats_prometheus_text_over_tcp() {
             id: 1,
             prompt: items[0].prompt.clone(),
             method: Method::Streaming,
+            policy: None,
             gen_len: 64,
             deadline_ms: None,
             park_on_miss: false,
@@ -449,6 +547,7 @@ fn router_serves_mid_flight_join() {
         id: 1,
         prompt: vec![2; 4],
         method: Method::Streaming,
+        policy: None,
         gen_len: 256,
         deadline_ms: None,
         park_on_miss: false,
@@ -467,6 +566,7 @@ fn router_serves_mid_flight_join() {
         id: 2,
         prompt: vec![2; 301],
         method: Method::Streaming,
+        policy: None,
         gen_len: 256,
         deadline_ms: None,
         park_on_miss: false,
@@ -520,6 +620,7 @@ fn short_row_retirement_frees_slot_for_next_join() {
         id: 1,
         prompt: vec![2; 4],
         method: Method::Streaming,
+        policy: None,
         gen_len: 256,
         deadline_ms: None,
         park_on_miss: false,
@@ -538,6 +639,7 @@ fn short_row_retirement_frees_slot_for_next_join() {
         id: 2,
         prompt: vec![2; 4],
         method: Method::Streaming,
+        policy: None,
         gen_len: 16,
         deadline_ms: Some(5_000),
         park_on_miss: false,
@@ -551,6 +653,7 @@ fn short_row_retirement_frees_slot_for_next_join() {
         id: 3,
         prompt: vec![2; 4],
         method: Method::Streaming,
+        policy: None,
         gen_len: 16,
         deadline_ms: None,
         park_on_miss: false,
@@ -797,6 +900,7 @@ mod pjrt_tier {
                     id: i as u64,
                     prompt: item.prompt.clone(),
                     method: Method::Streaming,
+                    policy: None,
                     gen_len: 64,
                     deadline_ms: None,
                     park_on_miss: false,
@@ -823,8 +927,8 @@ mod pjrt_tier {
         let items = load_suite(&root.join("eval/gsm-mini.jsonl")).unwrap();
         // temporal-only streaming: suffix pruning degenerates (w=0)
         let mut cfg = GenConfig::preset(Method::Streaming, 64);
-        cfg.window = 0;
-        cfg.trailing_position = false;
+        cfg.set_window(0);
+        cfg.set_trailing(false);
         let mut generator = Generator::new(&mrt, cfg).unwrap();
         let mut seqs = vec![SeqState::new(&items[0].prompt, 64, &mrt.manifest.special)];
         let report = generator.generate(&mut seqs, None).unwrap();

@@ -86,7 +86,7 @@ fn causal_decode_bit_identical_to_seed_path() {
     // contents or commit order shifts the confidence stream and the
     // committed chain — exact parity is the strongest regression signal
     let mut fast = GenConfig::preset(Method::FastDllm, 64);
-    fast.tau0 = 0.7; // aggressive: plenty of guessed commits
+    fast.set_tau0(0.7); // aggressive: plenty of guessed commits
     let configs: Vec<(GenConfig, &str)> = vec![
         (GenConfig::preset(Method::Streaming, 64), "streaming"),
         (fast, "fast-dllm tau=0.7"),
@@ -112,8 +112,8 @@ fn remask_and_pruning_variants_bit_identical_to_seed_path() {
     let mut cfg = GenConfig::preset(Method::Streaming, 64);
     cfg.remask = true;
     cfg.remask_tau = 0.8;
-    cfg.window = 8;
-    cfg.trailing_position = false;
+    cfg.set_window(8);
+    cfg.set_trailing(false);
     for mode in [RefMode::Toy, RefMode::Causal] {
         assert_parity(mode, &cfg, &[PROMPTS[0]], &format!("{} remask variant", mode.name()));
         assert_parity(

@@ -5,7 +5,8 @@
 //! prefix-cache), and bundle/bucket behavior.
 
 use streaming_dllm::engine::{
-    build_bundle, GenConfig, Generator, Method, ReferenceBackend, SeqState, SpecialTokens,
+    build_bundle, GenConfig, Generator, Method, ReferenceBackend, SeqState, SpatialPolicy,
+    SpecialTokens,
 };
 use streaming_dllm::util::prop;
 
@@ -128,7 +129,7 @@ fn parallel_decoding_uses_fewer_steps_than_one_per_step() {
     let be1 = backend(70);
     // high confidences from the mock (base 0.5..1.0); τ0=0.6 commits many
     let mut fast = GenConfig::preset(Method::FastDllm, 64);
-    fast.tau0 = 0.6;
+    fast.set_tau0(0.6);
     let mut g = Generator::new(&be1, fast).unwrap();
     let mut s = vec![seq(&be1, 16, 64)];
     let r_fast = g.generate(&mut s, None).unwrap();
@@ -167,9 +168,9 @@ fn prop_terminates_under_any_confidence_stream() {
         be.base_conf = g.f32(0.0, 0.9);
         be.conf_seed = g.usize(0, 1 << 30) as u64;
         let mut cfg = GenConfig::preset(method, gen_len);
-        cfg.tau0 = g.f32(0.3, 1.0);
-        cfg.alpha = g.f32(0.0, 0.9);
-        cfg.window = g.usize(0, 40);
+        cfg.set_tau0(g.f32(0.3, 1.0));
+        cfg.set_alpha(g.f32(0.0, 0.9));
+        cfg.set_window(g.usize(0, 40));
         let mut generator = Generator::new(&be, cfg).map_err(|e| e.to_string())?;
         let mut seqs = vec![seq(&be, prompt_len, gen_len)];
         let report = generator.generate(&mut seqs, None).map_err(|e| e.to_string())?;
@@ -251,8 +252,8 @@ fn prop_bundle_invariants_under_random_geometry() {
         let p0 = g.usize(1, 40);
         let mut cfg = GenConfig::preset(Method::Streaming, gen_len);
         cfg.block_size = block;
-        cfg.window = g.usize(0, 48);
-        cfg.trailing_position = g.bool(0.5);
+        cfg.set_window(g.usize(0, 48));
+        cfg.set_trailing(g.bool(0.5));
         let prompt: Vec<i32> = (0..p0).map(|i| 5 + (i % 36) as i32).collect();
         let mut s = SeqState::new(&prompt, gen_len, &SpecialTokens::default());
         s.block = g.usize(0, n_blocks - 1);
@@ -269,12 +270,12 @@ fn prop_bundle_invariants_under_random_geometry() {
         if b.positions[..b.block_len] != (bs..be).collect::<Vec<_>>()[..] {
             return Err("bundle does not start with the exact block".into());
         }
-        if b.positions.len() > block + cfg.window + 1 {
+        if b.positions.len() > block + cfg.window() + 1 {
             return Err(format!(
                 "bundle len {} > block {} + window {} + 1",
                 b.positions.len(),
                 block,
-                cfg.window
+                cfg.window()
             ));
         }
         if *b.positions.last().unwrap() >= s.total_len() {
@@ -295,9 +296,9 @@ fn prop_bundle_prune_off_equals_full_suffix() {
         let p0 = g.usize(1, 24);
         let mut pruned = GenConfig::preset(Method::Streaming, gen_len);
         pruned.block_size = block;
-        pruned.window = g.usize(0, 32);
+        pruned.set_window(g.usize(0, 32));
         let mut full = pruned.clone();
-        full.suffix_pruning = false;
+        full.set_suffix_pruning(false);
         let prompt: Vec<i32> = (0..p0).map(|i| 5 + (i % 36) as i32).collect();
         let mut s = SeqState::new(&prompt, gen_len, &SpecialTokens::default());
         s.block = g.usize(0, n_blocks - 1);
@@ -315,6 +316,64 @@ fn prop_bundle_prune_off_equals_full_suffix() {
 }
 
 #[test]
+fn prop_every_spatial_policy_bundles_a_subset_containing_the_block() {
+    // the tentpole spatial invariant across ALL four variants: the
+    // bundle is a strictly increasing subset of {block ∪ suffix} that
+    // starts with the exact current block and never exceeds the
+    // policy's worst-case length
+    prop::check(200, |g| {
+        let block = [4usize, 8][g.usize(0, 1)];
+        let n_blocks = g.usize(1, 8);
+        let gen_len = block * n_blocks;
+        let p0 = g.usize(1, 24);
+        let window = g.usize(0, 32);
+        let trailing = g.bool(0.5);
+        let mut cfg = GenConfig::preset(Method::Streaming, gen_len);
+        cfg.block_size = block;
+        cfg.policy.spatial = match g.usize(0, 3) {
+            0 => SpatialPolicy::FullSuffix,
+            1 => SpatialPolicy::Window { window, trailing },
+            2 => SpatialPolicy::Attenuating {
+                window,
+                min_window: g.usize(0, window.max(1)),
+                trailing,
+            },
+            _ => SpatialPolicy::Dropout {
+                window,
+                stride: g.usize(1, 8),
+                seed: g.usize(0, 1 << 30) as u64,
+                trailing,
+            },
+        };
+        let prompt: Vec<i32> = (0..p0).map(|i| 5 + (i % 36) as i32).collect();
+        let mut s = SeqState::new(&prompt, gen_len, &SpecialTokens::default());
+        s.block = g.usize(0, n_blocks - 1);
+        let b = build_bundle(&s, &cfg);
+        let (bs, be) = s.block_span(s.block, block);
+        if b.positions[..b.block_len] != (bs..be).collect::<Vec<_>>()[..] {
+            return Err("bundle does not start with the exact block".into());
+        }
+        for w in b.positions.windows(2) {
+            if w[1] <= w[0] {
+                return Err(format!("positions not strictly increasing: {:?}", b.positions));
+            }
+        }
+        // the post-block tail lives strictly inside the suffix
+        if b.positions[b.block_len..].iter().any(|&p| p < be || p >= s.total_len()) {
+            return Err("bundle position outside the suffix".into());
+        }
+        if b.positions.len() > cfg.policy.spatial.max_bundle_len(block, gen_len) {
+            return Err(format!(
+                "bundle len {} exceeds the policy's worst case {}",
+                b.positions.len(),
+                cfg.policy.spatial.max_bundle_len(block, gen_len)
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn prop_remasking_always_terminates() {
     prop::check(40, |g| {
         let mut be = backend(g.usize(8, 60));
@@ -323,7 +382,7 @@ fn prop_remasking_always_terminates() {
         let mut cfg = GenConfig::preset(Method::Streaming, 32);
         cfg.remask = true;
         cfg.remask_tau = g.f32(0.0, 1.0);
-        cfg.tau0 = g.f32(0.3, 1.0);
+        cfg.set_tau0(g.f32(0.3, 1.0));
         let mut generator = Generator::new(&be, cfg).map_err(|e| e.to_string())?;
         let mut seqs = vec![seq(&be, g.usize(2, 24), 32)];
         generator.generate(&mut seqs, None).map_err(|e| e.to_string())?;

@@ -19,7 +19,8 @@ use streaming_dllm::coordinator::{
     Client, Request, RouterHandle, Server, ServerFrame, StreamFrame,
 };
 use streaming_dllm::engine::{
-    Backend, DecodeOut, Method, RefKv, ReferenceBackend, SpecialTokens, REFERENCE_SEED,
+    Backend, DecodeOut, DecodePolicy, GenConfig, Generator, Method, RefKv, ReferenceBackend,
+    SeqState, SpecialTokens, REFERENCE_SEED,
 };
 use streaming_dllm::eval::{extract_final, synthetic_suite};
 
@@ -43,6 +44,23 @@ fn reassemble(
     be.detokenize(&canvas)
 }
 
+/// Solo decode of `prompt` with `method`'s preset and the named decode
+/// policy swapped in — the per-policy oracle the served texts must
+/// match.
+fn solo_policy_text(
+    be: &ReferenceBackend,
+    prompt: &[i32],
+    method: Method,
+    policy: &str,
+) -> String {
+    let mut cfg = GenConfig::preset(method, 64);
+    cfg.policy = DecodePolicy::parse(policy).unwrap();
+    let mut generator = Generator::new(be, cfg).unwrap();
+    let mut seqs = vec![SeqState::new(prompt, 64, &be.special())];
+    generator.generate(&mut seqs, None).unwrap();
+    be.detokenize(seqs[0].generated())
+}
+
 #[test]
 fn subscriber_reassembles_to_oracle_text() {
     let be = ReferenceBackend::toy(REFERENCE_SEED);
@@ -55,6 +73,7 @@ fn subscriber_reassembles_to_oracle_text() {
             id,
             prompt: item.prompt.clone(),
             method: Method::Streaming,
+            policy: None,
             gen_len,
             deadline_ms: None,
             park_on_miss: false,
@@ -99,6 +118,7 @@ fn tcp_subscribe_matches_call_v1_bit_for_bit() {
         id,
         prompt: items[0].prompt.clone(),
         method: Method::Streaming,
+        policy: None,
         gen_len,
         deadline_ms: None,
         park_on_miss: false,
@@ -232,6 +252,7 @@ fn blown_deadline_parks_row_without_disturbing_neighbors() {
         id: 1,
         prompt: vec![2; 4],
         method: Method::Streaming,
+        policy: None,
         gen_len: 256,
         deadline_ms: Some(50),
         park_on_miss: true,
@@ -242,6 +263,7 @@ fn blown_deadline_parks_row_without_disturbing_neighbors() {
         id: 2,
         prompt: vec![2; 4],
         method: Method::Streaming,
+        policy: None,
         gen_len: 256,
         deadline_ms: Some(600_000),
         park_on_miss: false,
@@ -295,6 +317,7 @@ fn tcp_subscriber_disconnect_cancels_row_and_frees_worker() {
         id: 7,
         prompt: vec![2; 4],
         method: Method::Streaming,
+        policy: None,
         gen_len: 256,
         deadline_ms: None,
         park_on_miss: false,
@@ -332,4 +355,111 @@ fn tcp_subscriber_disconnect_cancels_row_and_frees_worker() {
         "a cancelled subscription must not count as answered"
     );
     assert_eq!(snap.get("requests_ok").unwrap().as_usize(), Some(0));
+}
+
+#[test]
+fn wire_policy_override_decodes_one_token_per_step() {
+    // A v1 subscribe naming the "vanilla" policy (full suffix ×
+    // one-per-step) on the fast-dllm method must show one-per-step
+    // commit granularity on the wire: exactly gen_len commit frames of
+    // exactly one write each. The policy carried over the wire — not
+    // the method's native parallel τ schedule — decides the commit
+    // cadence, and the text still matches the solo decode of the same
+    // method+policy pair.
+    let be = ReferenceBackend::toy(REFERENCE_SEED);
+    let items = synthetic_suite(&be, 1, 83);
+    let router = RouterHandle::spawn_reference(2, Duration::from_millis(2));
+    let server = Server::bind("127.0.0.1:0", router).unwrap();
+    let addr = server.local_addr().unwrap().to_string();
+    let handle = std::thread::spawn(move || server.serve_n(1));
+
+    let gen_len = 64usize;
+    let req = Request {
+        id: 21,
+        prompt: items[0].prompt.clone(),
+        method: Method::FastDllm,
+        policy: DecodePolicy::parse("vanilla"),
+        gen_len,
+        deadline_ms: None,
+        park_on_miss: false,
+    };
+    let mut client = Client::connect(&addr).unwrap();
+    let frames = client.subscribe(&req).unwrap();
+    let mut commits = Vec::new();
+    let mut done = None;
+    for f in frames {
+        match f {
+            ServerFrame::Commit(c) => commits.push((c.id, c.seq, c.writes)),
+            ServerFrame::Done(resp) => done = Some(resp),
+        }
+    }
+    let done = done.expect("stream ended without a done frame");
+    assert!(done.error.is_none(), "{:?}", done.error);
+
+    assert_eq!(commits.len(), gen_len, "one-per-step must take exactly one commit per token");
+    for (_, seq, writes) in &commits {
+        assert_eq!(writes.len(), 1, "commit {seq} batched writes under one-per-step");
+    }
+    let text = reassemble(&be, gen_len, &commits, 21);
+    assert_eq!(text, done.text, "wire reassembly diverged from the done frame");
+    assert_eq!(
+        done.text,
+        solo_policy_text(&be, &items[0].prompt, Method::FastDllm, "vanilla"),
+        "served text diverged from the solo decode of the wire-selected policy"
+    );
+
+    drop(client);
+    handle.join().unwrap().unwrap();
+}
+
+#[test]
+fn concurrent_wire_requests_with_different_policies_match_solo_oracles() {
+    // One served fleet decodes two different policies at once. The
+    // batcher must keep the group keys apart (mixed-policy rows never
+    // share an engine), and each response must equal the solo decode of
+    // its own policy — the toy model is schedule-independent, so any
+    // cross-policy contamination in routing or batching would surface
+    // as a wrong answer or an error frame.
+    let be = ReferenceBackend::toy(REFERENCE_SEED);
+    let items = synthetic_suite(&be, 2, 59);
+    let router = RouterHandle::spawn_reference(2, Duration::from_millis(2));
+    let server = Server::bind("127.0.0.1:0", router).unwrap();
+    let addr = server.local_addr().unwrap().to_string();
+    let handle = std::thread::spawn(move || server.serve_n(2));
+
+    let mk = |id: u64, prompt: Vec<i32>, policy: &str| Request {
+        id,
+        prompt,
+        method: Method::Streaming,
+        policy: DecodePolicy::parse(policy),
+        gen_len: 64,
+        deadline_ms: None,
+        park_on_miss: false,
+    };
+    let req_a = mk(31, items[0].prompt.clone(), "attenuating");
+    let req_b = mk(32, items[1].prompt.clone(), "dropout");
+    let addr_a = addr.clone();
+    let ta =
+        std::thread::spawn(move || Client::connect(&addr_a).unwrap().call_v1(&req_a).unwrap());
+    let tb = std::thread::spawn(move || Client::connect(&addr).unwrap().call_v1(&req_b).unwrap());
+    let resp_a = ta.join().unwrap();
+    let resp_b = tb.join().unwrap();
+
+    for r in [&resp_a, &resp_b] {
+        assert!(r.error.is_none(), "{:?}", r.error);
+        assert!(!r.parked && !r.rejected && !r.shed);
+    }
+    assert_eq!(
+        resp_a.text,
+        solo_policy_text(&be, &items[0].prompt, Method::Streaming, "attenuating"),
+        "attenuating response diverged from its solo-policy oracle"
+    );
+    assert_eq!(
+        resp_b.text,
+        solo_policy_text(&be, &items[1].prompt, Method::Streaming, "dropout"),
+        "dropout response diverged from its solo-policy oracle"
+    );
+    assert_eq!(extract_final(&resp_a.text), items[0].answer);
+    assert_eq!(extract_final(&resp_b.text), items[1].answer);
+    handle.join().unwrap().unwrap();
 }

@@ -75,6 +75,7 @@ fn plan_schedule(rng: &mut Rng) -> Vec<Planned> {
                 id: i as u64,
                 prompt,
                 method: methods[rng.below(methods.len())],
+                policy: None,
                 gen_len: *rng.choose(&[16usize, 32, 64]),
                 deadline_ms: rng.bool(0.5).then(|| rng.range(0, 80) as u64),
                 park_on_miss: false,
@@ -356,6 +357,7 @@ fn long_req(id: u64) -> Request {
         id,
         prompt: vec![2; 4],
         method: Method::Streaming,
+        policy: None,
         gen_len: 256,
         deadline_ms: None,
         park_on_miss: false,
@@ -514,6 +516,7 @@ fn sustained_saturation_sheds_unmeetable_parkable_rows() {
                 id,
                 prompt: vec![2; 4],
                 method: Method::Streaming,
+                policy: None,
                 gen_len: 16,
                 deadline_ms: Some(1),
                 park_on_miss: true,
@@ -655,7 +658,7 @@ fn randomized_batcher_respects_deadline_order_and_conserves_requests() {
                     // the router's backpressure predicate rides on it
                     let queued = model.iter().filter(|e| e.method_ix == method_ix).count();
                     assert_eq!(
-                        b.is_full(methods[method_ix]),
+                        b.is_full(methods[method_ix].into()),
                         queued >= b.max_depth,
                         "seed {seed}: is_full disagreed with model depth {queued}"
                     );
@@ -674,6 +677,7 @@ fn randomized_batcher_respects_deadline_order_and_conserves_requests() {
                         id: next_id,
                         prompt: vec![2],
                         method: methods[method_ix],
+                        policy: None,
                         gen_len: *rng.choose(&[16usize, 64]),
                         deadline_ms,
                         park_on_miss: park,
@@ -687,7 +691,7 @@ fn randomized_batcher_respects_deadline_order_and_conserves_requests() {
                 }
                 1 => {
                     let method_ix = rng.below(methods.len());
-                    let got = b.pop_compatible(methods[method_ix]);
+                    let got = b.pop_compatible(methods[method_ix].into());
                     let want = model
                         .iter()
                         .filter(|e| e.method_ix == method_ix)
@@ -711,13 +715,13 @@ fn randomized_batcher_respects_deadline_order_and_conserves_requests() {
                     }
                 }
                 2 => {
-                    if let Some((method, batch)) = b.pop_ready(now, &[]) {
+                    if let Some((key, batch)) = b.pop_ready(now, &[]) {
                         assert!(
                             !batch.is_empty() && batch.len() <= max_batch,
                             "seed {seed}: bad batch size {}",
                             batch.len()
                         );
-                        let method_ix = methods.iter().position(|m| *m == method).unwrap();
+                        let method_ix = methods.iter().position(|m| *m == key.method).unwrap();
                         // the batch is exactly the n most urgent waiters
                         // of its group, most urgent first
                         let mut expect: Vec<Shadow> = model
@@ -727,7 +731,7 @@ fn randomized_batcher_respects_deadline_order_and_conserves_requests() {
                             .collect();
                         expect.sort_by_key(|e| e.urgency());
                         for (r, w) in batch.iter().zip(&expect) {
-                            assert_eq!(r.method, method, "seed {seed}: mixed-method batch");
+                            assert_eq!(r.group_key(), key, "seed {seed}: mixed-group batch");
                             assert_eq!(
                                 r.id,
                                 w.id,
@@ -777,7 +781,7 @@ fn randomized_batcher_respects_deadline_order_and_conserves_requests() {
 
         // drain whatever is left; nothing may be lost or duplicated
         for (ix, m) in methods.iter().enumerate() {
-            while let Some(r) = b.pop_compatible(*m) {
+            while let Some(r) = b.pop_compatible((*m).into()) {
                 let want = model
                     .iter()
                     .filter(|e| e.method_ix == ix)

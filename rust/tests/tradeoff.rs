@@ -12,7 +12,7 @@
 //! Everything here is deterministic (seeded hashes, no wall clock), so
 //! these are exact regression tests, not statistical ones.
 
-use streaming_dllm::engine::{GenConfig, Method, ReferenceBackend, REFERENCE_SEED};
+use streaming_dllm::engine::{DecodePolicy, GenConfig, Method, ReferenceBackend, REFERENCE_SEED};
 use streaming_dllm::eval::{run_suite, synthetic_suite, EvalItem, SuiteResult};
 
 const N: usize = 24;
@@ -28,8 +28,17 @@ fn run(method: Method, tau0: Option<f32>, items: &[EvalItem]) -> SuiteResult {
     let be = ReferenceBackend::causal(REFERENCE_SEED);
     let mut cfg = GenConfig::preset(method, 64);
     if let Some(t) = tau0 {
-        cfg.tau0 = t;
+        cfg.set_tau0(t);
     }
+    run_suite(&be, &cfg, items, None).unwrap()
+}
+
+/// One suite run of the Streaming method with a named decode policy
+/// swapped in (the per-request policy path the wire exposes).
+fn run_policy(name: &str, items: &[EvalItem]) -> SuiteResult {
+    let be = ReferenceBackend::causal(REFERENCE_SEED);
+    let mut cfg = GenConfig::preset(Method::Streaming, 64);
+    cfg.policy = DecodePolicy::parse(name).unwrap();
     run_suite(&be, &cfg, items, None).unwrap()
 }
 
@@ -89,6 +98,35 @@ fn nfe_orders_streaming_below_fast_dllm_below_one_per_step() {
     // some accuracy (the trade-off), but never everything
     assert!(streaming.accuracy() < 99.9);
     assert!(streaming.accuracy() > 0.0);
+}
+
+#[test]
+fn new_policies_extend_the_frontier_without_extra_cost() {
+    // The two new swept policies must land on or inside the streaming
+    // preset's frontier point: NFE no higher at accuracy no lower.
+    // Both are *designed* to tie the preset exactly on the reference
+    // backend — the attenuating window only removes far-suffix bundle
+    // slots that never feed a block-slot prediction, and the
+    // extrapolating preset's extra commit clause needs conf ≥ its 1.0
+    // floor, which dynamic τ ≤ 0.9 already commits — so the ≤/≥ form
+    // is the acceptance bound, with equality the expected outcome.
+    let items = suite();
+    let streaming = run(Method::Streaming, None, &items);
+    for name in ["attenuating", "extrapolating"] {
+        let res = run_policy(name, &items);
+        assert!(
+            res.steps <= streaming.steps,
+            "{name} NFE {} exceeds the streaming preset's {}",
+            res.steps,
+            streaming.steps
+        );
+        assert!(
+            res.accuracy() >= streaming.accuracy(),
+            "{name} accuracy {:.1}% below the streaming preset's {:.1}%",
+            res.accuracy(),
+            streaming.accuracy()
+        );
+    }
 }
 
 #[test]
