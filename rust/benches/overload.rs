@@ -120,6 +120,7 @@ fn main() {
             max_wait: Duration::from_millis(1),
             max_engines: 1,
             max_queue_depth: depth,
+            ..RouterOptions::default()
         },
     );
     let metrics = router.metrics.clone();

@@ -1,0 +1,294 @@
+//! `prefix_reuse` smoke bench: cross-request radix prefix cache.
+//!
+//! Four requests share a 256-token prompt template and differ only in
+//! an 8-token suffix — the shared-system-prompt serving shape. The
+//! backend is a reference backend wrapped in a wall-clock cost model
+//! where prefill costs a fixed delay per prompt token *not* covered by
+//! a cached span, so the measured prefill seconds track the compute a
+//! real model would skip.
+//!
+//! Cold run: empty cache, every prompt prefilled in full (intra-batch
+//! sig-window dedup still collapses the shared template hash to one).
+//! Warm run: a second backend instance — another worker, in serving
+//! terms — replays the same prompts against the populated cache and
+//! must (a) spend ≤ 0.5× the cold prefill seconds and (b) produce
+//! byte-identical texts, the bit-identity contract the parity suite
+//! pins.
+//!
+//! Saves `target/bench-results/BENCH_prefix_reuse.json` (CI uploads
+//! it). Honors `SDLLM_REF_MODE` (toy|causal) like the serving stack.
+
+use std::time::Duration;
+
+use streaming_dllm::engine::{
+    prefix_scope_for, Backend, BatchEngine, CachedSpan, DecodeOut, GenConfig, Method,
+    PrefixCapture, PrefixHandle, RefKv, RefStats, ReferenceBackend, SharedPrefixCache,
+    SpecialTokens, REFERENCE_SEED,
+};
+use streaming_dllm::util::json::Json;
+
+/// Modeled prefill cost per uncovered prompt token.
+const PER_TOKEN: Duration = Duration::from_micros(20);
+
+const BATCH: usize = 4;
+const TEMPLATE_TOKENS: usize = 256;
+const SUFFIX_TOKENS: usize = 8;
+
+/// Reference backend under a prefill cost model: each prefill sleeps
+/// proportionally to the prompt tokens it actually has to compute
+/// (cached spans are trusted the way a real KV restore would be), so
+/// cold-vs-warm prefill seconds measure the cache, not the scheduler.
+struct CostModelBackend {
+    inner: ReferenceBackend,
+}
+
+impl CostModelBackend {
+    fn new(mode: &str) -> CostModelBackend {
+        let inner = if mode == "causal" {
+            ReferenceBackend::causal(REFERENCE_SEED)
+        } else {
+            ReferenceBackend::toy(REFERENCE_SEED)
+        };
+        CostModelBackend { inner }
+    }
+
+    fn stats(&self) -> RefStats {
+        self.inner.stats()
+    }
+}
+
+/// Sleep for the uncovered token count: each row pays its forwarded
+/// prefix length minus whatever a cached span restores.
+fn prefill_cost(valid: &[i32], cached: Option<&[CachedSpan]>) {
+    let mut uncovered = 0u64;
+    for (b, &v) in valid.iter().enumerate() {
+        let plen = v.max(0) as u64;
+        let covered = cached
+            .and_then(|c| c.get(b))
+            .filter(|s| s.capture.is_some())
+            .map(|s| (s.len as u64).min(plen))
+            .unwrap_or(0);
+        uncovered += plen - covered;
+    }
+    std::thread::sleep(PER_TOKEN * uncovered as u32);
+}
+
+impl Backend for CostModelBackend {
+    type Kv = RefKv;
+
+    fn special(&self) -> SpecialTokens {
+        self.inner.special()
+    }
+
+    fn wants_p0(&self) -> bool {
+        self.inner.wants_p0()
+    }
+
+    fn pick_batch(&self, need: usize) -> Option<usize> {
+        self.inner.pick_batch(need)
+    }
+
+    fn pick_prefix(&self, need: usize) -> Option<usize> {
+        self.inner.pick_prefix(need)
+    }
+
+    fn pick_query(&self, need: usize) -> Option<usize> {
+        self.inner.pick_query(need)
+    }
+
+    fn pick_seq(&self, need: usize) -> Option<usize> {
+        self.inner.pick_seq(need)
+    }
+
+    fn prefill(
+        &self,
+        batch: usize,
+        p_bucket: usize,
+        tokens: &[i32],
+        pos: &[i32],
+        valid: &[i32],
+        p0: Option<&[i32]>,
+    ) -> anyhow::Result<RefKv> {
+        prefill_cost(valid, None);
+        self.inner.prefill(batch, p_bucket, tokens, pos, valid, p0)
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn prefill_cached(
+        &self,
+        batch: usize,
+        p_bucket: usize,
+        tokens: &[i32],
+        pos: &[i32],
+        valid: &[i32],
+        p0: Option<&[i32]>,
+        cached: &[CachedSpan],
+    ) -> anyhow::Result<RefKv> {
+        prefill_cost(valid, Some(cached));
+        self.inner.prefill_cached(batch, p_bucket, tokens, pos, valid, p0, cached)
+    }
+
+    fn capture_prefix(&self, kv: &RefKv, row: usize, prefix_len: usize) -> Option<PrefixCapture> {
+        self.inner.capture_prefix(kv, row, prefix_len)
+    }
+
+    fn prefix_scope(&self) -> u64 {
+        self.inner.prefix_scope()
+    }
+
+    fn decode(
+        &self,
+        kv: &RefKv,
+        q_bucket: usize,
+        q_tok: &[i32],
+        q_pos: &[i32],
+        q_valid: &[i32],
+    ) -> anyhow::Result<DecodeOut> {
+        self.inner.decode(kv, q_bucket, q_tok, q_pos, q_valid)
+    }
+
+    fn logits(
+        &self,
+        batch: usize,
+        s_bucket: usize,
+        tokens: &[i32],
+        pos: &[i32],
+        valid: &[i32],
+        p0: Option<&[i32]>,
+    ) -> anyhow::Result<DecodeOut> {
+        self.inner.logits(batch, s_bucket, tokens, pos, valid, p0)
+    }
+
+    fn detokenize(&self, ids: &[i32]) -> String {
+        self.inner.detokenize(ids)
+    }
+}
+
+/// Drive one engine over the whole batch against the shared cache,
+/// returning the prefill seconds spent and each row's final text.
+fn run_batch(
+    be: &CostModelBackend,
+    prompts: &[Vec<i32>],
+    gen_len: usize,
+    cache: &SharedPrefixCache,
+) -> (f64, Vec<String>) {
+    let cfg = GenConfig::preset(Method::Streaming, gen_len);
+    let mut engine = BatchEngine::new(be, cfg, prompts.len()).expect("engine");
+    let scope = prefix_scope_for(be, engine.config());
+    engine.set_prefix_cache(PrefixHandle { cache: cache.clone(), scope });
+    for (i, p) in prompts.iter().enumerate() {
+        assert!(engine.admit(i as u64, p, gen_len), "row {i} failed to admit");
+    }
+    let mut texts = vec![String::new(); prompts.len()];
+    let mut guard = 0;
+    while engine.active() > 0 {
+        guard += 1;
+        assert!(guard < 1000, "engine failed to drain");
+        for f in engine.step_block().expect("step_block") {
+            texts[f.tag as usize] = be.detokenize(f.seq.generated());
+        }
+    }
+    (engine.report().prefill_secs, texts)
+}
+
+fn main() {
+    let mode_env = std::env::var("SDLLM_REF_MODE").unwrap_or_default();
+    let mode =
+        if mode_env.trim().eq_ignore_ascii_case("causal") { "causal" } else { "toy" };
+
+    // one decode block per request keeps the run to a single prefill,
+    // the phase the cache targets
+    let gen_len = GenConfig::preset(Method::Streaming, 64).block_size;
+    let template: Vec<i32> = (0..TEMPLATE_TOKENS).map(|i| 10 + ((i * 7) % 48) as i32).collect();
+    let prompts: Vec<Vec<i32>> = (0..BATCH)
+        .map(|r| {
+            let mut p = template.clone();
+            p.extend((0..SUFFIX_TOKENS).map(|j| 70 + (r * SUFFIX_TOKENS + j) as i32));
+            p
+        })
+        .collect();
+    let prompt_tokens = prompts[0].len();
+
+    println!(
+        "=== prefix_reuse ({mode}) — {BATCH} prompts sharing a {TEMPLATE_TOKENS}-token \
+         template, {}us/token prefill model ===",
+        PER_TOKEN.as_micros()
+    );
+
+    // dedup yardstick: one row alone, on its own backend and cache,
+    // hashes exactly one sig window — the shared-template batch below
+    // must not hash more than that
+    let probe_be = CostModelBackend::new(mode);
+    let _ = run_batch(&probe_be, &prompts[..1], gen_len, &SharedPrefixCache::new(1 << 20));
+    let hashed_single = probe_be.stats().prefix_tokens_hashed;
+
+    let cache = SharedPrefixCache::new(32 * 1024 * 1024);
+
+    let cold_be = CostModelBackend::new(mode);
+    let (cold_prefill, cold_texts) = run_batch(&cold_be, &prompts, gen_len, &cache);
+    let hashed_cold = cold_be.stats().prefix_tokens_hashed;
+
+    // a second backend instance — fresh call counters, same seed, so
+    // in serving terms another worker thread sharing the router cache
+    let warm_be = CostModelBackend::new(mode);
+    let (warm_prefill, warm_texts) = run_batch(&warm_be, &prompts, gen_len, &cache);
+    let hashed_warm = warm_be.stats().prefix_tokens_hashed;
+
+    cache.check_invariants();
+    let stats = cache.stats();
+    let ratio = warm_prefill / cold_prefill.max(1e-9);
+
+    println!("cold prefill:    {cold_prefill:.4}s  (sig tokens hashed: {hashed_cold})");
+    println!("warm prefill:    {warm_prefill:.4}s  (sig tokens hashed: {hashed_warm})");
+    println!("warm/cold:       {ratio:.3}x");
+    println!(
+        "cache:           {} hits / {} misses / {} inserts, {} tokens reused",
+        stats.hits, stats.misses, stats.inserts, stats.reused_tokens
+    );
+
+    let json = Json::obj(vec![
+        (
+            "workload",
+            Json::Str(format!(
+                "{BATCH} prompts = {TEMPLATE_TOKENS}-token shared template + \
+                 {SUFFIX_TOKENS}-token suffix, cold vs warm engine"
+            )),
+        ),
+        ("mode", Json::Str(mode.to_string())),
+        ("batch", Json::Num(BATCH as f64)),
+        ("prompt_tokens", Json::Num(prompt_tokens as f64)),
+        ("shared_template_tokens", Json::Num(TEMPLATE_TOKENS as f64)),
+        ("cold_prefill_s", Json::Num(cold_prefill)),
+        ("warm_prefill_s", Json::Num(warm_prefill)),
+        ("warm_over_cold", Json::Num(ratio)),
+        ("cache_hits", Json::Num(stats.hits as f64)),
+        ("cache_inserts", Json::Num(stats.inserts as f64)),
+        ("reused_tokens", Json::Num(stats.reused_tokens as f64)),
+        ("dedup_tokens_hashed_cold", Json::Num(hashed_cold as f64)),
+    ]);
+    let dir = std::path::Path::new("target/bench-results");
+    let _ = std::fs::create_dir_all(dir);
+    let path = dir.join("BENCH_prefix_reuse.json");
+    let _ = std::fs::write(&path, json.to_string());
+    println!("[saved {}]", path.display());
+
+    assert!(
+        warm_prefill <= 0.5 * cold_prefill,
+        "warm prefill {warm_prefill:.4}s must be <= 0.5x cold {cold_prefill:.4}s"
+    );
+    assert_eq!(warm_texts, cold_texts, "cached-prefix decode must be bit-identical to cold");
+    assert!(stats.hits >= BATCH as u64, "warm run should fully hit for every prompt");
+    assert!(stats.inserts >= BATCH as u64, "cold run should insert every prompt");
+    // intra-batch dedup: the four cold rows share one sig window, so
+    // the whole batch hashes no more than a single row alone does
+    assert!(
+        hashed_cold <= hashed_single,
+        "intra-batch dedup must collapse shared sig windows: batch of {BATCH} hashed \
+         {hashed_cold} tokens vs {hashed_single} for one row"
+    );
+    assert_eq!(hashed_warm, 0, "warm rows must not re-hash cached prefixes");
+    println!(
+        "(acceptance: warm prefill <= 0.5x cold, byte-identical texts, shared windows \
+         hashed once)"
+    );
+}

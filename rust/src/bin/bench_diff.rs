@@ -12,6 +12,11 @@
 //! `bench/history`), `SDLLM_BENCH_RESULTS` (fresh dir, default
 //! `target/bench-results`), `SDLLM_BENCH_DIFF_TOL` (relative tolerance,
 //! default 0.25).
+//!
+//! Opt-in gating: `--fail-on-drift <pct>` turns the check into a gate —
+//! the tolerance becomes `pct/100` and any DRIFT, GONE field, or
+//! MISSING fresh result exits 1. The default (no flag) behavior is
+//! unchanged: informational, always exit 0.
 
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
@@ -72,13 +77,35 @@ fn env_or(key: &str, default: &str) -> String {
     std::env::var(key).unwrap_or_else(|_| default.to_string())
 }
 
+/// `--fail-on-drift <pct>` from argv: `Some(pct/100)` when present.
+/// A malformed or missing value is a usage error, not a silent pass.
+fn fail_on_drift_arg() -> Option<f64> {
+    let mut args = std::env::args().skip(1);
+    while let Some(a) = args.next() {
+        if a == "--fail-on-drift" {
+            let pct = args
+                .next()
+                .and_then(|s| s.parse::<f64>().ok())
+                .unwrap_or_else(|| {
+                    eprintln!("usage: bench_diff [--fail-on-drift <pct>]");
+                    std::process::exit(2);
+                });
+            return Some(pct / 100.0);
+        }
+    }
+    None
+}
+
 fn main() {
     let history = PathBuf::from(env_or("SDLLM_BENCH_HISTORY", "bench/history"));
     let results = PathBuf::from(env_or("SDLLM_BENCH_RESULTS", "target/bench-results"));
-    let tol = std::env::var("SDLLM_BENCH_DIFF_TOL")
-        .ok()
-        .and_then(|s| s.parse::<f64>().ok())
-        .unwrap_or(0.25);
+    let gate = fail_on_drift_arg();
+    let tol = gate.unwrap_or_else(|| {
+        std::env::var("SDLLM_BENCH_DIFF_TOL")
+            .ok()
+            .and_then(|s| s.parse::<f64>().ok())
+            .unwrap_or(0.25)
+    });
     println!("=== bench drift vs {} (tolerance ±{:.0}%) ===", history.display(), tol * 100.0);
 
     let baselines = bench_files(&history);
@@ -96,6 +123,7 @@ fn main() {
         let cur_path = results.join(name);
         let Some(cur) = load(&cur_path) else {
             println!("[{name}] MISSING fresh result at {} (bench not run?)", cur_path.display());
+            drifts += 1;
             continue;
         };
         let mut b = BTreeMap::new();
@@ -137,5 +165,18 @@ fn main() {
             println!("[{name}] UNTRACKED (fresh result with no committed baseline)");
         }
     }
-    println!("=== {checked} fields compared, {drifts} drift(s); informational only — exit 0 ===");
+    match gate {
+        Some(_) if drifts > 0 => {
+            println!("=== {checked} fields compared, {drifts} drift(s); --fail-on-drift — exit 1 ===");
+            std::process::exit(1);
+        }
+        Some(_) => {
+            println!("=== {checked} fields compared, 0 drift(s); --fail-on-drift — exit 0 ===");
+        }
+        None => {
+            println!(
+                "=== {checked} fields compared, {drifts} drift(s); informational only — exit 0 ==="
+            );
+        }
+    }
 }

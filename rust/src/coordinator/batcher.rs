@@ -42,6 +42,33 @@ pub const DEFAULT_SLA: Duration = Duration::from_secs(30);
 /// count) or distort the queue order.
 pub const MAX_DEADLINE_MS: u64 = 24 * 60 * 60 * 1000;
 
+/// Shortest shared prompt prefix that counts as intra-batch dedup: two
+/// rows in one flush sharing at least this many leading tokens decode
+/// their template from one shared prefill via the prefix cache.
+pub const DEDUP_MIN_PREFIX: usize = 8;
+
+/// How many rows of `batch` (beyond the first sharer) ride a prompt
+/// prefix of ≥ `min_len` tokens that some earlier row in the same batch
+/// also carries — the router's intra-batch dedup gauge. Pure accounting
+/// over the flushed batch: with the prefix cache on, the first such row
+/// computes and publishes the shared prefix and the rest hit it within
+/// the same engine lifetime.
+pub fn shared_prefix_rows(batch: &[Request], min_len: usize) -> usize {
+    let mut dedup = 0usize;
+    for (i, r) in batch.iter().enumerate() {
+        if r.prompt.len() < min_len {
+            continue;
+        }
+        let shared = batch[..i].iter().any(|prev| {
+            prev.prompt.len() >= min_len && prev.prompt[..min_len] == r.prompt[..min_len]
+        });
+        if shared {
+            dedup += 1;
+        }
+    }
+    dedup
+}
+
 #[derive(Debug)]
 struct Pending {
     req: Request,
@@ -599,6 +626,37 @@ mod tests {
         let (key, batch) = b.pop_ready(t, &[]).unwrap();
         assert_eq!(key, GroupKey::from(Method::Streaming));
         assert_eq!(batch.len(), 2);
+    }
+
+    #[test]
+    fn shared_prefix_rows_counts_sharers_beyond_the_first() {
+        let template: Vec<i32> = (0..10).map(|i| 100 + i).collect();
+        let mk = |id: u64, tail: i32| {
+            let mut r = req(id, Method::Streaming, 64);
+            r.prompt = template.clone();
+            r.prompt.push(tail);
+            r
+        };
+        // 4 same-template rows: the first computes, 3 dedup against it
+        let batch = vec![mk(1, 1), mk(2, 2), mk(3, 3), mk(4, 4)];
+        assert_eq!(shared_prefix_rows(&batch, DEDUP_MIN_PREFIX), 3);
+        // distinct prefixes: no dedup
+        let mut odd = req(9, Method::Streaming, 64);
+        odd.prompt = (0..12).map(|i| 900 + i).collect();
+        let batch2 = vec![mk(1, 1), odd.clone()];
+        assert_eq!(shared_prefix_rows(&batch2, DEDUP_MIN_PREFIX), 0);
+        // prompts shorter than the floor never count
+        let shorty = req(5, Method::Streaming, 64); // 1-token prompt
+        let batch3 = vec![shorty.clone(), shorty];
+        assert_eq!(shared_prefix_rows(&batch3, DEDUP_MIN_PREFIX), 0);
+        // two groups of sharers in one batch count independently
+        let batch4 = vec![mk(1, 1), odd.clone(), mk(2, 2), {
+            let mut o2 = odd.clone();
+            o2.id = 10;
+            o2.prompt.push(7);
+            o2
+        }];
+        assert_eq!(shared_prefix_rows(&batch4, DEDUP_MIN_PREFIX), 2);
     }
 
     #[test]

@@ -17,7 +17,9 @@ use anyhow::{anyhow, bail, Result};
 use crate::engine::{DecodePolicy, RefMode};
 use crate::util::cli::Args;
 
-use super::router::{RouterOptions, DEFAULT_MAX_ENGINES, DEFAULT_MAX_QUEUE_DEPTH};
+use super::router::{
+    RouterOptions, DEFAULT_MAX_ENGINES, DEFAULT_MAX_QUEUE_DEPTH, DEFAULT_PREFIX_CACHE_BYTES,
+};
 use super::server::DEFAULT_MAX_CONNECTIONS;
 
 /// Typed serving configuration. Construct with
@@ -57,6 +59,10 @@ pub struct ServeConfig {
     pub gen_lens: Vec<usize>,
     /// default SLA budget; 0/absent means none (`--deadline-ms` / `SDLLM_DEADLINE_MS`)
     pub deadline_ms: Option<u64>,
+    /// byte budget for the router's cross-request prefix cache; 0
+    /// disables caching entirely
+    /// (`--prefix-cache-bytes` / `SDLLM_PREFIX_CACHE_BYTES`)
+    pub prefix_cache_bytes: usize,
     /// stress harness: schedules per scenario (`--schedules` / `SDLLM_STRESS_SCHEDULES`)
     pub stress_schedules: u64,
     /// stress harness: RNG seed base (`--seed-base` / `SDLLM_STRESS_SEED_BASE`)
@@ -79,6 +85,7 @@ impl Default for ServeConfig {
             policy: None,
             gen_lens: vec![64],
             deadline_ms: None,
+            prefix_cache_bytes: DEFAULT_PREFIX_CACHE_BYTES,
             stress_schedules: 20,
             stress_seed_base: 0,
         }
@@ -185,6 +192,13 @@ impl ServeConfig {
             parse_num(pick(args, "deadline-ms", "SDLLM_DEADLINE_MS"), "deadline-ms")?
                 .filter(|&ms| ms > 0);
 
+        // 0 is a valid setting (cache off), unlike the >= 1 caps above
+        let prefix_cache_bytes = parse_num(
+            pick(args, "prefix-cache-bytes", "SDLLM_PREFIX_CACHE_BYTES"),
+            "prefix-cache-bytes",
+        )?
+        .unwrap_or(d.prefix_cache_bytes);
+
         Ok(ServeConfig {
             addr: pick(args, "addr", "SDLLM_ADDR").unwrap_or(d.addr),
             ref_mode,
@@ -199,6 +213,7 @@ impl ServeConfig {
             policy,
             gen_lens,
             deadline_ms,
+            prefix_cache_bytes,
             stress_schedules: parse_num(
                 pick(args, "schedules", "SDLLM_STRESS_SCHEDULES"),
                 "schedules",
@@ -219,6 +234,7 @@ impl ServeConfig {
             max_wait: self.max_wait,
             max_engines: self.max_engines,
             max_queue_depth: self.max_queue_depth,
+            prefix_cache_bytes: self.prefix_cache_bytes,
         }
     }
 
@@ -256,6 +272,8 @@ mod tests {
             "5",
             "--policy",
             "attenuating",
+            "--prefix-cache-bytes",
+            "1048576",
         ]))
         .unwrap();
         assert_eq!(c.ref_mode, RefMode::Causal);
@@ -265,6 +283,7 @@ mod tests {
         assert_eq!(c.router_options().max_engines, 2);
         assert_eq!(c.router_options().max_batch, 8);
         assert_eq!(c.router_options().max_queue_depth, 16);
+        assert_eq!(c.router_options().prefix_cache_bytes, 1048576);
         assert_eq!(c.max_connections, 5);
 
         assert!(ServeConfig::from_env_and_args(&parse(&["--ref-mode", "bogus"])).is_err());
@@ -274,9 +293,13 @@ mod tests {
         assert!(ServeConfig::from_env_and_args(&parse(&["--max-queue-depth", "0"])).is_err());
         assert!(ServeConfig::from_env_and_args(&parse(&["--max-connections", "0"])).is_err());
         assert!(ServeConfig::from_env_and_args(&parse(&["--policy", "bogus"])).is_err());
+        assert!(ServeConfig::from_env_and_args(&parse(&["--prefix-cache-bytes", "x"])).is_err());
         // deadline 0 means "no deadline", not an error
         let c = ServeConfig::from_env_and_args(&parse(&["--deadline-ms", "0"])).unwrap();
         assert_eq!(c.deadline_ms, None);
+        // prefix-cache-bytes 0 means "cache off", not an error
+        let c = ServeConfig::from_env_and_args(&parse(&["--prefix-cache-bytes", "0"])).unwrap();
+        assert_eq!(c.prefix_cache_bytes, 0);
     }
 
     #[test]
@@ -301,6 +324,7 @@ mod tests {
             "SDLLM_POLICY",
             "SDLLM_GEN_LENS",
             "SDLLM_DEADLINE_MS",
+            "SDLLM_PREFIX_CACHE_BYTES",
             "SDLLM_STRESS_SCHEDULES",
             "SDLLM_STRESS_SEED_BASE",
         ] {
@@ -318,6 +342,7 @@ mod tests {
         assert_eq!(c.gen_lens, vec![64]);
         assert_eq!(c.deadline_ms, None);
         assert_eq!(c.policy, None);
+        assert_eq!(c.prefix_cache_bytes, DEFAULT_PREFIX_CACHE_BYTES);
         assert_eq!(c.stress_schedules, 20);
 
         std::env::set_var("SDLLM_POLICY", "dropout");
@@ -326,12 +351,14 @@ mod tests {
         std::env::set_var("SDLLM_DEADLINE_MS", "  ");
         std::env::set_var("SDLLM_MAX_QUEUE_DEPTH", "9");
         std::env::set_var("SDLLM_MAX_CONNECTIONS", "3");
+        std::env::set_var("SDLLM_PREFIX_CACHE_BYTES", "65536");
         let c = ServeConfig::from_env_and_args(&parse(&[])).unwrap();
         assert_eq!(c.gen_lens, vec![16, 32]);
         assert_eq!(c.policy, DecodePolicy::parse("dropout"));
         assert_eq!(c.stress_seed_base, 77);
         assert_eq!(c.max_queue_depth, 9);
         assert_eq!(c.max_connections, 3);
+        assert_eq!(c.prefix_cache_bytes, 65536);
         // whitespace-only env value counts as unset
         assert_eq!(c.deadline_ms, None);
         // CLI wins over env
@@ -341,11 +368,15 @@ mod tests {
         assert_eq!(c.max_queue_depth, 40);
         let c = ServeConfig::from_env_and_args(&parse(&["--policy", "streaming"])).unwrap();
         assert_eq!(c.policy, DecodePolicy::parse("streaming"));
+        let c =
+            ServeConfig::from_env_and_args(&parse(&["--prefix-cache-bytes", "4096"])).unwrap();
+        assert_eq!(c.prefix_cache_bytes, 4096);
         std::env::remove_var("SDLLM_POLICY");
         std::env::remove_var("SDLLM_GEN_LENS");
         std::env::remove_var("SDLLM_STRESS_SEED_BASE");
         std::env::remove_var("SDLLM_DEADLINE_MS");
         std::env::remove_var("SDLLM_MAX_QUEUE_DEPTH");
         std::env::remove_var("SDLLM_MAX_CONNECTIONS");
+        std::env::remove_var("SDLLM_PREFIX_CACHE_BYTES");
     }
 }

@@ -6,7 +6,7 @@
 use std::sync::Mutex;
 use std::time::Instant;
 
-use crate::engine::GenReport;
+use crate::engine::{GenReport, PrefixCacheStats};
 use crate::util::json::Json;
 use crate::util::stats::Samples;
 
@@ -57,6 +57,19 @@ struct Inner {
     prefill_secs: f64,
     decode_secs: f64,
     host_secs: f64,
+    /// prefill seconds split by cause: first pass over fresh rows vs
+    /// dkv-refresh re-prefills mid-decode (the two sum to
+    /// `prefill_secs` up to rounds that mix both)
+    init_prefill_secs: f64,
+    reprefill_secs: f64,
+    init_prefills: u64,
+    reprefills: u64,
+    /// batch rows sharing a ≥ DEDUP_MIN_PREFIX token prefix with an
+    /// earlier row of the same batch (counted beyond the first sharer)
+    prefix_dedup_rows: u64,
+    /// gauge: the router-owned prefix cache's latest stats snapshot,
+    /// refreshed every scheduling pass (zeros when the cache is off)
+    prefix_cache: PrefixCacheStats,
     /// gauge: per-method (queued, active-in-engine) depths, refreshed
     /// by the router every scheduling pass
     group_depth: Vec<(&'static str, usize, usize)>,
@@ -169,6 +182,25 @@ impl Metrics {
         m.prefill_secs += report.prefill_secs;
         m.decode_secs += report.decode_secs;
         m.host_secs += report.host_secs;
+        m.init_prefill_secs += report.init_prefill_secs;
+        m.reprefill_secs += report.reprefill_secs;
+        m.init_prefills += report.init_prefills;
+        m.reprefills += report.reprefills;
+    }
+
+    /// `n` rows of a dispatched batch shared a long-enough prompt
+    /// prefix with an earlier row of the same batch (the intra-batch
+    /// dedup window the prefix cache collapses to one sig computation).
+    pub fn record_prefix_dedup(&self, n: u64) {
+        let mut m = self.inner.lock().unwrap();
+        m.prefix_dedup_rows += n;
+    }
+
+    /// Refresh the prefix-cache gauge block from the shared cache's
+    /// cumulative stats (called by the router every scheduling pass).
+    pub fn set_prefix_cache(&self, stats: PrefixCacheStats) {
+        let mut m = self.inner.lock().unwrap();
+        m.prefix_cache = stats;
     }
 
     /// Decode wall-clock one worker spent on one block round. Summed
@@ -342,6 +374,27 @@ impl Metrics {
             ("prefill_s", Json::Num(m.prefill_secs)),
             ("decode_s", Json::Num(m.decode_secs)),
             ("host_s", Json::Num(m.host_secs)),
+            ("init_prefill_s", Json::Num(m.init_prefill_secs)),
+            ("reprefill_s", Json::Num(m.reprefill_secs)),
+            ("init_prefills", Json::Num(m.init_prefills as f64)),
+            ("reprefills", Json::Num(m.reprefills as f64)),
+            ("prefix_dedup_rows", Json::Num(m.prefix_dedup_rows as f64)),
+            (
+                "prefix_cache",
+                Json::obj(vec![
+                    ("lookups", Json::Num(m.prefix_cache.lookups as f64)),
+                    ("hits", Json::Num(m.prefix_cache.hits as f64)),
+                    ("partial_hits", Json::Num(m.prefix_cache.partial_hits as f64)),
+                    ("misses", Json::Num(m.prefix_cache.misses as f64)),
+                    ("inserts", Json::Num(m.prefix_cache.inserts as f64)),
+                    ("evictions", Json::Num(m.prefix_cache.evictions as f64)),
+                    ("bytes", Json::Num(m.prefix_cache.bytes as f64)),
+                    ("nodes", Json::Num(m.prefix_cache.nodes as f64)),
+                    ("entries", Json::Num(m.prefix_cache.entries as f64)),
+                    ("reused_tokens", Json::Num(m.prefix_cache.reused_tokens as f64)),
+                    ("saved_prefill_s", Json::Num(m.prefix_cache.saved_prefill_secs)),
+                ]),
+            ),
         ])
     }
 
@@ -371,10 +424,26 @@ impl Metrics {
         counter(&mut out, "joins", m.joins);
         counter(&mut out, "batch_started", m.batch_started);
         counter(&mut out, "non_eos_tokens", m.non_eos_tokens);
+        counter(&mut out, "prefix_cache_lookups", m.prefix_cache.lookups);
+        counter(&mut out, "prefix_cache_hits", m.prefix_cache.hits);
+        counter(&mut out, "prefix_cache_partial_hits", m.prefix_cache.partial_hits);
+        counter(&mut out, "prefix_cache_misses", m.prefix_cache.misses);
+        counter(&mut out, "prefix_cache_inserts", m.prefix_cache.inserts);
+        counter(&mut out, "prefix_cache_evictions", m.prefix_cache.evictions);
+        counter(&mut out, "prefix_reused_tokens", m.prefix_cache.reused_tokens);
+        counter(&mut out, "prefix_dedup_rows", m.prefix_dedup_rows);
+        counter(&mut out, "init_prefills", m.init_prefills);
+        counter(&mut out, "reprefills", m.reprefills);
 
         let gauge = |out: &mut String, name: &str, v: f64| {
             let _ = writeln!(out, "# TYPE sdllm_{name} gauge\nsdllm_{name} {v}");
         };
+        gauge(&mut out, "prefix_cache_bytes", m.prefix_cache.bytes as f64);
+        gauge(&mut out, "prefix_cache_nodes", m.prefix_cache.nodes as f64);
+        gauge(&mut out, "prefix_cache_entries", m.prefix_cache.entries as f64);
+        gauge(&mut out, "prefix_saved_prefill_seconds", m.prefix_cache.saved_prefill_secs);
+        gauge(&mut out, "init_prefill_seconds", m.init_prefill_secs);
+        gauge(&mut out, "reprefill_seconds", m.reprefill_secs);
         gauge(&mut out, "queue_depth_peak", m.queue_depth_peak as f64);
         gauge(&mut out, "engines_active", m.engines_active as f64);
         gauge(&mut out, "max_engines_active", m.max_engines_active as f64);
@@ -449,6 +518,10 @@ mod tests {
             prefill_secs: 0.25,
             decode_secs: 0.5,
             host_secs: 0.125,
+            init_prefill_secs: 0.2,
+            reprefill_secs: 0.05,
+            init_prefills: 6,
+            reprefills: 2,
             ..Default::default()
         };
         m.record_engine(&report, 8, 3);
@@ -461,6 +534,49 @@ mod tests {
         assert_eq!(s.get("engine_blocks_skipped").unwrap().as_usize(), Some(6));
         assert!((s.get("prefill_s").unwrap().as_f64().unwrap() - 0.5).abs() < 1e-9);
         assert!((s.get("host_s").unwrap().as_f64().unwrap() - 0.25).abs() < 1e-9);
+        // the phase split accumulates alongside the total and the two
+        // causes sum back to it
+        assert!((s.get("init_prefill_s").unwrap().as_f64().unwrap() - 0.4).abs() < 1e-9);
+        assert!((s.get("reprefill_s").unwrap().as_f64().unwrap() - 0.1).abs() < 1e-9);
+        assert_eq!(s.get("init_prefills").unwrap().as_usize(), Some(12));
+        assert_eq!(s.get("reprefills").unwrap().as_usize(), Some(4));
+        assert_eq!(s.get("engine_prefills").unwrap().as_usize(), Some(16));
+    }
+
+    #[test]
+    fn prefix_cache_stats_and_dedup_surface_in_snapshot() {
+        let m = Metrics::new();
+        m.record_prefix_dedup(3);
+        m.record_prefix_dedup(2);
+        m.set_prefix_cache(PrefixCacheStats {
+            lookups: 10,
+            hits: 4,
+            partial_hits: 1,
+            misses: 5,
+            inserts: 5,
+            evictions: 2,
+            bytes: 4096,
+            nodes: 7,
+            entries: 3,
+            reused_tokens: 512,
+            saved_prefill_secs: 0.125,
+        });
+        let s = m.snapshot();
+        assert_eq!(s.get("prefix_dedup_rows").unwrap().as_usize(), Some(5));
+        let pc = s.get("prefix_cache").unwrap();
+        assert_eq!(pc.get("lookups").unwrap().as_usize(), Some(10));
+        assert_eq!(pc.get("hits").unwrap().as_usize(), Some(4));
+        assert_eq!(pc.get("partial_hits").unwrap().as_usize(), Some(1));
+        assert_eq!(pc.get("misses").unwrap().as_usize(), Some(5));
+        assert_eq!(pc.get("evictions").unwrap().as_usize(), Some(2));
+        assert_eq!(pc.get("bytes").unwrap().as_usize(), Some(4096));
+        assert_eq!(pc.get("entries").unwrap().as_usize(), Some(3));
+        assert_eq!(pc.get("reused_tokens").unwrap().as_usize(), Some(512));
+        assert!((pc.get("saved_prefill_s").unwrap().as_f64().unwrap() - 0.125).abs() < 1e-9);
+        // set_prefix_cache replaces (gauge semantics), never accumulates
+        m.set_prefix_cache(PrefixCacheStats::default());
+        let s = m.snapshot();
+        assert_eq!(s.get("prefix_cache").unwrap().get("lookups").unwrap().as_usize(), Some(0));
     }
 
     #[test]
@@ -554,6 +670,42 @@ mod tests {
         for line in text.lines().filter(|l| !l.starts_with('#')) {
             assert!(line.starts_with("sdllm_"), "unprefixed line: {line}");
         }
+    }
+
+    #[test]
+    fn prometheus_emits_prefix_cache_families_at_zero_traffic() {
+        // a freshly started router (no requests, cache untouched, even
+        // cache disabled) must still expose every cache family with its
+        // # TYPE line, so scrapers see stable schemas
+        let m = Metrics::new();
+        let text = m.prometheus();
+        for family in [
+            "# TYPE sdllm_prefix_cache_lookups counter\nsdllm_prefix_cache_lookups 0\n",
+            "# TYPE sdllm_prefix_cache_hits counter\nsdllm_prefix_cache_hits 0\n",
+            "# TYPE sdllm_prefix_cache_partial_hits counter\nsdllm_prefix_cache_partial_hits 0\n",
+            "# TYPE sdllm_prefix_cache_misses counter\nsdllm_prefix_cache_misses 0\n",
+            "# TYPE sdllm_prefix_cache_inserts counter\nsdllm_prefix_cache_inserts 0\n",
+            "# TYPE sdllm_prefix_cache_evictions counter\nsdllm_prefix_cache_evictions 0\n",
+            "# TYPE sdllm_prefix_reused_tokens counter\nsdllm_prefix_reused_tokens 0\n",
+            "# TYPE sdllm_prefix_dedup_rows counter\nsdllm_prefix_dedup_rows 0\n",
+            "# TYPE sdllm_init_prefills counter\nsdllm_init_prefills 0\n",
+            "# TYPE sdllm_reprefills counter\nsdllm_reprefills 0\n",
+            "# TYPE sdllm_prefix_cache_bytes gauge\nsdllm_prefix_cache_bytes 0\n",
+            "# TYPE sdllm_prefix_cache_nodes gauge\nsdllm_prefix_cache_nodes 0\n",
+            "# TYPE sdllm_prefix_cache_entries gauge\nsdllm_prefix_cache_entries 0\n",
+            "# TYPE sdllm_prefix_saved_prefill_seconds gauge\nsdllm_prefix_saved_prefill_seconds 0\n",
+            "# TYPE sdllm_init_prefill_seconds gauge\nsdllm_init_prefill_seconds 0\n",
+            "# TYPE sdllm_reprefill_seconds gauge\nsdllm_reprefill_seconds 0\n",
+        ] {
+            assert!(text.contains(family), "missing zero-traffic family:\n{family}");
+        }
+        // and once stats land, the numbers follow
+        m.set_prefix_cache(PrefixCacheStats { hits: 7, bytes: 64, ..Default::default() });
+        m.record_prefix_dedup(4);
+        let text = m.prometheus();
+        assert!(text.contains("sdllm_prefix_cache_hits 7\n"));
+        assert!(text.contains("sdllm_prefix_cache_bytes 64\n"));
+        assert!(text.contains("sdllm_prefix_dedup_rows 4\n"));
     }
 
     #[test]

@@ -13,7 +13,7 @@ pub mod router;
 pub mod server;
 pub mod worker;
 
-pub use batcher::{Batcher, DEFAULT_SLA};
+pub use batcher::{shared_prefix_rows, Batcher, DEDUP_MIN_PREFIX, DEFAULT_SLA};
 pub use client::{run_load, Client, LoadReport, ServerFrame};
 pub use config::ServeConfig;
 pub use metrics::{Metrics, WorkerGauge};
@@ -23,7 +23,7 @@ pub use protocol::{
 pub use request::{Request, RequestError, Response};
 pub use router::{
     Job, Msg, ReplyTx, RouterHandle, RouterOptions, StreamFrame, DEFAULT_MAX_ENGINES,
-    DEFAULT_MAX_QUEUE_DEPTH,
+    DEFAULT_MAX_QUEUE_DEPTH, DEFAULT_PREFIX_CACHE_BYTES,
 };
 pub use server::{Server, DEFAULT_MAX_CONNECTIONS, MAX_LINE_BYTES};
 pub use worker::{AdmitReq, RowDone, WorkerCmd, WorkerEvent};

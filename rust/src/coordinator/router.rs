@@ -31,9 +31,9 @@ use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
-use crate::engine::{Backend, Method, RefMode, ReferenceBackend, REFERENCE_SEED};
+use crate::engine::{Backend, Method, RefMode, ReferenceBackend, SharedPrefixCache, REFERENCE_SEED};
 
-use super::batcher::Batcher;
+use super::batcher::{shared_prefix_rows, Batcher, DEDUP_MIN_PREFIX};
 use super::metrics::{Metrics, WorkerGauge};
 use super::protocol::CommitEvent;
 use super::request::{GroupKey, Request, Response};
@@ -45,6 +45,10 @@ pub const DEFAULT_MAX_ENGINES: usize = 4;
 /// Default per-method queued-request bound. A full queue answers a
 /// typed reject with `retry_after_ms` instead of growing without limit.
 pub const DEFAULT_MAX_QUEUE_DEPTH: usize = 256;
+
+/// Default byte budget for the cross-request prefix cache (0 disables
+/// caching entirely — no cache is built and engines decode cold).
+pub const DEFAULT_PREFIX_CACHE_BYTES: usize = 32 * 1024 * 1024;
 
 /// Frames delivered to a streaming subscription (see
 /// [`RouterHandle::subscribe`]): out-of-order commit events as blocks
@@ -106,6 +110,8 @@ pub struct RouterOptions {
     /// per-method queued-request bound; a full queue rejects with
     /// `retry_after_ms` instead of enqueueing
     pub max_queue_depth: usize,
+    /// byte budget for the cross-request prefix cache; 0 disables it
+    pub prefix_cache_bytes: usize,
 }
 
 impl Default for RouterOptions {
@@ -115,6 +121,7 @@ impl Default for RouterOptions {
             max_wait: Duration::from_millis(20),
             max_engines: DEFAULT_MAX_ENGINES,
             max_queue_depth: DEFAULT_MAX_QUEUE_DEPTH,
+            prefix_cache_bytes: DEFAULT_PREFIX_CACHE_BYTES,
         }
     }
 }
@@ -349,6 +356,9 @@ struct Sched<B, F> {
     batcher: Batcher,
     rows: HashMap<u64, RowState>,
     workers: Vec<WorkerSlot>,
+    /// cross-request prefix cache shared by every worker (None when
+    /// `prefix_cache_bytes` is 0)
+    prefix_cache: Option<SharedPrefixCache>,
     shutdown: bool,
     /// EWMA of observed per-block decode seconds across all workers —
     /// the service-time term in `retry_after_ms` (depth × per-block).
@@ -370,6 +380,8 @@ where
     metrics.start_clock();
     let mut batcher = Batcher::new(opts.max_batch, opts.max_wait);
     batcher.max_depth = opts.max_queue_depth.max(1);
+    let prefix_cache = (opts.prefix_cache_bytes > 0)
+        .then(|| SharedPrefixCache::new(opts.prefix_cache_bytes));
     let mut s = Sched::<B, F> {
         factory,
         batcher,
@@ -378,6 +390,7 @@ where
         metrics,
         rows: HashMap::new(),
         workers: Vec::new(),
+        prefix_cache,
         shutdown: false,
         est_block_secs: None,
         _backend: std::marker::PhantomData,
@@ -659,6 +672,16 @@ where
                 self.workers.iter().filter(|w| !w.dead).filter_map(|w| w.assigned).collect();
             let Some((key, batch)) = self.batcher.pop_ready(now, &busy) else { return };
             self.metrics.record_batch(batch.len());
+            // Intra-batch dedup accounting: rows in this flush that
+            // share a common prompt prefix with the first row decode
+            // their template from one shared prefill (via the prefix
+            // cache) instead of N independent ones.
+            if self.prefix_cache.is_some() {
+                let dedup = shared_prefix_rows(&batch, DEDUP_MIN_PREFIX);
+                if dedup > 0 {
+                    self.metrics.record_prefix_dedup(dedup as u64);
+                }
+            }
             let Some(wix) = self.pick_worker() else {
                 // no routable worker (all dead at the cap): requeue with
                 // original arrivals and retry on a later pass
@@ -684,8 +707,13 @@ where
         let live = self.workers.iter().filter(|w| !w.dead).count();
         if live < self.opts.max_engines {
             let i = self.workers.len();
-            let (tx, join) =
-                spawn_worker(i, self.factory.clone(), self.opts.max_batch, self.events.clone());
+            let (tx, join) = spawn_worker(
+                i,
+                self.factory.clone(),
+                self.opts.max_batch,
+                self.prefix_cache.clone(),
+                self.events.clone(),
+            );
             self.workers.push(WorkerSlot {
                 tx,
                 join: Some(join),
@@ -823,6 +851,9 @@ where
             })
             .collect();
         self.metrics.set_workers(workers);
+        if let Some(cache) = &self.prefix_cache {
+            self.metrics.set_prefix_cache(cache.stats());
+        }
     }
 
     /// Orderly shutdown: stop every worker, join them, then drain the

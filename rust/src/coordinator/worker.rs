@@ -24,7 +24,10 @@ use std::time::Instant;
 
 use anyhow::Result;
 
-use crate::engine::{clamp_batch, Backend, BatchEngine, GenConfig, GenReport, RowCommit};
+use crate::engine::{
+    clamp_batch, prefix_scope_for, Backend, BatchEngine, GenConfig, GenReport, PrefixHandle,
+    RowCommit, SharedPrefixCache,
+};
 
 use super::request::{GroupKey, Request};
 use super::router::Msg;
@@ -106,6 +109,7 @@ pub fn spawn_worker<B, F>(
     worker: usize,
     factory: Arc<F>,
     max_batch: usize,
+    prefix_cache: Option<SharedPrefixCache>,
     events: Sender<Msg>,
 ) -> (Sender<WorkerCmd>, JoinHandle<()>)
 where
@@ -115,7 +119,7 @@ where
     let (tx, rx) = channel::<WorkerCmd>();
     let join = std::thread::Builder::new()
         .name(format!("sdllm-worker-{worker}"))
-        .spawn(move || worker_loop(worker, factory, max_batch, rx, events))
+        .spawn(move || worker_loop(worker, factory, max_batch, prefix_cache, rx, events))
         .expect("spawn worker thread");
     (tx, join)
 }
@@ -124,6 +128,7 @@ fn worker_loop<B, F>(
     worker: usize,
     factory: Arc<F>,
     max_batch: usize,
+    prefix_cache: Option<SharedPrefixCache>,
     rx: Receiver<WorkerCmd>,
     events: Sender<Msg>,
 ) where
@@ -155,7 +160,8 @@ fn worker_loop<B, F>(
                 Ok(WorkerCmd::Shutdown) | Err(_) => return,
             }
         };
-        if run_engine(worker, &backend, capacity, first, &mut pending, &rx, &events) {
+        if run_engine(worker, &backend, capacity, first, &prefix_cache, &mut pending, &rx, &events)
+        {
             return;
         }
     }
@@ -194,11 +200,13 @@ fn admit_one<B: Backend>(
 
 /// Drive one engine to retirement, starting from admission `first`.
 /// Returns true when shutdown was requested (or the router vanished).
+#[allow(clippy::too_many_arguments)]
 fn run_engine<B: Backend>(
     worker: usize,
     backend: &B,
     capacity: usize,
     first: AdmitReq,
+    prefix_cache: &Option<SharedPrefixCache>,
     pending: &mut VecDeque<AdmitReq>,
     rx: &Receiver<WorkerCmd>,
     events: &Sender<Msg>,
@@ -220,6 +228,13 @@ fn run_engine<B: Backend>(
             return false;
         }
     };
+    if let Some(cache) = prefix_cache {
+        // scope = (method, policy, backend identity): engines of the
+        // same group on different workers share captures; everything
+        // else is isolated
+        let scope = prefix_scope_for(backend, engine.config());
+        engine.set_prefix_cache(PrefixHandle { cache: cache.clone(), scope });
+    }
     let mut shutdown = false;
     admit_one(worker, &mut engine, first, events);
     loop {

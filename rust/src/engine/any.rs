@@ -8,7 +8,7 @@
 
 use anyhow::Result;
 
-use super::backend::Backend;
+use super::backend::{Backend, CachedSpan, PrefixCapture};
 use super::reference::{RefKv, RefMode, ReferenceBackend, REFERENCE_SEED};
 use super::types::{DecodeOut, SpecialTokens};
 
@@ -252,6 +252,47 @@ impl Backend for AnyBackend {
             AnyBackend::Reference(b) => b.compile_secs(),
             #[cfg(feature = "pjrt")]
             AnyBackend::Pjrt(m) => Backend::compile_secs(m),
+        }
+    }
+
+    fn prefill_cached(
+        &self,
+        batch: usize,
+        p_bucket: usize,
+        tokens: &[i32],
+        pos: &[i32],
+        valid: &[i32],
+        p0: Option<&[i32]>,
+        cached: &[CachedSpan],
+    ) -> Result<AnyKv> {
+        match self {
+            AnyBackend::Reference(b) => Ok(AnyKv::Reference(
+                b.prefill_cached(batch, p_bucket, tokens, pos, valid, p0, cached)?,
+            )),
+            #[cfg(feature = "pjrt")]
+            AnyBackend::Pjrt(m) => Ok(AnyKv::Pjrt(Backend::prefill_cached(
+                m, batch, p_bucket, tokens, pos, valid, p0, cached,
+            )?)),
+        }
+    }
+
+    fn capture_prefix(&self, kv: &AnyKv, row: usize, prefix_len: usize) -> Option<PrefixCapture> {
+        match (self, kv) {
+            (AnyBackend::Reference(b), AnyKv::Reference(kv)) => {
+                b.capture_prefix(kv, row, prefix_len)
+            }
+            #[cfg(feature = "pjrt")]
+            (AnyBackend::Pjrt(m), AnyKv::Pjrt(kv)) => Backend::capture_prefix(m, kv, row, prefix_len),
+            #[cfg(feature = "pjrt")]
+            _ => None,
+        }
+    }
+
+    fn prefix_scope(&self) -> u64 {
+        match self {
+            AnyBackend::Reference(b) => b.prefix_scope(),
+            #[cfg(feature = "pjrt")]
+            AnyBackend::Pjrt(m) => Backend::prefix_scope(m),
         }
     }
 }

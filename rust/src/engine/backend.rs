@@ -16,9 +16,37 @@
 //! owned by) that thread. Backends need not be `Sync` — each worker
 //! builds and owns its own instance.
 
+use std::any::Any;
+use std::sync::Arc;
+
 use anyhow::Result;
 
 use super::types::{DecodeOut, SpecialTokens};
+
+/// Opaque, backend-owned prefill state for one prompt prefix, shareable
+/// across requests through the prefix cache. Each backend downcasts to
+/// its own capture type (`ReferenceBackend` stores a `RefPrefix`); the
+/// cache layer never looks inside.
+pub type PrefixCapture = Arc<dyn Any + Send + Sync>;
+
+/// One row's cached-prefix annotation handed to `prefill_cached`:
+/// how many leading prompt tokens a capture covers, and the capture
+/// itself. `len == 0` / `None` means a cold row.
+#[derive(Clone, Default)]
+pub struct CachedSpan {
+    /// leading prompt tokens the capture covers (0 = cold)
+    pub len: usize,
+    pub capture: Option<PrefixCapture>,
+}
+
+impl std::fmt::Debug for CachedSpan {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("CachedSpan")
+            .field("len", &self.len)
+            .field("capture", &self.capture.is_some())
+            .finish()
+    }
+}
 
 pub trait Backend: Send {
     /// Backend-owned KV cache produced by `prefill`, consumed by
@@ -78,5 +106,45 @@ pub trait Backend: Send {
     /// compilation report 0.
     fn compile_secs(&self) -> f64 {
         0.0
+    }
+
+    /// `prefill`, but with per-row cached-prefix annotations from the
+    /// cross-request prefix cache: `cached[b]` tells the backend how
+    /// many leading prompt tokens of row `b` it may restore from the
+    /// attached capture instead of recomputing. Must be **bit-identical**
+    /// to a cold `prefill` of the same rows (the cache only shortens
+    /// work, never changes results — pinned by the parity suite). The
+    /// default ignores the annotations and runs a cold prefill, so
+    /// backends without capture support stay correct.
+    #[allow(clippy::too_many_arguments)]
+    fn prefill_cached(
+        &self,
+        batch: usize,
+        p_bucket: usize,
+        tokens: &[i32],
+        pos: &[i32],
+        valid: &[i32],
+        p0: Option<&[i32]>,
+        cached: &[CachedSpan],
+    ) -> Result<Self::Kv> {
+        let _ = cached;
+        self.prefill(batch, p_bucket, tokens, pos, valid, p0)
+    }
+
+    /// Capture row `row`'s prefill state for the first `prefix_len`
+    /// prompt tokens as a shareable, backend-opaque value the prefix
+    /// cache can store. `None` (the default) means this backend/mode
+    /// has nothing reusable to offer and the row is never inserted.
+    fn capture_prefix(&self, kv: &Self::Kv, row: usize, prefix_len: usize) -> Option<PrefixCapture> {
+        let _ = (kv, row, prefix_len);
+        None
+    }
+
+    /// Cache-scope discriminant folded into every prefix-cache key:
+    /// captures are only reusable between backends that report the same
+    /// scope (same mode, same seed, …). The default 0 is fine for
+    /// backends that never produce captures.
+    fn prefix_scope(&self) -> u64 {
+        0
     }
 }

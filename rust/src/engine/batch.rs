@@ -24,6 +24,7 @@ use anyhow::{bail, Result};
 use super::backend::Backend;
 use super::config::{GenConfig, Method};
 use super::generator::{GenReport, WorkspaceStats};
+use super::prefix_cache::PrefixHandle;
 use super::sequence::SeqState;
 use super::workspace::{run_block_round, run_vanilla, RowsMut, StepWorkspace};
 
@@ -88,6 +89,8 @@ pub struct BatchEngine<'a, B: Backend> {
     report: GenReport,
     rounds: u64,
     mixed_rounds: u64,
+    /// cross-request prefix cache handle (None = caching off)
+    prefix: Option<PrefixHandle>,
 }
 
 impl<'a, B: Backend> BatchEngine<'a, B> {
@@ -112,11 +115,19 @@ impl<'a, B: Backend> BatchEngine<'a, B> {
             report: GenReport::default(),
             rounds: 0,
             mixed_rounds: 0,
+            prefix: None,
         })
     }
 
     pub fn config(&self) -> &GenConfig {
         &self.cfg
+    }
+
+    /// Attach a cross-request prefix-cache handle. Cached decode is
+    /// bit-identical to cold decode (pinned by the parity tests), so
+    /// this only changes where prefill time goes, never the output.
+    pub fn set_prefix_cache(&mut self, handle: PrefixHandle) {
+        self.prefix = Some(handle);
     }
 
     /// Live rows currently decoding.
@@ -323,6 +334,7 @@ impl<'a, B: Backend> BatchEngine<'a, B> {
                     &mut self.ws,
                     &mut rows,
                     batch,
+                    self.prefix.as_ref(),
                     &mut self.report,
                     &mut hook,
                 )?,

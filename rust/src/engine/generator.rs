@@ -17,6 +17,7 @@ use anyhow::{bail, Result};
 
 use super::backend::Backend;
 use super::config::{GenConfig, Method};
+use super::prefix_cache::PrefixHandle;
 use super::sequence::SeqState;
 use super::workspace::{run_block_round, run_vanilla, RowsMut, StepWorkspace};
 
@@ -44,6 +45,16 @@ pub struct GenReport {
     pub blocks_skipped: u64,
     /// seconds inside backend prefill calls
     pub prefill_secs: f64,
+    /// prefill seconds attributable to calls that included at least one
+    /// fresh row (first prefill of a request's life)
+    pub init_prefill_secs: f64,
+    /// prefill seconds for pure re-prefills (dKV-Cache refresh and
+    /// later-block prefix recompute — no fresh row in the call)
+    pub reprefill_secs: f64,
+    /// prefill calls counted into `init_prefill_secs`
+    pub init_prefills: u64,
+    /// prefill calls counted into `reprefill_secs`
+    pub reprefills: u64,
     /// seconds inside backend decode/logits calls
     pub decode_secs: f64,
     /// seconds in the host scheduling layer (wall − prefill − decode):
@@ -81,6 +92,8 @@ pub struct Generator<'a, B: Backend> {
     ws: StepWorkspace,
     /// recycled dummy rows used to pad real batches up to the bucket
     pads: Vec<SeqState>,
+    /// cross-request prefix cache handle (None = caching off)
+    prefix: Option<PrefixHandle>,
 }
 
 impl<'a, B: Backend> Generator<'a, B> {
@@ -88,11 +101,18 @@ impl<'a, B: Backend> Generator<'a, B> {
         if let Err(e) = cfg.validate() {
             bail!("invalid GenConfig: {e}");
         }
-        Ok(Generator { rt, cfg, ws: StepWorkspace::new(), pads: Vec::new() })
+        Ok(Generator { rt, cfg, ws: StepWorkspace::new(), pads: Vec::new(), prefix: None })
     }
 
     pub fn config(&self) -> &GenConfig {
         &self.cfg
+    }
+
+    /// Attach a cross-request prefix-cache handle. Cached decode is
+    /// bit-identical to cold decode (pinned by the parity tests), so
+    /// this only changes where prefill time goes, never the output.
+    pub fn set_prefix_cache(&mut self, handle: PrefixHandle) {
+        self.prefix = Some(handle);
     }
 
     pub fn workspace_stats(&self) -> WorkspaceStats {
@@ -160,6 +180,7 @@ impl<'a, B: Backend> Generator<'a, B> {
                     &mut this.ws,
                     &mut rows,
                     batch_rows,
+                    this.prefix.as_ref(),
                     &mut report,
                     &mut on_step,
                 )?,
@@ -176,12 +197,14 @@ impl<'a, B: Backend> Generator<'a, B> {
 /// Batch-at-a-time cached decode: every row marches its own cursor, but
 /// admission is fixed at call time, so rows stay in block lockstep (the
 /// seed-compatible schedule the golden parity tests pin).
+#[allow(clippy::too_many_arguments)]
 fn run_cached<B: Backend>(
     rt: &B,
     cfg: &GenConfig,
     ws: &mut StepWorkspace,
     rows: &mut RowsMut,
     batch: usize,
+    prefix: Option<&PrefixHandle>,
     report: &mut GenReport,
     on_step: &mut Option<&mut dyn FnMut(StepEvent)>,
 ) -> Result<()> {
@@ -195,7 +218,7 @@ fn run_cached<B: Backend>(
                 debug_assert_eq!(s.block, blk);
             }
         }
-        run_block_round(rt, cfg, ws, rows, batch, report, on_step)?;
+        run_block_round(rt, cfg, ws, rows, batch, prefix, report, on_step)?;
     }
     Ok(())
 }

@@ -13,6 +13,7 @@ pub mod batch;
 pub mod config;
 pub mod generator;
 pub mod policy;
+pub mod prefix_cache;
 pub mod reference;
 pub mod sequence;
 pub mod suffix;
@@ -20,14 +21,17 @@ pub mod types;
 pub mod workspace;
 
 pub use any::{AnyBackend, AnyKv};
-pub use backend::Backend;
+pub use backend::{Backend, CachedSpan, PrefixCapture};
 pub use batch::{clamp_batch, BatchEngine, Finished, RowCommit};
 pub use config::{table12_config, GenConfig, Method};
 pub use generator::{GenReport, Generator, StepEvent, WorkspaceStats};
 pub use policy::{
     select, select_into, Candidate, DecodePolicy, SpatialPolicy, TemporalPolicy, Trend,
 };
-pub use reference::{RefKv, RefMode, RefStats, ReferenceBackend, REFERENCE_SEED};
+pub use prefix_cache::{
+    prefix_scope_for, PrefixCache, PrefixCacheStats, PrefixHandle, PrefixHit, SharedPrefixCache,
+};
+pub use reference::{RefKv, RefMode, RefPrefix, RefStats, ReferenceBackend, REFERENCE_SEED};
 pub use sequence::SeqState;
 pub use suffix::{build_bundle, build_bundle_into, bundle_tokens, Bundle};
 pub use types::{detokenize_until_eos, pick_bucket, Buckets, DecodeOut, SpecialTokens};

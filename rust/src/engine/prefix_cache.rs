@@ -1,0 +1,707 @@
+//! Cross-request radix prefix cache: reusable prefill state keyed on
+//! prompt token prefixes.
+//!
+//! At fleet scale the same system prompts and few-shot templates arrive
+//! over and over; prefill recomputes them per request. This cache stores
+//! backend-opaque [`PrefixCapture`]s (see `Backend::capture_prefix`) in
+//! a radix tree over prompt tokens, so a warm request restores the
+//! shared-prefix state instead of recomputing it, and requests whose
+//! prompts diverge only in the tail still share the template part
+//! (partial hits walk to the divergence point and borrow a descendant
+//! capture that covers it).
+//!
+//! Structure: an arena of nodes, each holding a compressed token edge,
+//! child indices, an optional entry (capture + byte cost + LRU stamp),
+//! and a subtree entry count used as the refcount for pruning. Roots
+//! are per-*scope*: captures are only reusable within the same decode
+//! configuration and backend identity (method × policy ×
+//! `Backend::prefix_scope`), so a causal capture never leaks into a toy
+//! decode and policy groups stay isolated — the same compatibility rule
+//! as the batcher's `GroupKey`.
+//!
+//! Eviction is LRU over entries under a byte budget (and a derived node
+//! budget); an entry whose capture is still held by a live row
+//! (`Arc::strong_count > 1`) is pinned and skipped. Subtrees that lose
+//! their last entry are pruned via parent links.
+//!
+//! **Bit-identity is the backend's contract, not the cache's**: a
+//! capture only shortens how a backend computes prefill, never what it
+//! computes. The parity suite pins warm == cold output bytes for both
+//! reference modes.
+
+use std::collections::hash_map::DefaultHasher;
+use std::hash::{Hash, Hasher};
+use std::sync::{Arc, Mutex};
+
+use super::backend::{Backend, PrefixCapture};
+use super::config::GenConfig;
+
+/// Shortest prefix worth caching: captures below this carry less state
+/// than the bookkeeping around them.
+pub const MIN_CACHE_PREFIX: usize = 4;
+
+/// Estimated bytes per cached token (capture payload + node overhead) —
+/// the unit the byte budget is accounted in.
+const BYTES_PER_TOKEN: usize = 64;
+
+const NO_NODE: u32 = u32::MAX;
+
+/// Hit/miss/eviction accounting plus the savings estimate, snapshotted
+/// into the router's metrics.
+#[derive(Debug, Default, Clone)]
+pub struct PrefixCacheStats {
+    pub lookups: u64,
+    /// full hit: the cached prefix covers the whole prompt
+    pub hits: u64,
+    /// partial hit: a shorter (but usable) prefix was found
+    pub partial_hits: u64,
+    pub misses: u64,
+    pub inserts: u64,
+    pub evictions: u64,
+    /// current accounted bytes / arena nodes / live entries
+    pub bytes: u64,
+    pub nodes: u64,
+    pub entries: u64,
+    /// prompt tokens served from cache instead of recomputed
+    pub reused_tokens: u64,
+    /// estimated prefill seconds avoided (reused tokens × the EWMA
+    /// observed secs-per-prefilled-token)
+    pub saved_prefill_secs: f64,
+}
+
+/// A successful lookup: how many leading prompt tokens the capture
+/// covers, and the capture itself.
+#[derive(Clone)]
+pub struct PrefixHit {
+    pub len: usize,
+    pub capture: PrefixCapture,
+}
+
+struct Entry {
+    capture: PrefixCapture,
+    /// full key length (root-to-here token count) this entry covers
+    key_len: usize,
+    /// accounted byte cost
+    bytes: usize,
+    /// logical LRU clock stamp (monotonic per cache)
+    last_use: u64,
+}
+
+impl std::fmt::Debug for Entry {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Entry")
+            .field("key_len", &self.key_len)
+            .field("bytes", &self.bytes)
+            .field("last_use", &self.last_use)
+            .finish()
+    }
+}
+
+impl std::fmt::Debug for PrefixHit {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("PrefixHit").field("len", &self.len).finish()
+    }
+}
+
+#[derive(Debug, Default)]
+struct Node {
+    /// compressed token run on the edge from the parent to this node
+    edge: Vec<i32>,
+    /// child node indices (linear scan; fanout is tiny in practice)
+    children: Vec<u32>,
+    entry: Option<Entry>,
+    /// entries in this node's subtree (including its own) — the
+    /// refcount that keeps a chain of internal nodes alive
+    refs: u32,
+    parent: u32,
+}
+
+/// The radix tree plus budget/stats. Not shared directly — wrap it in
+/// [`SharedPrefixCache`] for cross-thread use.
+#[derive(Debug)]
+pub struct PrefixCache {
+    nodes: Vec<Node>,
+    free: Vec<u32>,
+    /// per-scope root nodes (scope = method × policy × backend scope)
+    roots: Vec<(u64, u32)>,
+    max_bytes: usize,
+    clock: u64,
+    stats: PrefixCacheStats,
+    /// EWMA of observed prefill secs per computed token — converts
+    /// reused tokens into an honest "seconds saved" estimate
+    secs_per_token: f64,
+}
+
+impl PrefixCache {
+    pub fn new(max_bytes: usize) -> PrefixCache {
+        PrefixCache {
+            nodes: vec![],
+            free: vec![],
+            roots: vec![],
+            max_bytes,
+            clock: 0,
+            stats: PrefixCacheStats::default(),
+            secs_per_token: 0.0,
+        }
+    }
+
+    fn alloc(&mut self, node: Node) -> u32 {
+        match self.free.pop() {
+            Some(ix) => {
+                self.nodes[ix as usize] = node;
+                ix
+            }
+            None => {
+                self.nodes.push(node);
+                (self.nodes.len() - 1) as u32
+            }
+        }
+    }
+
+    fn root_for(&mut self, scope: u64) -> u32 {
+        if let Some(&(_, ix)) = self.roots.iter().find(|&&(s, _)| s == scope) {
+            return ix;
+        }
+        let ix = self.alloc(Node { parent: NO_NODE, ..Node::default() });
+        self.roots.push((scope, ix));
+        ix
+    }
+
+    fn tick(&mut self) -> u64 {
+        self.clock += 1;
+        self.clock
+    }
+
+    /// Longest usable cached prefix of `prompt` under `scope`. Walks the
+    /// tree tracking the deepest entry on the matched path; if the walk
+    /// ends mid-tree with no on-path entry, any entry in the reached
+    /// subtree still covers the matched part (entries live at
+    /// full-prompt depths; shared templates are internal nodes), so a
+    /// descendant representative is returned clamped to the matched
+    /// length. Returns `None` on a cold miss or when the best match is
+    /// shorter than [`MIN_CACHE_PREFIX`].
+    pub fn lookup(&mut self, scope: u64, prompt: &[i32]) -> Option<PrefixHit> {
+        self.stats.lookups += 1;
+        let found = self.lookup_inner(scope, prompt);
+        match &found {
+            Some(hit) if hit.len >= prompt.len() => self.stats.hits += 1,
+            Some(_) => self.stats.partial_hits += 1,
+            None => self.stats.misses += 1,
+        }
+        found
+    }
+
+    fn lookup_inner(&mut self, scope: u64, prompt: &[i32]) -> Option<PrefixHit> {
+        let root = self.roots.iter().find(|&&(s, _)| s == scope).map(|&(_, ix)| ix)?;
+        let mut at = root;
+        let mut matched = 0usize;
+        // deepest entry whose key is a full prefix of `prompt`
+        let mut best: Option<(u32, usize)> = None;
+        loop {
+            if let Some(e) = &self.nodes[at as usize].entry {
+                debug_assert_eq!(e.key_len, matched);
+                best = Some((at, matched));
+            }
+            if matched == prompt.len() {
+                break;
+            }
+            let next = self.nodes[at as usize]
+                .children
+                .iter()
+                .copied()
+                .find(|&c| self.nodes[c as usize].edge.first() == Some(&prompt[matched]));
+            let Some(child) = next else { break };
+            let edge_len = self.nodes[child as usize].edge.len();
+            let common = self.nodes[child as usize]
+                .edge
+                .iter()
+                .zip(&prompt[matched..])
+                .take_while(|(a, b)| a == b)
+                .count();
+            matched += common;
+            if common < edge_len {
+                // diverged mid-edge: the subtree below still shares the
+                // matched part — borrow a descendant entry for it
+                if best.map(|(_, l)| l).unwrap_or(0) < matched {
+                    if let Some(d) = self.subtree_entry(child) {
+                        best = Some((d, matched));
+                    }
+                }
+                break;
+            }
+            at = child;
+        }
+        // ran out of tree with prompt left over: entries below `at`
+        // (if any) cover everything matched so far
+        if matched < prompt.len() && best.map(|(_, l)| l).unwrap_or(0) < matched {
+            if let Some(d) = self.subtree_entry(at) {
+                best = Some((d, matched));
+            }
+        }
+        let (node, len) = best?;
+        if len < MIN_CACHE_PREFIX {
+            return None;
+        }
+        let stamp = self.tick();
+        let e = self.nodes[node as usize].entry.as_mut().expect("best node carries an entry");
+        e.last_use = stamp;
+        self.stats.reused_tokens += len as u64;
+        self.stats.saved_prefill_secs += len as f64 * self.secs_per_token;
+        Some(PrefixHit { len, capture: e.capture.clone() })
+    }
+
+    /// Any entry-bearing node in `node`'s subtree (itself included).
+    fn subtree_entry(&self, node: u32) -> Option<u32> {
+        if self.nodes[node as usize].refs == 0 {
+            return None;
+        }
+        let mut stack = vec![node];
+        while let Some(at) = stack.pop() {
+            if self.nodes[at as usize].entry.is_some() {
+                return Some(at);
+            }
+            stack.extend(self.nodes[at as usize].children.iter().copied());
+        }
+        None
+    }
+
+    /// Insert a capture for the full `key` under `scope`, splitting
+    /// edges as needed. Replaces an existing entry at the same key.
+    /// No-op for keys shorter than [`MIN_CACHE_PREFIX`] or when the
+    /// cache is disabled (`max_bytes == 0`).
+    pub fn insert(&mut self, scope: u64, key: &[i32], capture: PrefixCapture) {
+        if self.max_bytes == 0 || key.len() < MIN_CACHE_PREFIX {
+            return;
+        }
+        let root = self.root_for(scope);
+        let mut at = root;
+        let mut depth = 0usize;
+        while depth < key.len() {
+            let next = self.nodes[at as usize]
+                .children
+                .iter()
+                .copied()
+                .find(|&c| self.nodes[c as usize].edge.first() == Some(&key[depth]));
+            match next {
+                None => {
+                    // new leaf carries the whole remaining run
+                    let leaf = self.alloc(Node {
+                        edge: key[depth..].to_vec(),
+                        parent: at,
+                        ..Node::default()
+                    });
+                    self.nodes[at as usize].children.push(leaf);
+                    at = leaf;
+                    depth = key.len();
+                }
+                Some(child) => {
+                    let common = self.nodes[child as usize]
+                        .edge
+                        .iter()
+                        .zip(&key[depth..])
+                        .take_while(|(a, b)| a == b)
+                        .count();
+                    if common < self.nodes[child as usize].edge.len() {
+                        // classic radix split: child keeps the tail,
+                        // a new internal node takes the shared head
+                        let tail = self.nodes[child as usize].edge.split_off(common);
+                        let head = std::mem::take(&mut self.nodes[child as usize].edge);
+                        let refs = self.nodes[child as usize].refs;
+                        let mid = self.alloc(Node {
+                            edge: head,
+                            children: vec![child],
+                            refs,
+                            parent: at,
+                            ..Node::default()
+                        });
+                        self.nodes[child as usize].edge = tail;
+                        self.nodes[child as usize].parent = mid;
+                        let slot = self.nodes[at as usize]
+                            .children
+                            .iter()
+                            .position(|&c| c == child)
+                            .expect("child listed under parent");
+                        self.nodes[at as usize].children[slot] = mid;
+                        at = mid;
+                    } else {
+                        at = child;
+                    }
+                    depth += common;
+                }
+            }
+        }
+        let bytes = key.len() * BYTES_PER_TOKEN;
+        let stamp = self.tick();
+        let old = self.nodes[at as usize].entry.replace(Entry {
+            capture,
+            key_len: key.len(),
+            bytes,
+            last_use: stamp,
+        });
+        self.stats.inserts += 1;
+        self.stats.bytes += bytes as u64;
+        match old {
+            Some(e) => self.stats.bytes -= e.bytes as u64,
+            None => {
+                self.stats.entries += 1;
+                self.bump_refs(at, 1);
+            }
+        }
+        self.evict_to_budget();
+        self.stats.nodes = self.live_nodes() as u64;
+    }
+
+    fn bump_refs(&mut self, mut at: u32, delta: i64) {
+        loop {
+            let r = &mut self.nodes[at as usize].refs;
+            *r = (*r as i64 + delta) as u32;
+            let parent = self.nodes[at as usize].parent;
+            if parent == NO_NODE {
+                break;
+            }
+            at = parent;
+        }
+    }
+
+    /// LRU-evict unpinned entries until accounted bytes fit the budget.
+    /// A pinned entry (its capture `Arc` is held outside the cache —
+    /// i.e. some live row is decoding on it) is skipped.
+    fn evict_to_budget(&mut self) {
+        while self.stats.bytes > self.max_bytes as u64 {
+            let victim = self
+                .nodes
+                .iter()
+                .enumerate()
+                .filter_map(|(ix, n)| {
+                    let e = n.entry.as_ref()?;
+                    (Arc::strong_count(&e.capture) == 1).then_some((ix as u32, e.last_use))
+                })
+                .min_by_key(|&(_, stamp)| stamp);
+            let Some((ix, _)) = victim else { break };
+            self.remove_entry(ix);
+            self.stats.evictions += 1;
+        }
+    }
+
+    fn remove_entry(&mut self, ix: u32) {
+        let e = self.nodes[ix as usize].entry.take().expect("victim carries an entry");
+        self.stats.bytes -= e.bytes as u64;
+        self.stats.entries -= 1;
+        self.bump_refs(ix, -1);
+        self.prune(ix);
+    }
+
+    /// Free `ix` and its now-entryless ancestors while their subtrees
+    /// hold no entries (refs == 0). Roots stay allocated.
+    fn prune(&mut self, mut ix: u32) {
+        loop {
+            let n = &self.nodes[ix as usize];
+            if n.refs > 0 || n.entry.is_some() || n.parent == NO_NODE || !n.children.is_empty() {
+                break;
+            }
+            let parent = n.parent;
+            let p = &mut self.nodes[parent as usize];
+            p.children.retain(|&c| c != ix);
+            self.nodes[ix as usize] = Node::default();
+            self.free.push(ix);
+            ix = parent;
+        }
+    }
+
+    fn live_nodes(&self) -> usize {
+        self.nodes.len() - self.free.len()
+    }
+
+    /// Fold one observed prefill timing into the EWMA secs-per-token
+    /// model behind `saved_prefill_secs`.
+    pub fn note_prefill(&mut self, secs: f64, computed_tokens: usize) {
+        if computed_tokens == 0 || secs <= 0.0 {
+            return;
+        }
+        let per = secs / computed_tokens as f64;
+        self.secs_per_token =
+            if self.secs_per_token == 0.0 { per } else { 0.9 * self.secs_per_token + 0.1 * per };
+    }
+
+    pub fn stats(&self) -> PrefixCacheStats {
+        self.stats.clone()
+    }
+
+    /// Structural invariants, exercised by the unit/stress suites:
+    /// subtree refcounts equal live entry counts, every child's parent
+    /// link points back, entry key lengths equal their root distance,
+    /// and accounted bytes match the live entries.
+    pub fn check_invariants(&self) {
+        let mut bytes = 0u64;
+        let mut entries = 0u64;
+        for &(_, root) in &self.roots {
+            self.check_node(root, 0, &mut bytes, &mut entries);
+        }
+        assert_eq!(bytes, self.stats.bytes, "accounted bytes diverged from live entries");
+        assert_eq!(entries, self.stats.entries, "entry count diverged");
+    }
+
+    fn check_node(&self, ix: u32, depth: usize, bytes: &mut u64, entries: &mut u64) -> u32 {
+        let n = &self.nodes[ix as usize];
+        let depth = depth + n.edge.len();
+        let mut refs = 0u32;
+        if let Some(e) = &n.entry {
+            assert_eq!(e.key_len, depth, "entry key length != root distance");
+            *bytes += e.bytes as u64;
+            *entries += 1;
+            refs += 1;
+        }
+        for &c in &n.children {
+            assert_eq!(self.nodes[c as usize].parent, ix, "child parent link broken");
+            assert!(!self.nodes[c as usize].edge.is_empty(), "empty child edge");
+            refs += self.check_node(c, depth, bytes, entries);
+        }
+        assert_eq!(n.refs, refs, "subtree refcount diverged at node {ix}");
+        refs
+    }
+}
+
+/// Thread-safe handle: the router owns one cache shared by every worker
+/// thread (captures outlive engine retirements, so a re-spawned engine
+/// still serves warm).
+#[derive(Debug, Clone)]
+pub struct SharedPrefixCache {
+    inner: Arc<Mutex<PrefixCache>>,
+}
+
+impl SharedPrefixCache {
+    pub fn new(max_bytes: usize) -> SharedPrefixCache {
+        SharedPrefixCache { inner: Arc::new(Mutex::new(PrefixCache::new(max_bytes))) }
+    }
+
+    pub fn lookup(&self, scope: u64, prompt: &[i32]) -> Option<PrefixHit> {
+        self.inner.lock().unwrap().lookup(scope, prompt)
+    }
+
+    pub fn insert(&self, scope: u64, key: &[i32], capture: PrefixCapture) {
+        self.inner.lock().unwrap().insert(scope, key, capture)
+    }
+
+    pub fn note_prefill(&self, secs: f64, computed_tokens: usize) {
+        self.inner.lock().unwrap().note_prefill(secs, computed_tokens)
+    }
+
+    pub fn stats(&self) -> PrefixCacheStats {
+        self.inner.lock().unwrap().stats()
+    }
+
+    pub fn check_invariants(&self) {
+        self.inner.lock().unwrap().check_invariants()
+    }
+}
+
+/// An engine's view of the shared cache: the cache handle plus the
+/// pre-computed scope for this engine's (method, policy, backend)
+/// configuration — computed once at `set_prefix_cache` so the per-row
+/// hot path only hashes prompts, not configs.
+#[derive(Debug, Clone)]
+pub struct PrefixHandle {
+    pub cache: SharedPrefixCache,
+    pub scope: u64,
+}
+
+/// Cache scope for a decode configuration on a backend: method × policy
+/// (the batcher's `GroupKey` axes) × the backend's own identity
+/// discriminant (`Backend::prefix_scope`: mode + seed for the reference
+/// model). Two engines share captures iff their scopes are equal.
+pub fn prefix_scope_for<B: Backend>(rt: &B, cfg: &GenConfig) -> u64 {
+    let mut h = DefaultHasher::new();
+    cfg.method.hash(&mut h);
+    cfg.policy.hash(&mut h);
+    h.finish() ^ rt.prefix_scope()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cap(tag: u64) -> PrefixCapture {
+        Arc::new(tag)
+    }
+
+    fn hit_len(c: &mut PrefixCache, scope: u64, prompt: &[i32]) -> Option<usize> {
+        c.lookup(scope, prompt).map(|h| h.len)
+    }
+
+    #[test]
+    fn insert_then_full_hit_roundtrip() {
+        let mut c = PrefixCache::new(1 << 20);
+        let key = [2, 10, 11, 12, 13, 14];
+        c.insert(7, &key, cap(1));
+        c.check_invariants();
+        let hit = c.lookup(7, &key).expect("full hit");
+        assert_eq!(hit.len, key.len());
+        assert_eq!(*hit.capture.downcast_ref::<u64>().unwrap(), 1);
+        let s = c.stats();
+        assert_eq!((s.hits, s.partial_hits, s.misses), (1, 0, 0));
+    }
+
+    #[test]
+    fn scopes_are_isolated() {
+        let mut c = PrefixCache::new(1 << 20);
+        let key = [2, 10, 11, 12, 13];
+        c.insert(1, &key, cap(1));
+        assert!(c.lookup(2, &key).is_none(), "wrong scope must miss");
+        assert!(c.lookup(1, &key).is_some());
+        c.check_invariants();
+    }
+
+    #[test]
+    fn shared_template_splits_and_partial_hits() {
+        let mut c = PrefixCache::new(1 << 20);
+        // two prompts sharing an 8-token template, diverging in the tail
+        let a = [2, 5, 6, 7, 8, 9, 10, 11, 30, 31];
+        let b = [2, 5, 6, 7, 8, 9, 10, 11, 40, 41, 42];
+        c.insert(0, &a, cap(1));
+        c.insert(0, &b, cap(2));
+        c.check_invariants();
+        // a third prompt with the same template but a fresh tail:
+        // partial hit covering exactly the shared 8 tokens
+        let q = [2, 5, 6, 7, 8, 9, 10, 11, 50];
+        let hit = c.lookup(0, &q).expect("template part must hit");
+        assert_eq!(hit.len, 8);
+        let s = c.stats();
+        assert_eq!(s.partial_hits, 1);
+        // both originals still full-hit
+        assert_eq!(hit_len(&mut c, 0, &a), Some(a.len()));
+        assert_eq!(hit_len(&mut c, 0, &b), Some(b.len()));
+    }
+
+    #[test]
+    fn prefix_of_an_entry_partial_hits_via_descendant() {
+        let mut c = PrefixCache::new(1 << 20);
+        let long = [2, 5, 6, 7, 8, 9, 10, 11];
+        c.insert(0, &long, cap(1));
+        // a query that is a strict prefix of the stored key: the stored
+        // (longer) capture covers the whole query prefix
+        let hit = c.lookup(0, &long[..6]).expect("prefix query must hit");
+        assert_eq!(hit.len, 6);
+        assert_eq!(c.stats().hits, 1, "covers the whole prompt → full hit");
+    }
+
+    #[test]
+    fn short_prefixes_are_not_cached_or_served() {
+        let mut c = PrefixCache::new(1 << 20);
+        c.insert(0, &[2, 5], cap(1)); // below MIN_CACHE_PREFIX → dropped
+        assert_eq!(c.stats().inserts, 0);
+        let key = [2, 5, 6, 7, 8];
+        c.insert(0, &key, cap(2));
+        // matched part shorter than the floor → miss, not a 2-token hit
+        assert!(c.lookup(0, &[2, 5, 9, 9, 9]).is_none());
+        c.check_invariants();
+    }
+
+    #[test]
+    fn lru_eviction_under_byte_budget() {
+        // budget for ~2 entries of 8 tokens each
+        let mut c = PrefixCache::new(2 * 8 * BYTES_PER_TOKEN);
+        let k1 = [1, 5, 6, 7, 8, 9, 10, 11];
+        let k2 = [2, 5, 6, 7, 8, 9, 10, 11];
+        let k3 = [3, 5, 6, 7, 8, 9, 10, 11];
+        c.insert(0, &k1, cap(1));
+        c.insert(0, &k2, cap(2));
+        assert_eq!(c.stats().evictions, 0);
+        // touch k1 so k2 becomes the LRU victim
+        assert!(c.lookup(0, &k1).is_some());
+        c.insert(0, &k3, cap(3));
+        c.check_invariants();
+        let s = c.stats();
+        assert_eq!(s.evictions, 1);
+        assert!(s.bytes <= 2 * 8 * BYTES_PER_TOKEN as u64);
+        assert!(c.lookup(0, &k1).is_some(), "recently-used entry must survive");
+        assert!(c.lookup(0, &k2).is_none(), "LRU entry must be evicted");
+        assert!(c.lookup(0, &k3).is_some());
+    }
+
+    #[test]
+    fn pinned_entries_survive_eviction() {
+        let mut c = PrefixCache::new(8 * BYTES_PER_TOKEN);
+        let k1 = [1, 5, 6, 7, 8, 9, 10, 11];
+        let k2 = [2, 5, 6, 7, 8, 9, 10, 11];
+        c.insert(0, &k1, cap(1));
+        // hold the capture like a live row would
+        let pinned = c.lookup(0, &k1).unwrap().capture;
+        c.insert(0, &k2, cap(2));
+        c.check_invariants();
+        assert!(c.lookup(0, &k1).is_some(), "pinned entry must not be evicted");
+        drop(pinned);
+        // now k1 is evictable; the next insert pushes it out
+        let k3 = [3, 5, 6, 7, 8, 9, 10, 11];
+        c.insert(0, &k3, cap(3));
+        assert!(c.stats().bytes <= 8 * BYTES_PER_TOKEN as u64);
+        c.check_invariants();
+    }
+
+    #[test]
+    fn eviction_prunes_split_chains() {
+        let mut c = PrefixCache::new(1 << 20);
+        let a = [2, 5, 6, 7, 8, 9];
+        let b = [2, 5, 6, 7, 20, 21];
+        c.insert(0, &a, cap(1));
+        c.insert(0, &b, cap(2)); // splits the edge → internal node
+        let full = c.live_nodes();
+        // remove both entries via the internal API and check the tree
+        // collapses back to just the root
+        let victims: Vec<u32> = c
+            .nodes
+            .iter()
+            .enumerate()
+            .filter(|(_, n)| n.entry.is_some())
+            .map(|(ix, _)| ix as u32)
+            .collect();
+        for v in victims {
+            c.remove_entry(v);
+        }
+        c.check_invariants();
+        assert!(c.live_nodes() < full);
+        assert_eq!(c.live_nodes(), 1, "only the scope root survives");
+        assert_eq!(c.stats().entries, 0);
+    }
+
+    #[test]
+    fn zero_budget_disables_inserts() {
+        let mut c = PrefixCache::new(0);
+        c.insert(0, &[2, 5, 6, 7, 8, 9], cap(1));
+        assert_eq!(c.stats().inserts, 0);
+        assert!(c.lookup(0, &[2, 5, 6, 7, 8, 9]).is_none());
+    }
+
+    #[test]
+    fn saved_seconds_track_reuse() {
+        let mut c = PrefixCache::new(1 << 20);
+        c.note_prefill(0.010, 100); // 100µs/token
+        let key = [2, 5, 6, 7, 8, 9, 10, 11, 12, 13];
+        c.insert(0, &key, cap(1));
+        assert!(c.lookup(0, &key).is_some());
+        let s = c.stats();
+        assert_eq!(s.reused_tokens, key.len() as u64);
+        assert!(s.saved_prefill_secs > 0.0);
+        assert!((s.saved_prefill_secs - key.len() as f64 * 1e-4).abs() < 1e-9);
+    }
+
+    #[test]
+    fn shared_handle_and_scope_separation() {
+        let shared = SharedPrefixCache::new(1 << 20);
+        let be = crate::engine::ReferenceBackend::toy(crate::engine::REFERENCE_SEED);
+        let cfg_a = GenConfig::preset(crate::engine::Method::Streaming, 64);
+        let cfg_b = GenConfig::preset(crate::engine::Method::Vanilla, 64);
+        let sa = prefix_scope_for(&be, &cfg_a);
+        let sb = prefix_scope_for(&be, &cfg_b);
+        assert_ne!(sa, sb, "different methods must not share captures");
+        let causal = crate::engine::ReferenceBackend::causal(crate::engine::REFERENCE_SEED);
+        assert_ne!(
+            prefix_scope_for(&be, &cfg_a),
+            prefix_scope_for(&causal, &cfg_a),
+            "different backend modes must not share captures"
+        );
+        shared.insert(sa, &[2, 5, 6, 7, 8], cap(9));
+        assert!(shared.lookup(sa, &[2, 5, 6, 7, 8]).is_some());
+        assert!(shared.lookup(sb, &[2, 5, 6, 7, 8]).is_none());
+        shared.check_invariants();
+    }
+}

@@ -25,12 +25,15 @@
 //!   analogue of the AR teacher).
 
 use std::cell::RefCell;
+use std::collections::hash_map::DefaultHasher;
+use std::hash::{Hash, Hasher};
+use std::sync::Arc;
 
 use anyhow::{anyhow, Result};
 
 use crate::util::rng::Rng;
 
-use super::backend::Backend;
+use super::backend::{Backend, CachedSpan, PrefixCapture};
 use super::types::{detokenize_until_eos, reference_vocab, Buckets, DecodeOut, SpecialTokens};
 
 /// Default seed for the toy model: serving, eval and benches must all
@@ -91,6 +94,23 @@ pub struct RefStats {
     pub prefills: u64,
     pub decodes: u64,
     pub logits: u64,
+    /// prompt tokens actually fed through the signature hash — the
+    /// reference model's stand-in for prefill FLOPs. Cached-prefix rows
+    /// hash 0; intra-batch dedup hashes each distinct sig window once.
+    /// The prefix-cache acceptance tests assert over deltas of this.
+    pub prefix_tokens_hashed: u64,
+}
+
+/// The reference model's [`PrefixCapture`] payload: the row signature a
+/// cold prefill would recompute, plus the prompt length it was captured
+/// at. Reusing the signature for a matched prefix of `m` tokens is
+/// sound iff `m >= SIG_WINDOW` (the hash never reads past the window)
+/// or the hit covers the *exact* captured prompt — `usable_span` below
+/// enforces that, so warm rows stay bit-identical to cold ones.
+#[derive(Debug, Clone, Copy)]
+pub struct RefPrefix {
+    pub sig: u64,
+    pub len: usize,
 }
 
 /// Per-row prefill capture: prompt signature, prompt length, and (causal
@@ -212,11 +232,22 @@ impl ReferenceBackend {
     /// same model parameters (what differs in causal mode is the
     /// *conditioning*, not the model).
     fn row_sig(&self, prompt: &[i32]) -> u64 {
+        self.calls.borrow_mut().prefix_tokens_hashed += prompt.len().min(SIG_WINDOW) as u64;
         let mut h = mix(self.conf_seed ^ 0xA076_1D64_78BD_642F);
         for &t in prompt.iter().take(SIG_WINDOW) {
             h = mix(h ^ t as u64);
         }
         h
+    }
+
+    /// Whether a cached span's capture can stand in for recomputing the
+    /// signature of a prompt of length `p0b`. Sound in exactly two
+    /// cases: the matched prefix reaches `SIG_WINDOW` (the hash never
+    /// reads past it), or the hit covers this exact prompt end to end.
+    fn usable_span(span: &CachedSpan, p0b: usize) -> Option<u64> {
+        let cap = span.capture.as_ref()?.downcast_ref::<RefPrefix>()?;
+        let m = span.len.min(p0b);
+        (m >= SIG_WINDOW || (m == p0b && cap.len == m)).then_some(cap.sig)
     }
 
     /// Content tokens before EOS, fixed by the signature: 4..=16.
@@ -489,6 +520,89 @@ impl Backend for ReferenceBackend {
         Ok(RefKv { batch, p_bucket, valid: valid.to_vec(), rows })
     }
 
+    /// Cache-aware prefill. **Bit-identical to `prefill`**: the call
+    /// counter advances exactly the same way (causal confidence draws
+    /// are keyed on it) and the resulting rows are equal — captures and
+    /// intra-batch dedup only shorten signature hashing, which
+    /// `prefix_tokens_hashed` accounts for.
+    fn prefill_cached(
+        &self,
+        batch: usize,
+        p_bucket: usize,
+        tokens: &[i32],
+        _pos: &[i32],
+        valid: &[i32],
+        p0: Option<&[i32]>,
+        cached: &[CachedSpan],
+    ) -> Result<RefKv> {
+        self.calls.borrow_mut().prefills += 1;
+        let rows = match self.mode {
+            RefMode::Scripted { .. } => {
+                (0..batch).map(|_| RefRow { sig: 0, p0: 0, gen_prefix: vec![] }).collect()
+            }
+            RefMode::Toy | RefMode::Causal => {
+                let p0 = p0
+                    .ok_or_else(|| anyhow!("reference {} backend needs p0", self.mode.name()))?;
+                // shared-prefix dedup: cold rows arriving in the same
+                // call whose sig windows coincide hash the window once
+                let mut windows: Vec<(&[i32], u64)> = Vec::with_capacity(batch);
+                let mut rows = Vec::with_capacity(batch);
+                for b in 0..batch {
+                    let p0b = p0[b].max(0) as usize;
+                    let row = &tokens[b * p_bucket..(b + 1) * p_bucket];
+                    let prompt = &row[..p0b.min(p_bucket)];
+                    let sig = match cached.get(b).and_then(|s| Self::usable_span(s, prompt.len()))
+                    {
+                        Some(sig) => sig,
+                        None => {
+                            let win = &prompt[..prompt.len().min(SIG_WINDOW)];
+                            match windows.iter().find(|&&(w, _)| w == win) {
+                                Some(&(_, sig)) => sig,
+                                None => {
+                                    let sig = self.row_sig(prompt);
+                                    windows.push((win, sig));
+                                    sig
+                                }
+                            }
+                        }
+                    };
+                    let gen_prefix = if self.mode == RefMode::Causal {
+                        let hi =
+                            (valid.get(b).copied().unwrap_or(0).max(0) as usize).min(p_bucket);
+                        row[p0b.min(hi)..hi].to_vec()
+                    } else {
+                        vec![]
+                    };
+                    rows.push(RefRow { sig, p0: p0b, gen_prefix });
+                }
+                rows
+            }
+        };
+        Ok(RefKv { batch, p_bucket, valid: valid.to_vec(), rows })
+    }
+
+    fn capture_prefix(&self, kv: &RefKv, row: usize, prefix_len: usize) -> Option<PrefixCapture> {
+        match self.mode {
+            // scripted rows carry no prompt-derived state worth sharing
+            RefMode::Scripted { .. } => None,
+            RefMode::Toy | RefMode::Causal => {
+                let r = kv.rows.get(row)?;
+                // the signature is only honest for the row's own prompt
+                // length; `gen_prefix` is per-call decode state, not
+                // prompt state, so it is never captured
+                (prefix_len == r.p0)
+                    .then(|| Arc::new(RefPrefix { sig: r.sig, len: prefix_len }) as PrefixCapture)
+            }
+        }
+    }
+
+    fn prefix_scope(&self) -> u64 {
+        let mut h = DefaultHasher::new();
+        self.mode.name().hash(&mut h);
+        self.conf_seed.hash(&mut h);
+        h.finish()
+    }
+
     fn decode(
         &self,
         kv: &RefKv,
@@ -666,6 +780,80 @@ mod tests {
             let c = out.conf(0, i);
             assert!((0.0..=1.0).contains(&c), "conf {c}");
         }
+    }
+
+    #[test]
+    fn prefill_cached_matches_cold_and_skips_hashing() {
+        let be = ReferenceBackend::toy(REFERENCE_SEED);
+        let prompt = vec![2i32, 15, 16, 17, 18, 19];
+        let p0 = prompt.len();
+        let mut tokens = vec![0i32; 96];
+        tokens[..p0].copy_from_slice(&prompt);
+        let cold = be.prefill(1, 96, &tokens, &[0; 96], &[p0 as i32], Some(&[p0 as i32])).unwrap();
+        let cap = be.capture_prefix(&cold, 0, p0).expect("toy mode captures");
+        let hashed_cold = be.stats().prefix_tokens_hashed;
+
+        // warm: exact-prompt hit → same sig, zero tokens hashed
+        let spans = vec![CachedSpan { len: p0, capture: Some(cap.clone()) }];
+        let warm = be
+            .prefill_cached(1, 96, &tokens, &[0; 96], &[p0 as i32], Some(&[p0 as i32]), &spans)
+            .unwrap();
+        assert_eq!(warm.rows[0].sig, cold.rows[0].sig);
+        assert_eq!(warm.rows[0].p0, cold.rows[0].p0);
+        assert_eq!(be.stats().prefix_tokens_hashed, hashed_cold, "warm row must hash nothing");
+        assert_eq!(be.stats().prefills, 2, "cached prefill still counts as a prefill call");
+
+        // a short partial span (below SIG_WINDOW, not the exact prompt)
+        // must be rejected and recomputed, not trusted
+        let bogus = vec![CachedSpan {
+            len: 3,
+            capture: Some(Arc::new(RefPrefix { sig: 0xDEAD, len: 3 }) as PrefixCapture),
+        }];
+        let re = be
+            .prefill_cached(1, 96, &tokens, &[0; 96], &[p0 as i32], Some(&[p0 as i32]), &bogus)
+            .unwrap();
+        assert_eq!(re.rows[0].sig, cold.rows[0].sig, "unusable span must fall back to cold");
+    }
+
+    #[test]
+    fn prefill_cached_dedups_shared_windows_in_one_call() {
+        let be = ReferenceBackend::toy(REFERENCE_SEED);
+        let prompt = vec![2i32, 15, 16, 17, 18, 19];
+        let p0 = prompt.len() as i32;
+        // batch of 4 identical prompts, no captures
+        let mut tokens = vec![0i32; 4 * 96];
+        for b in 0..4 {
+            tokens[b * 96..b * 96 + prompt.len()].copy_from_slice(&prompt);
+        }
+        let before = be.stats().prefix_tokens_hashed;
+        let spans = vec![CachedSpan::default(); 4];
+        let kv = be
+            .prefill_cached(4, 96, &tokens, &[0; 4 * 96], &[p0; 4], Some(&[p0; 4]), &spans)
+            .unwrap();
+        let batch_hashed = be.stats().prefix_tokens_hashed - before;
+
+        // a solo cold prefill of the same prompt
+        let before = be.stats().prefix_tokens_hashed;
+        let solo =
+            be.prefill(1, 96, &tokens[..96], &[0; 96], &[p0], Some(&[p0])).unwrap();
+        let solo_hashed = be.stats().prefix_tokens_hashed - before;
+        assert_eq!(
+            batch_hashed, solo_hashed,
+            "4 same-prefix rows must hash exactly what 1 row hashes (shared prefill)"
+        );
+        for b in 0..4 {
+            assert_eq!(kv.rows[b].sig, solo.rows[0].sig);
+        }
+    }
+
+    #[test]
+    fn prefix_scope_separates_modes_and_seeds() {
+        let toy = ReferenceBackend::toy(REFERENCE_SEED);
+        let causal = ReferenceBackend::causal(REFERENCE_SEED);
+        let other_seed = ReferenceBackend::toy(REFERENCE_SEED ^ 1);
+        assert_ne!(toy.prefix_scope(), causal.prefix_scope());
+        assert_ne!(toy.prefix_scope(), other_seed.prefix_scope());
+        assert_eq!(toy.prefix_scope(), ReferenceBackend::toy(REFERENCE_SEED).prefix_scope());
     }
 
     #[test]

@@ -2,6 +2,7 @@
 //! generation region), block cursor and commit bookkeeping — the x^(t)
 //! of paper Eq. 1, partitioned into blocks per Eq. 2.
 
+use super::backend::CachedSpan;
 use super::policy::Trend;
 use super::types::SpecialTokens;
 
@@ -19,6 +20,11 @@ pub struct SeqState {
     pub finished: bool,
     /// diffusion steps this sequence participated in (NFE proxy)
     pub steps: u64,
+    /// cross-request prefix-cache attachment: how much of the prompt a
+    /// cached capture covers. Set once (at the row's first prefill) by
+    /// the cache lookup/insert path; holding the capture here pins its
+    /// cache entry against eviction while the row decodes.
+    pub cached_prefix: Option<CachedSpan>,
     /// commit-time confidence per generation position (for remasking)
     pub commit_conf: Vec<f32>,
     /// generation positions already remasked once (budget: 1 per pos)
@@ -54,6 +60,7 @@ impl SeqState {
             block: 0,
             finished: false,
             steps: 0,
+            cached_prefix: None,
             commit_conf: vec![1.0; gen_len],
             remasked: vec![false; gen_len],
             mask_id: special.mask,
@@ -79,6 +86,7 @@ impl SeqState {
         self.block = 0;
         self.finished = false;
         self.steps = 0;
+        self.cached_prefix = None;
         self.commit_conf.clear();
         self.commit_conf.resize(gen_len, 1.0);
         self.remasked.clear();

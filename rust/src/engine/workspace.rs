@@ -22,10 +22,11 @@ use std::time::Instant;
 
 use anyhow::{bail, Result};
 
-use super::backend::Backend;
+use super::backend::{Backend, CachedSpan};
 use super::config::{GenConfig, Method};
 use super::generator::{GenReport, StepEvent};
 use super::policy::{select_into, Candidate, TemporalPolicy, Trend};
+use super::prefix_cache::PrefixHandle;
 use super::sequence::SeqState;
 use super::suffix::{build_bundle_into, Bundle};
 
@@ -44,6 +45,8 @@ pub struct StepWorkspace {
     q_tok: Vec<i32>,
     q_pos: Vec<i32>,
     q_valid: Vec<i32>,
+    // per-row cached-prefix spans handed to `prefill_cached`
+    cached: Vec<CachedSpan>,
     // per-row query bundles (position vecs reused across steps)
     bundles: Vec<Bundle>,
     // candidate + selection scratch (trends parallel to cands, filled
@@ -125,16 +128,42 @@ pub(crate) fn sanitize(tok: i32, mask: i32, pad: i32, eos: i32) -> i32 {
 /// Prefix forward for every row at its own committed prefix (finished
 /// rows collapse to a 1-token stub; inert padding rows `b ≥ rows.len()`
 /// carry a 1-token BOS prompt). `batch` is the padded batch bucket.
+///
+/// When a prefix-cache handle is supplied, fresh rows (first prefill of
+/// their life) look up their prompt in the radix cache first; hits ride
+/// along as [`CachedSpan`]s so the backend can skip the covered work,
+/// and misses are captured and inserted after the forward. Cached spans
+/// never change *which* calls happen — only how much each one computes
+/// — so decode output stays bit-identical to a cold run.
 pub(crate) fn prefill_rows<B: Backend>(
     rt: &B,
     cfg: &GenConfig,
     ws: &mut StepWorkspace,
-    rows: &RowsMut,
+    rows: &mut RowsMut,
     batch: usize,
+    prefix: Option<&PrefixHandle>,
     report: &mut GenReport,
 ) -> Result<B::Kv> {
     let k = cfg.block_size;
     let special = rt.special();
+
+    // Fresh real rows (no decode work done yet) consult the cache once;
+    // the hit span is pinned on the row for its whole lifetime so later
+    // re-prefills (dKV refresh) reuse it without another lookup.
+    if let Some(px) = prefix {
+        for b in 0..rows.len() {
+            let s = rows.get(b);
+            if s.finished || s.block != 0 || s.steps != 0 || s.cached_prefix.is_some() {
+                continue;
+            }
+            let p0 = s.p0;
+            if let Some(hit) = px.cache.lookup(px.scope, &s.tokens[..p0]) {
+                rows.get_mut(b).cached_prefix =
+                    Some(CachedSpan { len: hit.len.min(p0), capture: Some(hit.capture) });
+            }
+        }
+    }
+
     let p_need = rows
         .iter()
         .map(|s| if s.finished { 1 } else { s.prefix_len(k) })
@@ -149,6 +178,11 @@ pub(crate) fn prefill_rows<B: Backend>(
     ws.grows += reset_i32(&mut ws.pos, batch * p_bucket, 0) as u64;
     ws.grows += reset_i32(&mut ws.valid, batch, 1) as u64;
     ws.grows += reset_i32(&mut ws.p0s, batch, 0) as u64;
+    ws.cached.clear();
+    ws.cached.resize_with(batch, CachedSpan::default);
+    let mut total_tokens = 0usize;
+    let mut covered_tokens = 0usize;
+    let mut fresh_any = false;
     for b in 0..batch {
         for j in 0..p_bucket {
             ws.pos[b * p_bucket + j] = j as i32;
@@ -166,18 +200,59 @@ pub(crate) fn prefill_rows<B: Backend>(
         for j in 0..plen.min(s.tokens.len()) {
             ws.tokens[b * p_bucket + j] = s.tokens[j];
         }
+        if !s.finished {
+            total_tokens += plen;
+            if s.block == 0 && s.steps == 0 {
+                fresh_any = true;
+            }
+            if let Some(span) = &s.cached_prefix {
+                covered_tokens += span.len.min(plen);
+                ws.cached[b] = span.clone();
+            }
+        }
     }
     let t = Instant::now();
-    let kv = rt.prefill(
+    let kv = rt.prefill_cached(
         batch,
         p_bucket,
         &ws.tokens,
         &ws.pos,
         &ws.valid,
         if rt.wants_p0() { Some(&ws.p0s) } else { None },
+        &ws.cached,
     )?;
-    report.prefill_secs += t.elapsed().as_secs_f64();
+    let secs = t.elapsed().as_secs_f64();
+    report.prefill_secs += secs;
     report.prefills += 1;
+    if fresh_any {
+        report.init_prefill_secs += secs;
+        report.init_prefills += 1;
+    } else {
+        report.reprefill_secs += secs;
+        report.reprefills += 1;
+    }
+
+    if let Some(px) = prefix {
+        px.cache.note_prefill(secs, total_tokens.saturating_sub(covered_tokens));
+        // Capture and publish the prompt-prefix state of rows the cache
+        // did not (fully) cover, so the next same-prefix request hits.
+        for b in 0..rows.len() {
+            let s = rows.get(b);
+            if s.finished || s.block != 0 || s.steps != 0 {
+                continue;
+            }
+            let p0 = s.p0;
+            let covered = s.cached_prefix.as_ref().map(|sp| sp.len).unwrap_or(0);
+            if covered >= p0 {
+                continue;
+            }
+            if let Some(cap) = rt.capture_prefix(&kv, b, p0) {
+                px.cache.insert(px.scope, &s.tokens[..p0], cap.clone());
+                rows.get_mut(b).cached_prefix =
+                    Some(CachedSpan { len: p0, capture: Some(cap) });
+            }
+        }
+    }
     Ok(kv)
 }
 
@@ -355,12 +430,13 @@ pub(crate) fn run_block_round<B: Backend>(
     ws: &mut StepWorkspace,
     rows: &mut RowsMut,
     batch: usize,
+    prefix: Option<&PrefixHandle>,
     report: &mut GenReport,
     on_step: &mut Option<&mut dyn FnMut(StepEvent)>,
 ) -> Result<()> {
     let k = cfg.block_size;
     let early_exit = cfg.method == Method::Streaming && cfg.early_exit;
-    let mut kv = prefill_rows(rt, cfg, ws, rows, batch, report)?;
+    let mut kv = prefill_rows(rt, cfg, ws, rows, batch, prefix, report)?;
 
     let mut step_in_block = 0usize;
     let guard_max = k * 4 + 8 + if cfg.remask { k } else { 0 };
@@ -378,7 +454,7 @@ pub(crate) fn run_block_round<B: Backend>(
             && step_in_block > 0
             && step_in_block % cfg.dkv_refresh == 0
         {
-            kv = prefill_rows(rt, cfg, ws, rows, batch, report)?;
+            kv = prefill_rows(rt, cfg, ws, rows, batch, prefix, report)?;
         }
         decode_step(rt, cfg, ws, rows, batch, &kv, step_in_block, early_exit, report, on_step)?;
         step_in_block += 1;

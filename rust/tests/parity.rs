@@ -12,8 +12,8 @@
 //! confidence stream and show up as different tokens.
 
 use streaming_dllm::engine::{
-    Backend, BatchEngine, GenConfig, Generator, Method, RefMode, ReferenceBackend, SeqState,
-    REFERENCE_SEED,
+    prefix_scope_for, Backend, BatchEngine, GenConfig, Generator, Method, PrefixHandle, RefMode,
+    ReferenceBackend, SeqState, SharedPrefixCache, REFERENCE_SEED,
 };
 use streaming_dllm::eval::{extract_final, synthetic_suite};
 
@@ -194,6 +194,69 @@ fn mixed_gen_len_batch_bit_identical_to_solo() {
     }
 }
 
+/// Drain one `BatchEngine` over `prompts` (admitted up front), with the
+/// prefix cache optionally attached, returning per-row final canvases.
+fn run_engine_cached(
+    mode: RefMode,
+    cfg: &GenConfig,
+    prompts: &[&[i32]],
+    cache: Option<&SharedPrefixCache>,
+) -> Vec<Vec<i32>> {
+    let be = backend(mode);
+    let mut engine = BatchEngine::new(&be, cfg.clone(), prompts.len()).unwrap();
+    if let Some(cache) = cache {
+        let scope = prefix_scope_for(&be, engine.config());
+        engine.set_prefix_cache(PrefixHandle { cache: cache.clone(), scope });
+    }
+    for (i, p) in prompts.iter().enumerate() {
+        assert!(engine.admit(i as u64, p, cfg.gen_len), "admit row {i}");
+    }
+    let mut canvases = vec![vec![]; prompts.len()];
+    let mut guard = 0;
+    while engine.active() > 0 {
+        guard += 1;
+        assert!(guard < 1000, "engine failed to drain");
+        for f in engine.step_block().unwrap() {
+            canvases[f.tag as usize] = f.seq.tokens.clone();
+        }
+    }
+    canvases
+}
+
+#[test]
+fn prefix_cache_warm_decode_bit_identical_to_cold() {
+    // the cache's core contract: captures shorten prefill work but
+    // never change a single committed token. Covered for the
+    // schedule-independent toy mode, the schedule-dependent causal
+    // mode, and the dkv-cache method whose mid-block re-prefills reuse
+    // the span pinned at admission.
+    for (mode, method) in [
+        (RefMode::Toy, Method::Streaming),
+        (RefMode::Causal, Method::Streaming),
+        (RefMode::Causal, Method::DkvCache),
+    ] {
+        let cfg = GenConfig::preset(method, 64);
+        let label = format!("{} {}", mode.name(), method.name());
+        let baseline = run_engine_cached(mode, &cfg, &PROMPTS, None);
+
+        let cache = SharedPrefixCache::new(1 << 20);
+        let cold = run_engine_cached(mode, &cfg, &PROMPTS, Some(&cache));
+        assert_eq!(cold, baseline, "cache-attached cold run diverged: {label}");
+        let populated = cache.stats();
+        assert!(populated.inserts > 0, "cold run inserted nothing: {label}");
+
+        let warm = run_engine_cached(mode, &cfg, &PROMPTS, Some(&cache));
+        assert_eq!(warm, baseline, "warm run diverged from cold: {label}");
+        let stats = cache.stats();
+        assert!(stats.hits > populated.hits, "warm run never hit the cache: {label}");
+        assert!(
+            stats.reused_tokens > populated.reused_tokens,
+            "warm run reused no prompt tokens: {label}"
+        );
+        cache.check_invariants();
+    }
+}
+
 #[test]
 fn engine_row_output_stable_under_mid_flight_joins_causal() {
     // sequential (one-per-step) decoding under the causal model only
@@ -230,4 +293,52 @@ fn engine_row_output_stable_under_mid_flight_joins_causal() {
             "row {i} diverged from the sequential oracle under mid-flight joins"
         );
     }
+}
+
+#[test]
+fn mid_flight_joins_hitting_the_cache_stay_bit_identical_causal() {
+    // same staggered-join schedule as above, run three times on fresh
+    // backends: no cache, cache-cold (populates), cache-warm (joining
+    // rows hit captures published moments earlier). All three must
+    // produce identical texts — a join that lands on a warm cache is
+    // the production fast path and must not perturb a single token.
+    let suite_be = ReferenceBackend::causal(REFERENCE_SEED);
+    let items = synthetic_suite(&suite_be, 4, 0xA11);
+    let run = |cache: Option<&SharedPrefixCache>| -> Vec<String> {
+        let be = ReferenceBackend::causal(REFERENCE_SEED);
+        let cfg = GenConfig::preset(Method::PrefixCache, 64);
+        let mut engine = BatchEngine::new(&be, cfg, 4).unwrap();
+        if let Some(cache) = cache {
+            let scope = prefix_scope_for(&be, engine.config());
+            engine.set_prefix_cache(PrefixHandle { cache: cache.clone(), scope });
+        }
+        let mut texts = vec![String::new(); items.len()];
+        assert!(engine.admit(0, &items[0].prompt, 64));
+        let mut next = 1usize;
+        let mut guard = 0;
+        while engine.active() > 0 || next < items.len() {
+            guard += 1;
+            assert!(guard < 2000, "engine failed to drain");
+            if next < items.len() && engine.has_free_slot() {
+                assert!(engine.admit(next as u64, &items[next].prompt, 64));
+                next += 1;
+            }
+            for f in engine.step_block().unwrap() {
+                texts[f.tag as usize] = be.detokenize(f.seq.generated());
+            }
+        }
+        texts
+    };
+
+    let baseline = run(None);
+    let cache = SharedPrefixCache::new(1 << 20);
+    let cold = run(Some(&cache));
+    let populated = cache.stats();
+    assert!(populated.inserts > 0, "staggered cold pass inserted nothing");
+    let warm = run(Some(&cache));
+    assert_eq!(cold, baseline, "cache-attached staggered run diverged");
+    assert_eq!(warm, baseline, "warm staggered run diverged");
+    let stats = cache.stats();
+    assert!(stats.hits > populated.hits, "joining rows never hit the cache");
+    cache.check_invariants();
 }

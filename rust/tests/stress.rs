@@ -32,8 +32,8 @@ use streaming_dllm::coordinator::{
     Batcher, Metrics, Request, Response, RouterHandle, RouterOptions, ServeConfig, StreamFrame,
 };
 use streaming_dllm::engine::{
-    Backend, DecodeOut, GenConfig, Generator, Method, RefKv, ReferenceBackend, SeqState,
-    SpecialTokens, REFERENCE_SEED,
+    prefix_scope_for, Backend, BatchEngine, DecodeOut, GenConfig, Generator, Method, PrefixHandle,
+    RefKv, ReferenceBackend, SeqState, SharedPrefixCache, SpecialTokens, REFERENCE_SEED,
 };
 use streaming_dllm::util::rng::Rng;
 
@@ -346,6 +346,7 @@ fn slow_router(depth: usize) -> RouterHandle {
             max_wait: Duration::from_millis(1),
             max_engines: 1,
             max_queue_depth: depth,
+            ..RouterOptions::default()
         },
     )
 }
@@ -800,4 +801,122 @@ fn randomized_batcher_respects_deadline_order_and_conserves_requests() {
         assert_eq!(popped_ids.len(), pushed, "seed {seed}: duplicate pops");
         assert_eq!(b.pending(), 0, "seed {seed}: batcher still holds requests");
     }
+}
+
+/// Eviction under pressure: a deliberately tiny prefix-cache budget
+/// (a few entries' worth) is hammered with many distinct prompts that
+/// share partial prefixes, forcing radix splits, LRU evictions and
+/// chain pruning — while every served text must still match its solo
+/// oracle bit-for-bit and the accounted bytes must never exceed the
+/// budget. `SDLLM_PREFIX_CACHE_BYTES` overrides the budget so CI can
+/// squeeze it harder.
+#[test]
+fn prefix_cache_eviction_under_pressure_stays_correct() {
+    let budget = std::env::var("SDLLM_PREFIX_CACHE_BYTES")
+        .ok()
+        .and_then(|s| s.trim().parse::<usize>().ok())
+        .filter(|&b| b > 0)
+        .unwrap_or(4096);
+    let cache = SharedPrefixCache::new(budget);
+    let mut rng = Rng::new(0xE71C);
+    let method = Method::Streaming;
+    let gen_len = 16usize;
+
+    let rounds = 12usize;
+    let batch = 2usize;
+    let mut last_prompts: Vec<Vec<i32>> = vec![];
+    for round in 0..rounds {
+        // shared stem keeps the radix tree splitting edges; the random
+        // tail makes every key distinct so inserts keep landing
+        let prompts: Vec<Vec<i32>> = (0..batch)
+            .map(|_| {
+                let mut p = vec![2, 30, 31, 32, 33, 34];
+                p.extend((0..rng.range(10, 16)).map(|_| rng.range(5, 45) as i32));
+                p
+            })
+            .collect();
+
+        let be = ReferenceBackend::toy(REFERENCE_SEED);
+        let mut engine = BatchEngine::new(&be, GenConfig::preset(method, gen_len), batch)
+            .unwrap_or_else(|e| panic!("round {round}: engine build failed: {e}"));
+        let scope = prefix_scope_for(&be, engine.config());
+        engine.set_prefix_cache(PrefixHandle { cache: cache.clone(), scope });
+        for (i, p) in prompts.iter().enumerate() {
+            assert!(engine.admit(i as u64, p, gen_len), "round {round}: row {i} not admitted");
+        }
+        let mut guard = 0;
+        while engine.active() > 0 {
+            guard += 1;
+            assert!(guard < 1000, "round {round}: engine failed to drain");
+            for f in engine.step_block().unwrap_or_else(|e| panic!("round {round}: {e}")) {
+                let got = be.detokenize(f.seq.generated());
+                let want = solo_text(&prompts[f.tag as usize], method, gen_len);
+                assert_eq!(
+                    got, want,
+                    "round {round}: cached row {} diverged from its solo oracle",
+                    f.tag
+                );
+            }
+        }
+
+        // all rows drained → no capture is pinned, so the budget must
+        // hold after every round, not just at the end
+        let s = cache.stats();
+        assert!(
+            s.bytes <= budget as u64,
+            "round {round}: cache holds {} bytes over the {budget}-byte budget",
+            s.bytes
+        );
+        cache.check_invariants();
+        last_prompts = prompts;
+    }
+
+    let pressured = cache.stats();
+    assert_eq!(
+        pressured.inserts,
+        (rounds * batch) as u64,
+        "every distinct prompt should have been inserted"
+    );
+    assert!(
+        pressured.evictions > 0,
+        "{} inserts into a {budget}-byte budget must evict (bytes now {})",
+        pressured.inserts,
+        pressured.bytes
+    );
+    assert!(
+        pressured.entries < pressured.inserts,
+        "eviction should keep resident entries below total inserts"
+    );
+
+    // the newest entries are the LRU survivors: replaying the final
+    // round on a fresh backend must hit the cache and stay bit-identical
+    let be = ReferenceBackend::toy(REFERENCE_SEED);
+    let mut engine = BatchEngine::new(&be, GenConfig::preset(method, gen_len), batch).unwrap();
+    let scope = prefix_scope_for(&be, engine.config());
+    engine.set_prefix_cache(PrefixHandle { cache: cache.clone(), scope });
+    for (i, p) in last_prompts.iter().enumerate() {
+        assert!(engine.admit(i as u64, p, gen_len), "replay row {i} not admitted");
+    }
+    let mut guard = 0;
+    while engine.active() > 0 {
+        guard += 1;
+        assert!(guard < 1000, "replay engine failed to drain");
+        for f in engine.step_block().expect("replay step") {
+            let got = be.detokenize(f.seq.generated());
+            let want = solo_text(&last_prompts[f.tag as usize], method, gen_len);
+            assert_eq!(got, want, "warm replay row {} diverged from its solo oracle", f.tag);
+        }
+    }
+    let warm = cache.stats();
+    assert!(
+        warm.hits > pressured.hits,
+        "replaying the freshest prompts must hit the cache (hits {} -> {})",
+        pressured.hits,
+        warm.hits
+    );
+    assert_eq!(
+        warm.inserts, pressured.inserts,
+        "full hits must not re-insert already-resident prefixes"
+    );
+    cache.check_invariants();
 }
