@@ -1,20 +1,24 @@
 //! Host-overhead bench: how much wall time the scheduling layer costs
-//! per decode step, and what the zero-allocation workspace core buys.
+//! per decode step, and what the zero-allocation workspace core plus
+//! the vectorized selection kernels buy.
 //!
-//! Runs the fig1/table3-style workload (toy reference backend, gsm-mini
-//! synthetic suite, Streaming) at batch ≥ 4 through two drivers:
+//! Runs the fig1/table3-style workload (gsm-mini synthetic suite,
+//! Streaming) at batch ≥ 4 through two drivers, in *both* reference
+//! modes — toy (schedule-independent, model nearly free) and causal
+//! (schedule-dependent, per-row hash chains dominate the backend):
 //!
 //! - `before` — a faithful replica of the seed hot path: fresh bundle /
 //!   candidate / host-buffer allocations every step plus the `SeqState`
-//!   clone round-trip per batch (the code this PR deleted);
+//!   clone round-trip per batch (the code the workspace PR deleted);
 //! - `after`  — the production `Generator` over its reused
-//!   `StepWorkspace`.
+//!   `StepWorkspace`, with the chunked SoA selection kernels and
+//!   `SDLLM_DECODE_THREADS` row fan-out (default 1).
 //!
-//! On the reference backend the "model" is nearly free, so host
-//! overhead dominates the wall — the speedup column is the PR's
-//! acceptance metric. Saves `BENCH_host_overhead.json` with the
-//! before/after fields, per-phase µs/step and the allocs-per-step proxy
-//! (workspace buffer-growth events / steps).
+//! On the reference backend the "model" is cheap, so host overhead
+//! dominates the wall — the per-mode speedup column is the acceptance
+//! metric. Saves `BENCH_host_overhead.json` with one entry per mode:
+//! before/after fields, per-phase µs/step (including the *measured*
+//! selection bucket) and the allocs-per-step proxy.
 #[path = "common.rs"]
 mod common;
 /// The seed-path replica shared with `tests/parity.rs` (which pins the
@@ -25,7 +29,7 @@ mod seed_path;
 use std::time::Instant;
 
 use streaming_dllm::engine::{
-    Backend, GenConfig, Generator, Method, ReferenceBackend, SeqState, REFERENCE_SEED,
+    Backend, GenConfig, Generator, Method, RefMode, ReferenceBackend, SeqState, REFERENCE_SEED,
 };
 use streaming_dllm::eval::{synthetic_suite, EvalItem};
 use streaming_dllm::util::json::Json;
@@ -33,50 +37,83 @@ use streaming_dllm::util::json::Json;
 const BATCH: usize = 4;
 const GEN_LEN: usize = 64;
 
+fn decode_threads() -> usize {
+    std::env::var("SDLLM_DECODE_THREADS")
+        .ok()
+        .and_then(|s| s.trim().parse().ok())
+        .filter(|&t| t >= 1)
+        .unwrap_or(1)
+}
+
+fn backend(mode: RefMode) -> ReferenceBackend {
+    match mode {
+        RefMode::Causal => ReferenceBackend::causal(REFERENCE_SEED),
+        _ => ReferenceBackend::toy(REFERENCE_SEED),
+    }
+}
+
 fn main() {
     let n = (common::bench_n() * 4).max(16);
-    let oracle = ReferenceBackend::toy(REFERENCE_SEED);
-    let items = synthetic_suite(&oracle, n, 0x05e0);
-    let cfg = GenConfig::preset(Method::Streaming, GEN_LEN);
-
-    println!("=== host_overhead — scheduling layer cost at batch {BATCH} (toy reference) ===");
-    println!("workload: {} requests, Streaming L={GEN_LEN}, chunks of {BATCH}", items.len());
-
-    // warmup + timed run per arm, fresh backend each so call counters
-    // and any lazy state start identical
-    let before = run_arm(&items, &cfg, false);
-    let after = run_arm(&items, &cfg, true);
-
-    let speedup = if before.tok_s > 0.0 { after.tok_s / before.tok_s } else { 0.0 };
-    println!("{:<26}{:>14}{:>14}", "", "before(seed)", "after(ws)");
-    println!("{:<26}{:>14.1}{:>14.1}", "non-EOS tok/s", before.tok_s, after.tok_s);
-    println!("{:<26}{:>14.2}{:>14.2}", "host µs/step", before.host_us_step, after.host_us_step);
-    println!("{:<26}{:>14}{:>14}", "steps", before.steps, after.steps);
-    println!("speedup (after/before): {speedup:.2}x");
+    let threads = decode_threads();
+    println!("=== host_overhead — scheduling layer cost at batch {BATCH} (reference) ===");
     println!(
-        "after per-phase µs/step: prefill {:.2} | decode {:.2} | host {:.2}",
-        after.prefill_us_step, after.decode_us_step, after.host_us_step
+        "workload: {n} requests per mode, Streaming L={GEN_LEN}, chunks of {BATCH}, \
+         decode_threads={threads}"
     );
-    println!(
-        "workspace allocs-per-step proxy: {} grows / {} steps = {:.4}",
-        after.ws_grows,
-        after.ws_steps,
-        after.ws_grows as f64 / after.ws_steps.max(1) as f64
-    );
+
+    let mut mode_rows = vec![];
+    for mode in [RefMode::Toy, RefMode::Causal] {
+        let oracle = backend(mode);
+        let items = synthetic_suite(&oracle, n, 0x05e0);
+        let mut cfg = GenConfig::preset(Method::Streaming, GEN_LEN);
+
+        // warmup + timed run per arm, fresh backend each so call
+        // counters and any lazy state start identical
+        let before = run_arm(mode, &items, &cfg, false);
+        cfg.decode_threads = threads;
+        let after = run_arm(mode, &items, &cfg, true);
+
+        let speedup = if before.tok_s > 0.0 { after.tok_s / before.tok_s } else { 0.0 };
+        println!("--- mode: {} ---", mode.name());
+        println!("{:<26}{:>14}{:>14}", "", "before(seed)", "after(ws)");
+        println!("{:<26}{:>14.1}{:>14.1}", "non-EOS tok/s", before.tok_s, after.tok_s);
+        println!(
+            "{:<26}{:>14.2}{:>14.2}",
+            "host µs/step", before.host_us_step, after.host_us_step
+        );
+        println!("{:<26}{:>14}{:>14}", "steps", before.steps, after.steps);
+        println!("speedup (after/before): {speedup:.2}x");
+        println!(
+            "after per-phase µs/step: prefill {:.2} | decode {:.2} | select {:.2} | host {:.2}",
+            after.prefill_us_step, after.decode_us_step, after.select_us_step, after.host_us_step
+        );
+        println!(
+            "workspace allocs-per-step proxy: {} grows / {} steps = {:.4}",
+            after.ws_grows,
+            after.ws_steps,
+            after.ws_grows as f64 / after.ws_steps.max(1) as f64
+        );
+
+        mode_rows.push(Json::obj(vec![
+            ("label", Json::Str(mode.name().to_string())),
+            ("before", arm_json(&before)),
+            ("after", arm_json(&after)),
+            ("speedup", Json::Num(speedup)),
+        ]));
+    }
 
     let json = Json::obj(vec![
-        ("workload", Json::Str(format!("toy gsm-mini-style synth n={n} streaming L={GEN_LEN}"))),
+        ("workload", Json::Str(format!("gsm-mini-style synth n={n} streaming L={GEN_LEN}"))),
         ("batch", Json::Num(BATCH as f64)),
-        ("before", arm_json(&before)),
-        ("after", arm_json(&after)),
-        ("speedup", Json::Num(speedup)),
+        ("decode_threads", Json::Num(threads as f64)),
+        ("modes", Json::Arr(mode_rows)),
     ]);
     let dir = std::path::Path::new("target/bench-results");
     let _ = std::fs::create_dir_all(dir);
     let path = dir.join("BENCH_host_overhead.json");
     let _ = std::fs::write(&path, json.to_string());
     println!("[saved {}]", path.display());
-    println!("(acceptance: speedup ≥ 1.5x at batch ≥ 4 on the reference backend)");
+    println!("(acceptance: speedup ≥ 1.5x at batch ≥ 4 in both modes)");
 }
 
 #[derive(Default)]
@@ -86,6 +123,7 @@ struct Arm {
     steps: u64,
     prefill_us_step: f64,
     decode_us_step: f64,
+    select_us_step: f64,
     host_us_step: f64,
     ws_grows: u64,
     ws_steps: u64,
@@ -98,14 +136,15 @@ fn arm_json(a: &Arm) -> Json {
         ("steps", Json::Num(a.steps as f64)),
         ("prefill_us_per_step", Json::Num(a.prefill_us_step)),
         ("decode_us_per_step", Json::Num(a.decode_us_step)),
+        ("select_us_per_step", Json::Num(a.select_us_step)),
         ("host_us_per_step", Json::Num(a.host_us_step)),
         ("ws_grows", Json::Num(a.ws_grows as f64)),
         ("ws_steps", Json::Num(a.ws_steps as f64)),
     ])
 }
 
-fn run_arm(items: &[EvalItem], cfg: &GenConfig, workspace: bool) -> Arm {
-    let be = ReferenceBackend::toy(REFERENCE_SEED);
+fn run_arm(mode: RefMode, items: &[EvalItem], cfg: &GenConfig, workspace: bool) -> Arm {
+    let be = backend(mode);
     let special = be.special();
     let mut arm = Arm::default();
     // one generator across both passes: the unmeasured warmup pass lets
@@ -119,6 +158,7 @@ fn run_arm(items: &[EvalItem], cfg: &GenConfig, workspace: bool) -> Arm {
         let mut steps = 0u64;
         let mut prefill_s = 0.0;
         let mut decode_s = 0.0;
+        let mut select_s = 0.0;
         for chunk in items.chunks(BATCH) {
             let mut seqs: Vec<SeqState> =
                 chunk.iter().map(|it| SeqState::new(&it.prompt, cfg.gen_len, &special)).collect();
@@ -128,6 +168,7 @@ fn run_arm(items: &[EvalItem], cfg: &GenConfig, workspace: bool) -> Arm {
                 steps += report.steps;
                 prefill_s += report.prefill_secs;
                 decode_s += report.decode_secs;
+                select_s += report.select_secs;
             } else {
                 let report = seed_path::generate(&be, cfg, &mut seqs).expect("seed generate");
                 tokens += seqs.iter().map(|s| s.non_eos_tokens() as u64).sum::<u64>();
@@ -141,6 +182,7 @@ fn run_arm(items: &[EvalItem], cfg: &GenConfig, workspace: bool) -> Arm {
             let per_step = |s: f64| s * 1e6 / steps.max(1) as f64;
             arm.prefill_us_step = per_step(prefill_s);
             arm.decode_us_step = per_step(decode_s);
+            arm.select_us_step = per_step(select_s);
             arm.host_us_step = per_step((arm.wall_s - prefill_s - decode_s).max(0.0));
             if workspace {
                 let ws = generator.workspace_stats();

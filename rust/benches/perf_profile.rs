@@ -72,6 +72,7 @@ fn main() {
     let mut tokens = 0u64;
     let mut prefill_s = 0.0;
     let mut decode_s = 0.0;
+    let mut select_s = 0.0;
     let mut host_s = 0.0;
     for item in items.iter().take(8) {
         let mut seqs = vec![SeqState::new(&item.prompt, 64, &special)];
@@ -81,6 +82,7 @@ fn main() {
         tokens += report.non_eos_tokens;
         prefill_s += report.prefill_secs;
         decode_s += report.decode_secs;
+        select_s += report.select_secs;
         host_s += report.host_secs;
     }
     let wall = t0.elapsed().as_secs_f64();
@@ -96,6 +98,9 @@ fn main() {
     println!("prefill (backend)   : {:>8.3}s ({:>5.1}%)", prefill_s, share(prefill_s));
     println!("decode  (backend)   : {:>8.3}s ({:>5.1}%)", decode_s, share(decode_s));
     println!("host (scheduling)   : {:>8.3}s ({:>5.1}%)", host_s, share(host_s));
+    // measured sub-bucket of host: the candidate-gather/selection/commit
+    // inner loops the vectorized kernels target
+    println!("  └ select (kernels): {:>8.3}s ({:>5.1}%)", select_s, share(select_s));
     let ws = generator.workspace_stats();
     println!(
         "workspace           : {} buffer grows / {} steps ({:.4} allocs-per-step proxy)",

@@ -16,7 +16,9 @@
 //! Opt-in gating: `--fail-on-drift <pct>` turns the check into a gate —
 //! the tolerance becomes `pct/100` and any DRIFT, GONE field, or
 //! MISSING fresh result exits 1. The default (no flag) behavior is
-//! unchanged: informational, always exit 0.
+//! unchanged: informational, always exit 0. `--only <BENCH_*.json>`
+//! restricts the comparison to a single baseline file, so CI can gate
+//! one curated baseline while the rest stay informational.
 
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
@@ -87,10 +89,27 @@ fn fail_on_drift_arg() -> Option<f64> {
                 .next()
                 .and_then(|s| s.parse::<f64>().ok())
                 .unwrap_or_else(|| {
-                    eprintln!("usage: bench_diff [--fail-on-drift <pct>]");
+                    eprintln!("usage: bench_diff [--only <BENCH_*.json>] [--fail-on-drift <pct>]");
                     std::process::exit(2);
                 });
             return Some(pct / 100.0);
+        }
+    }
+    None
+}
+
+/// `--only <file>` from argv: restrict the comparison to one baseline
+/// file. Lets CI gate a single deliberately-curated baseline (e.g.
+/// `BENCH_host_overhead.json`) while the rest of `bench/history` stays
+/// informational — gating every machine-dependent timing would flake.
+fn only_arg() -> Option<String> {
+    let mut args = std::env::args().skip(1);
+    while let Some(a) = args.next() {
+        if a == "--only" {
+            return Some(args.next().unwrap_or_else(|| {
+                eprintln!("usage: bench_diff [--only <BENCH_*.json>] [--fail-on-drift <pct>]");
+                std::process::exit(2);
+            }));
         }
     }
     None
@@ -100,6 +119,7 @@ fn main() {
     let history = PathBuf::from(env_or("SDLLM_BENCH_HISTORY", "bench/history"));
     let results = PathBuf::from(env_or("SDLLM_BENCH_RESULTS", "target/bench-results"));
     let gate = fail_on_drift_arg();
+    let only = only_arg();
     let tol = gate.unwrap_or_else(|| {
         std::env::var("SDLLM_BENCH_DIFF_TOL")
             .ok()
@@ -108,7 +128,17 @@ fn main() {
     });
     println!("=== bench drift vs {} (tolerance ±{:.0}%) ===", history.display(), tol * 100.0);
 
-    let baselines = bench_files(&history);
+    let mut baselines = bench_files(&history);
+    if let Some(name) = &only {
+        baselines.retain(|n| n == name);
+        if baselines.is_empty() {
+            println!("[{name}] no such baseline under {}", history.display());
+            if gate.is_some() {
+                std::process::exit(1);
+            }
+            return;
+        }
+    }
     if baselines.is_empty() {
         println!("no baselines under {} — nothing to compare", history.display());
         return;
@@ -160,9 +190,11 @@ fn main() {
         }
         drifts += file_drifts;
     }
-    for name in bench_files(&results) {
-        if !baselines.contains(&name) {
-            println!("[{name}] UNTRACKED (fresh result with no committed baseline)");
+    if only.is_none() {
+        for name in bench_files(&results) {
+            if !baselines.contains(&name) {
+                println!("[{name}] UNTRACKED (fresh result with no committed baseline)");
+            }
         }
     }
     match gate {

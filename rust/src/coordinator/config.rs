@@ -63,6 +63,12 @@ pub struct ServeConfig {
     /// disables caching entirely
     /// (`--prefix-cache-bytes` / `SDLLM_PREFIX_CACHE_BYTES`)
     pub prefix_cache_bytes: usize,
+    /// per-engine host-side row parallelism within a decode step:
+    /// selection/commit work fans across this many scoped threads with
+    /// a deterministic row-order merge, so output is bit-identical at
+    /// any setting; 1 = off
+    /// (`--decode-threads` / `SDLLM_DECODE_THREADS`)
+    pub decode_threads: usize,
     /// stress harness: schedules per scenario (`--schedules` / `SDLLM_STRESS_SCHEDULES`)
     pub stress_schedules: u64,
     /// stress harness: RNG seed base (`--seed-base` / `SDLLM_STRESS_SEED_BASE`)
@@ -86,6 +92,7 @@ impl Default for ServeConfig {
             gen_lens: vec![64],
             deadline_ms: None,
             prefix_cache_bytes: DEFAULT_PREFIX_CACHE_BYTES,
+            decode_threads: 1,
             stress_schedules: 20,
             stress_seed_base: 0,
         }
@@ -198,6 +205,12 @@ impl ServeConfig {
             "prefix-cache-bytes",
         )?
         .unwrap_or(d.prefix_cache_bytes);
+        let decode_threads =
+            parse_num(pick(args, "decode-threads", "SDLLM_DECODE_THREADS"), "decode-threads")?
+                .unwrap_or(d.decode_threads);
+        if decode_threads == 0 {
+            bail!("decode-threads must be >= 1");
+        }
 
         Ok(ServeConfig {
             addr: pick(args, "addr", "SDLLM_ADDR").unwrap_or(d.addr),
@@ -214,6 +227,7 @@ impl ServeConfig {
             gen_lens,
             deadline_ms,
             prefix_cache_bytes,
+            decode_threads,
             stress_schedules: parse_num(
                 pick(args, "schedules", "SDLLM_STRESS_SCHEDULES"),
                 "schedules",
@@ -235,6 +249,7 @@ impl ServeConfig {
             max_engines: self.max_engines,
             max_queue_depth: self.max_queue_depth,
             prefix_cache_bytes: self.prefix_cache_bytes,
+            decode_threads: self.decode_threads,
         }
     }
 
@@ -274,6 +289,8 @@ mod tests {
             "attenuating",
             "--prefix-cache-bytes",
             "1048576",
+            "--decode-threads",
+            "4",
         ]))
         .unwrap();
         assert_eq!(c.ref_mode, RefMode::Causal);
@@ -284,6 +301,7 @@ mod tests {
         assert_eq!(c.router_options().max_batch, 8);
         assert_eq!(c.router_options().max_queue_depth, 16);
         assert_eq!(c.router_options().prefix_cache_bytes, 1048576);
+        assert_eq!(c.router_options().decode_threads, 4);
         assert_eq!(c.max_connections, 5);
 
         assert!(ServeConfig::from_env_and_args(&parse(&["--ref-mode", "bogus"])).is_err());
@@ -294,6 +312,9 @@ mod tests {
         assert!(ServeConfig::from_env_and_args(&parse(&["--max-connections", "0"])).is_err());
         assert!(ServeConfig::from_env_and_args(&parse(&["--policy", "bogus"])).is_err());
         assert!(ServeConfig::from_env_and_args(&parse(&["--prefix-cache-bytes", "x"])).is_err());
+        // 1 thread = off, 0 is a config error (unlike prefix-cache-bytes)
+        assert!(ServeConfig::from_env_and_args(&parse(&["--decode-threads", "0"])).is_err());
+        assert!(ServeConfig::from_env_and_args(&parse(&["--decode-threads", "x"])).is_err());
         // deadline 0 means "no deadline", not an error
         let c = ServeConfig::from_env_and_args(&parse(&["--deadline-ms", "0"])).unwrap();
         assert_eq!(c.deadline_ms, None);
@@ -325,6 +346,7 @@ mod tests {
             "SDLLM_GEN_LENS",
             "SDLLM_DEADLINE_MS",
             "SDLLM_PREFIX_CACHE_BYTES",
+            "SDLLM_DECODE_THREADS",
             "SDLLM_STRESS_SCHEDULES",
             "SDLLM_STRESS_SEED_BASE",
         ] {
@@ -343,6 +365,7 @@ mod tests {
         assert_eq!(c.deadline_ms, None);
         assert_eq!(c.policy, None);
         assert_eq!(c.prefix_cache_bytes, DEFAULT_PREFIX_CACHE_BYTES);
+        assert_eq!(c.decode_threads, 1);
         assert_eq!(c.stress_schedules, 20);
 
         std::env::set_var("SDLLM_POLICY", "dropout");
@@ -352,6 +375,7 @@ mod tests {
         std::env::set_var("SDLLM_MAX_QUEUE_DEPTH", "9");
         std::env::set_var("SDLLM_MAX_CONNECTIONS", "3");
         std::env::set_var("SDLLM_PREFIX_CACHE_BYTES", "65536");
+        std::env::set_var("SDLLM_DECODE_THREADS", "2");
         let c = ServeConfig::from_env_and_args(&parse(&[])).unwrap();
         assert_eq!(c.gen_lens, vec![16, 32]);
         assert_eq!(c.policy, DecodePolicy::parse("dropout"));
@@ -359,6 +383,7 @@ mod tests {
         assert_eq!(c.max_queue_depth, 9);
         assert_eq!(c.max_connections, 3);
         assert_eq!(c.prefix_cache_bytes, 65536);
+        assert_eq!(c.decode_threads, 2);
         // whitespace-only env value counts as unset
         assert_eq!(c.deadline_ms, None);
         // CLI wins over env
@@ -371,6 +396,8 @@ mod tests {
         let c =
             ServeConfig::from_env_and_args(&parse(&["--prefix-cache-bytes", "4096"])).unwrap();
         assert_eq!(c.prefix_cache_bytes, 4096);
+        let c = ServeConfig::from_env_and_args(&parse(&["--decode-threads", "3"])).unwrap();
+        assert_eq!(c.decode_threads, 3);
         std::env::remove_var("SDLLM_POLICY");
         std::env::remove_var("SDLLM_GEN_LENS");
         std::env::remove_var("SDLLM_STRESS_SEED_BASE");
@@ -378,5 +405,6 @@ mod tests {
         std::env::remove_var("SDLLM_MAX_QUEUE_DEPTH");
         std::env::remove_var("SDLLM_MAX_CONNECTIONS");
         std::env::remove_var("SDLLM_PREFIX_CACHE_BYTES");
+        std::env::remove_var("SDLLM_DECODE_THREADS");
     }
 }

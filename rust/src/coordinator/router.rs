@@ -112,6 +112,9 @@ pub struct RouterOptions {
     pub max_queue_depth: usize,
     /// byte budget for the cross-request prefix cache; 0 disables it
     pub prefix_cache_bytes: usize,
+    /// per-engine host-side row parallelism in the decode inner loop
+    /// (bit-identical output at any setting; 1 = off)
+    pub decode_threads: usize,
 }
 
 impl Default for RouterOptions {
@@ -122,6 +125,7 @@ impl Default for RouterOptions {
             max_engines: DEFAULT_MAX_ENGINES,
             max_queue_depth: DEFAULT_MAX_QUEUE_DEPTH,
             prefix_cache_bytes: DEFAULT_PREFIX_CACHE_BYTES,
+            decode_threads: 1,
         }
     }
 }
@@ -459,13 +463,15 @@ where
     /// Backoff hint for a reject: current queue depth × observed
     /// per-block service time. Before the first observed block round
     /// the batcher's flush window stands in, so the hint is always
-    /// finite (and clamped ≥ 1ms by [`Response::rejected`]).
+    /// finite, and it is clamped to [1ms, 60s] — a cold-start EWMA fed
+    /// one pathological block round must not tell clients to go away
+    /// for hours.
     fn retry_after_ms(&self, key: GroupKey) -> u64 {
         let per_block = self
             .est_block_secs
             .unwrap_or_else(|| self.opts.max_wait.as_secs_f64().max(0.001));
         let depth = self.batcher.depth(key).max(1) as f64;
-        (depth * per_block * 1000.0).ceil().max(1.0) as u64
+        (depth * per_block * 1000.0).ceil().clamp(1.0, 60_000.0) as u64
     }
 
     fn enqueue(&mut self, job: Job) {
@@ -711,6 +717,7 @@ where
                 i,
                 self.factory.clone(),
                 self.opts.max_batch,
+                self.opts.decode_threads.max(1),
                 self.prefix_cache.clone(),
                 self.events.clone(),
             );

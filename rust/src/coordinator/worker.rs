@@ -109,6 +109,7 @@ pub fn spawn_worker<B, F>(
     worker: usize,
     factory: Arc<F>,
     max_batch: usize,
+    decode_threads: usize,
     prefix_cache: Option<SharedPrefixCache>,
     events: Sender<Msg>,
 ) -> (Sender<WorkerCmd>, JoinHandle<()>)
@@ -119,15 +120,19 @@ where
     let (tx, rx) = channel::<WorkerCmd>();
     let join = std::thread::Builder::new()
         .name(format!("sdllm-worker-{worker}"))
-        .spawn(move || worker_loop(worker, factory, max_batch, prefix_cache, rx, events))
+        .spawn(move || {
+            worker_loop(worker, factory, max_batch, decode_threads, prefix_cache, rx, events)
+        })
         .expect("spawn worker thread");
     (tx, join)
 }
 
+#[allow(clippy::too_many_arguments)]
 fn worker_loop<B, F>(
     worker: usize,
     factory: Arc<F>,
     max_batch: usize,
+    decode_threads: usize,
     prefix_cache: Option<SharedPrefixCache>,
     rx: Receiver<WorkerCmd>,
     events: Sender<Msg>,
@@ -160,8 +165,17 @@ fn worker_loop<B, F>(
                 Ok(WorkerCmd::Shutdown) | Err(_) => return,
             }
         };
-        if run_engine(worker, &backend, capacity, first, &prefix_cache, &mut pending, &rx, &events)
-        {
+        if run_engine(
+            worker,
+            &backend,
+            capacity,
+            decode_threads,
+            first,
+            &prefix_cache,
+            &mut pending,
+            &rx,
+            &events,
+        ) {
             return;
         }
     }
@@ -205,6 +219,7 @@ fn run_engine<B: Backend>(
     worker: usize,
     backend: &B,
     capacity: usize,
+    decode_threads: usize,
     first: AdmitReq,
     prefix_cache: &Option<SharedPrefixCache>,
     pending: &mut VecDeque<AdmitReq>,
@@ -217,6 +232,7 @@ fn run_engine<B: Backend>(
     // served fleet can decode different policies concurrently.
     let mut cfg = GenConfig::preset(key.method, ENGINE_CFG_GEN_LEN);
     cfg.policy = key.policy;
+    cfg.decode_threads = decode_threads.max(1);
     let mut engine = match BatchEngine::new(backend, cfg, capacity) {
         Ok(e) => e,
         Err(e) => {

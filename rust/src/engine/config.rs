@@ -78,6 +78,11 @@ pub struct GenConfig {
     /// later step — trades extra steps for output quality.
     pub remask: bool,
     pub remask_tau: f32,
+    /// Host-side row parallelism within one decode step: per-row
+    /// candidate gather / selection / commit fans out across this many
+    /// scoped threads, merged back in row order so output is
+    /// bit-identical to the single-threaded schedule. 1 = off.
+    pub decode_threads: usize,
 }
 
 impl GenConfig {
@@ -93,6 +98,7 @@ impl GenConfig {
             dkv_refresh: 2,
             remask: false,
             remask_tau: 0.5,
+            decode_threads: 1,
         }
     }
 
@@ -238,6 +244,9 @@ impl GenConfig {
         if self.remask && !(0.0..=1.0).contains(&self.remask_tau) {
             return Err(format!("remask_tau {} outside [0,1]", self.remask_tau));
         }
+        if self.decode_threads == 0 {
+            return Err("decode_threads must be >= 1".into());
+        }
         Ok(())
     }
 }
@@ -346,6 +355,11 @@ mod tests {
         let mut c2 = GenConfig::preset(Method::Streaming, 64);
         c2.set_tau0(1.5);
         assert!(c2.validate().is_err());
+        let mut c3 = GenConfig::preset(Method::Streaming, 64);
+        c3.decode_threads = 0;
+        assert!(c3.validate().is_err());
+        c3.decode_threads = 4;
+        c3.validate().unwrap();
     }
 
     #[test]

@@ -57,6 +57,11 @@ pub struct GenReport {
     pub reprefills: u64,
     /// seconds inside backend decode/logits calls
     pub decode_secs: f64,
+    /// *measured* seconds in the candidate-gather / selection / commit
+    /// inner loops — the host work this attribution used to bury in the
+    /// derived remainder. A sub-bucket of `host_secs`, timed directly
+    /// so vectorization wins show up in the thing they change.
+    pub select_secs: f64,
     /// seconds in the host scheduling layer (wall − prefill − decode):
     /// bundle building, buffer gather/scatter, selection and commits
     pub host_secs: f64,

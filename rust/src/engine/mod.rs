@@ -26,7 +26,8 @@ pub use batch::{clamp_batch, BatchEngine, Finished, RowCommit};
 pub use config::{table12_config, GenConfig, Method};
 pub use generator::{GenReport, Generator, StepEvent, WorkspaceStats};
 pub use policy::{
-    select, select_into, Candidate, DecodePolicy, SpatialPolicy, TemporalPolicy, Trend,
+    argmax_conf, select, select_into, select_soa, Candidate, DecodePolicy, SpatialPolicy,
+    TemporalPolicy, Trend,
 };
 pub use prefix_cache::{
     prefix_scope_for, PrefixCache, PrefixCacheStats, PrefixHandle, PrefixHit, SharedPrefixCache,

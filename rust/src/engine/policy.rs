@@ -459,11 +459,109 @@ pub fn select(
 fn argmax(cands: &[Candidate]) -> usize {
     let mut best = 0;
     for (i, c) in cands.iter().enumerate().skip(1) {
-        if c.conf > cands[best].conf {
+        if c.conf.total_cmp(&cands[best].conf).is_gt() {
             best = i;
         }
     }
     best
+}
+
+/// Chunk width of the SoA kernels. 8 f32 lanes fit one AVX2 register;
+/// the compare/reduce bodies below are written so the per-chunk work is
+/// branch-free and autovectorizes.
+const LANES: usize = 8;
+
+/// Argmax over a contiguous confidence slice using the IEEE total order
+/// (`f32::total_cmp`): first max wins, identical to the scalar
+/// [`argmax`] for all inputs including NaN (which sorts above +inf
+/// instead of silently losing every comparison). Chunked: each 8-lane
+/// block reduces locally, then one compare folds it into the running
+/// best — the inner reduction is branchless (conditional moves).
+pub fn argmax_conf(conf: &[f32]) -> usize {
+    debug_assert!(!conf.is_empty());
+    let mut best = 0usize;
+    let mut base = 0usize;
+    let mut chunks = conf.chunks_exact(LANES);
+    for chunk in &mut chunks {
+        let mut local = 0usize;
+        for j in 1..LANES {
+            local = if chunk[j].total_cmp(&chunk[local]).is_gt() { j } else { local };
+        }
+        let cand = base + local;
+        best = if conf[cand].total_cmp(&conf[best]).is_gt() { cand } else { best };
+        base += LANES;
+    }
+    for (j, &c) in chunks.remainder().iter().enumerate() {
+        let cand = base + j;
+        best = if c.total_cmp(&conf[best]).is_gt() { cand } else { best };
+    }
+    best
+}
+
+/// Chunked threshold scan: per 8-lane chunk build a compare bitmask
+/// (no branches in the compare loop), then pop set bits in index order.
+/// NaN compares false against every τ — same as the scalar loop.
+fn threshold_scan(conf: &[f32], tau: f32, out: &mut Vec<usize>) {
+    let mut base = 0usize;
+    let mut chunks = conf.chunks_exact(LANES);
+    for chunk in &mut chunks {
+        let mut mask = 0u32;
+        for (j, &c) in chunk.iter().enumerate() {
+            mask |= u32::from(c >= tau) << j;
+        }
+        while mask != 0 {
+            out.push(base + mask.trailing_zeros() as usize);
+            mask &= mask - 1;
+        }
+        base += LANES;
+    }
+    for (j, &c) in chunks.remainder().iter().enumerate() {
+        if c >= tau {
+            out.push(base + j);
+        }
+    }
+}
+
+/// Structure-of-arrays form of [`select_into`]: the decode hot path
+/// keeps confidences in one contiguous `f32` slice (parallel to its
+/// position/token slices), so the threshold compare and argmax run as
+/// chunked kernels instead of walking `Candidate` structs. Selection is
+/// bit-identical to [`select_into`] over the same confidences (pinned
+/// by the `vector_parity` property test).
+pub fn select_soa(
+    policy: &TemporalPolicy,
+    r_mask: f32,
+    conf: &[f32],
+    trends: &[Trend],
+    out: &mut Vec<usize>,
+) {
+    out.clear();
+    if conf.is_empty() {
+        return;
+    }
+    match *policy {
+        TemporalPolicy::OnePerStep => out.push(argmax_conf(conf)),
+        TemporalPolicy::FixedTau { .. } | TemporalPolicy::DynamicTau { .. } => {
+            threshold_scan(conf, policy.threshold(r_mask), out);
+            if out.is_empty() {
+                out.push(argmax_conf(conf));
+            }
+        }
+        TemporalPolicy::Extrapolating { gain, floor, min_streak, .. } => {
+            let tau = policy.threshold(r_mask);
+            for (i, &c) in conf.iter().enumerate() {
+                let extrapolates = trends.get(i).is_some_and(|t| {
+                    t.streak >= min_streak && c >= floor && c + gain * (c - t.prev_conf) >= 1.0
+                });
+                if c >= tau || extrapolates {
+                    out.push(i);
+                }
+            }
+            if out.is_empty() {
+                out.push(argmax_conf(conf));
+            }
+        }
+    }
 }
 
 #[cfg(test)]
@@ -646,12 +744,102 @@ mod tests {
             if sel.len() != 1 {
                 return Err(format!("expected 1, got {}", sel.len()));
             }
-            let max = cands.iter().map(|c| c.conf).fold(f32::MIN, f32::max);
+            // max under the IEEE total order (NaN-safe, unlike a
+            // fold(f32::MIN, f32::max) which a stray NaN poisons)
+            let max = cands.iter().map(|c| c.conf).max_by(f32::total_cmp).unwrap();
             if (cands[sel[0]].conf - max).abs() > 1e-9 {
                 return Err("not the argmax".into());
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn nan_confidence_never_panics_or_escapes_bounds() {
+        // a backend bug emitting NaN must not panic selection or return
+        // out-of-range indices, for every temporal policy. Under
+        // total_cmp NaN sorts above +inf, so the argmax paths pick it
+        // deterministically instead of degenerating to index 0.
+        let policies = [
+            TemporalPolicy::OnePerStep,
+            fixed(0.9),
+            TemporalPolicy::DynamicTau { tau0: 0.9, alpha: 0.3 },
+            TemporalPolicy::Extrapolating {
+                tau0: 0.9,
+                alpha: 0.3,
+                gain: 1.0,
+                floor: 0.5,
+                min_streak: 1,
+            },
+        ];
+        let cands = [cand(0, 0.2), cand(1, f32::NAN), cand(2, 0.4)];
+        let conf: Vec<f32> = cands.iter().map(|c| c.conf).collect();
+        let trends = [trend(0.1, 3), trend(0.1, 3), trend(0.1, 3)];
+        for p in policies {
+            let mut out = Vec::new();
+            select_into(&p, 1.0, &cands, &trends, &mut out);
+            assert!(!out.is_empty(), "{p:?}: progress guarantee broken by NaN");
+            assert!(out.iter().all(|&i| i < cands.len()), "{p:?}: bad index");
+            // NaN is below every threshold (>= compares false) but wins
+            // any argmax fallback under the total order
+            let mut soa = Vec::new();
+            select_soa(&p, 1.0, &conf, &trends, &mut soa);
+            assert_eq!(out, soa, "{p:?}: SoA diverged from scalar on NaN input");
+        }
+        // pure-NaN input: argmax fallback must still make progress
+        let all_nan = [cand(0, f32::NAN), cand(1, f32::NAN)];
+        assert_eq!(select(&fixed(0.5), 1.0, &all_nan, &[]), vec![0]);
+    }
+
+    #[test]
+    fn prop_select_soa_matches_select_into() {
+        // the chunked SoA kernels must be bit-identical to the scalar
+        // AoS reference across the whole policy space, including sizes
+        // around the 8-lane chunk boundary
+        prop::check(600, |g| {
+            let tau0 = g.f32(0.0, 1.0);
+            let policy = match g.usize(0, 3) {
+                0 => TemporalPolicy::OnePerStep,
+                1 => TemporalPolicy::FixedTau { tau: tau0 },
+                2 => TemporalPolicy::DynamicTau { tau0, alpha: g.f32(0.0, 1.0) },
+                _ => TemporalPolicy::Extrapolating {
+                    tau0,
+                    alpha: g.f32(0.0, 1.0),
+                    gain: g.f32(0.0, 4.0),
+                    floor: g.f32(0.0, 1.0),
+                    min_streak: g.usize(0, 4) as u32,
+                },
+            };
+            let n = g.usize(1, 40);
+            let cands: Vec<Candidate> = (0..n).map(|i| cand(i, g.f32(0.0, 1.0))).collect();
+            let conf: Vec<f32> = cands.iter().map(|c| c.conf).collect();
+            let trends: Vec<Trend> =
+                (0..n).map(|_| trend(g.f32(0.0, 1.0), g.usize(0, 5) as u32)).collect();
+            let r = g.f32(0.0, 1.0);
+            let scalar = select(&policy, r, &cands, &trends);
+            let mut soa = Vec::new();
+            select_soa(&policy, r, &conf, &trends, &mut soa);
+            if scalar != soa {
+                return Err(format!("SoA {soa:?} != scalar {scalar:?} for {policy:?}"));
+            }
+            if argmax_conf(&conf) != argmax(&cands) {
+                return Err("argmax_conf diverged from scalar argmax".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn argmax_conf_first_max_wins_across_chunks() {
+        // ties resolve to the earliest index, even when the tie spans
+        // the 8-lane chunk boundary
+        let mut conf = vec![0.25f32; 20];
+        conf[3] = 0.9;
+        conf[11] = 0.9;
+        conf[19] = 0.9;
+        assert_eq!(argmax_conf(&conf), 3);
+        assert_eq!(argmax_conf(&[0.5]), 0);
+        assert_eq!(argmax_conf(&vec![0.5f32; 8]), 0);
     }
 
     #[test]

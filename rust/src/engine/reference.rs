@@ -132,6 +132,18 @@ pub struct RefKv {
     rows: Vec<RefRow>,
 }
 
+/// Reusable buffers for the causal rollout: the committed-offset map,
+/// chain predictions and unknown-predecessor counts for one row. Kept
+/// on the backend behind a `RefCell` so `emit_causal_row` performs no
+/// heap allocation per call — all rows and calls share one arena that
+/// grows to the high-water generation length.
+#[derive(Debug, Default)]
+struct CausalScratch {
+    committed: Vec<Option<i32>>,
+    pred: Vec<i32>,
+    unknown: Vec<usize>,
+}
+
 pub struct ReferenceBackend {
     pub special: SpecialTokens,
     pub vocab: Vec<String>,
@@ -142,6 +154,7 @@ pub struct ReferenceBackend {
     pub base_conf: f32,
     pub conf_seed: u64,
     pub calls: RefCell<RefStats>,
+    scratch: RefCell<CausalScratch>,
 }
 
 fn default_buckets() -> Buckets {
@@ -220,6 +233,7 @@ impl ReferenceBackend {
             base_conf: 0.5,
             conf_seed,
             calls: RefCell::default(),
+            scratch: RefCell::default(),
         }
     }
 
@@ -375,11 +389,16 @@ impl ReferenceBackend {
 
     /// The causal forward for one row: reconstruct which generation
     /// offsets are visibly committed (KV prefix + committed bundle
-    /// slots), then run one rollout of the chain. Committed offsets are
-    /// absorbed as-is; masked offsets absorb the model's own prediction,
-    /// which is only right with probability `GUESS_P` per offset — so
-    /// every prediction past a masked gap is a guess, and a wrong guess
-    /// that gets committed corrupts the chain for all downstream offsets.
+    /// slots), then run *one* batched rollout of the chain covering
+    /// every queried offset — per-slot output reads are table lookups
+    /// into that pass, never fresh chain evaluations. Committed offsets
+    /// are absorbed as-is; masked offsets absorb the model's own
+    /// prediction, which is only right with probability `GUESS_P` per
+    /// offset — so every prediction past a masked gap is a guess, and a
+    /// wrong guess that gets committed corrupts the chain for all
+    /// downstream offsets. The rollout tables live in the shared
+    /// [`CausalScratch`] arena, so the per-call cost is pure hash math
+    /// (the hash sequence is byte-identical to the allocating form).
     #[allow(clippy::too_many_arguments)]
     fn emit_causal_row(
         &self,
@@ -398,7 +417,14 @@ impl ReferenceBackend {
             .map(|i| (q_pos[b * bucket + i].max(0) as usize).saturating_sub(p0))
             .max()
             .unwrap_or(0);
-        let mut committed: Vec<Option<i32>> = vec![None; max_d + 1];
+        let mut arena = self.scratch.borrow_mut();
+        let CausalScratch { committed, pred, unknown } = &mut *arena;
+        committed.clear();
+        committed.resize(max_d + 1, None);
+        pred.clear();
+        pred.resize(max_d + 1, 0);
+        unknown.clear();
+        unknown.resize(max_d + 1, 0);
         for (j, &t) in row.gen_prefix.iter().enumerate() {
             if j <= max_d && t != self.special.mask && t != self.special.pad {
                 committed[j] = Some(t);
@@ -411,8 +437,6 @@ impl ReferenceBackend {
                 committed[pos - p0] = Some(t);
             }
         }
-        let mut pred = vec![0i32; max_d + 1];
-        let mut unknown = vec![0usize; max_d + 1];
         let mut h = mix(sig ^ CHAIN_SALT);
         let mut u = 0usize;
         for d in 0..=max_d {

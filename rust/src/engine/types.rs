@@ -42,8 +42,12 @@ impl DecodeOut {
         DecodeOut { data: vec![0.0; batch * q * 2], batch, q }
     }
 
-    /// Write the (token, confidence) pair for slot (b, i).
+    /// Write the (token, confidence) pair for slot (b, i). Confidences
+    /// must be finite: selection orders by `total_cmp` (NaN-tolerant),
+    /// but a non-finite confidence is always a backend bug, so it is
+    /// rejected here at the boundary in debug builds.
     pub fn put(&mut self, b: usize, i: usize, tok: i32, conf: f32) {
+        debug_assert!(conf.is_finite(), "non-finite confidence {conf} for slot ({b}, {i})");
         let idx = (b * self.q + i) * 2;
         self.data[idx] = tok as f32;
         self.data[idx + 1] = conf;

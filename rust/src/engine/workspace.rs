@@ -25,10 +25,34 @@ use anyhow::{bail, Result};
 use super::backend::{Backend, CachedSpan};
 use super::config::{GenConfig, Method};
 use super::generator::{GenReport, StepEvent};
-use super::policy::{select_into, Candidate, TemporalPolicy, Trend};
+use super::policy::{select_soa, TemporalPolicy, Trend};
 use super::prefix_cache::PrefixHandle;
 use super::sequence::SeqState;
 use super::suffix::{build_bundle_into, Bundle};
+use super::types::{DecodeOut, SpecialTokens};
+
+/// Structure-of-arrays candidate scratch for one decode row: positions,
+/// sanitized tokens and confidences in parallel contiguous slices, so
+/// the threshold compare and argmax run as chunked kernels
+/// (`policy::select_soa`) instead of walking `Candidate` structs. One
+/// instance per decode thread, reused across steps.
+#[derive(Debug, Default)]
+struct RowScratch {
+    pos: Vec<usize>,
+    tok: Vec<i32>,
+    conf: Vec<f32>,
+    trends: Vec<Trend>,
+    picked: Vec<usize>,
+}
+
+impl RowScratch {
+    fn clear(&mut self) {
+        self.pos.clear();
+        self.tok.clear();
+        self.conf.clear();
+        self.trends.clear();
+    }
+}
 
 /// Reusable per-step scratch. All buffers grow monotonically to the
 /// high-water mark of the workload and are reset (not reallocated) each
@@ -49,11 +73,8 @@ pub struct StepWorkspace {
     cached: Vec<CachedSpan>,
     // per-row query bundles (position vecs reused across steps)
     bundles: Vec<Bundle>,
-    // candidate + selection scratch (trends parallel to cands, filled
-    // only when the temporal policy reads confidence trends)
-    cands: Vec<Candidate>,
-    trends: Vec<Trend>,
-    picked: Vec<usize>,
+    // SoA candidate/selection scratch, one slot per decode thread
+    scratch: Vec<RowScratch>,
     /// buffer-growth events (capacity misses) since construction
     pub grows: u64,
     /// decode/logits steps driven through this workspace
@@ -256,6 +277,84 @@ pub(crate) fn prefill_rows<B: Backend>(
     Ok(kv)
 }
 
+/// Per-row tail of the decode inner loop: SoA candidate gather, policy
+/// selection, commits, remask and early-exit scan. Row-independent by
+/// construction — only this row's `SeqState` is mutated — which is what
+/// lets `decode_threads` fan rows across a scoped thread pool. Returns
+/// the early-exit blocks-skipped delta (counted for real rows only) and
+/// the step event for flat row 0 when an observer is attached.
+#[allow(clippy::too_many_arguments)]
+fn process_row(
+    b: usize,
+    is_real: bool,
+    s: &mut SeqState,
+    bun: &Bundle,
+    out: &DecodeOut,
+    cfg: &GenConfig,
+    special: &SpecialTokens,
+    early_exit: bool,
+    want_event: bool,
+    step_in_block: usize,
+    scratch: &mut RowScratch,
+) -> (u64, Option<StepEvent>) {
+    let k = cfg.block_size;
+    if s.finished || s.block_done(k) {
+        return (0, None);
+    }
+    let r_mask = s.mask_ratio(k);
+    // candidates: masked positions within the current block, which
+    // occupy the first `block_len` bundle slots. Confidence trends
+    // are tracked only for policies that read them.
+    let temporal = &cfg.policy.temporal;
+    let track_trend = temporal.uses_trend();
+    scratch.clear();
+    for j in 0..bun.block_len {
+        let abs = bun.positions[j];
+        if s.is_masked(abs) {
+            let token = sanitize(out.token(b, j), special.mask, special.pad, special.eos);
+            let conf = out.conf(b, j);
+            if track_trend {
+                scratch.trends.push(s.observe_trend(abs, token, conf));
+            }
+            scratch.pos.push(abs);
+            scratch.tok.push(token);
+            scratch.conf.push(conf);
+        }
+    }
+    if scratch.conf.is_empty() {
+        return (0, None);
+    }
+    select_soa(temporal, r_mask, &scratch.conf, &scratch.trends, &mut scratch.picked);
+    let event = (b == 0 && want_event).then(|| StepEvent {
+        block: s.block,
+        step_in_block,
+        masked_confs: scratch.conf.clone(),
+        threshold: temporal.threshold(r_mask),
+        committed: scratch.picked.len(),
+    });
+    for &i in scratch.picked.iter() {
+        s.commit_with_conf(scratch.pos[i], scratch.tok[i], scratch.conf[i]);
+    }
+    // ReMDM extension: revise low-confidence commits (once per
+    // position) while the block is still open.
+    if cfg.remask && !s.block_done(k) {
+        s.remask_low_confidence(k, cfg.remask_tau);
+    }
+    s.steps += 1;
+    let mut skipped = 0u64;
+    if early_exit && s.early_exit_scan(k) {
+        // rest of the block was EOS-filled; skipped blocks counted
+        // exactly once per real row, here or never. The budget is
+        // the row's own (`SeqState::n_blocks`), so mixed-length
+        // batches account each row against its own gen_len.
+        if is_real {
+            skipped = (s.n_blocks(k) - (s.block + 1)) as u64;
+        }
+        s.finish_with_eos();
+    }
+    (skipped, event)
+}
+
 /// One diffusion decode step over every live row's query bundle.
 #[allow(clippy::too_many_arguments)]
 pub(crate) fn decode_step<B: Backend>(
@@ -272,8 +371,7 @@ pub(crate) fn decode_step<B: Backend>(
 ) -> Result<()> {
     let k = cfg.block_size;
     let special = rt.special();
-    let StepWorkspace { q_tok, q_pos, q_valid, bundles, cands, trends, picked, grows, steps, .. } =
-        ws;
+    let StepWorkspace { q_tok, q_pos, q_valid, bundles, scratch, grows, steps, .. } = ws;
 
     // Bundles for live rows; finished / block-complete / padding rows
     // get an inert bundle (q_valid 0), so dead rows stop inflating the
@@ -323,65 +421,101 @@ pub(crate) fn decode_step<B: Backend>(
     report.steps += 1;
     *steps += 1;
 
-    for b in 0..rows.len() {
-        let is_real = rows.is_real(b);
-        let s = rows.get_mut(b);
-        if s.finished || s.block_done(k) {
-            continue;
+    // ---- selection/commit inner loop (measured: `select_secs`) ------
+    let t_sel = Instant::now();
+    let n_rows = rows.len();
+    let n_real = rows.real.len();
+    let threads = cfg.decode_threads.clamp(1, n_rows.max(1));
+    if scratch.len() < threads {
+        scratch.resize_with(threads, RowScratch::default);
+    }
+    let want_event = on_step.is_some();
+    let mut skipped_total = 0u64;
+    let mut event = None;
+    if threads <= 1 {
+        let sc = &mut scratch[0];
+        for b in 0..n_rows {
+            let is_real = rows.is_real(b);
+            let bun = &bundles[b];
+            let s = rows.get_mut(b);
+            let (sk, ev) = process_row(
+                b,
+                is_real,
+                s,
+                bun,
+                &out,
+                cfg,
+                &special,
+                early_exit,
+                want_event,
+                step_in_block,
+                sc,
+            );
+            skipped_total += sk;
+            event = ev.or(event);
         }
-        let bun = &bundles[b];
-        let r_mask = s.mask_ratio(k);
-        // candidates: masked positions within the current block, which
-        // occupy the first `block_len` bundle slots. Confidence trends
-        // are tracked only for policies that read them.
-        let temporal = &cfg.policy.temporal;
-        let track_trend = temporal.uses_trend();
-        cands.clear();
-        trends.clear();
-        for j in 0..bun.block_len {
-            let abs = bun.positions[j];
-            if s.is_masked(abs) {
-                let token = sanitize(out.token(b, j), special.mask, special.pad, special.eos);
-                let conf = out.conf(b, j);
-                if track_trend {
-                    trends.push(s.observe_trend(abs, token, conf));
-                }
-                cands.push(Candidate { pos: abs, token, conf });
+    } else {
+        // Fan contiguous row chunks across a scoped pool: each thread
+        // owns a disjoint `&mut SeqState` span plus its own scratch
+        // slot, and per-chunk outcomes are reduced in row order after
+        // the join — output and report stay bit-identical to the
+        // single-threaded schedule regardless of thread timing.
+        let mut refs: Vec<&mut SeqState> =
+            rows.real.iter_mut().chain(rows.pad.iter_mut()).collect();
+        let per = n_rows.div_ceil(threads);
+        let bundles_ref: &[Bundle] = bundles;
+        let out_ref = &out;
+        let special_ref = &special;
+        let results: Vec<(u64, Option<StepEvent>)> = std::thread::scope(|scope| {
+            let mut handles = Vec::new();
+            let mut rows_rest: &mut [&mut SeqState] = &mut refs;
+            let mut scratch_rest: &mut [RowScratch] = scratch;
+            let mut base = 0usize;
+            while !rows_rest.is_empty() {
+                let take = per.min(rows_rest.len());
+                let (chunk, tail) = std::mem::take(&mut rows_rest).split_at_mut(take);
+                rows_rest = tail;
+                let (sc_head, sc_tail) = std::mem::take(&mut scratch_rest).split_at_mut(1);
+                scratch_rest = sc_tail;
+                let sc = &mut sc_head[0];
+                let b0 = base;
+                base += take;
+                handles.push(scope.spawn(move || {
+                    let mut skipped = 0u64;
+                    let mut event = None;
+                    for (off, s) in chunk.iter_mut().enumerate() {
+                        let b = b0 + off;
+                        let (sk, ev) = process_row(
+                            b,
+                            b < n_real,
+                            s,
+                            &bundles_ref[b],
+                            out_ref,
+                            cfg,
+                            special_ref,
+                            early_exit,
+                            want_event,
+                            step_in_block,
+                            sc,
+                        );
+                        skipped += sk;
+                        event = ev.or(event);
+                    }
+                    (skipped, event)
+                }));
             }
+            handles.into_iter().map(|h| h.join().expect("decode row thread panicked")).collect()
+        });
+        for (sk, ev) in results {
+            skipped_total += sk;
+            event = ev.or(event);
         }
-        if cands.is_empty() {
-            continue;
-        }
-        select_into(temporal, r_mask, cands, trends, picked);
-        if b == 0 {
-            if let Some(cb) = on_step.as_mut() {
-                cb(StepEvent {
-                    block: s.block,
-                    step_in_block,
-                    masked_confs: cands.iter().map(|c| c.conf).collect(),
-                    threshold: temporal.threshold(r_mask),
-                    committed: picked.len(),
-                });
-            }
-        }
-        for &i in picked.iter() {
-            s.commit_with_conf(cands[i].pos, cands[i].token, cands[i].conf);
-        }
-        // ReMDM extension: revise low-confidence commits (once per
-        // position) while the block is still open.
-        if cfg.remask && !s.block_done(k) {
-            s.remask_low_confidence(k, cfg.remask_tau);
-        }
-        s.steps += 1;
-        if early_exit && s.early_exit_scan(k) {
-            // rest of the block was EOS-filled; skipped blocks counted
-            // exactly once per real row, here or never. The budget is
-            // the row's own (`SeqState::n_blocks`), so mixed-length
-            // batches account each row against its own gen_len.
-            if is_real {
-                report.blocks_skipped += (s.n_blocks(k) - (s.block + 1)) as u64;
-            }
-            s.finish_with_eos();
+    }
+    report.blocks_skipped += skipped_total;
+    report.select_secs += t_sel.elapsed().as_secs_f64();
+    if let Some(ev) = event {
+        if let Some(cb) = on_step.as_mut() {
+            cb(ev);
         }
     }
     Ok(())
@@ -487,6 +621,9 @@ pub(crate) fn run_vanilla<B: Backend>(
 ) -> Result<()> {
     let k = cfg.block_size;
     let special = rt.special();
+    if ws.scratch.is_empty() {
+        ws.scratch.push(RowScratch::default());
+    }
     let s_need = rows.iter().map(|s| s.total_len()).max().unwrap_or(1).max(1);
     let s_bucket =
         rt.pick_seq(s_need).ok_or_else(|| anyhow::anyhow!("seq {s_need} exceeds buckets"))?;
@@ -543,6 +680,7 @@ pub(crate) fn run_vanilla<B: Backend>(
         report.steps += 1;
         ws.steps += 1;
 
+        let t_sel = Instant::now();
         for b in 0..rows.len() {
             let s = rows.get_mut(b);
             if s.finished {
@@ -550,17 +688,21 @@ pub(crate) fn run_vanilla<B: Backend>(
             }
             let row_blocks = s.n_blocks(k);
             let (bs, be) = s.block_span(s.block, k);
-            ws.cands.clear();
+            let sc = &mut ws.scratch[0];
+            sc.clear();
             for abs in bs..be {
                 if s.is_masked(abs) {
-                    ws.cands.push(Candidate {
-                        pos: abs,
-                        token: sanitize(out.token(b, abs), special.mask, special.pad, special.eos),
-                        conf: out.conf(b, abs),
-                    });
+                    sc.pos.push(abs);
+                    sc.tok.push(sanitize(
+                        out.token(b, abs),
+                        special.mask,
+                        special.pad,
+                        special.eos,
+                    ));
+                    sc.conf.push(out.conf(b, abs));
                 }
             }
-            if ws.cands.is_empty() {
+            if sc.conf.is_empty() {
                 // advance block cursor
                 s.block += 1;
                 if s.block >= row_blocks {
@@ -572,16 +714,16 @@ pub(crate) fn run_vanilla<B: Backend>(
                 if let Some(cb) = on_step.as_mut() {
                     cb(StepEvent {
                         block: s.block,
-                        step_in_block: k - ws.cands.len().min(k),
-                        masked_confs: ws.cands.iter().map(|c| c.conf).collect(),
+                        step_in_block: k - sc.conf.len().min(k),
+                        masked_confs: sc.conf.clone(),
                         threshold: 1.0,
                         committed: 1,
                     });
                 }
             }
-            select_into(&TemporalPolicy::OnePerStep, 1.0, &ws.cands, &[], &mut ws.picked);
-            for &i in ws.picked.iter() {
-                s.commit_with_conf(ws.cands[i].pos, ws.cands[i].token, ws.cands[i].conf);
+            select_soa(&TemporalPolicy::OnePerStep, 1.0, &sc.conf, &[], &mut sc.picked);
+            for &i in sc.picked.iter() {
+                s.commit_with_conf(sc.pos[i], sc.tok[i], sc.conf[i]);
             }
             s.steps += 1;
             if s.block_done(k) {
@@ -591,6 +733,7 @@ pub(crate) fn run_vanilla<B: Backend>(
                 }
             }
         }
+        report.select_secs += t_sel.elapsed().as_secs_f64();
     }
     Ok(())
 }

@@ -12,8 +12,9 @@
 //! confidence stream and show up as different tokens.
 
 use streaming_dllm::engine::{
-    prefix_scope_for, Backend, BatchEngine, GenConfig, Generator, Method, PrefixHandle, RefMode,
-    ReferenceBackend, SeqState, SharedPrefixCache, REFERENCE_SEED,
+    prefix_scope_for, select, select_soa, Backend, BatchEngine, Candidate, GenConfig, Generator,
+    Method, PrefixHandle, RefMode, ReferenceBackend, SeqState, SharedPrefixCache, TemporalPolicy,
+    Trend, REFERENCE_SEED,
 };
 use streaming_dllm::eval::{extract_final, synthetic_suite};
 
@@ -37,10 +38,28 @@ fn backend(mode: RefMode) -> ReferenceBackend {
     }
 }
 
+/// Decode-thread fan-out under test. CI re-runs this whole suite with
+/// `SDLLM_DECODE_THREADS=4`: every production-side config here picks
+/// the knob up, while the seed replica stays scalar — so the threaded
+/// merge is pinned bit-identical against the same golden outputs.
+fn decode_threads() -> usize {
+    std::env::var("SDLLM_DECODE_THREADS")
+        .ok()
+        .and_then(|s| s.trim().parse().ok())
+        .filter(|&n| n >= 1)
+        .unwrap_or(1)
+}
+
+/// Apply the suite's decode-thread setting to a production config.
+fn tune(mut cfg: GenConfig) -> GenConfig {
+    cfg.decode_threads = decode_threads();
+    cfg
+}
+
 /// Run the production generator over `prompts` as one batch.
 fn run_new(mode: RefMode, cfg: &GenConfig, prompts: &[&[i32]]) -> (Vec<Vec<i32>>, u64, u64) {
     let be = backend(mode);
-    let mut generator = Generator::new(&be, cfg.clone()).unwrap();
+    let mut generator = Generator::new(&be, tune(cfg.clone())).unwrap();
     let mut seqs: Vec<SeqState> =
         prompts.iter().map(|p| SeqState::new(p, cfg.gen_len, &be.special())).collect();
     let report = generator.generate(&mut seqs, None).unwrap();
@@ -131,7 +150,8 @@ fn workspace_reuse_is_deterministic_across_calls() {
     // produce identical output on repeated calls — stale scratch
     // contents leaking between calls would break this
     let be = backend(RefMode::Causal);
-    let mut generator = Generator::new(&be, GenConfig::preset(Method::Streaming, 64)).unwrap();
+    let mut generator =
+        Generator::new(&be, tune(GenConfig::preset(Method::Streaming, 64))).unwrap();
     let mut outs = vec![];
     for _ in 0..3 {
         let mut seqs = vec![SeqState::new(PROMPTS[0], 64, &be.special())];
@@ -142,7 +162,8 @@ fn workspace_reuse_is_deterministic_across_calls() {
     // one backend legitimately differ; determinism is vs a fresh
     // backend replaying the same call sequence
     let be2 = backend(RefMode::Causal);
-    let mut generator2 = Generator::new(&be2, GenConfig::preset(Method::Streaming, 64)).unwrap();
+    let mut generator2 =
+        Generator::new(&be2, tune(GenConfig::preset(Method::Streaming, 64))).unwrap();
     let mut seqs = vec![SeqState::new(PROMPTS[0], 64, &be2.special())];
     generator2.generate(&mut seqs, None).unwrap();
     assert_eq!(outs[0], seqs[0].tokens);
@@ -162,7 +183,7 @@ fn mixed_gen_len_batch_bit_identical_to_solo() {
         [(RefMode::Toy, Method::Streaming), (RefMode::Causal, Method::PrefixCache)]
     {
         let be = backend(mode);
-        let cfg = GenConfig::preset(method, 64);
+        let cfg = tune(GenConfig::preset(method, 64));
         let mut engine = BatchEngine::new(&be, cfg, 4).unwrap();
         for (i, (&p, len)) in PROMPTS.iter().zip(lens).enumerate() {
             assert!(engine.admit(i as u64, p, len), "admit row {i} (gen {len})");
@@ -181,7 +202,8 @@ fn mixed_gen_len_batch_bit_identical_to_solo() {
 
         for (i, (&p, len)) in PROMPTS.iter().zip(lens).enumerate() {
             let be2 = backend(mode);
-            let mut generator = Generator::new(&be2, GenConfig::preset(method, len)).unwrap();
+            let mut generator =
+                Generator::new(&be2, tune(GenConfig::preset(method, len))).unwrap();
             let mut seqs = vec![SeqState::new(p, len, &be2.special())];
             generator.generate(&mut seqs, None).unwrap();
             assert_eq!(
@@ -203,7 +225,7 @@ fn run_engine_cached(
     cache: Option<&SharedPrefixCache>,
 ) -> Vec<Vec<i32>> {
     let be = backend(mode);
-    let mut engine = BatchEngine::new(&be, cfg.clone(), prompts.len()).unwrap();
+    let mut engine = BatchEngine::new(&be, tune(cfg.clone()), prompts.len()).unwrap();
     if let Some(cache) = cache {
         let scope = prefix_scope_for(&be, engine.config());
         engine.set_prefix_cache(PrefixHandle { cache: cache.clone(), scope });
@@ -266,7 +288,7 @@ fn engine_row_output_stable_under_mid_flight_joins_causal() {
     let oracle = ReferenceBackend::causal(REFERENCE_SEED);
     let items = synthetic_suite(&oracle, 4, 0xA11);
     let be = ReferenceBackend::causal(REFERENCE_SEED);
-    let cfg = GenConfig::preset(Method::PrefixCache, 64);
+    let cfg = tune(GenConfig::preset(Method::PrefixCache, 64));
     let mut engine = BatchEngine::new(&be, cfg, 4).unwrap();
     let mut texts: std::collections::HashMap<u64, String> = std::collections::HashMap::new();
 
@@ -306,7 +328,7 @@ fn mid_flight_joins_hitting_the_cache_stay_bit_identical_causal() {
     let items = synthetic_suite(&suite_be, 4, 0xA11);
     let run = |cache: Option<&SharedPrefixCache>| -> Vec<String> {
         let be = ReferenceBackend::causal(REFERENCE_SEED);
-        let cfg = GenConfig::preset(Method::PrefixCache, 64);
+        let cfg = tune(GenConfig::preset(Method::PrefixCache, 64));
         let mut engine = BatchEngine::new(&be, cfg, 4).unwrap();
         if let Some(cache) = cache {
             let scope = prefix_scope_for(&be, engine.config());
@@ -341,4 +363,60 @@ fn mid_flight_joins_hitting_the_cache_stay_bit_identical_causal() {
     let stats = cache.stats();
     assert!(stats.hits > populated.hits, "joining rows never hit the cache");
     cache.check_invariants();
+}
+
+#[test]
+fn vector_parity_chunked_selection_matches_scalar() {
+    // The SoA/chunked selection kernel (`select_soa`) must agree with
+    // the scalar reference (`select` over `Candidate`s) for every
+    // temporal policy, on randomized inputs whose sizes straddle the
+    // chunk width — including exact multiples, off-by-ones and tiny
+    // remainders.
+    let mut state = 0x9E37_79B9_7F4A_7C15u64;
+    let mut next = move || {
+        state = state.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+        (state >> 33) as u32
+    };
+    let policies = [
+        TemporalPolicy::OnePerStep,
+        TemporalPolicy::FixedTau { tau: 0.8 },
+        TemporalPolicy::DynamicTau { tau0: 0.9, alpha: 0.5 },
+        TemporalPolicy::Extrapolating {
+            tau0: 0.9,
+            alpha: 0.5,
+            gain: 2.0,
+            floor: 0.5,
+            min_streak: 2,
+        },
+    ];
+    let pinned_sizes = [1usize, 2, 7, 8, 9, 15, 16, 17, 24, 33];
+    for iter in 0..600 {
+        let n = if iter < pinned_sizes.len() {
+            pinned_sizes[iter]
+        } else {
+            1 + (next() % 40) as usize
+        };
+        let r_mask = (next() % 1001) as f32 / 1000.0;
+        let cands: Vec<Candidate> = (0..n)
+            .map(|i| Candidate {
+                pos: i,
+                token: (next() % 100) as i32,
+                conf: (next() % 1001) as f32 / 1000.0,
+            })
+            .collect();
+        let trends: Vec<Trend> = (0..n)
+            .map(|_| Trend { prev_conf: (next() % 1001) as f32 / 1000.0, streak: next() % 4 })
+            .collect();
+        let conf: Vec<f32> = cands.iter().map(|c| c.conf).collect();
+        for policy in &policies {
+            let scalar = select(policy, r_mask, &cands, &trends);
+            let mut soa = Vec::new();
+            select_soa(policy, r_mask, &conf, &trends, &mut soa);
+            assert_eq!(
+                soa, scalar,
+                "select_soa diverged from scalar select: iter {iter}, n {n}, {policy:?}"
+            );
+            assert!(!soa.is_empty(), "selection must always commit at least one position");
+        }
+    }
 }

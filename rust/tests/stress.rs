@@ -447,7 +447,15 @@ fn overload_burst_bounds_queue_rejects_with_hints_and_drains() {
             let hint = resp.retry_after_ms.unwrap_or_else(|| {
                 panic!("seed {seed}: reject for {} carried no retry_after_ms", resp.id)
             });
+            // the very first reject lands before any block round has
+            // fed the service-time EWMA — the cold-start hint must
+            // already sit inside the documented [1ms, 60s] clamp, and
+            // so must every later one
             assert!(hint >= 1, "seed {seed}: retry_after_ms must be >= 1, got {hint}");
+            assert!(
+                hint <= 60_000,
+                "seed {seed}: retry_after_ms must be clamped to <= 60s, got {hint}"
+            );
             assert!(resp.error.is_none(), "seed {seed}: reject is backpressure, not failure");
         } else {
             assert!(
